@@ -1,0 +1,60 @@
+//! Quickstart: train a small CNN with B-KFAC for one epoch.
+//!
+//!     make artifacts            # once (lowers the XLA graphs)
+//!     cargo run --release --example quickstart
+//!
+//! Walks through the whole public API surface: open the artifact runtime,
+//! generate data, configure the optimizer, train, evaluate.
+
+use bnkfac::coordinator::{Trainer, TrainerCfg};
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::{Algo, Hyper};
+use bnkfac::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the AOT artifact bundle (manifest + HLO text, compiled on
+    //    first use by the PJRT CPU client)
+    let rt = Runtime::open("artifacts/tiny")?;
+    println!(
+        "loaded '{}': {} layers, {} artifacts",
+        rt.manifest.config.name,
+        rt.manifest.layers.len(),
+        rt.manifest.artifacts.len()
+    );
+
+    // 2. synthetic CIFAR-like data matching the model's input shape
+    let ds = Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        n_train: 512,
+        n_test: 128,
+        ..DatasetCfg::default()
+    });
+
+    // 3. B-KFAC with fast cadences (tiny steps-per-epoch)
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper: Hyper {
+            t_updt: 2,
+            t_brand: 4,
+            t_inv: 8,
+            ..Hyper::default()
+        },
+        seed: 42,
+        ..TrainerCfg::default()
+    };
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    println!("model has {} parameters", trainer.params.n_params());
+
+    // 4. train + evaluate
+    let (loss0, acc0) = trainer.evaluate(&ds)?;
+    println!("before: test loss {loss0:.4}, acc {acc0:.3}");
+    let log = trainer.run(&ds, 3, 0)?;
+    for e in &log.eval {
+        println!(
+            "epoch {}: test loss {:.4}, acc {:.3} ({:.1}s)",
+            e.epoch, e.test_loss, e.test_acc, e.wall_s
+        );
+    }
+    println!("--- where the time went ---\n{}", trainer.timers.report());
+    Ok(())
+}

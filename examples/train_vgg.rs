@@ -1,0 +1,87 @@
+//! END-TO-END DRIVER (DESIGN.md E2E validation): train the VGG-mini CNN
+//! (~0.8M params) on the synthetic CIFAR-like dataset for several hundred
+//! steps with B-KFAC, logging the loss curve, then compare one epoch of
+//! each K-FAC-family optimizer — a miniature of the paper's Table 2 run.
+//!
+//!     make artifacts && cargo run --release --example train_vgg
+//!
+//! Environment knobs: EPOCHS (default 2), N_TRAIN (default 2048),
+//! ALGOS=bkfac,rkfac,... to restrict the comparison pass.
+
+use bnkfac::coordinator::{Trainer, TrainerCfg};
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::{Algo, Hyper};
+use bnkfac::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::var("EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let n_train: usize = std::env::var("N_TRAIN").ok().and_then(|v| v.parse().ok()).unwrap_or(2048);
+    let rt = Runtime::open("artifacts/vgg_mini")?;
+    let ds = Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        n_train,
+        n_test: 512,
+        ..DatasetCfg::default()
+    });
+    // paper §6 cadences (T_updt=25 etc.) are the Hyper defaults
+    let hyper = Hyper::default();
+
+    // ---- phase 1: B-KFAC loss curve over a few hundred steps ----------
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper: hyper.clone(),
+        seed: 42,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(&rt, cfg)?;
+    println!(
+        "== end-to-end: B-KFAC on vgg_mini ({} params, {} train imgs, batch {}) ==",
+        tr.params.n_params(),
+        ds.train_y.len(),
+        rt.manifest.config.batch
+    );
+    let log = tr.run(&ds, epochs, 4)?;
+    println!("step,epoch,loss  (loss curve)");
+    for r in &log.train {
+        println!("{},{},{:.4}", r.step, r.epoch, r.loss);
+    }
+    for e in &log.eval {
+        println!(
+            "eval: epoch {} test_loss {:.4} test_acc {:.4} @ {:.1}s",
+            e.epoch, e.test_loss, e.test_acc, e.wall_s
+        );
+    }
+    println!("--- phase timers ---\n{}", tr.timers.report());
+
+    // ---- phase 2: one-epoch optimizer comparison ----------------------
+    let algos: Vec<Algo> = match std::env::var("ALGOS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|t| Algo::parse(t.trim()))
+            .collect(),
+        Err(_) => vec![Algo::BKfac, Algo::BKfacC, Algo::BRKfac, Algo::RKfac, Algo::Seng],
+    };
+    println!("\n== one-epoch comparison ==");
+    println!("{:<10} {:>10} {:>10} {:>10}", "algo", "t_epoch(s)", "loss", "acc");
+    for algo in algos {
+        let cfg = TrainerCfg {
+            algo,
+            hyper: hyper.clone(),
+            seed: 42,
+            ..TrainerCfg::default()
+        };
+        let mut tr = Trainer::new(&rt, cfg)?;
+        let t0 = std::time::Instant::now();
+        let log = tr.run(&ds, 1, 0)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let e = log.eval.last().unwrap();
+        println!(
+            "{:<10} {:>10.2} {:>10.4} {:>10.4}",
+            algo.name(),
+            wall,
+            e.test_loss,
+            e.test_acc
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,264 @@
+"""AOT driver: lower every L2 graph to HLO *text* + emit the manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --config vgg_mini --out ../artifacts
+The output directory gets one `<name>.hlo.txt` per artifact plus
+`manifest.json` — the complete contract the rust coordinator builds on.
+
+Python runs ONLY here (build time); the rust binary is self-contained
+once artifacts exist.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import brand, correction, model, precond, rsvd
+from .config import get_config
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(fn, input_specs):
+    """Lower fn(*abstract args) → HLO text (return_tuple=True: rust side
+    unwraps a tuple even for single outputs)."""
+    args = [
+        jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for _, shape, dt in input_specs
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def output_specs(fn, input_specs):
+    args = [
+        jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for _, shape, dt in input_specs
+    ]
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return [list(o.shape) for o in outs]
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.artifacts = {}
+
+    def add(self, name, fn, input_specs, output_names=None):
+        """Lower + write one artifact; record it in the manifest. Reuses
+        the existing file if an identical artifact name was already added
+        (shape-deduplication happens via the name)."""
+        if name in self.artifacts:
+            return name
+        text = to_hlo_text(fn, input_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": dt}
+                for n, s, dt in input_specs
+            ],
+            "outputs": output_specs(fn, input_specs),
+        }
+        if output_names is not None:
+            entry["output_names"] = output_names
+        self.artifacts[name] = entry
+        print(f"  lowered {name} ({len(text)//1024} KiB)")
+        return name
+
+
+def factor_plan(cfg):
+    """Per-K-factor metadata: dims, per-factor rank, sketch width, brand
+    eligibility. Mirrors paper §3.5: the B-update applies only where
+    d > rank + n (practically: FC-layer factors wide enough)."""
+    n = cfg.batch
+    plan = []
+    for kind, spec in cfg.kfac_layers():
+        for side in ("A", "G"):
+            dim = spec.d_a() if side == "A" else spec.d_g()
+            r = min(cfg.rank, max(1, dim - 1))
+            sketch = min(cfg.rank + cfg.oversample, dim)
+            brand_ok = kind == "fc" and dim > r + n
+            plan.append(
+                {
+                    "id": f"{spec.name}/{side}",
+                    "layer": spec.name,
+                    "kind": kind,
+                    "side": side,
+                    "dim": dim,
+                    "rank": r,
+                    "sketch": sketch,
+                    "brand": brand_ok,
+                    "n": n,
+                }
+            )
+    return plan
+
+
+def build_all(cfg, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(out_dir)
+    n = cfg.batch
+
+    # ---- model step + eval -------------------------------------------
+    b.add(
+        "train_step",
+        model.make_train_step(cfg),
+        model.train_step_input_specs(cfg),
+        output_names=model.train_step_output_names(cfg),
+    )
+    b.add(
+        "train_step_light",
+        model.make_train_step_light(cfg),
+        model.train_step_input_specs(cfg),
+        output_names=model.train_step_light_output_names(cfg),
+    )
+    b.add("eval_step", model.make_eval_step(cfg), model.eval_step_input_specs(cfg))
+
+    plan = factor_plan(cfg)
+    from .kernels.syrk_ea import syrk_ea
+
+    for f in plan:
+        dim, r, k, nb = f["dim"], f["rank"], f["sketch"], f["n"]
+        ops = {}
+        # EA Gram update for FC factors (raw tall-skinny stats arrive)
+        if f["kind"] == "fc":
+            ops["syrk_ea"] = b.add(
+                f"syrk_ea_{dim}x{nb}",
+                lambda m, a, rho: syrk_ea(m, a, rho),
+                [("m", (dim, dim), "f32"), ("a", (dim, nb), "f32"), ("rho", (), "f32")],
+            )
+        # RSVD stages (all factors)
+        ops["rsvd_p1"] = b.add(
+            f"rsvd_p1_{dim}_{k}",
+            rsvd.make_rsvd_p1(cfg.n_pwr),
+            [("m", (dim, dim), "f32"), ("omega", (dim, k), "f32")],
+        )
+        ops["tall_matmul"] = b.add(
+            f"tmm_{dim}_{k}_{r}",
+            lambda x, y: rsvd.tall_matmul(x, y),
+            [("x", (dim, k), "f32"), ("y", (k, r), "f32")],
+        )
+        # Brand stages (eligible factors only)
+        if f["brand"]:
+            ops["brand_p1"] = b.add(
+                f"brand_p1_{dim}_{r}_{nb}",
+                brand.brand_p1,
+                brand.brand_p1_input_specs(dim, r, nb),
+            )
+            ops["brand_p2"] = b.add(
+                f"brand_p2_{dim}_{r}_{nb}",
+                brand.brand_p2,
+                brand.brand_p2_input_specs(dim, r, nb, r + nb),
+            )
+            c = max(1, int(round(cfg.phi_corct * r)))
+            ops["corr_p1"] = b.add(
+                f"corr_p1_{dim}_{r + nb}_{c}",
+                correction.corr_p1,
+                correction.corr_p1_input_specs(dim, r + nb, c),
+            )
+            ops["corr_p2"] = b.add(
+                f"corr_p2_{dim}_{r + nb}_{c}",
+                correction.corr_p2,
+                correction.corr_p2_input_specs(dim, r + nb, c),
+            )
+            f["n_crc"] = c
+        f["ops"] = ops
+
+    # ---- per-layer step artifacts -------------------------------------
+    by_layer = {}
+    for f in plan:
+        by_layer.setdefault(f["layer"], {})[f["side"]] = f
+    layers_manifest = []
+    for kind, spec in cfg.kfac_layers():
+        fa, fg = by_layer[spec.name]["A"], by_layer[spec.name]["G"]
+        d_a, d_g = fa["dim"], fg["dim"]
+        # representation width: rank (+n for brand-maintained reps)
+        k_a = fa["rank"] + (n if fa["brand"] else 0)
+        k_g = fg["rank"] + (n if fg["brand"] else 0)
+        k_pad = max(k_a, k_g)  # one width per layer; host zero-pads
+        lops = {
+            "precond": b.add(
+                f"precond_{d_g}_{d_a}_{k_pad}",
+                precond.precond,
+                precond.precond_input_specs(d_g, d_a, k_pad),
+            )
+        }
+        # exact (full-rank) variant for the K-FAC baseline
+        k_full = max(d_a, d_g)
+        lops["precond_exact"] = b.add(
+            f"precond_{d_g}_{d_a}_{k_full}",
+            precond.precond,
+            precond.precond_input_specs(d_g, d_a, k_full),
+        )
+        if kind == "fc":
+            lops["linear_apply"] = b.add(
+                f"linear_apply_{d_g}_{d_a}_{k_pad}_{n}",
+                precond.linear_apply,
+                precond.linear_apply_input_specs(d_g, d_a, k_pad, n),
+            )
+        layers_manifest.append(
+            {
+                "name": spec.name,
+                "kind": kind,
+                "d_a": d_a,
+                "d_g": d_g,
+                "k_pad": k_pad,
+                "k_full": k_full,
+                "grad_param": f"{spec.name}/w",
+                "dropout": getattr(spec, "dropout", 0.0),
+                "ops": lops,
+                "factors": [fa, fg],
+            }
+        )
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "image": cfg.image,
+            "channels": cfg.channels,
+            "n_classes": cfg.n_classes,
+            "batch": cfg.batch,
+            "rank": cfg.rank,
+            "oversample": cfg.oversample,
+            "n_pwr": cfg.n_pwr,
+            "phi_corct": cfg.phi_corct,
+        },
+        "params": [
+            {"name": name, "shape": list(shape)}
+            for name, shape in model.param_specs(cfg)
+        ],
+        "layers": layers_manifest,
+        "artifacts": b.artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fjson:
+        json.dump(manifest, fjson, indent=1)
+    print(f"wrote {len(b.artifacts)} artifacts + manifest to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="vgg_mini")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    cfg = get_config(args.config)
+    out = os.path.join(args.out, cfg.name)
+    build_all(cfg, out)
+
+
+if __name__ == "__main__":
+    main()

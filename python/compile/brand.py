@@ -1,0 +1,64 @@
+"""L2: Brand-update artifact stages (paper Alg 3/4).
+
+The symmetric Brand update of a truncated eigendecomposition is split
+into two artifacts around the host-side small EVD (DESIGN.md §2):
+
+  stage 1 (`brand_p1`):  (U, D, A, ρ) → (M_S, Q_A)
+      truncation is the caller's slice; this stage computes
+      P = Uᵀ√(1−ρ)A, A⊥, QR(A⊥), and assembles
+      M_S = [[ρD + PPᵀ, PR_Aᵀ], [R_APᵀ, R_AR_Aᵀ]].
+  host: EVD of M_S ((r+n)×(r+n)) → W, d_new   (rust linalg::eigh)
+  stage 2 (`brand_p2`):  (U, Q_A, W) → U_new = [U Q_A]·W
+
+All O(d·…) work uses the Pallas kernels from kernels/brand_tall.py and
+the in-graph CGS2 QR from nla.py.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import brand_tall
+from .nla import mgs_qr
+
+
+def brand_p1(u, d, a, rho):
+    """u: (dim, r) orthonormal, d: (r,) eigs, a: (dim, n) incoming stat,
+    rho: () EA decay. Returns (m_s: (r+n, r+n), q_a: (dim, n))."""
+    r = u.shape[1]
+    n = a.shape[1]
+    a_scaled = a * jnp.sqrt(1.0 - rho)
+    p, a_perp = brand_tall.brand_project(u, a_scaled)
+    q_a, r_a = mgs_qr(a_perp)
+    # top-left: ρD + PPᵀ
+    tl = p @ p.T + jnp.diag(rho * d)
+    tr = p @ r_a.T
+    br = r_a @ r_a.T
+    m_s = jnp.concatenate(
+        [
+            jnp.concatenate([tl, tr], axis=1),
+            jnp.concatenate([tr.T, br], axis=1),
+        ],
+        axis=0,
+    )
+    return m_s, q_a
+
+
+def brand_p2(u, q_a, w):
+    """U_new = [U Q_A] @ W (w: (r+n, k))."""
+    return brand_tall.brand_rotate(u, q_a, w)
+
+
+def brand_p1_input_specs(dim, r, n):
+    return [
+        ("u", (dim, r), "f32"),
+        ("d", (r,), "f32"),
+        ("a", (dim, n), "f32"),
+        ("rho", (), "f32"),
+    ]
+
+
+def brand_p2_input_specs(dim, r, n, k):
+    return [
+        ("u", (dim, r), "f32"),
+        ("q_a", (dim, n), "f32"),
+        ("w", (r + n, k), "f32"),
+    ]

@@ -1,0 +1,196 @@
+"""Model + K-FAC configuration — the single source of truth for shapes.
+
+`aot.py` reads these configs to decide which artifacts to lower; the same
+information is emitted into `artifacts/manifest.json`, which the rust
+coordinator parses. Nothing about shapes is duplicated on the rust side.
+
+Layer conventions (see DESIGN.md):
+  * conv layers are implemented as im2col matmuls, so their K-factor
+    statistics are exactly the KFC ones: A = E_t[patch patchᵀ] (with bias
+    augmentation), Γ = T · E_t[g gᵀ].
+  * FC layers return the *raw* tall-skinny statistic matrices A (d_A×B)
+    and G (d_Γ×B) scaled by 1/√B and √B respectively, so that A·Aᵀ and
+    G·Gᵀ are the batch-averaged Fisher-factor updates. These raw matrices
+    are what the Brand update consumes (paper §3.1).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ConvSpec:
+    name: str
+    c_in: int
+    c_out: int
+    kernel: int  # square
+    stride: int = 1
+    pad: int = 1
+    pool: int = 1  # max-pool window applied after activation (1 = none)
+
+    def d_a(self) -> int:
+        """forward K-factor dim (patch size + bias)."""
+        return self.c_in * self.kernel * self.kernel + 1
+
+    def d_g(self) -> int:
+        return self.c_out
+
+
+@dataclass
+class FcSpec:
+    name: str
+    d_in: int
+    d_out: int
+    dropout: float = 0.0
+    relu: bool = True
+
+    def d_a(self) -> int:
+        return self.d_in + 1
+
+    def d_g(self) -> int:
+        return self.d_out
+
+
+@dataclass
+class ModelConfig:
+    name: str
+    image: int  # square input resolution
+    channels: int
+    n_classes: int
+    batch: int
+    convs: list = field(default_factory=list)
+    fcs: list = field(default_factory=list)
+
+    # K-FAC ranks (target rank r for low-rank K-factor representations;
+    # paper §6 uses a schedule 220→230 — we keep a single base rank and
+    # let the rust side add the schedule increment)
+    rank: int = 60
+    oversample: int = 10
+    n_pwr: int = 4
+    # correction size n_crc = phi_corct * rank
+    phi_corct: float = 0.5
+
+    def conv_feature_hw(self) -> list:
+        """spatial resolution at the INPUT of each conv layer."""
+        hw = self.image
+        out = []
+        for c in self.convs:
+            out.append(hw)
+            hw = hw // c.stride
+            if c.pool > 1:
+                hw = hw // c.pool
+        self._final_hw = hw
+        return out
+
+    def flat_dim(self) -> int:
+        self.conv_feature_hw()
+        return self.convs[-1].c_out * self._final_hw * self._final_hw
+
+    def validate(self):
+        assert self.fcs, "need at least one FC layer"
+        assert self.fcs[0].d_in == self.flat_dim(), (
+            f"fc0 d_in {self.fcs[0].d_in} != flattened conv output "
+            f"{self.flat_dim()}"
+        )
+        for a, b in zip(self.fcs, self.fcs[1:]):
+            assert a.d_out == b.d_in
+        assert self.fcs[-1].d_out == self.n_classes
+
+    def kfac_layers(self):
+        """(kind, spec) for every K-FAC-preconditioned layer, in order."""
+        return [("conv", c) for c in self.convs] + [("fc", f) for f in self.fcs]
+
+
+def tiny() -> ModelConfig:
+    """Fast config for tests: one conv block, small FC."""
+    cfg = ModelConfig(
+        name="tiny",
+        image=8,
+        channels=3,
+        n_classes=10,
+        batch=8,
+        convs=[
+            ConvSpec("conv0", 3, 8, 3, pool=2),
+        ],
+        fcs=[
+            FcSpec("fc0", 8 * 4 * 4, 32, dropout=0.0),
+            FcSpec("fc1", 32, 10, relu=False),
+        ],
+        rank=16,
+        oversample=6,
+        n_pwr=2,
+    )
+    cfg.validate()
+    return cfg
+
+
+def vgg_mini() -> ModelConfig:
+    """Default config: scaled-down modified VGG_bn (DESIGN.md §3).
+
+    Keeps the paper's load-bearing property: FC0 input width (2048+1)
+    ≫ batch (32) + rank (60), so the B-update applies to FC0's forward
+    factor — exactly the layer the paper B-updates.
+    """
+    cfg = ModelConfig(
+        name="vgg_mini",
+        image=32,
+        channels=3,
+        n_classes=10,
+        batch=32,
+        convs=[
+            ConvSpec("conv0", 3, 32, 3),
+            ConvSpec("conv1", 32, 32, 3, pool=2),
+            ConvSpec("conv2", 32, 64, 3),
+            ConvSpec("conv3", 64, 64, 3, pool=2),
+            ConvSpec("conv4", 64, 128, 3),
+            ConvSpec("conv5", 128, 128, 3, pool=2),
+        ],
+        fcs=[
+            FcSpec("fc0", 128 * 4 * 4, 256, dropout=0.5),
+            FcSpec("fc1", 256, 10, relu=False),
+        ],
+        rank=60,
+        oversample=10,
+        n_pwr=4,
+    )
+    cfg.validate()
+    return cfg
+
+
+def vgg_wide() -> ModelConfig:
+    """Closer to the paper's widened VGG16_bn (FC0 in = 8192). Heavy on
+    CPU; used for the scaling experiments, not the default training runs."""
+    cfg = ModelConfig(
+        name="vgg_wide",
+        image=32,
+        channels=3,
+        n_classes=10,
+        batch=64,
+        convs=[
+            ConvSpec("conv0", 3, 32, 3),
+            ConvSpec("conv1", 32, 64, 3, pool=2),
+            ConvSpec("conv2", 64, 128, 3, pool=2),
+            ConvSpec("conv3", 128, 128, 3),  # 8x8 out
+        ],
+        fcs=[
+            FcSpec("fc0", 128 * 8 * 8, 512, dropout=0.5),
+            FcSpec("fc1", 512, 10, relu=False),
+        ],
+        rank=100,
+        oversample=10,
+        n_pwr=4,
+    )
+    cfg.validate()
+    return cfg
+
+
+CONFIGS = {
+    "tiny": tiny,
+    "vgg_mini": vgg_mini,
+    "vgg_wide": vgg_wide,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown config '{name}', have {sorted(CONFIGS)}")
+    return CONFIGS[name]()

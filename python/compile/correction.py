@@ -1,0 +1,45 @@
+"""L2: Alg 6 "light correction" artifact stages.
+
+Improves `n_crc` randomly-chosen modes of a B-KFAC representation by
+snapping their projection to the true EA K-factor M:
+
+  stage 1 (`corr_p1`):  (U, M, idx) → (U_c, M_S)
+      U_c = U[:, idx]  (gather),  M_S = U_cᵀ·M·U_c   (n_crc×n_crc)
+  host: EVD of M_S → U_s, D_s  (rust linalg::eigh)
+  stage 2 (`corr_p2`):  (U, U_c, U_s, idx) → U with columns idx replaced
+      by U_c·U_s (scatter). D writeback happens host-side.
+
+Index selection (random, without replacement — paper's reasons in §3.4)
+is done by the rust coordinator's RNG; idx arrives as an i32 input.
+"""
+
+from .rsvd import tall_matmul
+
+
+def corr_p1(u, m, idx):
+    u_c = u[:, idx]  # gather columns (d × c)
+    m_s = u_c.T @ (m @ u_c)
+    m_s = 0.5 * (m_s + m_s.T)
+    return u_c, m_s
+
+
+def corr_p2(u, u_c, u_s, idx):
+    rotated = tall_matmul(u_c, u_s)  # (d × c)
+    return u.at[:, idx].set(rotated)
+
+
+def corr_p1_input_specs(dim, r, c):
+    return [
+        ("u", (dim, r), "f32"),
+        ("m", (dim, dim), "f32"),
+        ("idx", (c,), "i32"),
+    ]
+
+
+def corr_p2_input_specs(dim, r, c):
+    return [
+        ("u", (dim, r), "f32"),
+        ("u_c", (dim, c), "f32"),
+        ("u_s", (c, c), "f32"),
+        ("idx", (c,), "i32"),
+    ]

@@ -1,0 +1,118 @@
+"""L1 Pallas kernels: the tall-skinny (O(d·…)) pieces of the Brand update.
+
+Alg 3's d-scale work is three products:
+  1. P  = Uᵀ·A            (r×n)   — projection onto the retained modes
+  2. A⊥ = A − U·P          (d×n)   — orthogonal complement
+  3. U' = [U Q_A]·W        (d×k)   — rotate the enlarged basis by the
+                                     small EVD's eigenvectors W
+
+All three stream the d dimension through VMEM in row-blocks while the
+skinny (≤ r+n) dimension stays resident. The small EVD itself happens on
+the host (rust `linalg::eigh`) between artifact stages — see DESIGN.md
+§2 "Hybrid small-EVD".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 256
+
+
+def _proj_kernel(u_ref, a_ref, o_ref):
+    """P += U[kb]ᵀ @ A[kb] over sequential d-blocks."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        u_ref[...].T, a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _complement_kernel(a_ref, u_ref, p_ref, o_ref):
+    """A⊥[db] = A[db] − U[db] @ P."""
+    o_ref[...] = a_ref[...] - jnp.dot(
+        u_ref[...], p_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _rotate_kernel(u_ref, q_ref, w_ref, o_ref):
+    """U'[db] = [U Q][db] @ W   (concat done blockwise to avoid a copy)."""
+    r = u_ref.shape[1]
+    acc = jnp.dot(u_ref[...], w_ref[:r, :], preferred_element_type=jnp.float32)
+    acc += jnp.dot(q_ref[...], w_ref[r:, :], preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def brand_project(u, a, block_d: int = BLOCK_D):
+    """Returns (P, A⊥) = (UᵀA, A − U UᵀA). u:(d,r), a:(d,n)."""
+    d, r = u.shape
+    d2, n = a.shape
+    assert d == d2
+    bd = min(block_d, _pow2(d))
+    d_pad = pl.cdiv(d, bd) * bd
+    if d_pad != d:
+        u = jnp.pad(u, ((0, d_pad - d), (0, 0)))
+        a = jnp.pad(a, ((0, d_pad - d), (0, 0)))
+    p = pl.pallas_call(
+        _proj_kernel,
+        grid=(d_pad // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, r), lambda k: (k, 0)),
+            pl.BlockSpec((bd, n), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, n), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(u, a)
+    a_perp = pl.pallas_call(
+        _complement_kernel,
+        grid=(d_pad // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, n), lambda k: (k, 0)),
+            pl.BlockSpec((bd, r), lambda k: (k, 0)),
+            pl.BlockSpec((r, n), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, n), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, n), jnp.float32),
+        interpret=True,
+    )(a, u, p)
+    return p, a_perp[:d, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def brand_rotate(u, q, w, block_d: int = BLOCK_D):
+    """U' = [U Q] @ W. u:(d,r), q:(d,n), w:(r+n, k)."""
+    d, r = u.shape
+    d2, n = q.shape
+    rn, k = w.shape
+    assert d == d2 and rn == r + n
+    bd = min(block_d, _pow2(d))
+    d_pad = pl.cdiv(d, bd) * bd
+    if d_pad != d:
+        u = jnp.pad(u, ((0, d_pad - d), (0, 0)))
+        q = jnp.pad(q, ((0, d_pad - d), (0, 0)))
+    out = pl.pallas_call(
+        _rotate_kernel,
+        grid=(d_pad // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, r), lambda i: (i, 0)),
+            pl.BlockSpec((bd, n), lambda i: (i, 0)),
+            pl.BlockSpec((rn, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, k), jnp.float32),
+        interpret=True,
+    )(u, q, w)
+    return out[:d, :]
+
+
+def _pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p

@@ -1,0 +1,125 @@
+"""L1 Pallas kernels: low-rank regularized-inverse application.
+
+The K-FAC step (Alg 1 lines 14–17) applies, per layer,
+
+    S = Γ̂⁻¹ · J · Â⁻¹,   Â⁻¹ ≈ U_A[(D_A+λI)⁻¹ − λ⁻¹I]U_Aᵀ + λ⁻¹I
+
+from the right (Â side) and the left (Γ̂ side). Both reduce to
+
+    right:  out = (J·U)·diag(w)·Uᵀ + J/λ
+    left :  out = U·diag(w)·(Uᵀ·J) + J/λ,   w = 1/(d+λ) − 1/λ
+
+TPU mapping: the (r×r) core diag(w) and the U panel tiles stay VMEM-
+resident; J streams through in row-blocks (right) / col-blocks (left).
+The contraction over the big dimension d is expressed as a sequential
+grid axis with an accumulator tile held in VMEM across steps — the
+standard Pallas reduction idiom (revisiting output tiles).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_D = 128
+
+
+def _ju_kernel(j_ref, u_ref, o_ref):
+    """Accumulating tile matmul: o[i] += J[i, k-block] @ U[k-block]."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        j_ref[...], u_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _scale_ut_plus_kernel(t_ref, u_ref, j_ref, w_ref, lam_ref, o_ref):
+    """out[i, kb] = (T[i] * w) @ U[kb]ᵀ + J[i, kb]/λ."""
+    lam = lam_ref[0]
+    tw = t_ref[...] * w_ref[...][None, :]
+    o_ref[...] = (
+        jnp.dot(tw, u_ref[...].T, preferred_element_type=jnp.float32)
+        + j_ref[...] / lam
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_d"))
+def lowrank_apply_right(j, u, d_shifted, lam, block_m=BLOCK_M, block_d=BLOCK_D):
+    """J @ (U diag(d) Uᵀ + λI)⁻¹ for J:(m,d), U:(d,r). Padding-safe.
+
+    Zero-padded U rows/J cols contribute nothing to JU; zero-padded
+    d_shifted entries get weight w = 1/λ − 1/λ = 0 only if the host also
+    zero-pads — we instead compute w here, so padded eigenvalue slots MUST
+    carry d=0, giving w≠0 on the U-padding columns — harmless because the
+    corresponding U columns are zero.
+    """
+    m, d = j.shape
+    d2, r = u.shape
+    assert d == d2, f"J {j.shape} vs U {u.shape}"
+    bm = min(block_m, _pow2(m))
+    bd = min(block_d, _pow2(d))
+    m_pad = pl.cdiv(m, bm) * bm
+    d_pad = pl.cdiv(d, bd) * bd
+    if m_pad != m or d_pad != d:
+        j = jnp.pad(j, ((0, m_pad - m), (0, d_pad - d)))
+    if d_pad != d:
+        u = jnp.pad(u, ((0, d_pad - d), (0, 0)))
+    w = 1.0 / (d_shifted + lam) - 1.0 / lam
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape((1,))
+
+    # stage 1: T = J @ U  (m_pad × r), reduce over d-blocks
+    t = pl.pallas_call(
+        _ju_kernel,
+        grid=(m_pad // bm, d_pad // bd),
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, k: (i, k)),
+            pl.BlockSpec((bd, r), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, r), jnp.float32),
+        interpret=True,
+    )(j, u)
+
+    # stage 2: out = (T*w) @ Uᵀ + J/λ, tiled over (m, d)
+    out = pl.pallas_call(
+        _scale_ut_plus_kernel,
+        grid=(m_pad // bm, d_pad // bd),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, k: (i, 0)),
+            pl.BlockSpec((bd, r), lambda i, k: (k, 0)),
+            pl.BlockSpec((bm, bd), lambda i, k: (i, k)),
+            pl.BlockSpec((r,), lambda i, k: (0,)),
+            pl.BlockSpec((1,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d_pad), jnp.float32),
+        interpret=True,
+    )(t, u, j, w, lam_arr)
+    return out[:m, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_d"))
+def lowrank_apply_left(j, u, d_shifted, lam, block_m=BLOCK_M, block_d=BLOCK_D):
+    """(U diag(d) Uᵀ + λI)⁻¹ @ J for J:(d,m), U:(d,r).
+
+    Implemented via the right-apply on the transpose (the operator is
+    symmetric): out = (Jᵀ @ inv)ᵀ.
+    """
+    return lowrank_apply_right(j.T, u, d_shifted, lam, block_m, block_d).T
+
+
+def _pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def vmem_bytes(m: int, d: int, r: int, block_m=BLOCK_M, block_d=BLOCK_D) -> int:
+    """Analytic per-step VMEM: J tile + U panel + T panel + out tile (f32)."""
+    bm, bd = min(block_m, _pow2(m)), min(block_d, _pow2(d))
+    return 4 * (bm * bd + bd * r + bm * r + bm * bd)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the mathematical definition; the Pallas kernels in
+this package must match these to float tolerance under any shape. pytest
+(`python/tests/test_kernels.py`) sweeps shapes with hypothesis and asserts
+allclose against these.
+"""
+
+import jax.numpy as jnp
+
+
+def syrk_ea_ref(m, a, rho):
+    """EA K-factor update: rho*M + (1-rho) * A @ A^T."""
+    return rho * m + (1.0 - rho) * (a @ a.T)
+
+
+def lowrank_apply_right_ref(j, u, d_shifted, lam):
+    """J @ (U diag(d) U^T + lam I)^{-1} using the Woodbury-style identity
+    of Alg 1 line 15:  J U [(D+lam)^{-1} - 1/lam] U^T + J/lam.
+
+    `d_shifted` is the (possibly spectrum-continued) eigenvalue vector and
+    `lam` the matching effective damping (host prepares both).
+    """
+    w = 1.0 / (d_shifted + lam) - 1.0 / lam
+    ju = j @ u
+    return (ju * w[None, :]) @ u.T + j / lam
+
+
+def lowrank_apply_left_ref(j, u, d_shifted, lam):
+    """(U diag(d) U^T + lam I)^{-1} @ J (Alg 1 line 16)."""
+    w = 1.0 / (d_shifted + lam) - 1.0 / lam
+    utj = u.T @ j
+    return u @ (utj * w[:, None]) + j / lam
+
+
+def matmul_ref(x, y):
+    return x @ y
+
+
+def brand_project_ref(u, a):
+    """P = U^T A and the orthogonal complement A_perp = A - U P
+    (Alg 3 line 3)."""
+    p = u.T @ a
+    return p, a - u @ p
+
+
+def dtype_tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: tiled EA K-factor update  M ← ρM + (1−ρ)·A·Aᵀ.
+
+This is the statistic-update hot-spot (Alg 1 lines 5/9) for FC layers,
+where A is the tall-skinny (d×n) raw activation/grad-statistic matrix.
+
+TPU mapping (DESIGN.md §6): the output is tiled into (BD×BD) MXU-shaped
+blocks; each grid step (i, j) holds one output tile resident in VMEM and
+contracts the full skinny dimension n (n ≤ 256 ≪ VMEM) in one shot:
+
+    out[i, j] = ρ·M[i, j] + (1−ρ)·A[i, :] @ A[j, :]ᵀ
+
+HBM traffic is exactly one read of M, two reads of A row-panels, one
+write of out — the minimum for this op. On CPU we run interpret=True so
+the same kernel lowers to plain HLO (see /opt/xla-example README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. Callers pad d up to a multiple (the wrapper
+# below does it automatically).
+BLOCK_D = 128
+
+
+def _syrk_ea_kernel(m_ref, a_i_ref, a_j_ref, rho_ref, o_ref):
+    rho = rho_ref[0]
+    acc = jnp.dot(
+        a_i_ref[...], a_j_ref[...].T, preferred_element_type=jnp.float32
+    )
+    o_ref[...] = rho * m_ref[...] + (1.0 - rho) * acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def syrk_ea(m, a, rho, block_d: int = BLOCK_D):
+    """ρ·m + (1−ρ)·a@aᵀ via the tiled Pallas kernel.
+
+    m: (d, d) f32, a: (d, n) f32, rho: () f32. Any d, n ≥ 1 (inputs are
+    zero-padded up to tile multiples; zeros do not perturb the result).
+    """
+    d, n = a.shape
+    assert m.shape == (d, d), f"m {m.shape} vs a {a.shape}"
+    bd = min(block_d, _next_pow2(d))
+    d_pad = pl.cdiv(d, bd) * bd
+    if d_pad != d:
+        m = jnp.pad(m, ((0, d_pad - d), (0, d_pad - d)))
+        a = jnp.pad(a, ((0, d_pad - d), (0, 0)))
+    rho_arr = jnp.asarray(rho, jnp.float32).reshape((1,))
+    grid = (d_pad // bd, d_pad // bd)
+    out = pl.pallas_call(
+        _syrk_ea_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bd), lambda i, j: (i, j)),  # M tile
+            pl.BlockSpec((bd, n), lambda i, j: (i, 0)),  # A row-panel i
+            pl.BlockSpec((bd, n), lambda i, j: (j, 0)),  # A row-panel j
+            pl.BlockSpec((1,), lambda i, j: (0,)),  # rho
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, d_pad), jnp.float32),
+        interpret=True,
+    )(m, a, a, rho_arr)
+    return out[:d, :d]
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def vmem_bytes(d: int, n: int, block_d: int = BLOCK_D) -> int:
+    """Analytic VMEM footprint per grid step (perf model, DESIGN.md §6):
+    one M tile + two A panels + one out tile, f32."""
+    bd = min(block_d, _next_pow2(d))
+    return 4 * (bd * bd + 2 * bd * n + bd * bd)

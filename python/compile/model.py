@@ -1,0 +1,349 @@
+"""L2: the training model — im2col CNN fwd/bwd with K-factor statistic
+capture, in JAX, AOT-lowered to a single `train_step` artifact.
+
+Design notes (DESIGN.md §2):
+
+* Conv layers are implemented as **im2col matmuls**: the forward K-factor
+  statistic is then literally the patch matrix, matching the KFC
+  formulation (Grosse & Martens 2016) with bias augmentation, and every
+  FLOP-heavy op is a GEMM (the TPU/MXU-friendly shape the Pallas story
+  targets).
+
+* Preactivation gradients G are exposed by adding zero "probe" tensors to
+  each preactivation and differentiating w.r.t. them — one backward pass
+  yields parameter grads AND the G statistics.
+
+* FC layers return the raw tall-skinny statistics (A: d_A×B, G: d_Γ×B);
+  conv layers return d×d Gram matrices directly (their n_M = B·H·W ≫ d
+  makes raw stats both huge and useless for the B-update — paper §3.5).
+
+* Scaling conventions: A·Aᵀ and G·Gᵀ are the batch-averaged Fisher
+  factor updates: A_fc = aᵀ/√B, G_fc = √B·(∂L/∂pre)ᵀ; conv Grams are
+  A = patchᵀpatch/(B·T), Γ = B·gᵀg (KFC's T-scaling folded in).
+
+* Dropout masks and BN running stats are INPUTS (the rust coordinator
+  owns all RNG and state) — artifacts stay pure functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------- params
+
+
+def param_specs(cfg: ModelConfig):
+    """Canonical parameter order: [(name, shape)], the contract with rust.
+
+    Conv/FC weights are stored augmented: last input row is the bias.
+    """
+    specs = []
+    for c in cfg.convs:
+        specs.append((f"{c.name}/w", (c.d_a(), c.c_out)))
+        specs.append((f"{c.name}/bn_scale", (c.c_out,)))
+        specs.append((f"{c.name}/bn_shift", (c.c_out,)))
+    for f in cfg.fcs:
+        specs.append((f"{f.name}/w", (f.d_a(), f.d_out)))
+    return specs
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    return {name: p for (name, _), p in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------- layers
+
+
+def _extract_patches(x, k: int, pad: int, stride: int):
+    """x: (B, H, W, C) → (B, H', W', C*k*k) patch tensor (pure HLO)."""
+    b, h, w, c = x.shape
+    # conv_general_dilated_patches wants NCHW-ish; use feature_group trick
+    # via explicit gather-free path: pad then stack shifted slices.
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    h_out = (h + 2 * pad - k) // stride + 1
+    w_out = (w + 2 * pad - k) // stride + 1
+    slices = []
+    for di in range(k):
+        for dj in range(k):
+            sl = jax.lax.slice(
+                xp,
+                (0, di, dj, 0),
+                (b, di + (h_out - 1) * stride + 1, dj + (w_out - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            slices.append(sl)
+    # (B, H', W', k*k*C); order = (di, dj, c) fastest-last
+    return jnp.concatenate(slices, axis=-1), h_out, w_out
+
+
+def _batchnorm_train(pre, scale, shift, eps=1e-5):
+    """BN over (B, H, W) per channel; returns out, (mean, var)."""
+    mean = jnp.mean(pre, axis=(0, 1, 2))
+    var = jnp.var(pre, axis=(0, 1, 2))
+    xhat = (pre - mean) / jnp.sqrt(var + eps)
+    return xhat * scale + shift, (mean, var)
+
+
+def _batchnorm_eval(pre, scale, shift, mean, var, eps=1e-5):
+    xhat = (pre - mean) / jnp.sqrt(var + eps)
+    return xhat * scale + shift
+
+
+def _maxpool(x, k: int):
+    if k == 1:
+        return x
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+# ---------------------------------------------------------------- forward
+
+
+def forward(cfg: ModelConfig, params, x, dropout_masks, eps_probes, train: bool,
+            bn_stats=None):
+    """Runs the network. Returns (logits, aux) where aux carries the
+    K-factor statistics and BN batch stats (train mode).
+
+    eps_probes: dict layer-name → zero tensor added to preactivations
+    (present only when grads of preactivations are wanted).
+    """
+    b = x.shape[0]
+    a_stats = {}  # layer → forward statistic (conv: Gram; fc: raw matrix)
+    bn_batch = {}
+    h = x  # NHWC
+    for li, c in enumerate(cfg.convs):
+        patches, h_out, w_out = _extract_patches(h, c.kernel, c.pad, c.stride)
+        t = b * h_out * w_out
+        pflat = patches.reshape(t, c.d_a() - 1)
+        pflat = jnp.concatenate([pflat, jnp.ones((t, 1), jnp.float32)], axis=1)
+        # forward K-factor Gram: patchᵀpatch / (B·T_per_sample·B)… = /t
+        a_stats[c.name] = (pflat.T @ pflat) / t
+        pre = pflat @ params[f"{c.name}/w"]  # (t, c_out)
+        if eps_probes is not None:
+            pre = pre + eps_probes[c.name]
+        pre = pre.reshape(b, h_out, w_out, c.c_out)
+        if train:
+            pre, (mu, var) = _batchnorm_train(
+                pre, params[f"{c.name}/bn_scale"], params[f"{c.name}/bn_shift"]
+            )
+            bn_batch[c.name] = (mu, var)
+        else:
+            mu, var = bn_stats[c.name]
+            pre = _batchnorm_eval(
+                pre, params[f"{c.name}/bn_scale"], params[f"{c.name}/bn_shift"],
+                mu, var,
+            )
+        h = _maxpool(jax.nn.relu(pre), c.pool)
+
+    h = h.reshape(b, -1)
+    for fi, f in enumerate(cfg.fcs):
+        if train and f.dropout > 0.0 and dropout_masks is not None:
+            h = h * dropout_masks[f.name]
+        ha = jnp.concatenate([h, jnp.ones((b, 1), jnp.float32)], axis=1)
+        # raw forward statistic (d_A × B), scaled so A·Aᵀ is batch-averaged
+        a_stats[f.name] = ha.T / jnp.sqrt(1.0 * b)
+        pre = ha @ params[f"{f.name}/w"]  # (B, d_out)
+        if eps_probes is not None:
+            pre = pre + eps_probes[f.name]
+        h = jax.nn.relu(pre) if f.relu else pre
+    return h, (a_stats, bn_batch)
+
+
+def _loss_from_logits(logits, y, n_classes):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, n_classes, dtype=jnp.float32)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=1))
+    n_correct = jnp.sum(
+        (jnp.argmax(logits, axis=1) == y).astype(jnp.float32)
+    )
+    return loss, n_correct
+
+
+# ------------------------------------------------------------- train step
+
+
+def make_train_step(cfg: ModelConfig):
+    """Builds the jit-able train_step(params_flat…, x, y, masks…) →
+    (loss, n_correct, grads…, stats…).
+
+    Output order (the manifest contract):
+      loss, n_correct,
+      grads in param_specs order,
+      per conv layer: A_gram (d_a×d_a), G_gram (d_g×d_g), bn_mean, bn_var,
+      per fc layer:   A_raw (d_a×B),   G_raw (d_g×B)
+    """
+    specs = param_specs(cfg)
+    b = cfg.batch
+
+    def probe_shapes():
+        shapes = {}
+        hw = cfg.conv_feature_hw()
+        for c, h_in in zip(cfg.convs, hw):
+            h_out = h_in // c.stride
+            shapes[c.name] = (b * h_out * h_out, c.c_out)
+        for f in cfg.fcs:
+            shapes[f.name] = (b, f.d_out)
+        return shapes
+
+    pshapes = probe_shapes()
+
+    def train_step(*args):
+        flat_params = args[: len(specs)]
+        x, y = args[len(specs)], args[len(specs) + 1]
+        mask_args = args[len(specs) + 2 :]
+        dropout_layers = [f.name for f in cfg.fcs if f.dropout > 0.0]
+        masks = dict(zip(dropout_layers, mask_args))
+        params = unflatten_params(cfg, flat_params)
+
+        def loss_fn(params, probes):
+            logits, (a_stats, bn_batch) = forward(
+                cfg, params, x, masks, probes, train=True
+            )
+            loss, n_correct = _loss_from_logits(logits, y, cfg.n_classes)
+            return loss, (n_correct, a_stats, bn_batch)
+
+        probes = {
+            name: jnp.zeros(shape, jnp.float32) for name, shape in pshapes.items()
+        }
+        (loss, (n_correct, a_stats, bn_batch)), (gparams, gprobes) = (
+            jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+                params, probes
+            )
+        )
+
+        outs = [loss, n_correct]
+        for name, _ in specs:
+            outs.append(gparams[name])
+        for c in cfg.convs:
+            g = gprobes[c.name]  # (T, c_out) = ∂L/∂pre
+            # KFC backward Gram with our scaling: Γ = B · gᵀg
+            outs.append(a_stats[c.name])
+            outs.append((g.T @ g) * (1.0 * b))
+            mu, var = bn_batch[c.name]
+            outs.append(mu)
+            outs.append(var)
+        for f in cfg.fcs:
+            g = gprobes[f.name]  # (B, d_out)
+            outs.append(a_stats[f.name])  # (d_a, B)
+            outs.append(g.T * jnp.sqrt(1.0 * b))  # (d_g, B)
+        return tuple(outs)
+
+    return train_step
+
+
+def train_step_input_specs(cfg: ModelConfig):
+    """[(name, shape, dtype)] for the train_step artifact inputs."""
+    specs = [(n, s, "f32") for n, s in param_specs(cfg)]
+    specs.append(("x", (cfg.batch, cfg.image, cfg.image, cfg.channels), "f32"))
+    specs.append(("y", (cfg.batch,), "i32"))
+    for f in cfg.fcs:
+        if f.dropout > 0.0:
+            specs.append((f"mask_{f.name}", (cfg.batch, f.d_in), "f32"))
+    return specs
+
+
+def train_step_output_names(cfg: ModelConfig):
+    names = ["loss", "n_correct"]
+    names += [f"grad:{n}" for n, _ in param_specs(cfg)]
+    for c in cfg.convs:
+        names += [
+            f"stat:{c.name}/A",
+            f"stat:{c.name}/G",
+            f"bn:{c.name}/mean",
+            f"bn:{c.name}/var",
+        ]
+    for f in cfg.fcs:
+        names += [f"stat:{f.name}/A", f"stat:{f.name}/G"]
+    return names
+
+
+# -------------------------------------------------- light train step
+
+def make_train_step_light(cfg: ModelConfig):
+    """Like `make_train_step` but WITHOUT K-factor statistics (no probes,
+    no Grams, no raw stat matrices). The paper only consumes statistics
+    every T_updt iterations (Alg 1 "RSVD and EA update frequencies"), so
+    the coordinator runs this cheaper graph on the other T_updt−1 steps —
+    the §Perf "stat-skipping" optimization (EXPERIMENTS.md).
+
+    Output order: loss, n_correct, grads…, then per conv layer bn_mean,
+    bn_var.
+    """
+    specs = param_specs(cfg)
+
+    def train_step_light(*args):
+        flat_params = args[: len(specs)]
+        x, y = args[len(specs)], args[len(specs) + 1]
+        mask_args = args[len(specs) + 2 :]
+        dropout_layers = [f.name for f in cfg.fcs if f.dropout > 0.0]
+        masks = dict(zip(dropout_layers, mask_args))
+        params = unflatten_params(cfg, flat_params)
+
+        def loss_fn(params):
+            logits, (_, bn_batch) = forward(
+                cfg, params, x, masks, None, train=True
+            )
+            loss, n_correct = _loss_from_logits(logits, y, cfg.n_classes)
+            return loss, (n_correct, bn_batch)
+
+        (loss, (n_correct, bn_batch)), gparams = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        outs = [loss, n_correct]
+        for name, _ in specs:
+            outs.append(gparams[name])
+        for c in cfg.convs:
+            mu, var = bn_batch[c.name]
+            outs.append(mu)
+            outs.append(var)
+        return tuple(outs)
+
+    return train_step_light
+
+
+def train_step_light_output_names(cfg: ModelConfig):
+    names = ["loss", "n_correct"]
+    names += [f"grad:{n}" for n, _ in param_specs(cfg)]
+    for c in cfg.convs:
+        names += [f"bn:{c.name}/mean", f"bn:{c.name}/var"]
+    return names
+
+
+# -------------------------------------------------------------- eval step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """eval_step(params…, bn_means…, bn_vars…, x, y) → (loss, n_correct)."""
+    specs = param_specs(cfg)
+    nc = len(cfg.convs)
+
+    def eval_step(*args):
+        flat_params = args[: len(specs)]
+        bn_means = args[len(specs) : len(specs) + nc]
+        bn_vars = args[len(specs) + nc : len(specs) + 2 * nc]
+        x, y = args[len(specs) + 2 * nc], args[len(specs) + 2 * nc + 1]
+        params = unflatten_params(cfg, flat_params)
+        bn_stats = {
+            c.name: (m, v) for c, m, v in zip(cfg.convs, bn_means, bn_vars)
+        }
+        logits, _ = forward(
+            cfg, params, x, None, None, train=False, bn_stats=bn_stats
+        )
+        loss, n_correct = _loss_from_logits(logits, y, cfg.n_classes)
+        return (loss, n_correct)
+
+    return eval_step
+
+
+def eval_step_input_specs(cfg: ModelConfig):
+    specs = [(n, s, "f32") for n, s in param_specs(cfg)]
+    for c in cfg.convs:
+        specs.append((f"bn_mean:{c.name}", (c.c_out,), "f32"))
+    for c in cfg.convs:
+        specs.append((f"bn_var:{c.name}", (c.c_out,), "f32"))
+    specs.append(("x", (cfg.batch, cfg.image, cfg.image, cfg.channels), "f32"))
+    specs.append(("y", (cfg.batch,), "i32"))
+    return specs

@@ -1,0 +1,46 @@
+"""Pure-HLO numerical linear algebra for inside artifacts.
+
+`jnp.linalg.qr/eigh` lower to `lapack_*_ffi` typed-FFI custom-calls that
+xla_extension 0.5.1 rejects at compile time ("Unknown custom-call API
+version enum value: 4"), so anything we export must avoid LAPACK.
+
+`mgs_qr` is classical Gram–Schmidt with re-orthogonalization (CGS2 —
+"twice is enough", Giraud et al.) expressed as a `fori_loop`, so the
+exported HLO contains a single while op of O(d·n) body work. Q is
+initialized to zeros, which makes the projection `Qᵀv` automatically
+ignore not-yet-computed columns — no masking needed.
+
+The rust host mirrors this exact algorithm (`linalg::qr::mgs_qr`) so
+tests can compare host and artifact numerics directly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mgs_qr(a, eps: float = 1e-12):
+    """Thin QR of a (d×n, d≥n) via CGS2. Returns (Q, R) with Q possibly
+    containing zero columns when A is rank-deficient (R gets a zero row,
+    reconstruction still holds)."""
+    d, n = a.shape
+
+    def body(j, qr):
+        q, r = qr
+        v = jax.lax.dynamic_slice(a, (0, j), (d, 1))  # (d,1)
+        h1 = q.T @ v  # zeros beyond col j because q cols are zero there
+        v = v - q @ h1
+        h2 = q.T @ v
+        v = v - q @ h2
+        rjj = jnp.sqrt(jnp.sum(v * v))
+        inv = jnp.where(rjj > eps, 1.0 / rjj, 0.0)
+        qj = v * inv
+        q = jax.lax.dynamic_update_slice(q, qj, (0, j))
+        rcol = h1 + h2
+        rcol = rcol.at[j, 0].set(rjj)
+        r = jax.lax.dynamic_update_slice(r, rcol, (0, j))
+        return (q, r)
+
+    q0 = jnp.zeros((d, n), jnp.float32)
+    r0 = jnp.zeros((n, n), jnp.float32)
+    q, r = jax.lax.fori_loop(0, n, body, (q0, r0))
+    return q, r

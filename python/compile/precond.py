@@ -1,0 +1,71 @@
+"""L2: per-layer preconditioned-step artifacts.
+
+`precond`: the standard low-rank inverse application (Alg 1 lines 14–17)
+    S = Γ̂⁻¹ · J · Â⁻¹
+built from the Pallas `lowrank_apply` kernels. The §3.5 spectrum
+continuation is host-prepared: the rust side passes eigenvalues already
+shifted (D − d_min) and the effective λ (λ + d_min); padded eigenvalue
+slots carry d=0 with zero U columns (no-ops — see kernels/lowrank_apply).
+
+`linear_apply`: the paper's §5/Alg 8 LINEAR-in-d inverse application —
+    S = ([Γ̂]⁻¹·G) · (Aᵀ·[Â]⁻¹)
+for layers where the raw tall-skinny statistics (A: d_A×n, G: d_Γ×n) of
+the CURRENT batch reconstruct the gradient as Mat(g) = G·Aᵀ (true for FC
+layers; eq. 20). The paper left this unimplemented ("future work") — we
+implement it and ablate it (EXPERIMENTS.md E5).
+"""
+
+from .kernels.lowrank_apply import lowrank_apply_left, lowrank_apply_right
+
+
+def precond(u_g, d_g, lam_g, u_a, d_a, lam_a, grad):
+    """grad: (d_A, d_Γ) — the PARAMETER-layout gradient matrix (exactly
+    the shape the train_step artifact emits for `<layer>/w`), so the host
+    never transposes. Since both inverses are symmetric,
+
+        S_param = (Γ̂⁻¹ · Mat(g) · Â⁻¹)ᵀ = Â⁻¹ · grad · Γ̂⁻¹.
+
+    Returns the preconditioned step, same (d_A, d_Γ) layout.
+    """
+    m = lowrank_apply_left(grad, u_a, d_a, lam_a)  # Â⁻¹ grad
+    return lowrank_apply_right(m, u_g, d_g, lam_g)  # (Â⁻¹ grad) Γ̂⁻¹
+
+
+def precond_input_specs(d_gamma, d_alpha, k):
+    return [
+        ("u_g", (d_gamma, k), "f32"),
+        ("d_g", (k,), "f32"),
+        ("lam_g", (), "f32"),
+        ("u_a", (d_alpha, k), "f32"),
+        ("d_a", (k,), "f32"),
+        ("lam_a", (), "f32"),
+        ("grad", (d_alpha, d_gamma), "f32"),
+    ]
+
+
+def linear_apply(u_g, d_g, lam_g, u_a, d_a, lam_a, a_stat, g_stat):
+    """Alg 8. a_stat: (d_A, n) (the 1/√B-scaled activations), g_stat:
+    (d_Γ, n) (the √B-scaled preactivation grads). Their product
+    g_stat @ a_statᵀ equals Mat(g) (eq. 20 with our scaling: the √B
+    factors cancel into the batch mean).
+
+    Returns S = (Γ̂⁻¹ G)·(Aᵀ Â⁻¹): two skinny applies + one (d_Γ×n)(n×d_A)
+    outer product — O((d_Γ+d_A)·n·r) total, linear in layer size.
+    """
+    g_pre = lowrank_apply_left(g_stat, u_g, d_g, lam_g)  # (d_Γ, n)
+    at_pre = lowrank_apply_right(a_stat.T, u_a, d_a, lam_a)  # (n, d_A)
+    s = g_pre @ at_pre  # (d_Γ, d_A)
+    return s.T  # parameter layout (d_A, d_Γ), matching `precond`
+
+
+def linear_apply_input_specs(d_gamma, d_alpha, k, n):
+    return [
+        ("u_g", (d_gamma, k), "f32"),
+        ("d_g", (k,), "f32"),
+        ("lam_g", (), "f32"),
+        ("u_a", (d_alpha, k), "f32"),
+        ("d_a", (k,), "f32"),
+        ("lam_a", (), "f32"),
+        ("a_stat", (d_alpha, n), "f32"),
+        ("g_stat", (d_gamma, n), "f32"),
+    ]

@@ -1,0 +1,80 @@
+"""L2: randomized-SVD artifact stages (R-KFAC's inverse update, Alg 1
+line 13; Halko–Martinsson–Tropp with power iterations).
+
+Two stages around the host small EVD:
+
+  stage 1 (`rsvd_p1`):  (M, Ω) → (Q, S)
+      Q = orth(M·(M…(M·Ω))) via n_pwr CGS2-QR'd power iterations,
+      S = QᵀMQ   ((r+r_o)×(r+r_o) Rayleigh–Ritz core)
+  host: EVD of S → U_S, D_S; truncate to r
+  stage 2: U = Q·U_S — a plain tall matmul (`tall_matmul` artifact,
+      shared with other uses).
+
+The sketch Ω is an INPUT: the rust coordinator owns all randomness.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .nla import mgs_qr
+
+
+def make_rsvd_p1(n_pwr: int):
+    def rsvd_p1(m, omega):
+        y = m @ omega
+        q, _ = mgs_qr(y)
+        for _ in range(n_pwr):
+            y = m @ q
+            q, _ = mgs_qr(y)
+        s = q.T @ (m @ q)
+        # symmetrize against fp drift so the host EVD sees a clean input
+        s = 0.5 * (s + s.T)
+        return q, s
+
+    return rsvd_p1
+
+
+# --- generic tall matmul as a Pallas kernel (stage 2 and misc products) ---
+
+BLOCK_D = 256
+
+
+def _tall_matmul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def tall_matmul(x, y, block_d: int = BLOCK_D):
+    """x: (d, k) @ y: (k, r) with d ≫ k: stream d row-blocks, keep y
+    resident in VMEM."""
+    d, k = x.shape
+    k2, r = y.shape
+    assert k == k2
+    bd = min(block_d, _pow2(d))
+    d_pad = pl.cdiv(d, bd) * bd
+    if d_pad != d:
+        x = jnp.pad(x, ((0, d_pad - d), (0, 0)))
+    out = pl.pallas_call(
+        _tall_matmul_kernel,
+        grid=(d_pad // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_pad, r), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out[:d, :]
+
+
+def _pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p

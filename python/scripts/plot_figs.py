@@ -1,0 +1,112 @@
+"""Render Fig 1 / Fig 2 (paper §4.3) as SVG from the bench CSVs.
+
+Usage:  python python/scripts/plot_figs.py [results/fig1_fig2_tiny] [out_dir]
+
+Reads every <algo>.csv written by `cargo bench --bench fig1_fig2_table1`
+and emits fig1_inv_errors.svg (metrics 1–2, log-y) and
+fig2_step_errors.svg (metrics 3–4, log-y) — the reproduction's version
+of the paper's Figure 1 and Figure 2. Dependency-free (hand-rolled SVG;
+matplotlib is not available in the offline environment).
+"""
+
+import math
+import os
+import sys
+
+PALETTE = [
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728",
+    "#9467bd", "#8c564b", "#e377c2", "#7f7f7f",
+]
+
+W, H, PAD = 640, 360, 50
+
+
+def read_csv(path):
+    rows = [l.strip().split(",") for l in open(path) if l.strip()]
+    header, data = rows[0], rows[1:]
+    cols = {h: [float(r[i]) for r in data] for i, h in enumerate(header)}
+    return cols
+
+
+def svg_series(series, title, ylabel):
+    """series: list of (label, xs, ys). log-y line plot."""
+    all_y = [y for _, _, ys in series for y in ys if y > 0]
+    all_x = [x for _, xs, _ in series for x in xs]
+    if not all_y:
+        return "<svg/>"
+    y_lo, y_hi = min(all_y), max(all_y)
+    y_lo, y_hi = math.log10(y_lo) - 0.1, math.log10(y_hi) + 0.1
+    x_lo, x_hi = min(all_x), max(all_x)
+
+    def sx(x):
+        return PAD + (x - x_lo) / max(1e-9, x_hi - x_lo) * (W - 2 * PAD)
+
+    def sy(y):
+        ly = math.log10(max(y, 1e-30))
+        return H - PAD - (ly - y_lo) / max(1e-9, y_hi - y_lo) * (H - 2 * PAD)
+
+    out = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" '
+        f'font-family="monospace" font-size="11">',
+        f'<rect width="{W}" height="{H}" fill="white"/>',
+        f'<text x="{W / 2}" y="18" text-anchor="middle" font-size="13">{title}</text>',
+        f'<text x="14" y="{H / 2}" transform="rotate(-90 14 {H / 2})" '
+        f'text-anchor="middle">{ylabel} (log)</text>',
+        f'<text x="{W / 2}" y="{H - 8}" text-anchor="middle">iteration</text>',
+        f'<line x1="{PAD}" y1="{H - PAD}" x2="{W - PAD}" y2="{H - PAD}" stroke="black"/>',
+        f'<line x1="{PAD}" y1="{PAD}" x2="{PAD}" y2="{H - PAD}" stroke="black"/>',
+    ]
+    # log gridlines
+    for p in range(math.floor(y_lo), math.ceil(y_hi) + 1):
+        y = sy(10 ** p)
+        if PAD <= y <= H - PAD:
+            out.append(
+                f'<line x1="{PAD}" y1="{y:.1f}" x2="{W - PAD}" y2="{y:.1f}" '
+                f'stroke="#ddd"/>'
+                f'<text x="{PAD - 4}" y="{y + 3:.1f}" text-anchor="end">1e{p}</text>'
+            )
+    for i, (label, xs, ys) in enumerate(series):
+        color = PALETTE[i % len(PALETTE)]
+        pts = " ".join(
+            f"{sx(x):.1f},{sy(y):.1f}" for x, y in zip(xs, ys) if y > 0
+        )
+        out.append(
+            f'<polyline points="{pts}" fill="none" stroke="{color}" stroke-width="1.5"/>'
+        )
+        ly = PAD + 14 * i
+        out.append(
+            f'<line x1="{W - PAD - 130}" y1="{ly}" x2="{W - PAD - 110}" y2="{ly}" '
+            f'stroke="{color}" stroke-width="2"/>'
+            f'<text x="{W - PAD - 105}" y="{ly + 4}">{label}</text>'
+        )
+    out.append("</svg>")
+    return "\n".join(out)
+
+
+def main():
+    src = sys.argv[1] if len(sys.argv) > 1 else "results/fig1_fig2_tiny"
+    dst = sys.argv[2] if len(sys.argv) > 2 else src
+    algos = sorted(f[:-4] for f in os.listdir(src) if f.endswith(".csv"))
+    if not algos:
+        sys.exit(f"no CSVs in {src} — run the fig1_fig2_table1 bench first")
+    data = {a: read_csv(os.path.join(src, f"{a}.csv")) for a in algos}
+    for fname, cols, title in [
+        ("fig1_inv_errors.svg", ["m1_inv_a", "m2_inv_g"],
+         "Fig 1 (repro): rel. Frobenius error of inverse K-factors"),
+        ("fig2_step_errors.svg", ["m3_step", "m4_angle"],
+         "Fig 2 (repro): error in preconditioned step"),
+    ]:
+        series = []
+        for a in algos:
+            for c in cols:
+                series.append(
+                    (f"{a}:{c.split('_')[0]}", data[a]["step"], data[a][c])
+                )
+        path = os.path.join(dst, fname)
+        with open(path, "w") as f:
+            f.write(svg_series(series, title, "/".join(cols)))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py,
+swept over shapes (and block sizes) with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import brand_tall, lowrank_apply, ref, syrk_ea
+from compile.rsvd import tall_matmul
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ------------------------------------------------------------- syrk_ea
+
+
+@given(
+    d=st.integers(1, 200),
+    n=st.integers(1, 40),
+    rho=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_syrk_ea_matches_ref(d, n, rho, seed):
+    rng = np.random.default_rng(seed)
+    m = rand(rng, d, d)
+    m = m + m.T
+    a = rand(rng, d, n)
+    got = syrk_ea.syrk_ea(jnp.array(m), jnp.array(a), rho)
+    want = ref.syrk_ea_ref(m, a, rho)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_d", [8, 32, 128, 256])
+def test_syrk_ea_block_sizes(block_d):
+    rng = np.random.default_rng(0)
+    m = rand(rng, 100, 100)
+    a = rand(rng, 100, 16)
+    got = syrk_ea.syrk_ea(jnp.array(m), jnp.array(a), 0.95, block_d=block_d)
+    want = ref.syrk_ea_ref(m, a, 0.95)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_syrk_ea_rho_zero_is_pure_gram():
+    rng = np.random.default_rng(1)
+    m = rand(rng, 33, 33)
+    a = rand(rng, 33, 7)
+    got = syrk_ea.syrk_ea(jnp.array(m), jnp.array(a), 0.0)
+    np.testing.assert_allclose(got, a @ a.T, rtol=1e-4, atol=1e-4)
+
+
+def test_syrk_ea_vmem_model_positive():
+    assert syrk_ea.vmem_bytes(2049, 32) > 0
+    # MXU tile bound: a 128-block step must fit in 16 MiB VMEM easily
+    assert syrk_ea.vmem_bytes(2049, 32) < 16 * 2**20
+
+
+# ------------------------------------------------------- lowrank_apply
+
+
+@given(
+    m=st.integers(1, 60),
+    d=st.integers(2, 150),
+    r=st.integers(1, 24),
+    lam=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31),
+)
+def test_apply_right_matches_ref(m, d, r, lam, seed):
+    r = min(r, d)
+    rng = np.random.default_rng(seed)
+    u = np.linalg.qr(rand(rng, d, r))[0].astype(np.float32)
+    ds = np.abs(rand(rng, r))
+    j = rand(rng, m, d)
+    got = lowrank_apply.lowrank_apply_right(
+        jnp.array(j), jnp.array(u), jnp.array(ds), lam
+    )
+    want = ref.lowrank_apply_right_ref(j, u, ds, lam)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@given(
+    m=st.integers(1, 40),
+    d=st.integers(2, 100),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_apply_left_matches_ref(m, d, r, seed):
+    r = min(r, d)
+    rng = np.random.default_rng(seed)
+    u = np.linalg.qr(rand(rng, d, r))[0].astype(np.float32)
+    ds = np.abs(rand(rng, r))
+    j = rand(rng, d, m)
+    lam = 0.25
+    got = lowrank_apply.lowrank_apply_left(
+        jnp.array(j), jnp.array(u), jnp.array(ds), lam
+    )
+    want = ref.lowrank_apply_left_ref(j, u, ds, lam)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_apply_right_zero_padded_modes_are_noop():
+    """Padded slots (zero U column + zero eigenvalue) must not change the
+    result — the contract the rust coordinator relies on."""
+    rng = np.random.default_rng(3)
+    d, r, m = 37, 6, 9
+    u = np.linalg.qr(rand(rng, d, r))[0].astype(np.float32)
+    ds = np.abs(rand(rng, r))
+    j = rand(rng, m, d)
+    lam = 0.5
+    u_pad = np.concatenate([u, np.zeros((d, 4), np.float32)], axis=1)
+    d_pad = np.concatenate([ds, np.zeros(4, np.float32)])
+    a = lowrank_apply.lowrank_apply_right(jnp.array(j), jnp.array(u), jnp.array(ds), lam)
+    b = lowrank_apply.lowrank_apply_right(
+        jnp.array(j), jnp.array(u_pad), jnp.array(d_pad), lam
+    )
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_apply_is_inverse_of_damped_matrix():
+    """J @ inv(UDUᵀ+λI) computed by the kernel vs numpy's actual inverse."""
+    rng = np.random.default_rng(4)
+    d, r = 24, 24  # full rank
+    g = rand(rng, d, d)
+    m = (g @ g.T).astype(np.float32)
+    w, v = np.linalg.eigh(m)
+    lam = 0.1
+    j = rand(rng, 5, d)
+    got = lowrank_apply.lowrank_apply_right(
+        jnp.array(j), jnp.array(v[:, ::-1].copy()), jnp.array(w[::-1].copy()), lam
+    )
+    want = j @ np.linalg.inv(m + lam * np.eye(d, dtype=np.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------- brand_tall
+
+
+@given(
+    d=st.integers(4, 150),
+    r=st.integers(1, 20),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_brand_project_matches_ref(d, r, n, seed):
+    r = min(r, d - 1)
+    rng = np.random.default_rng(seed)
+    u = np.linalg.qr(rand(rng, d, r))[0].astype(np.float32)
+    a = rand(rng, d, n)
+    p, a_perp = brand_tall.brand_project(jnp.array(u), jnp.array(a))
+    pr, apr = ref.brand_project_ref(u, a)
+    np.testing.assert_allclose(p, pr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a_perp, apr, rtol=1e-4, atol=1e-4)
+    # orthogonality invariant: Uᵀ A⊥ = 0
+    np.testing.assert_allclose(u.T @ np.asarray(a_perp), 0, atol=1e-3)
+
+
+@given(
+    d=st.integers(4, 120),
+    r=st.integers(1, 12),
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_brand_rotate_matches_concat_matmul(d, r, n, seed):
+    rng = np.random.default_rng(seed)
+    u = rand(rng, d, r)
+    q = rand(rng, d, n)
+    w = rand(rng, r + n, r + n)
+    got = brand_tall.brand_rotate(jnp.array(u), jnp.array(q), jnp.array(w))
+    want = np.concatenate([u, q], axis=1) @ w
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------- tall_matmul
+
+
+@given(
+    d=st.integers(1, 300),
+    k=st.integers(1, 32),
+    r=st.integers(1, 32),
+    seed=st.integers(0, 2**31),
+)
+def test_tall_matmul_matches(d, k, r, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, d, k)
+    y = rand(rng, k, r)
+    got = tall_matmul(jnp.array(x), jnp.array(y))
+    np.testing.assert_allclose(got, x @ y, rtol=1e-3, atol=1e-3)

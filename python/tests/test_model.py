@@ -1,0 +1,206 @@
+"""L2 model: shapes, statistic conventions, gradient correctness (finite
+differences), and manifest/AOT integrity on the tiny config."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import get_config, tiny
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    rng = np.random.default_rng(0)
+    out = []
+    for name, shape in model.param_specs(cfg):
+        if name.endswith("bn_scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(
+                jnp.array(
+                    rng.standard_normal(shape).astype(np.float32)
+                    * np.sqrt(2.0 / shape[0])
+                )
+            )
+    return out
+
+
+def batch(cfg, seed=1):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(
+        (cfg.batch, cfg.image, cfg.image, cfg.channels)
+    ).astype(np.float32)
+    y = (np.arange(cfg.batch) % cfg.n_classes).astype(np.int32)
+    return jnp.array(x), jnp.array(y)
+
+
+def run_train_step(cfg, params, x, y):
+    step = model.make_train_step(cfg)
+    return step(*params, x, y)
+
+
+def test_output_count_and_shapes(cfg, params):
+    x, y = batch(cfg)
+    outs = run_train_step(cfg, params, x, y)
+    names = model.train_step_output_names(cfg)
+    assert len(outs) == len(names)
+    specs = model.param_specs(cfg)
+    # loss scalar, n_correct scalar
+    assert outs[0].shape == ()
+    assert outs[1].shape == ()
+    # grads match param shapes
+    for i, (pname, shape) in enumerate(specs):
+        assert outs[2 + i].shape == tuple(shape), pname
+    by_name = dict(zip(names, outs))
+    c0 = cfg.convs[0]
+    assert by_name[f"stat:{c0.name}/A"].shape == (c0.d_a(), c0.d_a())
+    assert by_name[f"stat:{c0.name}/G"].shape == (c0.d_g(), c0.d_g())
+    f0 = cfg.fcs[0]
+    assert by_name[f"stat:{f0.name}/A"].shape == (f0.d_a(), cfg.batch)
+    assert by_name[f"stat:{f0.name}/G"].shape == (f0.d_g(), cfg.batch)
+
+
+def test_loss_and_ncorrect_sane(cfg, params):
+    x, y = batch(cfg)
+    outs = run_train_step(cfg, params, x, y)
+    loss, n_correct = float(outs[0]), float(outs[1])
+    # random init → loss near ln(10), accuracy near chance
+    assert 1.0 < loss < 5.0
+    assert 0 <= n_correct <= cfg.batch
+
+
+def test_stat_grams_are_psd(cfg, params):
+    x, y = batch(cfg)
+    outs = run_train_step(cfg, params, x, y)
+    by_name = dict(zip(model.train_step_output_names(cfg), outs))
+    for c in cfg.convs:
+        for side in "AG":
+            m = np.asarray(by_name[f"stat:{c.name}/{side}"])
+            np.testing.assert_allclose(m, m.T, atol=1e-4)
+            w = np.linalg.eigvalsh(m)
+            assert w.min() > -1e-3, f"{c.name}/{side} not PSD"
+
+
+def test_fc_raw_stats_scaling(cfg, params):
+    """A·Aᵀ of the raw FC statistic must equal the batch-mean of a_i a_iᵀ —
+    the EA-update convention the whole pipeline assumes."""
+    x, y = batch(cfg)
+    outs = run_train_step(cfg, params, x, y)
+    by_name = dict(zip(model.train_step_output_names(cfg), outs))
+    f0 = cfg.fcs[0]
+    a = np.asarray(by_name[f"stat:{f0.name}/A"])  # (d_a, B)
+    gram = a @ a.T
+    # bias augmentation: last row of a is 1/√B ⇒ gram[-1,-1] == 1
+    np.testing.assert_allclose(gram[-1, -1], 1.0, rtol=1e-4)
+    # PSD + symmetric
+    np.testing.assert_allclose(gram, gram.T, atol=1e-4)
+
+
+def test_param_grads_match_finite_differences(cfg, params):
+    """Spot-check the fc1 weight gradient with central differences."""
+    x, y = batch(cfg)
+    names = [n for n, _ in model.param_specs(cfg)]
+    i_fc1 = names.index("fc1/w")
+    outs = run_train_step(cfg, params, x, y)
+    grad = np.asarray(outs[2 + i_fc1])
+
+    def loss_at(delta):
+        p = list(params)
+        p[i_fc1] = p[i_fc1] + delta
+        return float(run_train_step(cfg, p, x, y)[0])
+
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        i = rng.integers(0, grad.shape[0])
+        j = rng.integers(0, grad.shape[1])
+        eps = 1e-2
+        d = np.zeros_like(grad)
+        d[i, j] = eps
+        fd = (loss_at(jnp.array(d)) - loss_at(jnp.array(-d))) / (2 * eps)
+        assert abs(fd - grad[i, j]) < 5e-3 + 0.05 * abs(grad[i, j]), (
+            f"({i},{j}): fd={fd} vs grad={grad[i, j]}"
+        )
+
+
+def test_g_stat_matches_param_grad(cfg, params):
+    """eq. 20 with our scaling: grad(fc/w) must equal A_stat·G_statᵀ / B·…
+    — concretely grad = (1/B)Σ a_i g_iᵀ = A_raw · G_rawᵀ (scales cancel)."""
+    x, y = batch(cfg)
+    outs = run_train_step(cfg, params, x, y)
+    by_name = dict(zip(model.train_step_output_names(cfg), outs))
+    names = [n for n, _ in model.param_specs(cfg)]
+    for f in cfg.fcs:
+        grad = np.asarray(outs[2 + names.index(f"{f.name}/w")])
+        a = np.asarray(by_name[f"stat:{f.name}/A"])
+        g = np.asarray(by_name[f"stat:{f.name}/G"])
+        np.testing.assert_allclose(a @ g.T, grad, rtol=2e-3, atol=2e-4)
+
+
+def test_eval_step_runs_and_uses_running_stats(cfg, params):
+    x, y = batch(cfg)
+    ev = model.make_eval_step(cfg)
+    nc = len(cfg.convs)
+    means = [jnp.zeros((c.c_out,), jnp.float32) for c in cfg.convs]
+    variances = [jnp.ones((c.c_out,), jnp.float32) for c in cfg.convs]
+    loss, n_correct = ev(*params, *means, *variances, x, y)
+    assert np.isfinite(float(loss))
+    assert 0 <= float(n_correct) <= cfg.batch
+    # different running stats → different loss (they are actually used)
+    means2 = [m + 1.0 for m in means]
+    loss2, _ = ev(*params, *means2, *variances, x, y)
+    assert abs(float(loss2) - float(loss)) > 1e-6
+
+
+def test_dropout_mask_is_applied():
+    cfg = get_config("vgg_mini")
+    # only check spec wiring (full fwd too heavy here): mask input present
+    specs = model.train_step_input_specs(cfg)
+    mask_specs = [s for s in specs if s[0].startswith("mask_")]
+    assert len(mask_specs) == 1
+    assert mask_specs[0][1] == (cfg.batch, cfg.fcs[0].d_in)
+
+
+# --------------------------------------------------------- manifest
+
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_integrity():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    # every artifact file exists and is non-trivial HLO text
+    for name, a in man["artifacts"].items():
+        path = os.path.join(ART_DIR, a["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, name
+    # every layer op points at an existing artifact
+    for layer in man["layers"]:
+        for op, art in layer["ops"].items():
+            assert art in man["artifacts"], f"{layer['name']}.{op}"
+        for f in layer["factors"]:
+            for op, art in f["ops"].items():
+                assert art in man["artifacts"], f"{f['id']}.{op}"
+    # param shapes match train_step grad outputs
+    ts = man["artifacts"]["train_step"]
+    names = ts["output_names"]
+    for p in man["params"]:
+        gi = names.index(f"grad:{p['name']}")
+        assert ts["outputs"][gi] == p["shape"]

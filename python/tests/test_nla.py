@@ -1,0 +1,133 @@
+"""Pure-HLO NLA (nla.py) and the composed L2 decomposition graphs vs
+numpy: the artifact-side algorithms must match LAPACK-grade references."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import brand, correction, rsvd
+from compile.nla import mgs_qr
+
+settings.register_profile("nla", max_examples=20, deadline=None)
+settings.load_profile("nla")
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@given(d=st.integers(2, 120), n=st.integers(1, 24), seed=st.integers(0, 2**31))
+def test_mgs_qr_reconstruction_and_orthonormality(d, n, seed):
+    n = min(n, d)
+    rng = np.random.default_rng(seed)
+    a = rand(rng, d, n)
+    q, r = mgs_qr(jnp.array(a))
+    q, r = np.asarray(q), np.asarray(r)
+    np.testing.assert_allclose(q @ r, a, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(q.T @ q, np.eye(n), atol=2e-3)
+    # R upper triangular
+    assert np.allclose(np.tril(r, -1), 0, atol=1e-5)
+
+
+def test_mgs_qr_rank_deficient_column():
+    """A column inside span of earlier columns → (numerically) zero R
+    diagonal. The Q column may be a normalized fp-noise direction — the
+    contract consumers rely on is that its R row is ~0 (zero contribution
+    to M_S in the Brand update) and reconstruction holds."""
+    rng = np.random.default_rng(0)
+    c = rand(rng, 20, 1)
+    a = np.concatenate([c, 2 * c, rand(rng, 20, 1)], axis=1)
+    q, r = mgs_qr(jnp.array(a))
+    q, r = np.asarray(q), np.asarray(r)
+    np.testing.assert_allclose(q @ r, a, rtol=1e-3, atol=1e-3)
+    assert abs(r[1, 1]) < 1e-3 * abs(r[0, 0])
+
+
+# ------------------------------------------------- Brand stages (Alg 3)
+
+
+@given(
+    d=st.integers(10, 100),
+    r=st.integers(1, 12),
+    n=st.integers(1, 8),
+    rho=st.floats(0.5, 0.99),
+    seed=st.integers(0, 2**31),
+)
+def test_brand_stages_equal_dense_evd(d, r, n, rho, seed):
+    """brand_p1 → (host EVD) → brand_p2 must reproduce the EXACT
+    eigendecomposition of ρ·UDUᵀ + (1−ρ)·AAᵀ (paper: Brand's algorithm
+    is exact; only truncation later introduces error)."""
+    if r + n >= d:
+        return
+    rng = np.random.default_rng(seed)
+    g = rand(rng, d, r)
+    x = g @ g.T
+    w, v = np.linalg.eigh(x)
+    u = v[:, ::-1][:, :r].copy()
+    dvals = w[::-1][:r].copy()
+    a = rand(rng, d, n)
+
+    m_s, q_a = brand.brand_p1(jnp.array(u), jnp.array(dvals), jnp.array(a), rho)
+    m_s = np.asarray(m_s)
+    # host EVD (numpy plays the role of rust linalg::eigh)
+    w_s, v_s = np.linalg.eigh(m_s)
+    w_s, v_s = w_s[::-1].copy(), v_s[:, ::-1].copy()
+    u_new = np.asarray(brand.brand_p2(jnp.array(u), jnp.array(q_a), jnp.array(v_s)))
+
+    target = rho * (u * dvals) @ u.T + (1 - rho) * (a @ a.T)
+    recon = (u_new * w_s) @ u_new.T
+    scale = max(1.0, np.abs(target).max())
+    np.testing.assert_allclose(recon / scale, target / scale, atol=5e-4)
+    # orthonormality of the rotated basis
+    np.testing.assert_allclose(u_new.T @ u_new, np.eye(r + n), atol=5e-3)
+
+
+# --------------------------------------------------- RSVD stages
+
+
+@given(seed=st.integers(0, 2**31))
+def test_rsvd_stages_recover_lowrank(seed):
+    d, true_r, k = 60, 6, 12
+    rng = np.random.default_rng(seed)
+    g = rand(rng, d, true_r)
+    m = g @ g.T
+    omega = rand(rng, d, k)
+    p1 = rsvd.make_rsvd_p1(n_pwr=2)
+    q, s = p1(jnp.array(m), jnp.array(omega))
+    q, s = np.asarray(q), np.asarray(s)
+    w, v = np.linalg.eigh(s)
+    w, v = w[::-1].copy(), v[:, ::-1].copy()
+    u = np.asarray(rsvd.tall_matmul(jnp.array(q), jnp.array(v[:, :true_r].copy())))
+    recon = (u * w[:true_r]) @ u.T
+    np.testing.assert_allclose(recon, m, rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------- correction (Alg 6)
+
+
+def test_correction_stages_snap_projection():
+    """After corr_p1 → EVD → corr_p2, the projection of the corrected
+    representation onto the chosen subspace equals the true factor's."""
+    d, r, c = 40, 10, 4
+    rng = np.random.default_rng(5)
+    g = rand(rng, d, d)
+    m = (g @ g.T).astype(np.float32)
+    u = np.linalg.qr(rand(rng, d, r))[0].astype(np.float32)
+    idx = np.array([0, 3, 5, 8], np.int32)
+
+    u_c, m_s = correction.corr_p1(jnp.array(u), jnp.array(m), jnp.array(idx))
+    u_c, m_s = np.asarray(u_c), np.asarray(m_s)
+    np.testing.assert_allclose(u_c, u[:, idx], atol=1e-6)
+    np.testing.assert_allclose(m_s, u_c.T @ m @ u_c, rtol=1e-4, atol=1e-3)
+    w, v = np.linalg.eigh(m_s)
+    w, v = w[::-1].copy(), v[:, ::-1].copy()
+    u_new = np.asarray(
+        correction.corr_p2(jnp.array(u), jnp.array(u_c), jnp.array(v), jnp.array(idx))
+    )
+    # non-corrected columns untouched
+    keep = [j for j in range(r) if j not in idx.tolist()]
+    np.testing.assert_allclose(u_new[:, keep], u[:, keep], atol=1e-6)
+    # corrected columns diagonalize the projected factor:
+    # (U_newᵀ M U_new)[idx, idx] == diag(w)
+    proj = u_new[:, idx].T @ m @ u_new[:, idx]
+    np.testing.assert_allclose(proj, np.diag(w), atol=2e-2 * np.abs(w).max())

@@ -1,0 +1,77 @@
+//! E7 — §3.5 spectrum-continuation ablation: the paper reports "slightly
+//! better performance for all algorithms" with the trick on. This bench
+//! measures its effect on (a) the §4.2 error metrics and (b) short-run
+//! training loss, for B-KFAC and R-KFAC.
+//!
+//! Env: BNKFAC_BENCH_CONFIG (default tiny).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnkfac::coordinator::probe::ErrorProbe;
+use bnkfac::coordinator::{Trainer, TrainerCfg};
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::{Algo, Hyper};
+use bnkfac::runtime::Runtime;
+use common::{env_usize, write_results, Table};
+
+fn main() {
+    let config = std::env::var("BNKFAC_BENCH_CONFIG").unwrap_or_else(|_| "tiny".into());
+    let epochs = env_usize("BNKFAC_ABL_EPOCHS", 3);
+    let rt = Runtime::open(format!("artifacts/{config}")).expect("make artifacts");
+    let ds = Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        n_train: 1024,
+        n_test: 256,
+        ..DatasetCfg::default()
+    });
+    let mut table = Table::new(&[
+        "algo", "continuation", "avg_invA_err", "avg_step_err", "final_test_acc",
+    ]);
+    for algo in [Algo::BKfac, Algo::RKfac] {
+        for cont in [true, false] {
+            let hyper = Hyper {
+                t_updt: 5,
+                t_inv: 25,
+                t_brand: 5,
+                spectrum_continuation: cont,
+                ..Hyper::default()
+            };
+            // error probe
+            let cfg = TrainerCfg {
+                algo,
+                hyper: hyper.clone(),
+                seed: 42,
+                probe_layer: Some("fc0".into()),
+                eval_every: 0,
+                ..TrainerCfg::default()
+            };
+            let mut tr = Trainer::new(&rt, cfg).unwrap();
+        tr.warmup().unwrap();
+            let mut probe = ErrorProbe::new("fc0");
+            probe.run(&mut tr, &ds, 30, 50).unwrap();
+            let avg = probe.averages();
+            // short training run
+            let cfg2 = TrainerCfg {
+                algo,
+                hyper,
+                seed: 42,
+                ..TrainerCfg::default()
+            };
+            let mut tr2 = Trainer::new(&rt, cfg2).unwrap();
+            tr2.warmup().unwrap();
+            let log = tr2.run(&ds, epochs, 0).unwrap();
+            let acc = log.eval.last().unwrap().test_acc;
+            table.row(vec![
+                algo.name().to_string(),
+                cont.to_string(),
+                format!("{:.3e}", avg[0]),
+                format!("{:.3e}", avg[2]),
+                format!("{acc:.4}"),
+            ]);
+        }
+    }
+    println!("\n== E7: spectrum continuation ablation (§3.5) ==");
+    table.print();
+    write_results("ablation_spectrum.csv", &table.to_csv());
+}

@@ -1,0 +1,113 @@
+//! benchkit — shared harness for the `harness = false` bench targets
+//! (criterion is unavailable offline; this provides warmup + repeated
+//! timing with median/mean, simple table printing, CSV output, and
+//! log-log slope fitting for the complexity-scaling benches).
+
+use std::time::Instant;
+
+/// Time `f` with `warmup` unmeasured calls then `reps` measured calls.
+/// Returns (median_secs, mean_secs).
+pub fn time_fn<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> (f64, f64) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    (median, mean)
+}
+
+/// Least-squares slope of log(y) vs log(x) — the measured complexity
+/// exponent for the scaling benches.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+/// Environment knob with default (benches scale via env, not argv —
+/// `cargo bench` owns argv).
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn env_flag(key: &str) -> bool {
+    std::env::var(key).map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// Write a CSV string under results/, creating the directory.
+pub fn write_results(name: &str, contents: &str) {
+    let path = std::path::Path::new("results").join(name);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).expect("mkdir results");
+    }
+    std::fs::write(&path, contents).expect("write results");
+    println!("[wrote {}]", path.display());
+}
+
+/// Markdown-ish table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 1)));
+        }
+        println!("{sep}");
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}

@@ -1,0 +1,163 @@
+//! E1/E2/E3 — regenerates Fig 1 (inverse K-factor error curves), Fig 2
+//! (step error curves) and Table 1 (average error metrics + t_epoch).
+//!
+//! Setup mirrors §4.2 at reproduction scale: T_updt = 10; seven
+//! algorithm settings:
+//!   B-KFAC(T_Brand=10) · B-R-KFAC(10,50) · B-KFAC-C(10,50,φ=.5)
+//!   R-KFAC(T_inv=50) · R-KFAC(T_inv=10) · R-KFAC(T_inv≈∞ "no reset")
+//!   K-FAC(T_inv=50)
+//! All measure errors on the first FC layer against the exact-inverse
+//! benchmark (K-FAC with T_inv = T_updt).
+//!
+//! Per-step rows go to results/fig1_fig2/<algo>.csv (columns m1..m4 —
+//! Fig 1 plots m1/m2, Fig 2 plots m3/m4); the Table 1 summary prints at
+//! the end and goes to results/table1.csv.
+//!
+//! Env: BNKFAC_BENCH_CONFIG (tiny|vgg_mini, default tiny),
+//!      BNKFAC_BENCH_WARMUP (default 110), BNKFAC_BENCH_STEPS (default 100).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnkfac::coordinator::probe::ErrorProbe;
+use bnkfac::coordinator::{Trainer, TrainerCfg};
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::{Algo, Hyper};
+use bnkfac::runtime::Runtime;
+use common::{env_usize, write_results, Table};
+
+struct Setting {
+    label: &'static str,
+    algo: Algo,
+    hyper: Hyper,
+}
+
+fn main() {
+    let config = std::env::var("BNKFAC_BENCH_CONFIG").unwrap_or_else(|_| "tiny".into());
+    let warmup = env_usize("BNKFAC_BENCH_WARMUP", 110);
+    let steps = env_usize("BNKFAC_BENCH_STEPS", 100);
+    // probe layer (and the layer receiving B-updates). vgg_mini record
+    // runs probe fc1 — fc0's d=2049 makes the dense REFERENCE inverse
+    // (not the algorithms!) prohibitive on this 1-core testbed.
+    let probe_layer =
+        std::env::var("BNKFAC_PROBE_LAYER").unwrap_or_else(|_| "fc0".into());
+    // optional comma-separated label filter
+    let only: Option<Vec<String>> = std::env::var("BNKFAC_BENCH_ALGOS")
+        .ok()
+        .map(|s| s.split(',').map(|t| t.trim().to_string()).collect());
+    let rt = Runtime::open(format!("artifacts/{config}"))
+        .expect("run `make artifacts` first");
+    let ds = Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        n_train: 1024,
+        n_test: 256,
+        ..DatasetCfg::default()
+    });
+    let steps_per_epoch = ds.train_y.len() / rt.manifest.config.batch;
+
+    let base = Hyper {
+        t_updt: 10,
+        brand_layer: Some(probe_layer.clone()),
+        ..Hyper::default()
+    };
+    let h = |f: &dyn Fn(&mut Hyper)| {
+        let mut x = base.clone();
+        f(&mut x);
+        x
+    };
+    let never = warmup + steps + 1; // "no reset": single init decomposition
+    let settings = vec![
+        Setting {
+            label: "B-KFAC",
+            algo: Algo::BKfac,
+            hyper: h(&|x| x.t_brand = 10),
+        },
+        Setting {
+            label: "B-R-KFAC",
+            algo: Algo::BRKfac,
+            hyper: h(&|x| {
+                x.t_brand = 10;
+                x.t_rsvd = 50;
+                x.t_inv = 50;
+            }),
+        },
+        Setting {
+            label: "B-KFAC-C",
+            algo: Algo::BKfacC,
+            hyper: h(&|x| {
+                x.t_brand = 10;
+                x.t_corct = 50;
+                x.t_inv = 50;
+            }),
+        },
+        Setting {
+            label: "R-KFAC T50",
+            algo: Algo::RKfac,
+            hyper: h(&|x| x.t_inv = 50),
+        },
+        Setting {
+            label: "R-KFAC T10",
+            algo: Algo::RKfac,
+            hyper: h(&|x| x.t_inv = 10),
+        },
+        Setting {
+            label: "R-KFAC noreset",
+            algo: Algo::RKfac,
+            hyper: h(&|x| x.t_inv = never),
+        },
+        Setting {
+            label: "K-FAC T50",
+            algo: Algo::KfacExact,
+            hyper: h(&|x| x.t_inv = 50),
+        },
+    ];
+
+    let mut table = Table::new(&[
+        "optimizer", "avg_m1_invA", "avg_m2_invG", "avg_m3_step", "avg_m4_angle",
+        "t_epoch_est_s",
+    ]);
+    for s in settings {
+        if let Some(only) = &only {
+            if !only.iter().any(|o| s.label.contains(o.as_str())) {
+                continue;
+            }
+        }
+        let cfg = TrainerCfg {
+            algo: s.algo,
+            hyper: s.hyper,
+            seed: 42,
+            probe_layer: Some(probe_layer.clone()),
+            eval_every: 0,
+            ..TrainerCfg::default()
+        };
+        let mut tr = Trainer::new(&rt, cfg).unwrap();
+        tr.warmup().unwrap();
+        let mut probe = ErrorProbe::new(&probe_layer);
+        probe.run(&mut tr, &ds, warmup, steps).unwrap();
+        let avg = probe.averages();
+        // t_epoch estimate from the trainer's own phase timers (probe
+        // reference computations excluded by construction)
+        let train_secs = tr.timers.grand_total() - tr.timers.total("eval");
+        let t_epoch = train_secs / tr.step as f64 * steps_per_epoch as f64;
+        table.row(vec![
+            s.label.to_string(),
+            format!("{:.3e}", avg[0]),
+            format!("{:.3e}", avg[1]),
+            format!("{:.3e}", avg[2]),
+            format!("{:.3e}", avg[3]),
+            format!("{t_epoch:.2}"),
+        ]);
+        let fname = format!(
+            "fig1_fig2_{config}/{}.csv",
+            s.label.replace(' ', "_").to_lowercase()
+        );
+        write_results(&fname, &probe.to_csv());
+        println!(
+            "{:<16} m1={:.3e} m2={:.3e} m3={:.3e} m4={:.3e} t_epoch≈{t_epoch:.2}s",
+            s.label, avg[0], avg[1], avg[2], avg[3]
+        );
+    }
+    println!("\n== Table 1 (reproduction; paper Table 1) ==");
+    table.print();
+    write_results(&format!("table1_{config}.csv"), &table.to_csv());
+}

@@ -1,0 +1,102 @@
+//! E5a — the paper's §3 complexity claim as measured curves:
+//! per-update cost of the K-factor inverse maintenance vs layer width d.
+//!
+//!   K-FAC  (exact EVD)        O(d³)   → slope ≈ 3
+//!   R-KFAC (RSVD, rank r+r_o) O(d²)   → slope ≈ 2
+//!   B-KFAC (Brand, rank r+n)  O(d)    → slope ≈ 1
+//!
+//! Regenerates the ordering + exponents behind Table 1's t_epoch column
+//! and the §3.1 complexity table. Runs on the host linalg substrate (the
+//! same algorithms the artifacts implement; see artifact_roundtrip tests
+//! for the host⇄artifact agreement).
+//!
+//! Env: BNKFAC_SCALE_MAX_D (default 2048), BNKFAC_SCALE_REPS (default 3).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnkfac::linalg::{LowRank, Mat, RsvdOpts};
+use bnkfac::util::rng::Rng;
+use common::{env_usize, loglog_slope, time_fn, write_results, Table};
+
+fn main() {
+    let max_d = env_usize("BNKFAC_SCALE_MAX_D", 2048);
+    let reps = env_usize("BNKFAC_SCALE_REPS", 3);
+    let (r, n, ro) = (60usize, 32usize, 10usize);
+    let mut rng = Rng::new(1);
+
+    let mut dims = vec![];
+    let mut d = 256;
+    while d <= max_d {
+        dims.push(d);
+        d *= 2;
+    }
+
+    let mut tab = Table::new(&[
+        "d", "kfac_evd_ms", "rkfac_rsvd_ms", "bkfac_brand_ms", "speedup_b_vs_r",
+    ]);
+    let (mut evd_pts, mut rsvd_pts, mut brand_pts) = (vec![], vec![], vec![]);
+
+    for &d in &dims {
+        // EA-like K-factor with decaying spectrum + an incoming statistic
+        // (O(d²k) construction; the exact top basis seeds the Brand rep)
+        let (gram, q, dvals) = Mat::psd_lowrank_decay(d, r + n, 0.95, 1e-4, &mut rng);
+        let a = Mat::gauss(d, n, 1.0, &mut rng);
+        let rep = LowRank::new(q, dvals);
+
+        // K-FAC: exact EVD (skip above 1024 — minutes of runtime; the
+        // slope is fit from the measured points)
+        let evd_ms = if d <= 1024.min(max_d) {
+            let (med, _) = time_fn(0, reps.min(2), || gram.eigh());
+            evd_pts.push((d as f64, med));
+            format!("{:.1}", med * 1e3)
+        } else {
+            "-".into()
+        };
+
+        // R-KFAC: RSVD at target rank r, oversample ro, n_pwr 4
+        let opts = RsvdOpts {
+            rank: r.min(d - 1),
+            oversample: ro,
+            n_pwr: 4,
+        };
+        let (rsvd_med, _) = time_fn(1, reps, || gram.rsvd(opts, &mut rng.clone()));
+        rsvd_pts.push((d as f64, rsvd_med));
+
+        // B-KFAC: truncate + Brand
+        let (brand_med, _) = time_fn(1, reps, || rep.brand_ea_update(&a, 0.95, r.min(d - n - 1)));
+        brand_pts.push((d as f64, brand_med));
+
+        tab.row(vec![
+            d.to_string(),
+            evd_ms,
+            format!("{:.1}", rsvd_med * 1e3),
+            format!("{:.2}", brand_med * 1e3),
+            format!("{:.0}x", rsvd_med / brand_med),
+        ]);
+    }
+
+    println!("\n== E5a: inverse-update cost scaling (paper §3.1) ==");
+    tab.print();
+    let slope = |pts: &[(f64, f64)]| {
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        if xs.len() >= 2 {
+            loglog_slope(&xs, &ys)
+        } else {
+            f64::NAN
+        }
+    };
+    println!("\nmeasured log-log slopes (paper claims: 3 / 2 / 1):");
+    println!("  K-FAC  exact EVD : {:.2}", slope(&evd_pts));
+    println!("  R-KFAC RSVD      : {:.2}", slope(&rsvd_pts));
+    println!("  B-KFAC Brand     : {:.2}", slope(&brand_pts));
+    let s_evd = slope(&evd_pts);
+    let s_rsvd = slope(&rsvd_pts);
+    let s_brand = slope(&brand_pts);
+    assert!(
+        s_brand < s_rsvd && s_rsvd < s_evd,
+        "complexity ordering violated: brand {s_brand} rsvd {s_rsvd} evd {s_evd}"
+    );
+    write_results("scaling_inverse_update.csv", &tab.to_csv());
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: the training orchestrator.
+//!
+//! `trainer` drives the full loop (fwd/bwd artifact → stat updates →
+//! scheduled decomposition updates → preconditioned step → apply) under
+//! any of the seven optimizers; `probe` instruments a run with the §4.2
+//! error metrics against the exact-inverse benchmark (Fig 1/2, Table 1).
+
+pub mod probe;
+pub mod trainer;
+
+pub use trainer::{Trainer, TrainerCfg};

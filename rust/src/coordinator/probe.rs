@@ -1,0 +1,233 @@
+//! §4.2 error probe — the instrument behind Fig 1, Fig 2 and Table 1.
+//!
+//! Benchmark definition (paper): "a K-FAC algorithm with T_inv = T_updt
+//! always maintains the inverse K-factors at their exact values" — the
+//! probe maintains its own exact EA Grams for the probed layer and
+//! recomputes dense damped inverses at every stat step, then measures:
+//!
+//!  (1) ‖Ã⁻¹ − A_ref⁻¹‖_F / ‖A_ref⁻¹‖_F
+//!  (2) same for Γ
+//!  (3) ‖s̃ − s_ref‖_F / ‖s_ref‖_F        (subspace step of the probed layer)
+//!  (4) 1 − cos∠(s̃, s_ref)
+//!
+//! where tilde quantities come from the (approximate) algorithm under
+//! test via the Trainer's capture hook.
+
+use anyhow::Result;
+
+use super::trainer::Trainer;
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::metrics::{angle_err, dense_inv_from_rep};
+use crate::util::ser::CsvWriter;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeRow {
+    pub step: usize,
+    pub m1: f32,
+    pub m2: f32,
+    pub m3: f32,
+    pub m4: f32,
+}
+
+pub struct ErrorProbe {
+    pub layer: String,
+    gram_a: Option<Mat>,
+    gram_g: Option<Mat>,
+    inv_a_ref: Option<Mat>,
+    inv_g_ref: Option<Mat>,
+    lam_a_ref: f32,
+    lam_g_ref: f32,
+    pub rows: Vec<ProbeRow>,
+}
+
+impl ErrorProbe {
+    pub fn new(layer: &str) -> ErrorProbe {
+        ErrorProbe {
+            layer: layer.to_string(),
+            gram_a: None,
+            gram_g: None,
+            inv_a_ref: None,
+            inv_g_ref: None,
+            lam_a_ref: 0.0,
+            lam_g_ref: 0.0,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Update exact Grams + reference inverses from a stat-step capture.
+    fn absorb_stats(&mut self, a_stat: &Mat, g_stat: &Mat, rho: f32, phi: f32) {
+        let upd = |gram: &mut Option<Mat>, stat: &Mat| {
+            let incoming = stat.syrk();
+            match gram {
+                None => *gram = Some(incoming),
+                Some(m) => {
+                    m.scale_inplace(rho);
+                    m.axpy_inplace(1.0 - rho, &incoming);
+                }
+            }
+        };
+        upd(&mut self.gram_a, a_stat);
+        upd(&mut self.gram_g, g_stat);
+        // reference damping: λ = λ_max(exact factor) · φ (as in §6)
+        let ga = self.gram_a.as_ref().unwrap();
+        let gg = self.gram_g.as_ref().unwrap();
+        self.lam_a_ref = (top_eig(ga) * phi).max(1e-8);
+        self.lam_g_ref = (top_eig(gg) * phi).max(1e-8);
+        self.inv_a_ref = Some(ga.damped_inverse(self.lam_a_ref));
+        self.inv_g_ref = Some(gg.damped_inverse(self.lam_g_ref));
+    }
+
+    /// Measure the current step. Must run right after trainer.train_step.
+    fn measure(&mut self, trainer: &Trainer, epoch: usize) -> Option<ProbeRow> {
+        let cap = trainer.last_capture.as_ref()?;
+        let phi = trainer.policy.hyper.phi_lambda(epoch);
+        if cap.stat_step {
+            self.absorb_stats(&cap.a_stat, &cap.g_stat, trainer.policy.hyper.rho, phi);
+        }
+        let (inv_a_ref, inv_g_ref) = (self.inv_a_ref.as_ref()?, self.inv_g_ref.as_ref()?);
+        let layer = trainer
+            .layers
+            .iter()
+            .find(|l| l.spec.name == self.layer)
+            .expect("probe layer exists");
+        if !layer.has_reps() {
+            return None;
+        }
+        let cont = trainer.policy.hyper.spectrum_continuation;
+        // approximate dense inverses as the algorithm would apply them
+        let lam_a = layer.a.lambda_max() * phi;
+        let lam_g = layer.g.lambda_max() * phi;
+        let inv_a = dense_inv_from_rep(layer.a.rep.as_ref()?, lam_a, cont);
+        let inv_g = dense_inv_from_rep(layer.g.rep.as_ref()?, lam_g, cont);
+        let m1 = inv_a.rel_err(inv_a_ref);
+        let m2 = inv_g.rel_err(inv_g_ref);
+        // reference subspace step: Â_ref⁻¹ · grad · Γ̂_ref⁻¹ (param layout)
+        let s_ref = inv_a_ref.matmul(&cap.grad).matmul(inv_g_ref);
+        let m3 = cap.dir.rel_err(&s_ref);
+        let m4 = angle_err(&cap.dir, &s_ref);
+        Some(ProbeRow {
+            step: trainer.step,
+            m1,
+            m2,
+            m3,
+            m4,
+        })
+    }
+
+    /// Drive `measure_steps` training steps (after `warmup_steps` without
+    /// measurement), recording one row per measured step.
+    pub fn run(
+        &mut self,
+        trainer: &mut Trainer,
+        ds: &Dataset,
+        warmup_steps: usize,
+        measure_steps: usize,
+    ) -> Result<()> {
+        let b = trainer.rt.manifest.config.batch;
+        let mut rng = crate::util::rng::Rng::new(0x9B0B);
+        let mut batches: Vec<crate::data::Batch> = Vec::new();
+        let mut bi = 0usize;
+        let mut epoch = 0usize;
+        let steps_per_epoch = (ds.train_y.len() / b).max(1);
+        for k in 0..(warmup_steps + measure_steps) {
+            if bi >= batches.len() {
+                batches = ds.epoch_batches(b, &mut rng);
+                bi = 0;
+            }
+            trainer.train_step(&batches[bi], epoch)?;
+            bi += 1;
+            if trainer.step % steps_per_epoch == 0 {
+                epoch += 1;
+            }
+            // track reference state during warmup too (it's an EA)
+            if k < warmup_steps {
+                if let Some(cap) = trainer.last_capture.as_ref() {
+                    if cap.stat_step {
+                        let phi = trainer.policy.hyper.phi_lambda(epoch);
+                        let (a, g) = (cap.a_stat.clone(), cap.g_stat.clone());
+                        self.absorb_stats(&a, &g, trainer.policy.hyper.rho, phi);
+                    }
+                }
+            } else if let Some(row) = self.measure(trainer, epoch) {
+                self.rows.push(row);
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean of each metric over the recorded window (Table 1 columns 1–4).
+    pub fn averages(&self) -> [f32; 4] {
+        let n = self.rows.len().max(1) as f32;
+        let mut acc = [0.0f32; 4];
+        for r in &self.rows {
+            acc[0] += r.m1;
+            acc[1] += r.m2;
+            acc[2] += r.m3;
+            acc[3] += r.m4;
+        }
+        acc.map(|x| x / n)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut w = CsvWriter::new(&["step", "m1_inv_a", "m2_inv_g", "m3_step", "m4_angle"]);
+        for r in &self.rows {
+            w.row_display(&[&r.step, &r.m1, &r.m2, &r.m3, &r.m4]);
+        }
+        w.to_string()
+    }
+}
+
+/// Power-iteration estimate of the top eigenvalue (reference damping).
+fn top_eig(m: &Mat) -> f32 {
+    let n = m.rows;
+    let mut v = vec![1.0f32; n];
+    let mut lam = 0.0f32;
+    for _ in 0..20 {
+        let w = m.matvec(&v);
+        lam = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if lam < 1e-30 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / lam;
+        }
+    }
+    lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn top_eig_matches_eigh() {
+        let mut rng = Rng::new(110);
+        let m = Mat::psd_with_decay(20, 0.6, &mut rng);
+        let want = m.eigh().d[0];
+        let got = top_eig(&m);
+        assert!((got - want).abs() < 1e-2 * want, "{got} vs {want}");
+    }
+
+    #[test]
+    fn probe_averages_math() {
+        let mut p = ErrorProbe::new("fc0");
+        p.rows.push(ProbeRow {
+            step: 1,
+            m1: 1.0,
+            m2: 2.0,
+            m3: 3.0,
+            m4: 4.0,
+        });
+        p.rows.push(ProbeRow {
+            step: 2,
+            m1: 3.0,
+            m2: 2.0,
+            m3: 1.0,
+            m4: 0.0,
+        });
+        assert_eq!(p.averages(), [2.0, 2.0, 2.0, 2.0]);
+        assert!(p.to_csv().contains("m4_angle"));
+    }
+}

@@ -1,0 +1,541 @@
+//! The training loop: paper Alg 1 with pluggable inverse-update policy.
+//!
+//! One `Trainer` = one optimizer run. Per step:
+//!   1. `train_step` artifact: loss, grads, K-factor statistics
+//!   2. on stat steps (k % T_updt == 0): EA updates + the policy's
+//!      decomposition ops (RSVD / Brand / correction / exact EVD)
+//!   3. per-layer preconditioned step (artifact), BN/SGD for the rest
+//!   4. global step clipping, weight decay, parameter update
+//!   5. BN running-stat EA
+//!
+//! The rust side owns ALL state and randomness; python never runs here.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Batch, Dataset};
+use crate::linalg::Mat;
+use crate::metrics::{EvalRecord, RunLog, TrainRecord};
+use crate::model::{BnState, ParamStore};
+use crate::optim::factor::{FactorState, Stat};
+use crate::optim::{Algo, Hyper, LayerState, Policy};
+use crate::optim::seng::SengState;
+use crate::runtime::{Runtime, Value};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimers;
+
+#[derive(Clone, Debug)]
+pub struct TrainerCfg {
+    pub algo: Algo,
+    pub hyper: Hyper,
+    pub seed: u64,
+    /// evaluate every `eval_every` epochs (1 = every epoch)
+    pub eval_every: usize,
+    /// SENG-specific (official defaults, appendix D)
+    pub seng_damping: f32,
+    pub seng_momentum: f32,
+    pub seng_lr0: f32,
+    pub seng_wd: f32,
+    /// capture per-step grad/direction/stats of this layer (error probe)
+    pub probe_layer: Option<String>,
+}
+
+/// Per-step capture for the §4.2 error study.
+#[derive(Clone, Debug)]
+pub struct Capture {
+    pub grad: Mat,
+    pub dir: Mat,
+    pub a_stat: Mat,
+    pub g_stat: Mat,
+    pub stat_step: bool,
+}
+
+impl Default for TrainerCfg {
+    fn default() -> Self {
+        TrainerCfg {
+            algo: Algo::BKfac,
+            hyper: Hyper::default(),
+            seed: 42,
+            eval_every: 1,
+            seng_damping: 2.0,
+            seng_momentum: 0.9,
+            seng_lr0: 0.05,
+            seng_wd: 1e-2,
+            probe_layer: None,
+        }
+    }
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainerCfg,
+    pub policy: Policy,
+    pub params: ParamStore,
+    pub bn: BnState,
+    pub layers: Vec<LayerState>,
+    pub seng: SengState,
+    pub rng: Rng,
+    pub timers: PhaseTimers,
+    pub step: usize,
+    /// most recent probe capture (when cfg.probe_layer is set)
+    pub last_capture: Option<Capture>,
+    /// output index map for the train_step artifact
+    out_idx: BTreeMap<String, usize>,
+    /// output index map for train_step_light (None if not in manifest)
+    out_idx_light: Option<BTreeMap<String, usize>>,
+    /// names of fc layers with dropout, artifact input order
+    dropout_layers: Vec<(String, f64, usize)>, // (name, p, d_in)
+}
+
+/// Result of a single optimizer step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainerCfg) -> Result<Trainer<'rt>> {
+        let manifest = &rt.manifest;
+        let mut rng = Rng::new(cfg.seed);
+        let params = ParamStore::init(manifest, &mut rng);
+        let bn = BnState::new(manifest, 0.9);
+        let policy = Policy::new(cfg.algo, cfg.hyper.clone());
+        let mut layers = Vec::new();
+        for l in &manifest.layers {
+            let fa = l.factors[0].clone();
+            let fg = l.factors[1].clone();
+            let keep_a = policy.needs_gram(&fa);
+            let keep_g = policy.needs_gram(&fg);
+            layers.push(LayerState::new(
+                l.clone(),
+                FactorState::new(fa, keep_a),
+                FactorState::new(fg, keep_g),
+            ));
+        }
+        let train_spec = manifest
+            .artifacts
+            .get("train_step")
+            .context("manifest missing train_step artifact")?;
+        let out_names = train_spec
+            .output_names
+            .clone()
+            .context("train_step artifact lacks output names")?;
+        let out_idx = out_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        let out_idx_light = manifest
+            .artifacts
+            .get("train_step_light")
+            .and_then(|a| a.output_names.as_ref())
+            .map(|ns| {
+                ns.iter()
+                    .enumerate()
+                    .map(|(i, n)| (n.clone(), i))
+                    .collect()
+            });
+        let dropout_layers = manifest
+            .layers
+            .iter()
+            .filter(|l| l.kind == "fc" && l.dropout > 0.0)
+            .map(|l| (l.name.clone(), l.dropout, l.d_a - 1))
+            .collect();
+        Ok(Trainer {
+            rt,
+            seng: SengState::new(cfg.seng_damping, cfg.seng_momentum),
+            policy,
+            params,
+            bn,
+            layers,
+            rng,
+            timers: PhaseTimers::new(),
+            step: 0,
+            last_capture: None,
+            out_idx,
+            out_idx_light,
+            dropout_layers,
+            cfg,
+        })
+    }
+
+    /// Pre-compile every artifact this run can touch, so timing loops
+    /// measure execution, not first-call compilation.
+    pub fn warmup(&self) -> Result<()> {
+        let mut names: Vec<&str> = vec!["train_step", "eval_step"];
+        for l in &self.rt.manifest.layers {
+            names.extend(l.ops.values().map(|s| s.as_str()));
+            for f in &l.factors {
+                names.extend(f.ops.values().map(|s| s.as_str()));
+            }
+        }
+        self.rt.warmup(&names)
+    }
+
+    fn out<'a>(&self, outs: &'a [Value], name: &str) -> &'a Value {
+        &outs[*self
+            .out_idx
+            .get(name)
+            .unwrap_or_else(|| panic!("train_step has no output '{name}'"))]
+    }
+
+    fn out_light<'a>(&self, outs: &'a [Value], name: &str) -> &'a Value {
+        let idx = self
+            .out_idx_light
+            .as_ref()
+            .expect("light artifact")
+            .get(name)
+            .unwrap_or_else(|| panic!("train_step_light has no output '{name}'"));
+        &outs[*idx]
+    }
+
+    /// Execute one optimizer step on a batch. `epoch` drives schedules.
+    pub fn train_step(&mut self, batch: &Batch, epoch: usize) -> Result<StepStats> {
+        let k = self.step;
+        let m = &self.rt.manifest;
+        let b = m.config.batch;
+        assert_eq!(batch.y.len(), b, "batch size mismatch");
+
+        // ---- 1. forward/backward -------------------------------------
+        let mut inputs = self.params.as_values();
+        inputs.push(Value::T(
+            batch.x.clone(),
+            vec![b, m.config.image, m.config.image, m.config.channels],
+        ));
+        inputs.push(Value::I(batch.y.clone()));
+        for (_, p, d_in) in &self.dropout_layers {
+            let keep = 1.0 - *p as f32;
+            let mut mask = vec![0.0f32; b * d_in];
+            for v in mask.iter_mut() {
+                if self.rng.next_f32() < keep {
+                    *v = 1.0 / keep;
+                }
+            }
+            inputs.push(Value::T(mask, vec![b, *d_in]));
+        }
+        // stat-skipping (§Perf): statistics are only consumed on stat
+        // steps, so all other steps run the cheaper no-stats graph —
+        // unless the algorithm needs per-step stats (SENG, Alg-8 apply)
+        // or a probe wants per-step captures.
+        let stat_step_pre = k % self.policy.hyper.t_updt == 0;
+        let needs_stats_every_step = matches!(self.policy.algo, Algo::Seng)
+            || self.policy.hyper.linear_apply
+            || self.cfg.probe_layer.is_some();
+        let use_light = self.out_idx_light.is_some()
+            && !stat_step_pre
+            && !needs_stats_every_step;
+        let artifact = if use_light { "train_step_light" } else { "train_step" };
+        let t0 = Instant::now();
+        let outs = self.rt.exec(artifact, &inputs)?;
+        self.timers.add(
+            if use_light { "fwd_bwd_light" } else { "fwd_bwd" },
+            t0.elapsed().as_secs_f64(),
+        );
+        // index map for the artifact actually executed (cloned: tiny, and
+        // avoids holding an immutable self borrow across the &mut uses)
+        let idx_map: BTreeMap<String, usize> = if use_light {
+            self.out_idx_light.clone().expect("light artifact")
+        } else {
+            self.out_idx.clone()
+        };
+        fn pick<'a>(
+            outs: &'a [Value],
+            map: &BTreeMap<String, usize>,
+            name: &str,
+        ) -> &'a Value {
+            &outs[*map
+                .get(name)
+                .unwrap_or_else(|| panic!("artifact has no output '{name}'"))]
+        }
+        fn grad_of(outs: &[Value], map: &BTreeMap<String, usize>, name: &str) -> Vec<f32> {
+            match pick(outs, map, &format!("grad:{name}")) {
+                Value::M(m) => m.data.clone(),
+                Value::V(v) => v.clone(),
+                other => panic!("grad:{name} unexpected value {other:?}"),
+            }
+        }
+
+        let loss = pick(&outs, &idx_map, "loss").as_scalar();
+        let n_correct = pick(&outs, &idx_map, "n_correct").as_scalar();
+
+        // ---- 2. statistics + decomposition updates --------------------
+        let rho = self.policy.hyper.rho;
+        let stat_step = k % self.policy.hyper.t_updt == 0;
+        if self.policy.algo.is_kfac_family() && stat_step {
+            for li in 0..self.layers.len() {
+                let lname = self.layers[li].spec.name.clone();
+                let a_stat = pick(&outs, &idx_map, &format!("stat:{lname}/A")).as_mat().clone();
+                let g_stat = pick(&outs, &idx_map, &format!("stat:{lname}/G")).as_mat().clone();
+                let kind_conv = self.layers[li].spec.kind == "conv";
+                let (sa, sg) = if kind_conv {
+                    (Stat::Gram(&a_stat), Stat::Gram(&g_stat))
+                } else {
+                    (Stat::Raw(&a_stat), Stat::Raw(&g_stat))
+                };
+                let layer = &mut self.layers[li];
+                layer.a.stat_update(&sa, rho, Some(self.rt), &mut self.timers)?;
+                layer.g.stat_update(&sg, rho, Some(self.rt), &mut self.timers)?;
+                // decomposition ops per policy
+                let op_a = self.policy.op_at(k, &layer.a.plan);
+                let op_g = self.policy.op_at(k, &layer.g.plan);
+                let raw_a = (!kind_conv).then_some(&a_stat);
+                let raw_g = (!kind_conv).then_some(&g_stat);
+                layer.a.run_op(
+                    op_a,
+                    raw_a,
+                    rho,
+                    &self.policy,
+                    Some(self.rt),
+                    &mut self.rng,
+                    &mut self.timers,
+                )?;
+                layer.g.run_op(
+                    op_g,
+                    raw_g,
+                    rho,
+                    &self.policy,
+                    Some(self.rt),
+                    &mut self.rng,
+                    &mut self.timers,
+                )?;
+            }
+        }
+
+        // ---- 3. directions --------------------------------------------
+        let alpha = self.lr(epoch);
+        let phi = self.policy.hyper.phi_lambda(epoch);
+        let mut directions: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        match self.policy.algo {
+            Algo::Sgd => {
+                for name in self.params.names().to_vec() {
+                    let g = grad_of(&outs, &idx_map, &name);
+                    directions.insert(name, g);
+                }
+            }
+            Algo::Seng => {
+                for li in 0..self.layers.len() {
+                    let spec = self.layers[li].spec.clone();
+                    let grad = self
+                        .out(&outs, &format!("grad:{}", spec.grad_param))
+                        .as_mat()
+                        .clone();
+                    let dir = if spec.kind == "fc" {
+                        let a_stat =
+                            pick(&outs, &idx_map, &format!("stat:{}/A", spec.name)).as_mat();
+                        let g_stat =
+                            pick(&outs, &idx_map, &format!("stat:{}/G", spec.name)).as_mat();
+                        self.timers.time("seng_fc", || {
+                            self.seng.fc_direction(&grad, a_stat, g_stat).data
+                        })
+                    } else {
+                        self.seng.diag_direction(&spec.grad_param, &grad.data)
+                    };
+                    let dir = self.seng.momentum_step(&spec.grad_param, &dir);
+                    directions.insert(spec.grad_param.clone(), dir);
+                }
+                // BN params: diagonal scaling + momentum
+                for name in self.params.names().to_vec() {
+                    if directions.contains_key(&name) {
+                        continue;
+                    }
+                    let g = grad_of(&outs, &idx_map, &name);
+                    let dir = self.seng.diag_direction(&name, &g);
+                    let dir = self.seng.momentum_step(&name, &dir);
+                    directions.insert(name, dir);
+                }
+            }
+            _ => {
+                let exact = self.policy.algo == Algo::KfacExact;
+                for li in 0..self.layers.len() {
+                    let spec = self.layers[li].spec.clone();
+                    let grad = self
+                        .out(&outs, &format!("grad:{}", spec.grad_param))
+                        .as_mat()
+                        .clone();
+                    let layer = &self.layers[li];
+                    let dir = if layer.has_reps() {
+                        let use_linear = self.policy.hyper.linear_apply
+                            && spec.kind == "fc"
+                            && self.policy.brand_managed(&layer.a.plan);
+                        if use_linear {
+                            let a_stat =
+                                pick(&outs, &idx_map, &format!("stat:{}/A", spec.name)).as_mat();
+                            let g_stat =
+                                pick(&outs, &idx_map, &format!("stat:{}/G", spec.name)).as_mat();
+                            layer
+                                .linear_apply_step(
+                                    a_stat,
+                                    g_stat,
+                                    phi,
+                                    &self.policy.hyper,
+                                    Some(self.rt),
+                                    &mut self.timers,
+                                )?
+                                .data
+                        } else {
+                            layer
+                                .precond_step(
+                                    &grad,
+                                    phi,
+                                    &self.policy.hyper,
+                                    exact,
+                                    Some(self.rt),
+                                    &mut self.timers,
+                                )?
+                                .data
+                        }
+                    } else {
+                        grad.data.clone()
+                    };
+                    directions.insert(spec.grad_param.clone(), dir);
+                }
+                // BN params use plain SGD directions
+                for name in self.params.names().to_vec() {
+                    if directions.contains_key(&name) {
+                        continue;
+                    }
+                    directions.insert(name.clone(), grad_of(&outs, &idx_map, &name));
+                }
+            }
+        }
+
+        // ---- 4. clip + apply -------------------------------------------
+        let (alpha, wd) = match self.policy.algo {
+            Algo::Seng => (
+                self.cfg.seng_lr0 * (-6.0 * epoch as f32 / 75.0).exp(),
+                self.cfg.seng_wd,
+            ),
+            _ => (alpha, self.policy.hyper.weight_decay),
+        };
+        let clip = self.policy.hyper.clip;
+        let mut total: f64 = 0.0;
+        for d in directions.values() {
+            for v in d {
+                total += (*v as f64 * alpha as f64).powi(2);
+            }
+        }
+        let norm = total.sqrt() as f32;
+        let scale = if self.policy.algo.is_kfac_family() && norm > clip {
+            clip / norm
+        } else {
+            1.0
+        };
+        for (name, dir) in &directions {
+            self.params.apply_step(name, dir, alpha * scale, wd);
+        }
+
+        // ---- probe capture ---------------------------------------------
+        if let Some(pl) = self.cfg.probe_layer.clone() {
+            let grad_name = format!("grad:{pl}/w");
+            let grad = pick(&outs, &idx_map, &grad_name).as_mat().clone();
+            let dir_data = directions
+                .get(&format!("{pl}/w"))
+                .expect("probe layer direction")
+                .clone();
+            let dir = Mat::from_vec(grad.rows, grad.cols, dir_data);
+            self.last_capture = Some(Capture {
+                grad,
+                dir,
+                a_stat: pick(&outs, &idx_map, &format!("stat:{pl}/A")).as_mat().clone(),
+                g_stat: pick(&outs, &idx_map, &format!("stat:{pl}/G")).as_mat().clone(),
+                stat_step,
+            });
+        }
+
+        // ---- 5. BN running stats ---------------------------------------
+        for l in &self.rt.manifest.layers.clone() {
+            if l.kind == "conv" {
+                let mean = pick(&outs, &idx_map, &format!("bn:{}/mean", l.name)).as_vec().to_vec();
+                let var = pick(&outs, &idx_map, &format!("bn:{}/var", l.name)).as_vec().to_vec();
+                self.bn.update(&l.name, &mean, &var);
+            }
+        }
+        self.bn.mark_initialized();
+
+        self.step += 1;
+        Ok(StepStats {
+            loss,
+            acc: n_correct / b as f32,
+        })
+    }
+
+    fn lr(&self, epoch: usize) -> f32 {
+        self.policy.hyper.lr(epoch)
+    }
+
+    /// Test-set evaluation with BN running stats.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<(f32, f32)> {
+        let m = &self.rt.manifest;
+        let b = m.config.batch;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut count = 0usize;
+        for batch in ds.test_batches(b) {
+            let mut inputs = self.params.as_values();
+            inputs.extend(self.bn.as_values(m));
+            inputs.push(Value::T(
+                batch.x.clone(),
+                vec![b, m.config.image, m.config.image, m.config.channels],
+            ));
+            inputs.push(Value::I(batch.y.clone()));
+            let t0 = Instant::now();
+            let outs = self.rt.exec("eval_step", &inputs)?;
+            self.timers.add("eval", t0.elapsed().as_secs_f64());
+            loss_sum += outs[0].as_scalar() as f64 * b as f64;
+            correct += outs[1].as_scalar() as f64;
+            count += b;
+        }
+        Ok((
+            (loss_sum / count.max(1) as f64) as f32,
+            (correct / count.max(1) as f64) as f32,
+        ))
+    }
+
+    /// Full run: `epochs` epochs over `ds`, eval per epoch. Returns the log.
+    pub fn run(&mut self, ds: &Dataset, epochs: usize, log_every: usize) -> Result<RunLog> {
+        let mut log = RunLog::new(self.policy.algo.name());
+        let wall0 = Instant::now();
+        let b = self.rt.manifest.config.batch;
+        let mut shuffle_rng = self.rng.fork(0xDA7A);
+        for epoch in 0..epochs {
+            let batches = ds.epoch_batches(b, &mut shuffle_rng);
+            let mut ep_loss = 0.0f64;
+            let mut ep_acc = 0.0f64;
+            for (bi, batch) in batches.iter().enumerate() {
+                let s = self.train_step(batch, epoch)?;
+                ep_loss += s.loss as f64;
+                ep_acc += s.acc as f64;
+                if log_every > 0 && bi % log_every == 0 {
+                    log.train.push(TrainRecord {
+                        step: self.step,
+                        epoch,
+                        loss: s.loss,
+                        train_acc: s.acc,
+                        wall_s: wall0.elapsed().as_secs_f64(),
+                    });
+                }
+            }
+            if self.cfg.eval_every > 0 && (epoch + 1) % self.cfg.eval_every == 0 {
+                let (tl, ta) = self.evaluate(ds)?;
+                log.eval.push(EvalRecord {
+                    step: self.step,
+                    epoch,
+                    test_loss: tl,
+                    test_acc: ta,
+                    wall_s: wall0.elapsed().as_secs_f64(),
+                });
+                log::info!(
+                    "[{}] epoch {epoch}: train_loss={:.4} train_acc={:.4} test_acc={:.4}",
+                    self.policy.algo.name(),
+                    ep_loss / batches.len().max(1) as f64,
+                    ep_acc / batches.len().max(1) as f64,
+                    ta
+                );
+            }
+        }
+        Ok(log)
+    }
+}

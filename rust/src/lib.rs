@@ -1,0 +1,23 @@
+//! # Brand New K-FACs — reproduction library
+//!
+//! Production-quality reproduction of *"Brand New K-FACs: Speeding up
+//! K-FAC with Online Decomposition Updates"* (C. O. Puiu, 2022) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: training coordinator — the decomposition-update
+//!   scheduler, the six optimizers (K-FAC, R-KFAC, B-KFAC, B-R-KFAC,
+//!   B-KFAC-C, SENG), data pipeline, metrics, CLI.
+//! - **L2/L1 (python/compile, build-time only)**: JAX model fwd/bwd and
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`, executed
+//!   here through the PJRT CPU client (`runtime`).
+//!
+//! See DESIGN.md for the complete system inventory and experiment index.
+
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,272 @@
+//! Symmetric Brand update (paper Alg 3) — the "B-update".
+//!
+//! Given the truncated eigendecomposition `X ≈ U diag(d) Uᵀ` and a
+//! symmetric rank-n addition `A Aᵀ`, computes the EXACT eigendecomposition
+//! of `U diag(d) Uᵀ + A Aᵀ` in `O(d(r+n)² + (r+n)³)` — linear in the
+//! dimension d. Identity (paper eq. 7, B←A, V←U):
+//!
+//!   X̂ = [U Q_A] · M_S · [U Q_A]ᵀ,
+//!   M_S = [[D + PPᵀ, PR_Aᵀ], [R_APᵀ, R_AR_Aᵀ]],  P = UᵀA,
+//!   Q_A R_A = qr(A − U P).
+//!
+//! For the EA K-factor update `M̄ ← ρ M̄ + (1−ρ) A Aᵀ` (Alg 4 line 6) call
+//! with `d ← ρ·d` and `A ← √(1−ρ)·A`: see [`LowRank::brand_ea_update`].
+
+use super::lowrank::LowRank;
+use super::mat::Mat;
+
+impl LowRank {
+    /// Exact symmetric Brand update: EVD of `U diag(d) Uᵀ + A Aᵀ`.
+    /// Output rank is r+n (not truncated — the caller truncates before the
+    /// NEXT update, per Alg 4, so the inverse application benefits from the
+    /// extra modes, §3.1 "Controlling the size").
+    pub fn brand_update(&self, a: &Mat) -> LowRank {
+        assert_eq!(a.rows, self.dim(), "brand_update: dim mismatch");
+        let (r, n) = (self.rank(), a.cols);
+        assert!(
+            r + n <= self.dim(),
+            "brand_update needs r+n <= d ({}+{} > {})",
+            r,
+            n,
+            self.dim()
+        );
+        // P = Uᵀ A (r×n)
+        let p = self.u.t_matmul(a);
+        // A⊥ = A − U P (d×n)
+        let a_perp = a.sub(&self.u.matmul(&p));
+        // QR of A⊥
+        let (q_a, r_a) = a_perp.qr();
+        // Assemble M_S ((r+n)×(r+n))
+        let mut m_s = Mat::zeros(r + n, r + n);
+        // top-left: D + P Pᵀ
+        let ppt = p.matmul_t(&p);
+        for i in 0..r {
+            for j in 0..r {
+                m_s[(i, j)] = ppt[(i, j)] + if i == j { self.d[i] } else { 0.0 };
+            }
+        }
+        // top-right: P R_Aᵀ ; bottom-left its transpose
+        let prt = p.matmul_t(&r_a);
+        for i in 0..r {
+            for j in 0..n {
+                m_s[(i, r + j)] = prt[(i, j)];
+                m_s[(r + j, i)] = prt[(i, j)];
+            }
+        }
+        // bottom-right: R_A R_Aᵀ
+        let rrt = r_a.matmul_t(&r_a);
+        for i in 0..n {
+            for j in 0..n {
+                m_s[(r + i, r + j)] = rrt[(i, j)];
+            }
+        }
+        // small EVD
+        let ev = m_s.eigh();
+        // U_new = [U Q_A] U_M  (d×(r+n))
+        let uq = self.u.hcat(&q_a);
+        let u_new = uq.matmul(&ev.u);
+        // clamp tiny negative eigenvalues (fp noise; X̂ is PSD)
+        let d_new: Vec<f32> = ev.d.iter().map(|&x| x.max(0.0)).collect();
+        LowRank::new(u_new, d_new)
+    }
+
+    /// The full B-KFAC per-arrival step (Alg 4): truncate to `r`, then
+    /// Brand-update with the EA scaling (`ρ`, `√(1−ρ)A`).
+    pub fn brand_ea_update(&self, a: &Mat, rho: f32, r: usize) -> LowRank {
+        let t = self.truncate(r);
+        let scaled = LowRank::new(t.u, t.d.iter().map(|&x| rho * x).collect());
+        let a_scaled = a.scale((1.0 - rho).sqrt());
+        scaled.brand_update(&a_scaled)
+    }
+
+    /// Alg 6 "light correction": snap the representation's projection onto
+    /// `n_crc` randomly-chosen columns of U to match the true EA K-factor
+    /// `m`. Returns the corrected representation (modes re-sorted
+    /// descending so truncation semantics stay uniform).
+    pub fn correction(&self, m: &Mat, col_idx: &[usize]) -> LowRank {
+        assert_eq!(m.rows, self.dim());
+        let c = col_idx.len();
+        if c == 0 {
+            return self.clone();
+        }
+        // U_c = U[:, idx] (d×c)
+        let mut u_c = Mat::zeros(self.dim(), c);
+        for (jj, &j) in col_idx.iter().enumerate() {
+            for i in 0..self.dim() {
+                u_c[(i, jj)] = self.u[(i, j)];
+            }
+        }
+        // M_S = U_cᵀ M U_c  (c×c)
+        let m_s = u_c.t_matmul(&m.matmul(&u_c));
+        let ev = m_s.eigh();
+        // rotate: U[:, idx] ← U_c · U_s ; D[idx] ← eigs
+        let u_rot = u_c.matmul(&ev.u);
+        let mut u_new = self.u.clone();
+        let mut d_new = self.d.clone();
+        for (jj, &j) in col_idx.iter().enumerate() {
+            for i in 0..self.dim() {
+                u_new[(i, j)] = u_rot[(i, jj)];
+            }
+            d_new[j] = ev.d[jj].max(0.0);
+        }
+        // re-sort descending
+        let mut order: Vec<usize> = (0..d_new.len()).collect();
+        order.sort_by(|&a, &b| d_new[b].partial_cmp(&d_new[a]).unwrap());
+        let mut u_sorted = Mat::zeros(self.dim(), d_new.len());
+        let mut d_sorted = vec![0.0f32; d_new.len()];
+        for (newj, &oldj) in order.iter().enumerate() {
+            d_sorted[newj] = d_new[oldj];
+            for i in 0..self.dim() {
+                u_sorted[(i, newj)] = u_new[(i, oldj)];
+            }
+        }
+        LowRank::new(u_sorted, d_sorted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Brand update must be EXACT when no truncation happens (paper §2.3:
+    /// "Brand's algorithm gives the exact SVD").
+    #[test]
+    fn brand_exactness_vs_fresh_evd() {
+        let mut rng = Rng::new(40);
+        let d = 40;
+        let (r, n) = (8, 4);
+        // start: rank-r PSD
+        let g = Mat::gauss(d, r, 1.0, &mut rng);
+        let x = g.syrk();
+        let lr = LowRank::from_eigh(&x.eigh(), r);
+        let a = Mat::gauss(d, n, 1.0, &mut rng);
+        let updated = lr.brand_update(&a);
+        // reference: dense EVD of X + AAᵀ
+        let x_hat = lr.to_dense().add(&a.syrk());
+        let want = x_hat.eigh();
+        // compare reconstructions (eigvectors may differ by sign/rotation)
+        let got_dense = updated.to_dense();
+        assert!(
+            got_dense.rel_err(&x_hat) < 1e-4,
+            "rel err {}",
+            got_dense.rel_err(&x_hat)
+        );
+        // top eigenvalues match
+        for i in 0..(r + n) {
+            assert!(
+                (updated.d[i] - want.d[i]).abs() < 1e-3 * (1.0 + want.d[0]),
+                "eig {i}: {} vs {}",
+                updated.d[i],
+                want.d[i]
+            );
+        }
+        // orthonormal output
+        let utu = updated.u.t_matmul(&updated.u);
+        assert!(utu.sub(&Mat::eye(r + n)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn brand_ea_matches_dense_ea() {
+        let mut rng = Rng::new(41);
+        let d = 30;
+        let (r, n) = (6, 3);
+        let rho = 0.95f32;
+        let g = Mat::gauss(d, r, 1.0, &mut rng);
+        let lr = LowRank::from_eigh(&g.syrk().eigh(), r);
+        let a = Mat::gauss(d, n, 1.0, &mut rng);
+        let upd = lr.brand_ea_update(&a, rho, r);
+        let want = lr.to_dense().scale(rho).add(&a.syrk().scale(1.0 - rho));
+        assert!(upd.to_dense().rel_err(&want) < 1e-4);
+    }
+
+    /// Proposition 3.1 part 2: the Brand-maintained estimate (rank r+n)
+    /// has error ≥ the optimal rank-(r+n) truncation of the true factor.
+    #[test]
+    fn prop_3_1_error_lower_bound() {
+        let mut rng = Rng::new(42);
+        let d = 36;
+        let (r, n) = (5, 3);
+        let rho = 0.9f32;
+        // true EA process + B process for k steps
+        let a0 = Mat::gauss(d, n, 1.0, &mut rng);
+        let mut m_true = a0.syrk();
+        let mut b_est = LowRank::from_eigh(&m_true.eigh(), d.min(r + n));
+        for _k in 0..6 {
+            let a = Mat::gauss(d, n, 1.0, &mut rng);
+            m_true = m_true.scale(rho).add(&a.syrk().scale(1.0 - rho));
+            b_est = b_est.brand_ea_update(&a, rho, r);
+        }
+        let err_b = b_est.to_dense().sub(&m_true).fro_norm();
+        // optimal rank-(r+n) truncation error of m_true
+        let ev = m_true.eigh();
+        let opt = LowRank::from_eigh(&ev, r + n).to_dense();
+        let err_opt = opt.sub(&m_true).fro_norm();
+        assert!(
+            err_b >= err_opt - 1e-4,
+            "prop 3.1 violated: {err_b} < {err_opt}"
+        );
+    }
+
+    /// Truncation errors are PSD (Prop 3.2 "all quantities are sym psd").
+    #[test]
+    fn truncation_error_is_psd() {
+        let mut rng = Rng::new(43);
+        let d = 25;
+        let g = Mat::gauss(d, 10, 1.0, &mut rng);
+        let lr = LowRank::from_eigh(&g.syrk().eigh(), 10);
+        let trunc = lr.truncate(4);
+        let err = lr.to_dense().sub(&trunc.to_dense());
+        let ev = err.eigh();
+        for &lam in &ev.d {
+            assert!(lam > -1e-3, "truncation error not PSD: eig {lam}");
+        }
+    }
+
+    #[test]
+    fn correction_reduces_error() {
+        let mut rng = Rng::new(44);
+        let d = 32;
+        let r = 8;
+        // true factor and a stale estimate
+        let m = Mat::psd_with_decay(d, 0.75, &mut rng);
+        let stale = {
+            let noise = Mat::gauss(d, d, 0.05, &mut rng);
+            let m_noisy = m.add(&noise.syrk().scale(0.01));
+            LowRank::from_eigh(&m_noisy.eigh(), r)
+        };
+        let before = stale.to_dense().sub(&m).fro_norm();
+        let mut rng2 = Rng::new(99);
+        let idx = rng2.choose(r, 4);
+        let corrected = stale.correction(&m, &idx);
+        let after = corrected.to_dense().sub(&m).fro_norm();
+        // paper: "Performing a correction at k can only reduce the error ...
+        // but not increase it" (footnote 11) — allow fp slack
+        assert!(
+            after <= before + 1e-3,
+            "correction increased error: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn correction_noop_on_exact_representation() {
+        let mut rng = Rng::new(45);
+        let d = 20;
+        let m = Mat::psd_with_decay(d, 0.5, &mut rng);
+        let lr = LowRank::from_eigh(&m.eigh(), d); // full rank, exact
+        let idx = vec![0, 2, 5];
+        let corrected = lr.correction(&m, &idx);
+        assert!(corrected.to_dense().rel_err(&m) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "r+n")]
+    fn brand_rejects_oversized_update() {
+        let mut rng = Rng::new(46);
+        let d = 10;
+        let g = Mat::gauss(d, 8, 1.0, &mut rng);
+        let lr = LowRank::from_eigh(&g.syrk().eigh(), 8);
+        let a = Mat::gauss(d, 4, 1.0, &mut rng); // 8+4 > 10
+        let _ = lr.brand_update(&a);
+    }
+}

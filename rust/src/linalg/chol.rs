@@ -1,0 +1,146 @@
+//! Cholesky factorization + triangular/SPD solves — substrate for the SENG
+//! baseline's Woodbury solve and for damped dense inverses in tests.
+
+use super::mat::Mat;
+
+impl Mat {
+    /// Lower-triangular Cholesky factor of an SPD matrix. Returns None if
+    /// the matrix is not (numerically) positive definite.
+    pub fn cholesky(&self) -> Option<Mat> {
+        assert!(self.is_square());
+        let n = self.rows;
+        let mut l = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)] as f64;
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Some(Mat::from_vec(
+            n,
+            n,
+            l.iter().map(|&v| v as f32).collect(),
+        ))
+    }
+
+    /// Solve (self) X = B where self is SPD, via Cholesky. B is n×k.
+    pub fn spd_solve(&self, b: &Mat) -> Option<Mat> {
+        let l = self.cholesky()?;
+        // forward: L Y = B
+        let y = l.solve_lower(b);
+        // backward: Lᵀ X = Y
+        Some(l.solve_lower_transpose(&y))
+    }
+
+    /// Solve L Y = B with L lower triangular (self).
+    pub fn solve_lower(&self, b: &Mat) -> Mat {
+        let n = self.rows;
+        let k = b.cols;
+        let mut y = Mat::zeros(n, k);
+        for c in 0..k {
+            for i in 0..n {
+                let mut s = b[(i, c)] as f64;
+                for j in 0..i {
+                    s -= self[(i, j)] as f64 * y[(j, c)] as f64;
+                }
+                y[(i, c)] = (s / self[(i, i)] as f64) as f32;
+            }
+        }
+        y
+    }
+
+    /// Solve Lᵀ X = B with L lower triangular (self).
+    pub fn solve_lower_transpose(&self, b: &Mat) -> Mat {
+        let n = self.rows;
+        let k = b.cols;
+        let mut x = Mat::zeros(n, k);
+        for c in 0..k {
+            for i in (0..n).rev() {
+                let mut s = b[(i, c)] as f64;
+                for j in (i + 1)..n {
+                    s -= self[(j, i)] as f64 * x[(j, c)] as f64;
+                }
+                x[(i, c)] = (s / self[(i, i)] as f64) as f32;
+            }
+        }
+        x
+    }
+
+    /// Dense inverse of (self + λI) for SPD self — the exact K-FAC
+    /// benchmark's inverse (reference/error-metric path, not a hot path).
+    pub fn damped_inverse(&self, lambda: f32) -> Mat {
+        let n = self.rows;
+        let mut damped = self.clone();
+        for i in 0..n {
+            damped[(i, i)] += lambda;
+        }
+        damped
+            .spd_solve(&Mat::eye(n))
+            .expect("damped matrix must be SPD")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(60);
+        let a = Mat::gauss(15, 15, 1.0, &mut rng);
+        let spd = a.syrk().add(&Mat::eye(15).scale(0.5));
+        let l = spd.cholesky().unwrap();
+        let rec = l.matmul_t(&l);
+        assert!(rec.sub(&spd).max_abs() < 1e-3);
+        // lower triangular
+        for i in 0..15 {
+            for j in (i + 1)..15 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn spd_solve_correct() {
+        let mut rng = Rng::new(61);
+        let a = Mat::gauss(12, 12, 1.0, &mut rng);
+        let spd = a.syrk().add(&Mat::eye(12).scale(1.0));
+        let b = Mat::gauss(12, 4, 1.0, &mut rng);
+        let x = spd.spd_solve(&b).unwrap();
+        let rec = spd.matmul(&x);
+        assert!(rec.sub(&b).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn not_pd_returns_none() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigs 3, -1
+        assert!(m.cholesky().is_none());
+    }
+
+    #[test]
+    fn damped_inverse_matches_evd_inverse() {
+        let mut rng = Rng::new(62);
+        let g = Mat::gauss(10, 6, 1.0, &mut rng);
+        let m = g.syrk(); // rank-deficient PSD
+        let lam = 0.3;
+        let inv = m.damped_inverse(lam);
+        // (M+λI) inv = I
+        let mut damped = m.clone();
+        for i in 0..10 {
+            damped[(i, i)] += lam;
+        }
+        let prod = damped.matmul(&inv);
+        assert!(prod.sub(&Mat::eye(10)).max_abs() < 1e-3);
+    }
+}

@@ -1,0 +1,415 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization + implicit
+//! QL with Wilkinson shifts (tred2/tqli lineage), f64 internal precision.
+//!
+//! This is the host-side small-EVD engine for the Brand / RSVD / correction
+//! two-stage updates (DESIGN.md §2), the exact-K-FAC baseline inverse, and
+//! the oracle for every decomposition test in the repo.
+//!
+//! Returned eigenpairs are sorted by eigenvalue DESCENDING — the order all
+//! truncation logic in the paper uses (`U[:, :r]` keeps the top-r modes).
+
+use super::mat::Mat;
+
+/// Eigendecomposition result: `m = u · diag(d) · uᵀ`, d descending.
+#[derive(Clone, Debug)]
+pub struct Eigh {
+    /// n×n orthonormal eigenvector matrix (columns are eigenvectors).
+    pub u: Mat,
+    /// eigenvalues, descending.
+    pub d: Vec<f32>,
+}
+
+impl Eigh {
+    /// Reconstruct U diag(d) Uᵀ (test helper).
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.u.rows;
+        let mut ud = self.u.clone();
+        for i in 0..n {
+            for j in 0..self.u.cols {
+                ud[(i, j)] *= self.d[j];
+            }
+        }
+        ud.matmul_t(&self.u)
+    }
+
+    /// Keep top-r modes.
+    pub fn truncate(&self, r: usize) -> Eigh {
+        let r = r.min(self.d.len());
+        Eigh {
+            u: self.u.slice_cols(0, r),
+            d: self.d[..r].to_vec(),
+        }
+    }
+}
+
+impl Mat {
+    /// Full symmetric EVD. Panics if not square; symmetry is assumed
+    /// (only the lower triangle is read after internal symmetrization).
+    pub fn eigh(&self) -> Eigh {
+        assert!(self.is_square(), "eigh: matrix must be square");
+        let n = self.rows;
+        if n == 0 {
+            return Eigh {
+                u: Mat::zeros(0, 0),
+                d: vec![],
+            };
+        }
+        // f64 working copy, symmetrized.
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = 0.5 * (self[(i, j)] as f64 + self[(j, i)] as f64);
+            }
+        }
+        let mut d = vec![0.0f64; n]; // diagonal
+        let mut e = vec![0.0f64; n]; // off-diagonal
+        tred2(&mut a, n, &mut d, &mut e);
+        tqli(&mut d, &mut e, n, &mut a);
+        // sort descending
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+        let mut u = Mat::zeros(n, n);
+        let mut dv = vec![0.0f32; n];
+        for (newj, &oldj) in order.iter().enumerate() {
+            dv[newj] = d[oldj] as f32;
+            for i in 0..n {
+                u[(i, newj)] = a[i * n + oldj] as f32;
+            }
+        }
+        Eigh { u, d: dv }
+    }
+
+    /// Symmetric EVD by cyclic Jacobi — independent algorithm used as a
+    /// cross-check oracle in tests (and fine for very small n).
+    pub fn eigh_jacobi(&self) -> Eigh {
+        assert!(self.is_square());
+        let n = self.rows;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = 0.5 * (self[(i, j)] as f64 + self[(j, i)] as f64);
+            }
+        }
+        let mut v = vec![0.0f64; n * n];
+        for i in 0..n {
+            v[i * n + i] = 1.0;
+        }
+        for _sweep in 0..60 {
+            let mut off = 0.0;
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    off += a[p * n + q] * a[p * n + q];
+                }
+            }
+            if off.sqrt() < 1e-14 {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    let apq = a[p * n + q];
+                    if apq.abs() < 1e-300 {
+                        continue;
+                    }
+                    let app = a[p * n + p];
+                    let aqq = a[q * n + q];
+                    let theta = (aqq - app) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    // rotate rows/cols p,q of a
+                    for k in 0..n {
+                        let akp = a[k * n + p];
+                        let akq = a[k * n + q];
+                        a[k * n + p] = c * akp - s * akq;
+                        a[k * n + q] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[p * n + k];
+                        let aqk = a[q * n + k];
+                        a[p * n + k] = c * apk - s * aqk;
+                        a[q * n + k] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let vkp = v[k * n + p];
+                        let vkq = v[k * n + q];
+                        v[k * n + p] = c * vkp - s * vkq;
+                        v[k * n + q] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| a[j * n + j].partial_cmp(&a[i * n + i]).unwrap());
+        let mut u = Mat::zeros(n, n);
+        let mut dv = vec![0.0f32; n];
+        for (newj, &oldj) in order.iter().enumerate() {
+            dv[newj] = a[oldj * n + oldj] as f32;
+            for i in 0..n {
+                u[(i, newj)] = v[i * n + oldj] as f32;
+            }
+        }
+        Eigh { u, d: dv }
+    }
+}
+
+/// Householder tridiagonalization (Numerical Recipes tred2, 0-indexed).
+/// On exit `a` holds the accumulated orthogonal transform Q, `d` the
+/// diagonal and `e` the sub-diagonal (e[0] unused).
+fn tred2(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for i in (1..n).rev() {
+        let l = i; // columns 0..l of row i
+        let mut h = 0.0;
+        if l > 1 {
+            let mut scale = 0.0;
+            for k in 0..l {
+                scale += a[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = a[i * n + (l - 1)];
+            } else {
+                for k in 0..l {
+                    a[i * n + k] /= scale;
+                    h += a[i * n + k] * a[i * n + k];
+                }
+                let mut f = a[i * n + (l - 1)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[i * n + (l - 1)] = f - g;
+                f = 0.0;
+                for j in 0..l {
+                    a[j * n + i] = a[i * n + j] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[j * n + k] * a[i * n + k];
+                    }
+                    for k in (j + 1)..l {
+                        g += a[k * n + j] * a[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..l {
+                    let f = a[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        a[j * n + k] -= f * e[k] + g * a[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = a[i * n]; // a[i][l-1] with l-1 = 0
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += a[i * n + k] * a[k * n + j];
+                }
+                for k in 0..i {
+                    a[k * n + j] -= g * a[k * n + i];
+                }
+            }
+        }
+        d[i] = a[i * n + i];
+        a[i * n + i] = 1.0;
+        for j in 0..i {
+            a[j * n + i] = 0.0;
+            a[i * n + j] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL on the tridiagonal (tqli), accumulating transforms
+/// into `z` (which enters holding Q from tred2).
+fn tqli(d: &mut [f64], e: &mut [f64], n: usize, z: &mut [f64]) {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small subdiagonal element
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli: too many iterations");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = z[k * n + (i + 1)];
+                    z[k * n + (i + 1)] = s * z[k * n + i] + c * f;
+                    z[k * n + i] = c * z[k * n + i] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_evd(m: &Mat, ev: &Eigh, tol: f32) {
+        // reconstruction
+        let rec = ev.reconstruct();
+        let scale = m.fro_norm().max(1.0);
+        assert!(
+            rec.sub(m).max_abs() / scale < tol,
+            "reconstruction err {} (scale {scale})",
+            rec.sub(m).max_abs()
+        );
+        // orthonormality
+        let utu = ev.u.t_matmul(&ev.u);
+        assert!(utu.sub(&Mat::eye(ev.u.cols)).max_abs() < tol);
+        // descending order
+        for w in ev.d.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "not descending: {:?}", ev.d);
+        }
+    }
+
+    #[test]
+    fn diag_matrix() {
+        let m = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f32 } else { 0.0 });
+        let ev = m.eigh();
+        assert!((ev.d[0] - 4.0).abs() < 1e-5);
+        assert!((ev.d[3] - 1.0).abs() < 1e-5);
+        check_evd(&m, &ev, 1e-5);
+    }
+
+    #[test]
+    fn random_symmetric_various_sizes() {
+        let mut rng = Rng::new(20);
+        for n in [1usize, 2, 3, 5, 16, 33, 64, 100] {
+            let g = Mat::gauss(n, n, 1.0, &mut rng);
+            let mut m = g.add(&g.transpose());
+            m.symmetrize();
+            let ev = m.eigh();
+            check_evd(&m, &ev, 3e-4);
+        }
+    }
+
+    #[test]
+    fn psd_gram_eigs_nonnegative() {
+        let mut rng = Rng::new(21);
+        let a = Mat::gauss(30, 10, 1.0, &mut rng);
+        let m = a.syrk(); // rank 10 PSD
+        let ev = m.eigh();
+        for (i, &lam) in ev.d.iter().enumerate() {
+            assert!(lam > -1e-3, "eig {i} = {lam}");
+        }
+        // rank deficiency: eigs 10.. ~ 0
+        for &lam in &ev.d[10..] {
+            assert!(lam.abs() < 1e-3, "expected ~0, got {lam}");
+        }
+        check_evd(&m, &ev, 3e-4);
+    }
+
+    #[test]
+    fn matches_jacobi_oracle() {
+        let mut rng = Rng::new(22);
+        for n in [3usize, 8, 20] {
+            let g = Mat::gauss(n, n, 1.0, &mut rng);
+            let m = g.syrk();
+            let e1 = m.eigh();
+            let e2 = m.eigh_jacobi();
+            for i in 0..n {
+                assert!(
+                    (e1.d[i] - e2.d[i]).abs() < 1e-3 * (1.0 + e1.d[0].abs()),
+                    "eig {i}: {} vs {}",
+                    e1.d[i],
+                    e2.d[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigs 3, 1
+        let m = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let ev = m.eigh();
+        assert!((ev.d[0] - 3.0).abs() < 1e-5);
+        assert!((ev.d[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncation_is_best_rank_r() {
+        // Eckart–Young sanity: truncation error equals sqrt(sum of dropped eig^2)
+        let mut rng = Rng::new(23);
+        let m = Mat::psd_with_decay(24, 0.7, &mut rng);
+        let ev = m.eigh();
+        let r = 6;
+        let tr = ev.truncate(r);
+        let mut ud = tr.u.clone();
+        for i in 0..24 {
+            for j in 0..r {
+                ud[(i, j)] *= tr.d[j];
+            }
+        }
+        let rec = ud.matmul_t(&tr.u);
+        let err = m.sub(&rec).fro_norm();
+        let expected: f32 = ev.d[r..]
+            .iter()
+            .map(|&l| (l as f64) * (l as f64))
+            .sum::<f64>()
+            .sqrt() as f32;
+        assert!((err - expected).abs() < 1e-3 * (1.0 + expected), "{err} vs {expected}");
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // identity: all eigs 1
+        let m = Mat::eye(10);
+        let ev = m.eigh();
+        for &l in &ev.d {
+            assert!((l - 1.0).abs() < 1e-6);
+        }
+        check_evd(&m, &ev, 1e-5);
+    }
+}

@@ -1,0 +1,259 @@
+//! Blocked, multithreaded matrix multiply + symmetric rank-k update.
+//!
+//! This is the Rust-host fallback / small-matrix engine; the d-scale hot
+//! path runs inside XLA artifacts. Kernel design: row-panel parallelism
+//! over A, with a B-transpose-free inner loop that walks B rows (row-major
+//! friendly: C[i,:] += A[i,k] * B[k,:] vectorizes well).
+
+use super::mat::Mat;
+use crate::util::threadpool::{default_threads, parallel_ranges};
+
+/// Threshold below which threading overhead dominates.
+const PAR_FLOPS_MIN: usize = 1 << 21;
+
+impl Mat {
+    /// C = self · other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut c = Mat::zeros(self.rows, other.cols);
+        let flops = self.rows * self.cols * other.cols;
+        let threads = if flops < PAR_FLOPS_MIN {
+            1
+        } else {
+            default_threads()
+        };
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let a = &self.data;
+        let b = &other.data;
+        // SAFETY-free parallelism: each thread writes a disjoint row range
+        // of C. We hand out raw pointer ranges via split-by-row closure.
+        let c_ptr = SendPtr(c.data.as_mut_ptr());
+        parallel_ranges(m, threads, |r0, r1| {
+            let c_ptr = &c_ptr;
+            for i in r0..r1 {
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
+                };
+                let arow = &a[i * k..(i + 1) * k];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// C = selfᵀ · other, without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul: inner dim mismatch");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        // C[i,j] = sum_k A[k,i] B[k,j]: accumulate rank-1 updates row by row.
+        for kk in 0..k {
+            let arow = self.row(kk);
+            let brow = other.row(kk);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aki * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = self · otherᵀ, row-dot-row (cache friendly for row-major).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t: inner dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut c = Mat::zeros(m, n);
+        let flops = m * k * n;
+        let threads = if flops < PAR_FLOPS_MIN {
+            1
+        } else {
+            default_threads()
+        };
+        let c_ptr = SendPtr(c.data.as_mut_ptr());
+        parallel_ranges(m, threads, |r0, r1| {
+            let c_ptr = &c_ptr;
+            for i in r0..r1 {
+                let arow = self.row(i);
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
+                };
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    let brow = other.row(j);
+                    let mut acc = 0.0f32;
+                    for (av, bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    *cv = acc;
+                }
+            }
+        });
+        c
+    }
+
+    /// Symmetric rank-k update: self · selfᵀ (the K-factor Gram primitive).
+    /// Only computes the upper triangle then mirrors.
+    pub fn syrk(&self) -> Mat {
+        let (m, k) = (self.rows, self.cols);
+        let mut c = Mat::zeros(m, m);
+        let flops = m * m * k / 2;
+        let threads = if flops < PAR_FLOPS_MIN {
+            1
+        } else {
+            default_threads()
+        };
+        let c_ptr = SendPtr(c.data.as_mut_ptr());
+        parallel_ranges(m, threads, |r0, r1| {
+            let c_ptr = &c_ptr;
+            for i in r0..r1 {
+                let arow = self.row(i);
+                for j in i..m {
+                    let brow = self.row(j);
+                    let mut acc = 0.0f32;
+                    for (av, bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    unsafe {
+                        *c_ptr.0.add(i * m + j) = acc;
+                        *c_ptr.0.add(j * m + i) = acc;
+                    }
+                }
+            }
+        });
+        c
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+}
+
+/// Wrapper making a raw pointer Sync for the disjoint-row-range pattern.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 4, 5), (17, 9, 13), (64, 32, 48), (1, 7, 1)] {
+            let a = Mat::gauss(m, k, 1.0, &mut rng);
+            let b = Mat::gauss(k, n, 1.0, &mut rng);
+            let c = a.matmul(&b);
+            let r = naive(&a, &b);
+            assert!(c.sub(&r).max_abs() < 1e-4, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path() {
+        // big enough to trigger threading
+        let mut rng = Rng::new(2);
+        let a = Mat::gauss(200, 150, 1.0, &mut rng);
+        let b = Mat::gauss(150, 180, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        let r = naive(&a, &b);
+        assert!(c.sub(&r).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn t_matmul_matches() {
+        let mut rng = Rng::new(3);
+        let a = Mat::gauss(20, 8, 1.0, &mut rng);
+        let b = Mat::gauss(20, 12, 1.0, &mut rng);
+        let c = a.t_matmul(&b);
+        let r = naive(&a.transpose(), &b);
+        assert!(c.sub(&r).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn matmul_t_matches() {
+        let mut rng = Rng::new(4);
+        let a = Mat::gauss(15, 9, 1.0, &mut rng);
+        let b = Mat::gauss(11, 9, 1.0, &mut rng);
+        let c = a.matmul_t(&b);
+        let r = naive(&a, &b.transpose());
+        assert!(c.sub(&r).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn syrk_matches_and_symmetric() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gauss(33, 21, 1.0, &mut rng);
+        let c = a.syrk();
+        let r = naive(&a, &a.transpose());
+        assert!(c.sub(&r).max_abs() < 1e-4);
+        for i in 0..33 {
+            for j in 0..33 {
+                assert_eq!(c[(i, j)], c[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gauss(10, 7, 1.0, &mut rng);
+        let x: Vec<f32> = (0..7).map(|i| i as f32 * 0.5).collect();
+        let y = a.matvec(&x);
+        let xm = Mat::from_vec(7, 1, x);
+        let r = a.matmul(&xm);
+        for i in 0..10 {
+            assert!((y[i] - r[(i, 0)]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_neutral() {
+        let mut rng = Rng::new(7);
+        let a = Mat::gauss(12, 12, 1.0, &mut rng);
+        let e = Mat::eye(12);
+        assert!(a.matmul(&e).sub(&a).max_abs() < 1e-6);
+        assert!(e.matmul(&a).sub(&a).max_abs() < 1e-6);
+    }
+}

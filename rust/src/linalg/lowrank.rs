@@ -1,0 +1,259 @@
+//! Low-rank symmetric PSD representation `M ≈ U diag(d) Uᵀ` — the object
+//! every Brand-New-K-FAC algorithm maintains per K-factor — plus the
+//! regularized inverse application (Alg 1 lines 14–17) and the §3.5
+//! spectrum-continuation trick.
+
+use super::eigh::Eigh;
+use super::mat::Mat;
+
+/// `M ≈ u · diag(d) · uᵀ`, `u` is n×r with orthonormal columns, `d`
+/// descending non-negative.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub u: Mat,
+    pub d: Vec<f32>,
+}
+
+impl LowRank {
+    pub fn new(u: Mat, d: Vec<f32>) -> Self {
+        assert_eq!(u.cols, d.len(), "LowRank: U cols != |d|");
+        Self { u, d }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.u.rows
+    }
+
+    pub fn rank(&self) -> usize {
+        self.d.len()
+    }
+
+    pub fn from_eigh(e: &Eigh, r: usize) -> Self {
+        let t = e.truncate(r);
+        Self { u: t.u, d: t.d }
+    }
+
+    /// Dense reconstruction U diag(d) Uᵀ.
+    pub fn to_dense(&self) -> Mat {
+        let (n, r) = (self.u.rows, self.rank());
+        let mut ud = self.u.clone();
+        for i in 0..n {
+            for j in 0..r {
+                ud[(i, j)] *= self.d[j];
+            }
+        }
+        ud.matmul_t(&self.u)
+    }
+
+    /// Optimal rank-r truncation (keep top-r modes). This is the
+    /// "truncate just before the Brand update" step of Alg 4 lines 2–4.
+    pub fn truncate(&self, r: usize) -> LowRank {
+        let r = r.min(self.rank());
+        LowRank {
+            u: self.u.slice_cols(0, r),
+            d: self.d[..r].to_vec(),
+        }
+    }
+
+    /// λ for spectrum continuation (§3.5): the minimum retained eigenvalue
+    /// is added to the damping and subtracted from the spectrum, modelling
+    /// the truncated tail as a flat continuation at `d_min`.
+    pub fn spectrum_continuation(&self) -> (Vec<f32>, f32) {
+        let d_min = self.d.iter().cloned().fold(f32::INFINITY, f32::min).max(0.0);
+        let shifted: Vec<f32> = self.d.iter().map(|&x| x - d_min).collect();
+        (shifted, d_min)
+    }
+
+    /// Largest eigenvalue of the representation (used by the §6 damping
+    /// schedule λ_{k,l} = λ_max · φ_λ).
+    pub fn lambda_max(&self) -> f32 {
+        self.d.first().copied().unwrap_or(0.0)
+    }
+
+    /// Apply the regularized inverse to `J` from the RIGHT:
+    /// `J · (M + λI)⁻¹ ≈ J V[(D+λI)⁻¹ − λ⁻¹I]Vᵀ + λ⁻¹ J`
+    /// (Alg 1 line 15, the Ā side). If `continue_spectrum`, applies the
+    /// §3.5 replacement λ ← λ + d_min, D ← D − d_min first.
+    pub fn apply_inv_right(&self, j: &Mat, lambda: f32, continue_spectrum: bool) -> Mat {
+        assert_eq!(j.cols, self.dim(), "apply_inv_right: dim mismatch");
+        let (d_eff, lam) = self.effective(lambda, continue_spectrum);
+        // J V -> m×r
+        let jv = j.matmul(&self.u);
+        // scale columns by (1/(d+λ) − 1/λ)
+        let mut jvs = jv;
+        for i in 0..jvs.rows {
+            for c in 0..jvs.cols {
+                jvs[(i, c)] *= inv_weight(d_eff[c], lam);
+            }
+        }
+        // (J V S) Vᵀ + J/λ
+        let mut out = jvs.matmul_t(&self.u);
+        out.axpy_inplace(1.0, &j.scale(1.0 / lam));
+        out
+    }
+
+    /// Apply the regularized inverse from the LEFT:
+    /// `(M + λI)⁻¹ · J ≈ V[(D+λI)⁻¹ − λ⁻¹I]Vᵀ J + λ⁻¹ J`
+    /// (Alg 1 line 16, the Γ̄ side).
+    pub fn apply_inv_left(&self, j: &Mat, lambda: f32, continue_spectrum: bool) -> Mat {
+        assert_eq!(j.rows, self.dim(), "apply_inv_left: dim mismatch");
+        let (d_eff, lam) = self.effective(lambda, continue_spectrum);
+        // Vᵀ J -> r×n
+        let vtj = self.u.t_matmul(j);
+        let mut vtjs = vtj;
+        for r in 0..vtjs.rows {
+            let w = inv_weight(d_eff[r], lam);
+            for c in 0..vtjs.cols {
+                vtjs[(r, c)] *= w;
+            }
+        }
+        let mut out = self.u.matmul(&vtjs);
+        out.axpy_inplace(1.0 / lam, j);
+        out
+    }
+
+    fn effective(&self, lambda: f32, continue_spectrum: bool) -> (Vec<f32>, f32) {
+        if continue_spectrum {
+            let (d, dmin) = self.spectrum_continuation();
+            (d, (lambda + dmin).max(1e-12))
+        } else {
+            (self.d.clone(), lambda.max(1e-12))
+        }
+    }
+}
+
+#[inline]
+fn inv_weight(d: f32, lam: f32) -> f32 {
+    1.0 / (d + lam) - 1.0 / lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn full_rank_lowrank(n: usize, rng: &mut Rng) -> (Mat, LowRank) {
+        let m = Mat::psd_with_decay(n, 0.8, rng);
+        let e = m.eigh();
+        (m.clone(), LowRank::from_eigh(&e, n))
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(30);
+        let (m, lr) = full_rank_lowrank(12, &mut rng);
+        assert!(lr.to_dense().sub(&m).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn apply_inv_right_matches_dense_inverse() {
+        let mut rng = Rng::new(31);
+        let (m, lr) = full_rank_lowrank(10, &mut rng);
+        let lam = 0.1f32;
+        // dense (M + λI)^{-1} via EVD
+        let e = m.eigh();
+        let mut inv = Mat::zeros(10, 10);
+        for k in 0..10 {
+            let w = 1.0 / (e.d[k] + lam);
+            for i in 0..10 {
+                for j in 0..10 {
+                    inv[(i, j)] += w * e.u[(i, k)] * e.u[(j, k)];
+                }
+            }
+        }
+        let j = Mat::gauss(6, 10, 1.0, &mut rng);
+        let got = lr.apply_inv_right(&j, lam, false);
+        let want = j.matmul(&inv);
+        assert!(got.sub(&want).max_abs() < 1e-3, "{}", got.sub(&want).max_abs());
+    }
+
+    #[test]
+    fn apply_inv_left_matches_dense_inverse() {
+        let mut rng = Rng::new(32);
+        let (m, lr) = full_rank_lowrank(8, &mut rng);
+        let lam = 0.05f32;
+        let e = m.eigh();
+        let mut inv = Mat::zeros(8, 8);
+        for k in 0..8 {
+            let w = 1.0 / (e.d[k] + lam);
+            for i in 0..8 {
+                for j in 0..8 {
+                    inv[(i, j)] += w * e.u[(i, k)] * e.u[(j, k)];
+                }
+            }
+        }
+        let j = Mat::gauss(8, 5, 1.0, &mut rng);
+        let got = lr.apply_inv_left(&j, lam, false);
+        let want = inv.matmul(&j);
+        assert!(got.sub(&want).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn truncated_apply_treats_tail_as_zero() {
+        // With rank-r representation, apply_inv acts as (UDUᵀ + λI)^{-1}
+        let mut rng = Rng::new(33);
+        let (_, lr_full) = full_rank_lowrank(12, &mut rng);
+        let lr = lr_full.truncate(4);
+        let dense = lr.to_dense();
+        let lam = 0.2f32;
+        let e = dense.eigh();
+        let mut inv = Mat::zeros(12, 12);
+        for k in 0..12 {
+            let w = 1.0 / (e.d[k].max(0.0) + lam);
+            for i in 0..12 {
+                for j in 0..12 {
+                    inv[(i, j)] += w * e.u[(i, k)] * e.u[(j, k)];
+                }
+            }
+        }
+        let j = Mat::gauss(3, 12, 1.0, &mut rng);
+        let got = lr.apply_inv_right(&j, lam, false);
+        let want = j.matmul(&inv);
+        assert!(got.sub(&want).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn spectrum_continuation_shifts() {
+        let u = Mat::eye(4).slice_cols(0, 3);
+        let lr = LowRank::new(u, vec![5.0, 3.0, 1.0]);
+        let (d, dmin) = lr.spectrum_continuation();
+        assert_eq!(dmin, 1.0);
+        assert_eq!(d, vec![4.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn spectrum_continuation_equals_flat_tail_inverse() {
+        // With continuation, the implied matrix is U(D−dmin)Uᵀ + dmin·I;
+        // check apply_inv matches the dense inverse of that + λI.
+        let mut rng = Rng::new(34);
+        let (_, lr_full) = full_rank_lowrank(10, &mut rng);
+        let lr = lr_full.truncate(4);
+        let lam = 0.1f32;
+        let (dshift, dmin) = lr.spectrum_continuation();
+        let implied = LowRank::new(lr.u.clone(), dshift.clone())
+            .to_dense()
+            .add(&Mat::eye(10).scale(dmin));
+        let e = implied.eigh();
+        let mut inv = Mat::zeros(10, 10);
+        for k in 0..10 {
+            let w = 1.0 / (e.d[k] + lam);
+            for i in 0..10 {
+                for j in 0..10 {
+                    inv[(i, j)] += w * e.u[(i, k)] * e.u[(j, k)];
+                }
+            }
+        }
+        let j = Mat::gauss(4, 10, 1.0, &mut rng);
+        let got = lr.apply_inv_right(&j, lam, true);
+        let want = j.matmul(&inv);
+        assert!(got.sub(&want).max_abs() < 1e-3, "{}", got.sub(&want).max_abs());
+    }
+
+    #[test]
+    fn lambda_max_is_top_eig() {
+        let mut rng = Rng::new(35);
+        let (m, lr) = full_rank_lowrank(9, &mut rng);
+        let e = m.eigh();
+        assert!((lr.lambda_max() - e.d[0]).abs() < 1e-4);
+    }
+}

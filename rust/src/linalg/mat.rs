@@ -1,0 +1,343 @@
+//! Dense row-major f32 matrix type — the NLA substrate's core container.
+//!
+//! Everything in `linalg` operates on `Mat`. Row-major layout matches both
+//! the XLA literal layout we exchange with artifacts and the natural C
+//! iteration order for the blocked kernels.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec: size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// iid N(0, sigma^2) entries.
+    pub fn gauss(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data);
+        if sigma != 1.0 {
+            for v in m.data.iter_mut() {
+                *v *= sigma;
+            }
+        }
+        m
+    }
+
+    /// Random symmetric PSD matrix with prescribed eigenvalue decay
+    /// `lambda_i = decay^i` — handy for tests mimicking EA K-factor spectra.
+    /// O(n³): use [`Mat::psd_lowrank_decay`] for large-n bench setups.
+    pub fn psd_with_decay(n: usize, decay: f32, rng: &mut Rng) -> Mat {
+        let q = Mat::gauss(n, n, 1.0, rng).qr().0;
+        let mut d = Mat::zeros(n, n);
+        let mut lam = 1.0f32;
+        for i in 0..n {
+            d[(i, i)] = lam;
+            lam *= decay;
+        }
+        // Q D Q^T
+        q.matmul(&d).matmul(&q.transpose())
+    }
+
+    /// Random PSD matrix with a decaying k-dimensional dominant spectrum
+    /// plus a small flat tail (`tail` on the diagonal) — an EA-K-factor
+    /// stand-in buildable in O(n²k) (bench-friendly at large n).
+    /// Returns (dense matrix, exact top-k orthonormal basis, eigenvalues).
+    pub fn psd_lowrank_decay(
+        n: usize,
+        k: usize,
+        decay: f32,
+        tail: f32,
+        rng: &mut Rng,
+    ) -> (Mat, Mat, Vec<f32>) {
+        let (q, _) = Mat::gauss(n, k, 1.0, rng).qr();
+        let mut lam = 1.0f32;
+        let mut d = Vec::with_capacity(k);
+        for _ in 0..k {
+            d.push(lam);
+            lam *= decay;
+        }
+        // q · diag(d) · qᵀ + tail·I
+        let mut qd = q.clone();
+        for i in 0..n {
+            for j in 0..k {
+                qd[(i, j)] *= d[j];
+            }
+        }
+        let mut m = qd.matmul_t(&q);
+        for i in 0..n {
+            m[(i, i)] += tail;
+        }
+        (m, q, d)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Columns `lo..hi` as a new matrix (the `U[:, :r]` truncation).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Mat::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "hcat: row mismatch");
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Vertical concatenation.
+    pub fn vcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vcat: col mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        let mut out = self.clone();
+        for v in out.data.iter_mut() {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    /// self += s * other (axpy) — the EA update primitive.
+    pub fn axpy_inplace(&mut self, s: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn fro_norm(&self) -> f32 {
+        self.data
+            .iter()
+            .map(|v| (*v as f64) * (*v as f64))
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Frobenius inner product <self, other>.
+    pub fn dot(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum::<f64>() as f32
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Symmetrize in place: M ← (M + Mᵀ)/2. Kills accumulated asymmetry
+    /// from floating-point in EA updates.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let a = self[(i, j)];
+                let b = self[(j, i)];
+                let m = 0.5 * (a + b);
+                self[(i, j)] = m;
+                self[(j, i)] = m;
+            }
+        }
+    }
+
+    /// Relative Frobenius distance ‖a−b‖_F / ‖b‖_F (error metrics 1–3).
+    pub fn rel_err(&self, reference: &Mat) -> f32 {
+        let denom = reference.fro_norm().max(1e-30);
+        self.sub(reference).fro_norm() / denom
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_transpose() {
+        let m = Mat::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m[(2, 1)], 21.0);
+        let t = m.transpose();
+        assert_eq!(t.rows, 2);
+        assert_eq!(t[(1, 2)], 21.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn eye_and_slice() {
+        let e = Mat::eye(4);
+        assert_eq!(e.fro_norm(), 2.0);
+        let s = e.slice_cols(1, 3);
+        assert_eq!((s.rows, s.cols), (4, 2));
+        assert_eq!(s[(1, 0)], 1.0);
+        assert_eq!(s[(2, 1)], 1.0);
+        assert_eq!(s[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn hcat_vcat() {
+        let a = Mat::from_fn(2, 2, |i, j| (i + j) as f32);
+        let b = Mat::from_fn(2, 1, |_, _| 9.0);
+        let h = a.hcat(&b);
+        assert_eq!((h.rows, h.cols), (2, 3));
+        assert_eq!(h[(1, 2)], 9.0);
+        let v = a.vcat(&a);
+        assert_eq!((v.rows, v.cols), (4, 2));
+        assert_eq!(v[(3, 1)], 2.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let s = a.add(&a).sub(&a);
+        assert_eq!(s, a);
+        let mut c = a.clone();
+        c.axpy_inplace(2.0, &a);
+        assert_eq!(c, a.scale(3.0));
+        assert!((a.dot(&a) - a.fro_norm() * a.fro_norm()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        m.symmetrize();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(m[(i, j)], m[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let m = Mat::from_fn(4, 4, |i, j| ((i + 1) * (j + 2)) as f32);
+        assert_eq!(m.rel_err(&m), 0.0);
+    }
+}

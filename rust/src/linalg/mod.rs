@@ -1,0 +1,34 @@
+//! Dense numerical-linear-algebra substrate.
+//!
+//! The paper's algorithms are NLA over symmetric PSD "K-factors". This
+//! module provides the full toolbox from scratch (no external LA crates
+//! exist in the offline environment):
+//!
+//! - [`mat::Mat`] — row-major f32 dense matrix
+//! - `gemm` — blocked/threaded matmul, syrk, matvec
+//! - `qr` — Householder QR (+ MGS mirror of the in-artifact QR)
+//! - `eigh` — symmetric EVD (tridiag+QL; Jacobi cross-check)
+//! - [`lowrank::LowRank`] — truncated eigendecomposition + regularized
+//!   inverse application + §3.5 spectrum continuation
+//! - `brand` — symmetric Brand update (Alg 3/4) + Alg 6 correction
+//! - `rsvd` — randomized symmetric EVD (R-KFAC primitive)
+//! - `chol` — Cholesky/SPD solves (SENG baseline, exact inverses)
+//!
+//! Role split with the XLA artifacts: artifacts carry all O(d·…) work on
+//! the training path; this module is (a) the host-side small-EVD engine
+//! of the two-stage decomposition updates, (b) the oracle for tests, and
+//! (c) a pure-rust fallback so every optimizer also runs with `--no-xla`.
+
+pub mod brand;
+pub mod chol;
+pub mod eigh;
+pub mod gemm;
+pub mod lowrank;
+pub mod mat;
+pub mod qr;
+pub mod rsvd;
+
+pub use eigh::Eigh;
+pub use lowrank::LowRank;
+pub use mat::Mat;
+pub use rsvd::RsvdOpts;

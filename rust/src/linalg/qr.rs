@@ -1,0 +1,217 @@
+//! QR decompositions: blocked Householder (accuracy workhorse) and MGS
+//! with re-orthogonalization (mirrors the in-graph artifact QR so tests
+//! can compare host vs artifact numerics).
+
+use super::mat::Mat;
+
+impl Mat {
+    /// Thin QR via Householder reflections: self (m×n, m≥n) = Q(m×n)·R(n×n).
+    /// Computed in f64 internally for stability.
+    pub fn qr(&self) -> (Mat, Mat) {
+        let (m, n) = (self.rows, self.cols);
+        assert!(m >= n, "qr: need m >= n, got {m}x{n}");
+        // Work in f64.
+        let mut a: Vec<f64> = self.data.iter().map(|&v| v as f64).collect();
+        let idx = |i: usize, j: usize| i * n + j;
+        // Householder vectors stored below diagonal, betas separately.
+        let mut betas = vec![0.0f64; n];
+        for k in 0..n {
+            // norm of column k below row k
+            let mut norm2 = 0.0;
+            for i in k..m {
+                norm2 += a[idx(i, k)] * a[idx(i, k)];
+            }
+            let norm = norm2.sqrt();
+            if norm == 0.0 {
+                betas[k] = 0.0;
+                continue;
+            }
+            let alpha = if a[idx(k, k)] >= 0.0 { -norm } else { norm };
+            let v0 = a[idx(k, k)] - alpha;
+            // v = [v0, a[k+1..m, k]]; beta = 2 / (v'v)
+            let mut vtv = v0 * v0;
+            for i in (k + 1)..m {
+                vtv += a[idx(i, k)] * a[idx(i, k)];
+            }
+            if vtv == 0.0 {
+                betas[k] = 0.0;
+                a[idx(k, k)] = alpha;
+                continue;
+            }
+            let beta = 2.0 / vtv;
+            betas[k] = beta;
+            // apply H = I - beta v v' to A[k.., k+1..]
+            for j in (k + 1)..n {
+                let mut dot = v0 * a[idx(k, j)];
+                for i in (k + 1)..m {
+                    dot += a[idx(i, k)] * a[idx(i, j)];
+                }
+                let s = beta * dot;
+                a[idx(k, j)] -= s * v0;
+                for i in (k + 1)..m {
+                    a[idx(i, j)] -= s * a[idx(i, k)];
+                }
+            }
+            // store: R diagonal entry, v below
+            a[idx(k, k)] = alpha;
+            // normalize stored v so v0 = 1 (store tail scaled)
+            for i in (k + 1)..m {
+                a[idx(i, k)] /= v0;
+            }
+            betas[k] *= v0 * v0;
+        }
+        // Extract R
+        let mut r = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                r[(i, j)] = a[idx(i, j)] as f32;
+            }
+        }
+        // Form thin Q by applying reflectors to the first n columns of I.
+        let mut q: Vec<f64> = vec![0.0; m * n];
+        for j in 0..n {
+            q[idx(j, j)] = 1.0;
+        }
+        for k in (0..n).rev() {
+            let beta = betas[k];
+            if beta == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                // dot = v' q[:, j], v = [1, a[k+1.., k]]
+                let mut dot = q[idx(k, j)];
+                for i in (k + 1)..m {
+                    dot += a[idx(i, k)] * q[idx(i, j)];
+                }
+                let s = beta * dot;
+                q[idx(k, j)] -= s;
+                for i in (k + 1)..m {
+                    q[idx(i, j)] -= s * a[idx(i, k)];
+                }
+            }
+        }
+        let qm = Mat::from_vec(m, n, q.iter().map(|&v| v as f32).collect());
+        (qm, r)
+    }
+
+    /// Modified Gram–Schmidt with one re-orthogonalization pass.
+    /// Mirrors `python/compile/nla.py:mgs_qr` — used to cross-check the
+    /// artifact QR numerics. Returns (Q, R).
+    pub fn mgs_qr(&self) -> (Mat, Mat) {
+        let (m, n) = (self.rows, self.cols);
+        assert!(m >= n, "mgs_qr: need m >= n");
+        let mut q = Mat::zeros(m, n);
+        let mut r = Mat::zeros(n, n);
+        let mut cols: Vec<Vec<f64>> = (0..n)
+            .map(|j| (0..m).map(|i| self[(i, j)] as f64).collect())
+            .collect();
+        let mut qcols: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for j in 0..n {
+            let mut v = cols[j].clone();
+            // two orthogonalization passes ("twice is enough")
+            for _pass in 0..2 {
+                for (k, qk) in qcols.iter().enumerate() {
+                    let dot: f64 = qk.iter().zip(&v).map(|(a, b)| a * b).sum();
+                    if _pass == 0 {
+                        r[(k, j)] += dot as f32;
+                    } else {
+                        r[(k, j)] += dot as f32;
+                    }
+                    for (vi, qi) in v.iter_mut().zip(qk) {
+                        *vi -= dot * qi;
+                    }
+                }
+            }
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            r[(j, j)] = norm as f32;
+            let inv = if norm > 1e-30 { 1.0 / norm } else { 0.0 };
+            for vi in v.iter_mut() {
+                *vi *= inv;
+            }
+            for i in 0..m {
+                q[(i, j)] = v[i] as f32;
+            }
+            qcols.push(v);
+            cols[j].clear();
+        }
+        (q, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_qr(a: &Mat, q: &Mat, r: &Mat, tol: f32) {
+        // reconstruction
+        let rec = q.matmul(r);
+        assert!(
+            rec.sub(a).max_abs() < tol,
+            "reconstruction err {}",
+            rec.sub(a).max_abs()
+        );
+        // orthonormality
+        let qtq = q.t_matmul(q);
+        let e = Mat::eye(q.cols);
+        assert!(
+            qtq.sub(&e).max_abs() < tol,
+            "orthonormality err {}",
+            qtq.sub(&e).max_abs()
+        );
+        // R upper triangular
+        for i in 0..r.rows {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < tol, "R not triangular");
+            }
+        }
+    }
+
+    #[test]
+    fn householder_qr_random() {
+        let mut rng = Rng::new(10);
+        for (m, n) in [(5, 5), (20, 7), (64, 32), (100, 3), (7, 1)] {
+            let a = Mat::gauss(m, n, 1.0, &mut rng);
+            let (q, r) = a.qr();
+            check_qr(&a, &q, &r, 2e-4);
+        }
+    }
+
+    #[test]
+    fn mgs_qr_random() {
+        let mut rng = Rng::new(11);
+        for (m, n) in [(5, 5), (30, 10), (128, 16)] {
+            let a = Mat::gauss(m, n, 1.0, &mut rng);
+            let (q, r) = a.mgs_qr();
+            check_qr(&a, &q, &r, 5e-4);
+        }
+    }
+
+    #[test]
+    fn qr_nearly_dependent_columns() {
+        // ill-conditioned: second column = first + tiny noise
+        let mut rng = Rng::new(12);
+        let c1 = Mat::gauss(50, 1, 1.0, &mut rng);
+        let noise = Mat::gauss(50, 1, 1e-4, &mut rng);
+        let c2 = c1.add(&noise);
+        let a = c1.hcat(&c2);
+        let (q, _r) = a.qr();
+        let qtq = q.t_matmul(&q);
+        assert!(qtq.sub(&Mat::eye(2)).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn qr_of_orthonormal_is_identity_r() {
+        let mut rng = Rng::new(13);
+        let a = Mat::gauss(40, 10, 1.0, &mut rng);
+        let (q, _) = a.qr();
+        let (_, r2) = q.qr();
+        // R should be ±identity
+        for i in 0..10 {
+            assert!((r2[(i, i)].abs() - 1.0).abs() < 1e-4);
+            for j in (i + 1)..10 {
+                assert!(r2[(i, j)].abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! bnkfac — leader entrypoint.
+//!
+//! Subcommands:
+//!   info           inspect an artifact directory
+//!   train          train with any optimizer, log curves to CSV
+//!   error-study    §4.2 probe: per-step error metrics vs exact benchmark
+//!
+//! All experiment harnesses (Fig 1/2, Tables 1/2, scaling) live in
+//! `cargo bench` targets; see README.
+
+use anyhow::{bail, Result};
+
+use bnkfac::coordinator::probe::ErrorProbe;
+use bnkfac::coordinator::{Trainer, TrainerCfg};
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::{Algo, Hyper};
+use bnkfac::runtime::Runtime;
+use bnkfac::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("info") | None => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("error-study") => cmd_error_study(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (info|train|error-study)"),
+    }
+}
+
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args.get_or("artifacts", "artifacts/vgg_mini").to_string();
+    Runtime::open(dir)
+}
+
+fn dataset_for(rt: &Runtime, args: &Args) -> Dataset {
+    Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        channels: rt.manifest.config.channels,
+        n_classes: rt.manifest.config.n_classes,
+        n_train: args.get_usize("n-train", 4096),
+        n_test: args.get_usize("n-test", 1024),
+        noise: args.get_f64("data-noise", 0.35) as f32,
+        label_noise: args.get_f64("label-noise", 0.0) as f32,
+        seed: args.get_u64("data-seed", 1234),
+        ..DatasetCfg::default()
+    })
+}
+
+fn hyper_from(args: &Args) -> Hyper {
+    let d = Hyper::default();
+    Hyper {
+        rho: args.get_f64("rho", d.rho as f64) as f32,
+        t_updt: args.get_usize("t-updt", d.t_updt),
+        t_inv: args.get_usize("t-inv", d.t_inv),
+        t_brand: args.get_usize("t-brand", d.t_brand),
+        t_rsvd: args.get_usize("t-rsvd", d.t_rsvd),
+        t_corct: args.get_usize("t-corct", d.t_corct),
+        weight_decay: args.get_f64("wd", d.weight_decay as f64) as f32,
+        clip: args.get_f64("clip", d.clip as f64) as f32,
+        spectrum_continuation: !args.flag("no-spectrum-continuation"),
+        brand_layer: match args.get_or("brand-layer", "fc0") {
+            "all" => None,
+            l => Some(l.to_string()),
+        },
+        linear_apply: args.flag("linear-apply"),
+        lr_scale: args.get_f64("lr-scale", 1.0) as f32,
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let m = &rt.manifest;
+    println!(
+        "config={} image={} batch={} classes={} rank={}+{} n_pwr={}",
+        m.config.name,
+        m.config.image,
+        m.config.batch,
+        m.config.n_classes,
+        m.config.rank,
+        m.config.oversample,
+        m.config.n_pwr
+    );
+    println!("params:");
+    let mut total = 0usize;
+    for (n, s) in &m.params {
+        let c: usize = s.iter().product();
+        total += c;
+        println!("  {n:<20} {s:?}");
+    }
+    println!("  total {total} parameters");
+    println!("layers:");
+    for l in &m.layers {
+        let brand: Vec<&str> = l
+            .factors
+            .iter()
+            .filter(|f| f.brand)
+            .map(|f| f.side.as_str())
+            .collect();
+        println!(
+            "  {:<8} {}  d_A={} d_Γ={} k_pad={} brand-eligible={:?}",
+            l.name, l.kind, l.d_a, l.d_g, l.k_pad, brand
+        );
+    }
+    println!("{} artifacts", m.artifacts.len());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let algo = Algo::parse(args.get_or("algo", "bkfac"))
+        .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
+    let epochs = args.get_usize("epochs", 5);
+    let seed = args.get_u64("seed", 42);
+    let out = args.get("out").map(|s| s.to_string());
+    let log_every = args.get_usize("log-every", 10);
+    let cfg = TrainerCfg {
+        algo,
+        hyper: hyper_from(args),
+        seed,
+        ..TrainerCfg::default()
+    };
+    let ds = dataset_for(&rt, args);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut tr = Trainer::new(&rt, cfg)?;
+    println!(
+        "training {} for {epochs} epochs on synthetic CIFAR ({} train / {} test), {} params",
+        algo.name(),
+        ds.train_y.len(),
+        ds.test_y.len(),
+        tr.params.n_params()
+    );
+    let t0 = std::time::Instant::now();
+    let log = tr.run(&ds, epochs, log_every)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for e in &log.eval {
+        println!(
+            "epoch {:>3}  test_loss {:.4}  test_acc {:.4}  t={:.1}s",
+            e.epoch, e.test_loss, e.test_acc, e.wall_s
+        );
+    }
+    println!("total {wall:.1}s  t_epoch {:.2}s", wall / epochs as f64);
+    println!("--- phase timers ---\n{}", tr.timers.report());
+    if let Some(path) = out {
+        std::fs::write(&path, log.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_error_study(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let algo = Algo::parse(args.get_or("algo", "bkfac"))
+        .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
+    let layer = args.get_or("layer", "fc0").to_string();
+    let warmup = args.get_usize("warmup", 100);
+    let steps = args.get_usize("steps", 300);
+    let out = args.get("out").map(|s| s.to_string());
+    let cfg = TrainerCfg {
+        algo,
+        hyper: hyper_from(args),
+        seed: args.get_u64("seed", 42),
+        probe_layer: Some(layer.clone()),
+        eval_every: 0,
+        ..TrainerCfg::default()
+    };
+    let ds = dataset_for(&rt, args);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let mut probe = ErrorProbe::new(&layer);
+    println!(
+        "error study: {} on layer {layer}, warmup {warmup}, measuring {steps} steps",
+        algo.name()
+    );
+    probe.run(&mut tr, &ds, warmup, steps)?;
+    let avg = probe.averages();
+    println!(
+        "averages: inv_A {:.3e}  inv_Γ {:.3e}  step {:.3e}  angle {:.3e}",
+        avg[0], avg[1], avg[2], avg[3]
+    );
+    if let Some(path) = out {
+        std::fs::write(&path, probe.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Metrics: the paper's four error metrics (§4.2), training-curve logging
+//! and CSV emission for the Fig 1/2 + Table 1/2 harnesses.
+
+use crate::linalg::{LowRank, Mat};
+use crate::util::ser::CsvWriter;
+
+/// §4.2 error metrics between an approximate K-factor representation and
+/// the exact (benchmark) one, all computed on dense materializations:
+///
+/// 1. `norm_err_inv_a` — ‖Ã⁻¹ − A_ref⁻¹‖_F / ‖A_ref⁻¹‖_F
+/// 2. `norm_err_inv_g` — same for Γ
+/// 3. `norm_err_step` — ‖s̃ − s_ref‖_F / ‖s_ref‖_F
+/// 4. `angle_err_step` — 1 − cos∠(s̃, s_ref)
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorMetrics {
+    pub norm_err_inv_a: f32,
+    pub norm_err_inv_g: f32,
+    pub norm_err_step: f32,
+    pub angle_err_step: f32,
+}
+
+/// Dense regularized inverse implied by a low-rank representation with
+/// spectrum continuation (§3.5): (U(D−dmin)Uᵀ + (λ+dmin)I)⁻¹.
+pub fn dense_inv_from_rep(rep: &LowRank, lambda: f32, continue_spectrum: bool) -> Mat {
+    let d = rep.dim();
+    let eye = Mat::eye(d);
+    rep.apply_inv_left(&eye, lambda, continue_spectrum)
+}
+
+/// Dense exact damped inverse (M + λI)⁻¹ — the benchmark side.
+pub fn dense_inv_exact(m: &Mat, lambda: f32) -> Mat {
+    m.damped_inverse(lambda)
+}
+
+pub fn rel_fro_err(approx: &Mat, reference: &Mat) -> f32 {
+    approx.rel_err(reference)
+}
+
+/// 1 − cosine of the angle between two step matrices (metric 4).
+pub fn angle_err(a: &Mat, b: &Mat) -> f32 {
+    let na = a.fro_norm();
+    let nb = b.fro_norm();
+    if na < 1e-30 || nb < 1e-30 {
+        return 0.0;
+    }
+    1.0 - (a.dot(b) / (na * nb)).clamp(-1.0, 1.0)
+}
+
+/// One row of a training log.
+#[derive(Clone, Debug)]
+pub struct TrainRecord {
+    pub step: usize,
+    pub epoch: usize,
+    pub loss: f32,
+    pub train_acc: f32,
+    pub wall_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub epoch: usize,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    pub wall_s: f64,
+}
+
+/// Collects the curves a run produces and serializes them.
+#[derive(Default, Clone, Debug)]
+pub struct RunLog {
+    pub name: String,
+    pub train: Vec<TrainRecord>,
+    pub eval: Vec<EvalRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> Self {
+        RunLog {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// First wall-clock time at which test accuracy ≥ target (Table 2
+    /// t_acc columns); None if never reached.
+    pub fn time_to_accuracy(&self, target: f32) -> Option<f64> {
+        self.eval
+            .iter()
+            .find(|e| e.test_acc >= target)
+            .map(|e| e.wall_s)
+    }
+
+    /// First epoch at which test accuracy ≥ target (Table 2 N_acc).
+    pub fn epochs_to_accuracy(&self, target: f32) -> Option<usize> {
+        self.eval
+            .iter()
+            .find(|e| e.test_acc >= target)
+            .map(|e| e.epoch)
+    }
+
+    pub fn best_accuracy(&self) -> f32 {
+        self.eval.iter().map(|e| e.test_acc).fold(0.0, f32::max)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut w = CsvWriter::new(&[
+            "kind", "step", "epoch", "loss", "acc", "wall_s",
+        ]);
+        for r in &self.train {
+            w.row_display(&[&"train", &r.step, &r.epoch, &r.loss, &r.train_acc, &r.wall_s]);
+        }
+        for e in &self.eval {
+            w.row_display(&[&"eval", &e.step, &e.epoch, &e.test_loss, &e.test_acc, &e.wall_s]);
+        }
+        w.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::LowRank;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_rep_has_zero_inverse_error() {
+        let mut rng = Rng::new(70);
+        let m = Mat::psd_with_decay(12, 0.6, &mut rng);
+        let rep = LowRank::from_eigh(&m.eigh(), 12);
+        let lam = 0.1;
+        let approx = dense_inv_from_rep(&rep, lam, false);
+        let exact = dense_inv_exact(&m, lam);
+        assert!(rel_fro_err(&approx, &exact) < 1e-3);
+    }
+
+    #[test]
+    fn truncated_rep_error_decreases_with_rank() {
+        let mut rng = Rng::new(71);
+        let m = Mat::psd_with_decay(20, 0.7, &mut rng);
+        let e = m.eigh();
+        let exact = dense_inv_exact(&m, 0.05);
+        let err4 = rel_fro_err(
+            &dense_inv_from_rep(&LowRank::from_eigh(&e, 4), 0.05, false),
+            &exact,
+        );
+        let err12 = rel_fro_err(
+            &dense_inv_from_rep(&LowRank::from_eigh(&e, 12), 0.05, false),
+            &exact,
+        );
+        assert!(err12 < err4, "err12={err12} err4={err4}");
+    }
+
+    #[test]
+    fn angle_err_bounds() {
+        let mut rng = Rng::new(72);
+        let a = Mat::gauss(5, 5, 1.0, &mut rng);
+        assert!(angle_err(&a, &a) < 1e-6);
+        let b = a.scale(-1.0);
+        assert!((angle_err(&a, &b) - 2.0).abs() < 1e-5);
+        let z = Mat::zeros(5, 5);
+        assert_eq!(angle_err(&a, &z), 0.0);
+    }
+
+    #[test]
+    fn run_log_targets() {
+        let mut log = RunLog::new("x");
+        for (i, acc) in [0.3f32, 0.5, 0.7, 0.9].iter().enumerate() {
+            log.eval.push(EvalRecord {
+                step: i * 10,
+                epoch: i,
+                test_loss: 1.0,
+                test_acc: *acc,
+                wall_s: i as f64,
+            });
+        }
+        assert_eq!(log.time_to_accuracy(0.6), Some(2.0));
+        assert_eq!(log.epochs_to_accuracy(0.9), Some(3));
+        assert_eq!(log.time_to_accuracy(0.99), None);
+        assert!((log.best_accuracy() - 0.9).abs() < 1e-6);
+        assert!(log.to_csv().contains("eval,30,3"));
+    }
+}

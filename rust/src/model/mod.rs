@@ -1,0 +1,290 @@
+//! Parameter store + initialization.
+//!
+//! Parameters live host-side as named tensors in the canonical manifest
+//! order and are shipped to the `train_step`/`eval_step` artifacts as
+//! literals each step. Weight layout matches `python/compile/model.py`:
+//! conv/FC weights are (d_in_augmented × d_out) with the bias as the last
+//! input row.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::Mat;
+use crate::runtime::{Manifest, Value};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    /// name → tensor (rank 1 params are stored as plain vectors)
+    tensors: BTreeMap<String, Tensor>,
+    /// canonical order
+    order: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    M(Mat),
+    V(Vec<f32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::M(m) => m.data.len(),
+            Tensor::V(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn data(&self) -> &[f32] {
+        match self {
+            Tensor::M(m) => &m.data,
+            Tensor::V(v) => v,
+        }
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        match self {
+            Tensor::M(m) => &mut m.data,
+            Tensor::V(v) => v,
+        }
+    }
+    pub fn as_value(&self) -> Value {
+        match self {
+            Tensor::M(m) => Value::M(m.clone()),
+            Tensor::V(v) => Value::V(v.clone()),
+        }
+    }
+    pub fn as_mat(&self) -> &Mat {
+        match self {
+            Tensor::M(m) => m,
+            Tensor::V(_) => panic!("expected matrix tensor"),
+        }
+    }
+}
+
+impl ParamStore {
+    /// He-style init: weights N(0, 2/fan_in); biases (last augmented row)
+    /// zero; BN scale 1, shift 0.
+    pub fn init(manifest: &Manifest, rng: &mut Rng) -> ParamStore {
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::new();
+        for (name, shape) in &manifest.params {
+            order.push(name.clone());
+            let t = match shape.len() {
+                1 => {
+                    let n = shape[0];
+                    let v = if name.ends_with("bn_scale") {
+                        vec![1.0; n]
+                    } else {
+                        vec![0.0; n]
+                    };
+                    Tensor::V(v)
+                }
+                2 => {
+                    let (d_in_aug, d_out) = (shape[0], shape[1]);
+                    let fan_in = (d_in_aug - 1).max(1);
+                    let sigma = (2.0 / fan_in as f32).sqrt();
+                    let mut m = Mat::gauss(d_in_aug, d_out, sigma, rng);
+                    // bias row (last) ← 0
+                    for j in 0..d_out {
+                        m[(d_in_aug - 1, j)] = 0.0;
+                    }
+                    Tensor::M(m)
+                }
+                other => panic!("param '{name}': rank-{other} unsupported"),
+            };
+            tensors.insert(name.clone(), t);
+        }
+        ParamStore { tensors, order }
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("no param '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("no param '{name}'"))
+    }
+
+    /// All tensors as artifact inputs, canonical order.
+    pub fn as_values(&self) -> Vec<Value> {
+        self.order
+            .iter()
+            .map(|n| self.tensors[n].as_value())
+            .collect()
+    }
+
+    /// θ ← θ − α·(step + wd·θ) on one named parameter.
+    pub fn apply_step(&mut self, name: &str, step: &[f32], alpha: f32, wd: f32) {
+        let t = self.get_mut(name);
+        let data = t.data_mut();
+        assert_eq!(data.len(), step.len(), "apply_step '{name}' size");
+        for (p, s) in data.iter_mut().zip(step) {
+            *p -= alpha * (s + wd * *p);
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    /// Global L2 norm of all parameters (diagnostics).
+    pub fn global_norm(&self) -> f32 {
+        self.tensors
+            .values()
+            .flat_map(|t| t.data().iter())
+            .map(|v| (*v as f64) * (*v as f64))
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+}
+
+/// Per-conv-layer BN running statistics (EA over batch stats, rust-owned).
+#[derive(Clone, Debug)]
+pub struct BnState {
+    pub means: BTreeMap<String, Vec<f32>>,
+    pub vars: BTreeMap<String, Vec<f32>>,
+    pub momentum: f32,
+    initialized: bool,
+}
+
+impl BnState {
+    pub fn new(manifest: &Manifest, momentum: f32) -> BnState {
+        let mut means = BTreeMap::new();
+        let mut vars = BTreeMap::new();
+        for l in &manifest.layers {
+            if l.kind == "conv" {
+                means.insert(l.name.clone(), vec![0.0; l.d_g]);
+                vars.insert(l.name.clone(), vec![1.0; l.d_g]);
+            }
+        }
+        BnState {
+            means,
+            vars,
+            momentum,
+            initialized: false,
+        }
+    }
+
+    pub fn update(&mut self, layer: &str, mean: &[f32], var: &[f32]) {
+        let m = if self.initialized { self.momentum } else { 0.0 };
+        let rm = self.means.get_mut(layer).expect("bn layer");
+        for (a, b) in rm.iter_mut().zip(mean) {
+            *a = m * *a + (1.0 - m) * b;
+        }
+        let rv = self.vars.get_mut(layer).expect("bn layer");
+        for (a, b) in rv.iter_mut().zip(var) {
+            *a = m * *a + (1.0 - m) * b;
+        }
+    }
+
+    pub fn mark_initialized(&mut self) {
+        self.initialized = true;
+    }
+
+    /// eval_step bn inputs: all means then all vars, manifest layer order.
+    pub fn as_values(&self, manifest: &Manifest) -> Vec<Value> {
+        let mut out = Vec::new();
+        for l in &manifest.layers {
+            if l.kind == "conv" {
+                out.push(Value::V(self.means[&l.name].clone()));
+            }
+        }
+        for l in &manifest.layers {
+            if l.kind == "conv" {
+                out.push(Value::V(self.vars[&l.name].clone()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "config": {"name":"t","image":8,"channels":3,"n_classes":10,
+                     "batch":4,"rank":6,"oversample":2,"n_pwr":1,
+                     "phi_corct":0.5},
+          "params": [{"name":"conv0/w","shape":[28,8]},
+                     {"name":"conv0/bn_scale","shape":[8]},
+                     {"name":"conv0/bn_shift","shape":[8]},
+                     {"name":"fc0/w","shape":[129,10]}],
+          "layers": [{"name":"conv0","kind":"conv","d_a":28,"d_g":8,
+                      "k_pad":6,"k_full":28,"grad_param":"conv0/w",
+                      "ops":{},"factors":[]}],
+          "artifacts": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_shapes_and_conventions() {
+        let m = manifest();
+        let mut rng = Rng::new(1);
+        let p = ParamStore::init(&m, &mut rng);
+        assert_eq!(p.names().len(), 4);
+        assert_eq!(p.n_params(), 28 * 8 + 8 + 8 + 129 * 10);
+        assert!(p.get("conv0/bn_scale").data().iter().all(|&v| v == 1.0));
+        assert!(p.get("conv0/bn_shift").data().iter().all(|&v| v == 0.0));
+        let w = p.get("fc0/w").as_mat();
+        for j in 0..10 {
+            assert_eq!(w[(128, j)], 0.0);
+        }
+        assert!(p.get("fc0/w").as_mat().fro_norm() > 0.1);
+    }
+
+    #[test]
+    fn apply_step_sgd_semantics() {
+        let m = manifest();
+        let mut rng = Rng::new(2);
+        let mut p = ParamStore::init(&m, &mut rng);
+        let before = p.get("conv0/bn_scale").data().to_vec();
+        let step = vec![1.0; 8];
+        p.apply_step("conv0/bn_scale", &step, 0.1, 0.0);
+        let after = p.get("conv0/bn_scale").data();
+        for (b, a) in before.iter().zip(after) {
+            assert!((a - (b - 0.1)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_decay_applies() {
+        let m = manifest();
+        let mut rng = Rng::new(3);
+        let mut p = ParamStore::init(&m, &mut rng);
+        let w0 = p.get("fc0/w").as_mat().clone();
+        let step = vec![0.0; 129 * 10];
+        p.apply_step("fc0/w", &step, 0.1, 0.5);
+        let w1 = p.get("fc0/w").as_mat();
+        // θ ← θ(1 − α·wd) = 0.95 θ
+        assert!(w1.sub(&w0.scale(0.95)).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn bn_state_ea() {
+        let m = manifest();
+        let mut bn = BnState::new(&m, 0.9);
+        bn.update("conv0", &[1.0; 8], &[2.0; 8]);
+        assert_eq!(bn.means["conv0"][0], 1.0);
+        bn.mark_initialized();
+        bn.update("conv0", &[0.0; 8], &[0.0; 8]);
+        assert!((bn.means["conv0"][0] - 0.9).abs() < 1e-6);
+        assert!((bn.vars["conv0"][0] - 1.8).abs() < 1e-6);
+        let vals = bn.as_values(&m);
+        assert_eq!(vals.len(), 2);
+    }
+}

@@ -1,0 +1,527 @@
+//! Per-K-factor state machine: EA Gram + low-rank inverse representation,
+//! with every update runnable on two paths:
+//!
+//! * **artifact path** — the XLA graphs lowered by `python/compile`
+//!   (two-stage around the host small-EVD, DESIGN.md §2); the training
+//!   hot path.
+//! * **host path** — the pure-rust `linalg` implementations; used by
+//!   `--no-xla` runs, unit tests, and as the oracle the artifact path is
+//!   validated against.
+
+use anyhow::Result;
+
+use super::policy::{Policy, UpdateOp};
+use crate::linalg::{LowRank, Mat, RsvdOpts};
+use crate::runtime::{FactorPlan, Runtime, Value};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimers;
+
+/// Incoming statistic for one factor at a stat-update step.
+pub enum Stat<'a> {
+    /// conv factors: the batch Gram matrix (already batch-averaged)
+    Gram(&'a Mat),
+    /// fc factors: raw tall-skinny statistic (d × n), AAᵀ batch-averaged
+    Raw(&'a Mat),
+}
+
+pub struct FactorState {
+    pub plan: FactorPlan,
+    /// dense EA Gram (None for pure-B-KFAC-managed factors — §3.5
+    /// low-memory property)
+    pub gram: Option<Mat>,
+    /// current low-rank inverse representation
+    pub rep: Option<LowRank>,
+    /// false until the first stat update (κ(0) = 1: no decay at k=0)
+    seen_stats: bool,
+    pub keep_gram: bool,
+}
+
+impl FactorState {
+    pub fn new(plan: FactorPlan, keep_gram: bool) -> FactorState {
+        FactorState {
+            plan,
+            gram: None,
+            rep: None,
+            seen_stats: false,
+            keep_gram,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.plan.dim
+    }
+
+    /// λ_max of the current representation (for the §6 damping schedule).
+    pub fn lambda_max(&self) -> f32 {
+        self.rep.as_ref().map(|r| r.lambda_max()).unwrap_or(1.0)
+    }
+
+    // ------------------------------------------------------------ stats
+
+    /// EA update of the dense Gram (Alg 1 lines 5/9). `rt=None` → host.
+    pub fn stat_update(
+        &mut self,
+        stat: &Stat,
+        rho: f32,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let rho_eff = if self.seen_stats { rho } else { 0.0 };
+        self.seen_stats = true;
+        if !self.keep_gram {
+            return Ok(());
+        }
+        let d = self.dim();
+        if self.gram.is_none() {
+            self.gram = Some(Mat::zeros(d, d));
+        }
+        match stat {
+            Stat::Gram(g) => {
+                // host axpy — O(d²), memory bound; not worth a round-trip
+                let m = self.gram.as_mut().unwrap();
+                timers.time("ea_update", || {
+                    m.scale_inplace(rho_eff);
+                    m.axpy_inplace(1.0 - rho_eff, g);
+                });
+            }
+            Stat::Raw(a) => {
+                let name = self.plan.ops.get("syrk_ea").cloned();
+                let m = self.gram.take().unwrap();
+                let new = match (rt, name) {
+                    (Some(rt), Some(name)) => timers.time("ea_update", || {
+                        let outs = rt.exec(
+                            &name,
+                            &[Value::M(m), Value::M((*a).clone()), Value::S(rho_eff)],
+                        )?;
+                        Ok::<Mat, anyhow::Error>(outs.into_iter().next().unwrap().into_mat())
+                    })?,
+                    _ => timers.time("ea_update", || {
+                        let mut out = a.syrk();
+                        out.scale_inplace(1.0 - rho_eff);
+                        out.axpy_inplace(1.0, &{
+                            let mut mm = m;
+                            mm.scale_inplace(rho_eff);
+                            mm
+                        });
+                        out
+                    }),
+                };
+                self.gram = Some(new);
+            }
+        }
+        Ok(())
+    }
+
+    // --------------------------------------------------------- inverses
+
+    /// Dispatch one policy op.
+    pub fn run_op(
+        &mut self,
+        op: UpdateOp,
+        raw_stat: Option<&Mat>,
+        rho: f32,
+        policy: &Policy,
+        rt: Option<&Runtime>,
+        rng: &mut Rng,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        match op {
+            UpdateOp::None => Ok(()),
+            UpdateOp::ExactEvd => self.exact_evd(timers),
+            UpdateOp::Rsvd => {
+                if self.gram.is_some() {
+                    self.rsvd(rt, rng, timers)
+                } else {
+                    // pure-B-KFAC init at k=0: exact decomposition of the
+                    // first statistic AAᵀ without forming the Gram
+                    let a = raw_stat.expect("B-KFAC init needs the raw statistic");
+                    self.init_from_stat(a, timers)
+                }
+            }
+            UpdateOp::Brand => {
+                let a = raw_stat.expect("Brand update needs the raw statistic");
+                self.brand(a, rho, rt, timers)
+            }
+            UpdateOp::BrandCorrect => {
+                let a = raw_stat.expect("Brand update needs the raw statistic");
+                self.brand(a, rho, rt, timers)?;
+                self.correction(policy, rt, rng, timers)
+            }
+        }
+    }
+
+    /// Exact EVD of the EA Gram (K-FAC baseline; host, cubic).
+    pub fn exact_evd(&mut self, timers: &mut PhaseTimers) -> Result<()> {
+        let gram = self
+            .gram
+            .as_ref()
+            .expect("exact EVD needs the dense Gram");
+        let e = timers.time("exact_evd", || gram.eigh());
+        self.rep = Some(LowRank::new(e.u, e.d.iter().map(|&x| x.max(0.0)).collect()));
+        Ok(())
+    }
+
+    /// RSVD of the EA Gram (target rank = plan.rank, sketch = plan.sketch).
+    pub fn rsvd(
+        &mut self,
+        rt: Option<&Runtime>,
+        rng: &mut Rng,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let gram = self.gram.as_ref().expect("RSVD needs the dense Gram");
+        let d = self.dim();
+        let k = self.plan.sketch;
+        let r = self.plan.rank.min(k);
+        let omega = Mat::gauss(d, k, 1.0, rng);
+        let rep = match (
+            rt,
+            self.plan.ops.get("rsvd_p1"),
+            self.plan.ops.get("tall_matmul"),
+        ) {
+            (Some(rt), Some(p1), Some(p2)) => timers.time("rsvd", || {
+                let outs =
+                    rt.exec(p1, &[Value::M(gram.clone()), Value::M(omega)])?;
+                let q = outs[0].as_mat().clone();
+                let s = outs[1].as_mat();
+                let ev = s.eigh();
+                let u_s = ev.u.slice_cols(0, r);
+                let outs = rt.exec(p2, &[Value::M(q), Value::M(u_s)])?;
+                let u = outs.into_iter().next().unwrap().into_mat();
+                Ok::<LowRank, anyhow::Error>(LowRank::new(
+                    u,
+                    ev.d[..r].iter().map(|&x| x.max(0.0)).collect(),
+                ))
+            })?,
+            _ => timers.time("rsvd", || {
+                gram.rsvd_with_sketch(
+                    &omega,
+                    RsvdOpts {
+                        rank: r,
+                        oversample: k - r,
+                        n_pwr: 4,
+                    },
+                )
+            }),
+        };
+        self.rep = Some(rep);
+        Ok(())
+    }
+
+    /// Exact low-rank init from the first raw statistic (no Gram formed):
+    /// EVD of AAᵀ via QR(A) + small EVD — the §3.5 low-memory entry point.
+    pub fn init_from_stat(&mut self, a: &Mat, timers: &mut PhaseTimers) -> Result<()> {
+        let rep = timers.time("rsvd", || {
+            let (q, r_mat) = a.qr();
+            let small = r_mat.matmul_t(&r_mat); // R Rᵀ (n×n)
+            let ev = small.eigh();
+            let u = q.matmul(&ev.u);
+            LowRank::new(u, ev.d.iter().map(|&x| x.max(0.0)).collect())
+        });
+        self.rep = Some(rep);
+        Ok(())
+    }
+
+    /// Truncate-then-Brand EA update (Alg 4). Representation becomes
+    /// rank r+n; truncation to r happens here, just before the update.
+    pub fn brand(
+        &mut self,
+        a: &Mat,
+        rho: f32,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let r = self.plan.rank;
+        let n = self.plan.n;
+        let rep = self
+            .rep
+            .take()
+            .expect("Brand update requires an existing representation");
+        let trunc = truncate_or_pad(&rep, r);
+        let new_rep = match (
+            rt,
+            self.plan.ops.get("brand_p1"),
+            self.plan.ops.get("brand_p2"),
+        ) {
+            (Some(rt), Some(p1), Some(p2)) => timers.time("brand", || {
+                let outs = rt.exec(
+                    p1,
+                    &[
+                        Value::M(trunc.u.clone()),
+                        Value::V(trunc.d.clone()),
+                        Value::M(a.clone()),
+                        Value::S(rho),
+                    ],
+                )?;
+                let m_s = outs[0].as_mat();
+                let q_a = outs[1].as_mat().clone();
+                let ev = m_s.eigh();
+                let outs = rt.exec(
+                    p2,
+                    &[Value::M(trunc.u.clone()), Value::M(q_a), Value::M(ev.u)],
+                )?;
+                let u = outs.into_iter().next().unwrap().into_mat();
+                Ok::<LowRank, anyhow::Error>(LowRank::new(
+                    u,
+                    ev.d.iter().map(|&x| x.max(0.0)).collect(),
+                ))
+            })?,
+            _ => timers.time("brand", || trunc.brand_ea_update(a, rho, r)),
+        };
+        debug_assert_eq!(new_rep.rank(), r + n);
+        self.rep = Some(new_rep);
+        Ok(())
+    }
+
+    /// Alg 6 light correction against the dense EA Gram.
+    pub fn correction(
+        &mut self,
+        _policy: &Policy,
+        rt: Option<&Runtime>,
+        rng: &mut Rng,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let gram = self
+            .gram
+            .as_ref()
+            .expect("correction projects against the dense Gram")
+            .clone();
+        let rep = self.rep.take().expect("correction needs a representation");
+        let c = self.plan.n_crc.max(1);
+        let idx = rng.choose(rep.rank(), c.min(rep.rank()));
+        let new_rep = match (
+            rt,
+            self.plan.ops.get("corr_p1"),
+            self.plan.ops.get("corr_p2"),
+        ) {
+            (Some(rt), Some(p1), Some(p2)) if idx.len() == c => {
+                timers.time("correction", || {
+                    let idx_i32: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+                    let outs = rt.exec(
+                        p1,
+                        &[
+                            Value::M(rep.u.clone()),
+                            Value::M(gram.clone()),
+                            Value::I(idx_i32.clone()),
+                        ],
+                    )?;
+                    let u_c = outs[0].as_mat().clone();
+                    let m_s = outs[1].as_mat();
+                    let ev = m_s.eigh();
+                    let outs = rt.exec(
+                        p2,
+                        &[
+                            Value::M(rep.u.clone()),
+                            Value::M(u_c),
+                            Value::M(ev.u.clone()),
+                            Value::I(idx_i32),
+                        ],
+                    )?;
+                    let u_new = outs.into_iter().next().unwrap().into_mat();
+                    let mut d_new = rep.d.clone();
+                    for (jj, &j) in idx.iter().enumerate() {
+                        d_new[j] = ev.d[jj].max(0.0);
+                    }
+                    Ok::<LowRank, anyhow::Error>(sort_modes(LowRank::new(u_new, d_new)))
+                })?
+            }
+            _ => timers.time("correction", || rep.correction(&gram, &idx)),
+        };
+        self.rep = Some(new_rep);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ apply
+
+    /// Inputs for the `precond` artifact: (U zero-padded to width k_pad,
+    /// spectrum-continued shifted eigenvalues zero-padded, λ_eff).
+    /// Padded slots carry d=0 AND zero U columns, making them exact
+    /// no-ops in the low-rank apply.
+    pub fn apply_inputs(
+        &self,
+        k_pad: usize,
+        lambda: f32,
+        continue_spectrum: bool,
+    ) -> (Mat, Vec<f32>, f32) {
+        let rep = self.rep.as_ref().expect("no representation to apply");
+        let (d_eff, lam_eff) = if continue_spectrum {
+            let (ds, dmin) = rep.spectrum_continuation();
+            (ds, lambda + dmin)
+        } else {
+            (rep.d.clone(), lambda)
+        };
+        let r = rep.rank().min(k_pad);
+        let mut u = Mat::zeros(rep.dim(), k_pad);
+        for i in 0..rep.dim() {
+            u.row_mut(i)[..r].copy_from_slice(&rep.u.row(i)[..r]);
+        }
+        let mut d = vec![0.0f32; k_pad];
+        d[..r].copy_from_slice(&d_eff[..r]);
+        (u, d, lam_eff.max(1e-8))
+    }
+}
+
+/// Truncate to rank r, or zero-pad up to r if the representation is
+/// smaller (fixed artifact shapes require exactly width r).
+pub fn truncate_or_pad(rep: &LowRank, r: usize) -> LowRank {
+    if rep.rank() >= r {
+        rep.truncate(r)
+    } else {
+        let d_dim = rep.dim();
+        let mut u = Mat::zeros(d_dim, r);
+        for i in 0..d_dim {
+            u.row_mut(i)[..rep.rank()].copy_from_slice(rep.u.row(i));
+        }
+        let mut d = vec![0.0f32; r];
+        d[..rep.rank()].copy_from_slice(&rep.d);
+        LowRank::new(u, d)
+    }
+}
+
+/// Sort modes by eigenvalue descending (host side of the correction).
+fn sort_modes(rep: LowRank) -> LowRank {
+    let mut order: Vec<usize> = (0..rep.rank()).collect();
+    order.sort_by(|&a, &b| rep.d[b].partial_cmp(&rep.d[a]).unwrap());
+    if order.windows(2).all(|w| w[0] < w[1]) {
+        return rep;
+    }
+    let mut u = Mat::zeros(rep.dim(), rep.rank());
+    let mut d = vec![0.0f32; rep.rank()];
+    for (newj, &oldj) in order.iter().enumerate() {
+        d[newj] = rep.d[oldj];
+        for i in 0..rep.dim() {
+            u[(i, newj)] = rep.u[(i, oldj)];
+        }
+    }
+    LowRank::new(u, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn plan(dim: usize, rank: usize, n: usize, brand: bool) -> FactorPlan {
+        FactorPlan {
+            id: "t/A".into(),
+            layer: "t".into(),
+            kind: "fc".into(),
+            side: "A".into(),
+            dim,
+            rank,
+            sketch: rank + 4,
+            brand,
+            n,
+            n_crc: rank / 2,
+            ops: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn ea_stat_update_host_matches_formula() {
+        let mut rng = Rng::new(80);
+        let mut t = PhaseTimers::new();
+        let mut f = FactorState::new(plan(20, 6, 4, true), true);
+        let a0 = Mat::gauss(20, 4, 1.0, &mut rng);
+        f.stat_update(&Stat::Raw(&a0), 0.9, None, &mut t).unwrap();
+        // first update: κ(0)=1 → gram = A₀A₀ᵀ exactly
+        assert!(f.gram.as_ref().unwrap().rel_err(&a0.syrk()) < 1e-5);
+        let a1 = Mat::gauss(20, 4, 1.0, &mut rng);
+        f.stat_update(&Stat::Raw(&a1), 0.9, None, &mut t).unwrap();
+        let want = a0.syrk().scale(0.9).add(&a1.syrk().scale(0.1));
+        assert!(f.gram.as_ref().unwrap().rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn gram_stat_update_conv() {
+        let mut rng = Rng::new(81);
+        let mut t = PhaseTimers::new();
+        let mut f = FactorState::new(plan(10, 4, 4, false), true);
+        let g0 = Mat::gauss(10, 10, 1.0, &mut rng).syrk();
+        let g1 = Mat::gauss(10, 10, 1.0, &mut rng).syrk();
+        f.stat_update(&Stat::Gram(&g0), 0.5, None, &mut t).unwrap();
+        f.stat_update(&Stat::Gram(&g1), 0.5, None, &mut t).unwrap();
+        let want = g0.scale(0.5).add(&g1.scale(0.5));
+        assert!(f.gram.as_ref().unwrap().rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn init_from_stat_is_exact() {
+        let mut rng = Rng::new(82);
+        let mut t = PhaseTimers::new();
+        let mut f = FactorState::new(plan(24, 8, 4, true), false);
+        let a = Mat::gauss(24, 4, 1.0, &mut rng);
+        f.init_from_stat(&a, &mut t).unwrap();
+        let rep = f.rep.as_ref().unwrap();
+        assert!(rep.to_dense().rel_err(&a.syrk()) < 1e-4);
+    }
+
+    #[test]
+    fn brand_host_path_tracks_ea() {
+        let mut rng = Rng::new(83);
+        let mut t = PhaseTimers::new();
+        let p = plan(30, 6, 3, true);
+        let mut f = FactorState::new(p, false);
+        let a0 = Mat::gauss(30, 3, 1.0, &mut rng);
+        f.init_from_stat(&a0, &mut t).unwrap();
+        let mut m_true = a0.syrk();
+        // several Brand steps, modest truncation → small drift
+        for _ in 0..4 {
+            let a = Mat::gauss(30, 3, 1.0, &mut rng);
+            f.brand(&a, 0.9, None, &mut t).unwrap();
+            m_true = m_true.scale(0.9).add(&a.syrk().scale(0.1));
+        }
+        let rep = f.rep.as_ref().unwrap();
+        assert_eq!(rep.rank(), 9); // r + n
+        // rank 9 of a rank-15 stream: decent but imperfect approximation
+        let err = rep.to_dense().rel_err(&m_true);
+        assert!(err < 0.6, "err {err}");
+    }
+
+    #[test]
+    fn exact_evd_gives_exact_inverse_rep() {
+        let mut rng = Rng::new(84);
+        let mut t = PhaseTimers::new();
+        let mut f = FactorState::new(plan(12, 4, 4, false), true);
+        let g = Mat::psd_with_decay(12, 0.6, &mut rng);
+        f.stat_update(&Stat::Gram(&g), 0.9, None, &mut t).unwrap();
+        f.exact_evd(&mut t).unwrap();
+        assert!(f.rep.as_ref().unwrap().to_dense().rel_err(&g) < 1e-4);
+    }
+
+    #[test]
+    fn apply_inputs_pad_semantics() {
+        let mut rng = Rng::new(85);
+        let mut t = PhaseTimers::new();
+        let mut f = FactorState::new(plan(16, 5, 3, true), true);
+        let g = Mat::psd_with_decay(16, 0.5, &mut rng);
+        f.stat_update(&Stat::Gram(&g), 0.9, None, &mut t).unwrap();
+        f.rsvd(None, &mut rng, &mut t).unwrap();
+        let (u, d, lam) = f.apply_inputs(10, 0.1, true);
+        assert_eq!((u.rows, u.cols), (16, 10));
+        assert_eq!(d.len(), 10);
+        // padded tail zero
+        for j in 5..10 {
+            assert_eq!(d[j], 0.0);
+            for i in 0..16 {
+                assert_eq!(u[(i, j)], 0.0);
+            }
+        }
+        // spectrum continuation: λ_eff > λ, smallest retained eig shifted to 0
+        assert!(lam > 0.1);
+        assert!(d[4].abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncate_or_pad_both_ways() {
+        let mut rng = Rng::new(86);
+        let g = Mat::gauss(12, 6, 1.0, &mut rng);
+        let rep = LowRank::from_eigh(&g.syrk().eigh(), 6);
+        let t4 = truncate_or_pad(&rep, 4);
+        assert_eq!(t4.rank(), 4);
+        let t9 = truncate_or_pad(&rep, 9);
+        assert_eq!(t9.rank(), 9);
+        assert_eq!(t9.d[8], 0.0);
+        // padding preserves the matrix
+        assert!(t9.to_dense().rel_err(&rep.to_dense()) < 1e-5);
+    }
+}

@@ -1,0 +1,233 @@
+//! Per-layer state: the two K-factors + the preconditioned-step
+//! computation (standard low-rank apply, exact apply, or the Alg 8
+//! linear apply).
+
+use anyhow::Result;
+
+use super::factor::FactorState;
+use super::Hyper;
+use crate::linalg::Mat;
+use crate::runtime::{LayerSpec, Runtime, Value};
+use crate::util::timer::PhaseTimers;
+
+pub struct LayerState {
+    pub spec: LayerSpec,
+    pub a: FactorState,
+    pub g: FactorState,
+}
+
+impl LayerState {
+    pub fn new(spec: LayerSpec, a: FactorState, g: FactorState) -> LayerState {
+        LayerState { spec, a, g }
+    }
+
+    pub fn has_reps(&self) -> bool {
+        self.a.rep.is_some() && self.g.rep.is_some()
+    }
+
+    /// Standard preconditioned step (Alg 1 lines 14–17 with §3.5
+    /// continuation): S = Â⁻¹ · grad · Γ̂⁻¹, parameter layout (d_a, d_g).
+    /// `exact` selects the full-rank artifact (K-FAC baseline).
+    pub fn precond_step(
+        &self,
+        grad: &Mat,
+        phi_lambda: f32,
+        hyper: &Hyper,
+        exact: bool,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<Mat> {
+        let k_pad = if exact {
+            self.spec.k_full
+        } else {
+            self.spec.k_pad
+        };
+        let cont = hyper.spectrum_continuation && !exact;
+        let lam_a = self.a.lambda_max() * phi_lambda;
+        let lam_g = self.g.lambda_max() * phi_lambda;
+        let (u_a, d_a, lam_a) = self.a.apply_inputs(k_pad, lam_a, cont);
+        let (u_g, d_g, lam_g) = self.g.apply_inputs(k_pad, lam_g, cont);
+        let art = if exact {
+            self.spec.ops.get("precond_exact")
+        } else {
+            self.spec.ops.get("precond")
+        };
+        match (rt, art) {
+            (Some(rt), Some(name)) => timers.time("precond", || {
+                let outs = rt.exec(
+                    name,
+                    &[
+                        Value::M(u_g),
+                        Value::V(d_g),
+                        Value::S(lam_g),
+                        Value::M(u_a),
+                        Value::V(d_a),
+                        Value::S(lam_a),
+                        Value::M(grad.clone()),
+                    ],
+                )?;
+                Ok(outs.into_iter().next().unwrap().into_mat())
+            }),
+            _ => timers.time("precond", || {
+                // host path mirrors kernels/lowrank_apply semantics
+                let ra = crate::linalg::LowRank::new(u_a, d_a);
+                let rg = crate::linalg::LowRank::new(u_g, d_g);
+                let m = ra.apply_inv_left(grad, lam_a, false); // (d_a, d_g)
+                Ok(rg.apply_inv_right(&m, lam_g, false)) // · Γ̂⁻¹ from the right
+            }),
+        }
+    }
+
+    /// Alg 8 linear inverse application (FC layers with raw stats of the
+    /// CURRENT batch): S = Â⁻¹·A·(Gᵀ·Γ̂⁻¹) reconstructing Mat(g) = G·Aᵀ.
+    pub fn linear_apply_step(
+        &self,
+        a_stat: &Mat,
+        g_stat: &Mat,
+        phi_lambda: f32,
+        hyper: &Hyper,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<Mat> {
+        let k_pad = self.spec.k_pad;
+        let cont = hyper.spectrum_continuation;
+        let lam_a = self.a.lambda_max() * phi_lambda;
+        let lam_g = self.g.lambda_max() * phi_lambda;
+        let (u_a, d_a, lam_a) = self.a.apply_inputs(k_pad, lam_a, cont);
+        let (u_g, d_g, lam_g) = self.g.apply_inputs(k_pad, lam_g, cont);
+        match (rt, self.spec.ops.get("linear_apply")) {
+            (Some(rt), Some(name)) => timers.time("linear_apply", || {
+                let outs = rt.exec(
+                    name,
+                    &[
+                        Value::M(u_g),
+                        Value::V(d_g),
+                        Value::S(lam_g),
+                        Value::M(u_a),
+                        Value::V(d_a),
+                        Value::S(lam_a),
+                        Value::M(a_stat.clone()),
+                        Value::M(g_stat.clone()),
+                    ],
+                )?;
+                Ok(outs.into_iter().next().unwrap().into_mat())
+            }),
+            _ => timers.time("linear_apply", || {
+                let ra = crate::linalg::LowRank::new(u_a, d_a);
+                let rg = crate::linalg::LowRank::new(u_g, d_g);
+                // (Γ̂⁻¹ G)(Aᵀ Â⁻¹), then transpose to parameter layout
+                let g_pre = rg.apply_inv_left(g_stat, lam_g, false); // (d_g, n)
+                let at_pre = ra.apply_inv_right(&a_stat.transpose(), lam_a, false); // (n, d_a)
+                Ok(g_pre.matmul(&at_pre).transpose())
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::factor::Stat;
+    use crate::runtime::{FactorPlan, LayerSpec};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn make_layer(d_a: usize, d_g: usize, rank: usize, n: usize) -> LayerState {
+        let fp = |side: &str, dim: usize| FactorPlan {
+            id: format!("t/{side}"),
+            layer: "t".into(),
+            kind: "fc".into(),
+            side: side.into(),
+            dim,
+            rank: rank.min(dim - 1),
+            sketch: (rank + 4).min(dim),
+            brand: dim > rank + n,
+            n,
+            n_crc: rank / 2,
+            ops: BTreeMap::new(),
+        };
+        let spec = LayerSpec {
+            name: "t".into(),
+            kind: "fc".into(),
+            d_a,
+            d_g,
+            k_pad: rank + n,
+            k_full: d_a.max(d_g),
+            grad_param: "t/w".into(),
+            dropout: 0.0,
+            ops: BTreeMap::new(),
+            factors: vec![],
+        };
+        LayerState::new(
+            spec,
+            FactorState::new(fp("A", d_a), true),
+            FactorState::new(fp("G", d_g), true),
+        )
+    }
+
+    /// With exact full-rank reps and no continuation, the precond step
+    /// must equal the dense damped-inverse product.
+    #[test]
+    fn precond_matches_dense_inverse() {
+        let mut rng = Rng::new(90);
+        let mut t = PhaseTimers::new();
+        let (d_a, d_g) = (14, 6);
+        let mut layer = make_layer(d_a, d_g, 4, 3);
+        let ga = Mat::psd_with_decay(d_a, 0.6, &mut rng);
+        let gg = Mat::psd_with_decay(d_g, 0.6, &mut rng);
+        layer.a.stat_update(&Stat::Gram(&ga), 0.9, None, &mut t).unwrap();
+        layer.g.stat_update(&Stat::Gram(&gg), 0.9, None, &mut t).unwrap();
+        layer.a.exact_evd(&mut t).unwrap();
+        layer.g.exact_evd(&mut t).unwrap();
+        let hyper = Hyper {
+            spectrum_continuation: false,
+            ..Hyper::default()
+        };
+        let grad = Mat::gauss(d_a, d_g, 1.0, &mut rng);
+        let phi = 0.1;
+        let step = layer
+            .precond_step(&grad, phi, &hyper, true, None, &mut t)
+            .unwrap();
+        // dense reference: Â⁻¹ grad Γ̂⁻¹ with λ = λ_max·φ
+        let lam_a = ga.eigh().d[0] * phi;
+        let lam_g = gg.eigh().d[0] * phi;
+        let want = ga
+            .damped_inverse(lam_a)
+            .matmul(&grad)
+            .matmul(&gg.damped_inverse(lam_g));
+        assert!(
+            step.rel_err(&want) < 2e-3,
+            "rel err {}",
+            step.rel_err(&want)
+        );
+    }
+
+    /// Alg 8 must agree with the standard apply when the gradient is
+    /// exactly G·Aᵀ (eq. 20/21 — same inverses, same result).
+    #[test]
+    fn linear_apply_consistent_with_precond() {
+        let mut rng = Rng::new(91);
+        let mut t = PhaseTimers::new();
+        let (d_a, d_g, n) = (16, 7, 4);
+        let mut layer = make_layer(d_a, d_g, 5, n);
+        let ga = Mat::psd_with_decay(d_a, 0.6, &mut rng);
+        let gg = Mat::psd_with_decay(d_g, 0.6, &mut rng);
+        layer.a.stat_update(&Stat::Gram(&ga), 0.9, None, &mut t).unwrap();
+        layer.g.stat_update(&Stat::Gram(&gg), 0.9, None, &mut t).unwrap();
+        layer.a.rsvd(None, &mut rng, &mut t).unwrap();
+        layer.g.rsvd(None, &mut rng, &mut t).unwrap();
+        let hyper = Hyper::default();
+        let a_stat = Mat::gauss(d_a, n, 1.0, &mut rng);
+        let g_stat = Mat::gauss(d_g, n, 1.0, &mut rng);
+        // grad in parameter layout = (G·Aᵀ)ᵀ = A·Gᵀ
+        let grad = a_stat.matmul(&g_stat.transpose());
+        let phi = 0.1;
+        let s1 = layer
+            .precond_step(&grad, phi, &hyper, false, None, &mut t)
+            .unwrap();
+        let s2 = layer
+            .linear_apply_step(&a_stat, &g_stat, phi, &hyper, None, &mut t)
+            .unwrap();
+        assert!(s1.rel_err(&s2) < 1e-3, "rel err {}", s1.rel_err(&s2));
+    }
+}

@@ -1,0 +1,119 @@
+//! Optimizers: the paper's three Brand-New-K-FACs, the K-FAC/R-KFAC/SENG
+//! baselines, and SGD.
+//!
+//! The K-FAC family shares one engine (`factor`/`layer`) — algorithms
+//! differ ONLY in their inverse-update policy (`policy::Policy`), exactly
+//! the paper's framing (every algorithm is Alg 1 with lines 12–13
+//! replaced).
+
+pub mod factor;
+pub mod layer;
+pub mod policy;
+pub mod seng;
+
+pub use factor::FactorState;
+pub use layer::LayerState;
+pub use policy::{Algo, Policy, UpdateOp};
+
+/// Shared hyperparameters (paper §6 defaults).
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    /// EA decay ρ
+    pub rho: f32,
+    /// stat-update period T_updt
+    pub t_updt: usize,
+    /// inverse period for K-FAC / R-KFAC (T_inv)
+    pub t_inv: usize,
+    /// Brand period (B-KFAC family)
+    pub t_brand: usize,
+    /// RSVD-overwrite period (B-R-KFAC)
+    pub t_rsvd: usize,
+    /// correction period (B-KFAC-C)
+    pub t_corct: usize,
+    /// weight decay
+    pub weight_decay: f32,
+    /// global step clip (scales the whole update if ‖αΔ‖₂ exceeds this)
+    pub clip: f32,
+    /// spectrum continuation (§3.5) — on for all low-rank algorithms
+    pub spectrum_continuation: bool,
+    /// only this layer's eligible factors get B-updates (paper §6 uses
+    /// the first FC layer); None = all eligible factors
+    pub brand_layer: Option<String>,
+    /// use the Alg 8 linear inverse application on B-updated FC layers
+    pub linear_apply: bool,
+    /// lr schedule scaling factor
+    pub lr_scale: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper {
+            rho: 0.95,
+            t_updt: 25,
+            t_inv: 250,
+            t_brand: 125,
+            t_rsvd: 250,
+            t_corct: 500,
+            weight_decay: 7e-4,
+            clip: 0.07,
+            spectrum_continuation: true,
+            brand_layer: Some("fc0".to_string()),
+            linear_apply: false,
+            lr_scale: 1.0,
+        }
+    }
+}
+
+impl Hyper {
+    /// Paper §6 learning-rate schedule:
+    /// α = 0.3 − 0.1·1[e≥2] − 0.1·1[e≥3] − 0.07·1[e≥13] − 0.02·1[e≥18]
+    ///       − 0.007·1[e≥27] − 0.002·1[e≥40]
+    pub fn lr(&self, epoch: usize) -> f32 {
+        let mut a = 0.3;
+        for (e, d) in [(2, 0.1), (3, 0.1), (13, 0.07), (18, 0.02), (27, 0.007), (40, 0.002)]
+        {
+            if epoch >= e {
+                a -= d;
+            }
+        }
+        a * self.lr_scale
+    }
+
+    /// Paper §6 damping schedule φ_λ = 0.1 − 0.05·1[e≥25] − 0.04·1[e≥35];
+    /// λ_{k,l} = λ_max(factor) · φ_λ.
+    pub fn phi_lambda(&self, epoch: usize) -> f32 {
+        let mut p = 0.1;
+        if epoch >= 25 {
+            p -= 0.05;
+        }
+        if epoch >= 35 {
+            p -= 0.04;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_matches_paper() {
+        let h = Hyper::default();
+        assert!((h.lr(0) - 0.3).abs() < 1e-6);
+        assert!((h.lr(2) - 0.2).abs() < 1e-6);
+        assert!((h.lr(3) - 0.1).abs() < 1e-6);
+        assert!((h.lr(13) - 0.03).abs() < 1e-6);
+        assert!((h.lr(18) - 0.01).abs() < 1e-6);
+        assert!((h.lr(27) - 0.003).abs() < 1e-6);
+        assert!((h.lr(45) - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn damping_schedule_matches_paper() {
+        let h = Hyper::default();
+        assert!((h.phi_lambda(0) - 0.1).abs() < 1e-6);
+        assert!((h.phi_lambda(25) - 0.05).abs() < 1e-6);
+        assert!((h.phi_lambda(35) - 0.01).abs() < 1e-6);
+    }
+}

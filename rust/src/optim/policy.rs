@@ -1,0 +1,301 @@
+//! Inverse-update policies — the one place the six algorithms differ.
+//!
+//! Cadences follow the paper exactly: all periods are measured in
+//! optimizer iterations, updates fire when `k % T == 0` (k = 0 included,
+//! which performs the initializing decomposition — B-algorithms "start
+//! our Ũ₀, D̃₀ from an RSVD in practice", §3.1).
+
+use super::Hyper;
+use crate::runtime::FactorPlan;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Sgd,
+    Seng,
+    KfacExact,
+    RKfac,
+    BKfac,
+    BRKfac,
+    BKfacC,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "sgd" => Algo::Sgd,
+            "seng" => Algo::Seng,
+            "kfac" => Algo::KfacExact,
+            "rkfac" | "r-kfac" | "rs-kfac" => Algo::RKfac,
+            "bkfac" | "b-kfac" => Algo::BKfac,
+            "brkfac" | "b-r-kfac" => Algo::BRKfac,
+            "bkfacc" | "b-kfac-c" => Algo::BKfacC,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Sgd => "SGD",
+            Algo::Seng => "SENG",
+            Algo::KfacExact => "K-FAC",
+            Algo::RKfac => "R-KFAC",
+            Algo::BKfac => "B-KFAC",
+            Algo::BRKfac => "B-R-KFAC",
+            Algo::BKfacC => "B-KFAC-C",
+        }
+    }
+
+    pub fn is_kfac_family(&self) -> bool {
+        !matches!(self, Algo::Sgd | Algo::Seng)
+    }
+}
+
+/// What to do to one K-factor's inverse representation at iteration k.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateOp {
+    None,
+    /// randomized SVD of the EA Gram (R-KFAC line 13 / B-R-KFAC overwrite)
+    Rsvd,
+    /// exact host EVD of the EA Gram (K-FAC baseline)
+    ExactEvd,
+    /// truncate + symmetric Brand update with the incoming statistic
+    Brand,
+    /// Brand followed by the Alg 6 correction (B-KFAC-C heavy step)
+    BrandCorrect,
+}
+
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub algo: Algo,
+    pub hyper: Hyper,
+}
+
+impl Policy {
+    pub fn new(algo: Algo, hyper: Hyper) -> Policy {
+        Policy { algo, hyper }
+    }
+
+    /// Does this factor receive B-updates under this policy?
+    /// Paper §3.5/§6: only *eligible* factors (d > r + n, FC layers), and
+    /// in the experiments only the first FC layer's factors.
+    pub fn brand_managed(&self, f: &FactorPlan) -> bool {
+        if !matches!(self.algo, Algo::BKfac | Algo::BRKfac | Algo::BKfacC) {
+            return false;
+        }
+        if !f.brand {
+            return false;
+        }
+        match &self.hyper.brand_layer {
+            Some(l) => f.layer == *l,
+            None => true,
+        }
+    }
+
+    /// Whether the dense EA Gram must be maintained for this factor.
+    /// Pure B-KFAC factors skip it — the §3.5 "low-memory" property.
+    pub fn needs_gram(&self, f: &FactorPlan) -> bool {
+        if !self.algo.is_kfac_family() {
+            return false;
+        }
+        if self.brand_managed(f) {
+            match self.algo {
+                // B-R-KFAC overwrites need the Gram; corrections project
+                // against it too.
+                Algo::BRKfac | Algo::BKfacC => true,
+                // pure B-KFAC: gram only implicitly at k=0 (init handled
+                // from the first statistic directly)
+                _ => false,
+            }
+        } else {
+            true
+        }
+    }
+
+    /// The inverse-update op at iteration k for this factor. Iterations
+    /// are global optimizer steps; stat updates happen at k % T_updt == 0
+    /// and inverse ops only ever fire on those same steps (the paper's
+    /// T_inv etc. are multiples of T_updt).
+    pub fn op_at(&self, k: usize, f: &FactorPlan) -> UpdateOp {
+        let h = &self.hyper;
+        if k % h.t_updt != 0 {
+            return UpdateOp::None;
+        }
+        match self.algo {
+            Algo::Sgd | Algo::Seng => UpdateOp::None,
+            Algo::KfacExact => {
+                if k % h.t_inv == 0 {
+                    UpdateOp::ExactEvd
+                } else {
+                    UpdateOp::None
+                }
+            }
+            Algo::RKfac => {
+                if k % h.t_inv == 0 {
+                    UpdateOp::Rsvd
+                } else {
+                    UpdateOp::None
+                }
+            }
+            Algo::BKfac => {
+                if self.brand_managed(f) {
+                    if k == 0 {
+                        UpdateOp::Rsvd // init (from first statistic)
+                    } else if k % h.t_brand == 0 {
+                        UpdateOp::Brand
+                    } else {
+                        UpdateOp::None
+                    }
+                } else if k % h.t_inv == 0 {
+                    UpdateOp::Rsvd
+                } else {
+                    UpdateOp::None
+                }
+            }
+            Algo::BRKfac => {
+                if self.brand_managed(f) {
+                    if k % h.t_rsvd == 0 {
+                        UpdateOp::Rsvd // periodic overwrite (Alg 5)
+                    } else if k % h.t_brand == 0 {
+                        UpdateOp::Brand
+                    } else {
+                        UpdateOp::None
+                    }
+                } else if k % h.t_inv == 0 {
+                    UpdateOp::Rsvd
+                } else {
+                    UpdateOp::None
+                }
+            }
+            Algo::BKfacC => {
+                if self.brand_managed(f) {
+                    if k == 0 {
+                        UpdateOp::Rsvd
+                    } else if k % h.t_corct == 0 {
+                        UpdateOp::BrandCorrect // Alg 7
+                    } else if k % h.t_brand == 0 {
+                        UpdateOp::Brand
+                    } else {
+                        UpdateOp::None
+                    }
+                } else if k % h.t_inv == 0 {
+                    UpdateOp::Rsvd
+                } else {
+                    UpdateOp::None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn fc_factor(brand: bool, layer: &str) -> FactorPlan {
+        FactorPlan {
+            id: format!("{layer}/A"),
+            layer: layer.into(),
+            kind: "fc".into(),
+            side: "A".into(),
+            dim: 129,
+            rank: 16,
+            sketch: 22,
+            brand,
+            n: 8,
+            n_crc: 8,
+            ops: BTreeMap::new(),
+        }
+    }
+
+    fn hyper_small() -> Hyper {
+        Hyper {
+            t_updt: 10,
+            t_inv: 50,
+            t_brand: 10,
+            t_rsvd: 50,
+            t_corct: 50,
+            ..Hyper::default()
+        }
+    }
+
+    #[test]
+    fn rkfac_cadence() {
+        let p = Policy::new(Algo::RKfac, hyper_small());
+        let f = fc_factor(true, "fc0");
+        assert_eq!(p.op_at(0, &f), UpdateOp::Rsvd);
+        assert_eq!(p.op_at(10, &f), UpdateOp::None);
+        assert_eq!(p.op_at(50, &f), UpdateOp::Rsvd);
+        assert_eq!(p.op_at(55, &f), UpdateOp::None); // off-stat step
+        assert!(p.needs_gram(&f));
+        assert!(!p.brand_managed(&f));
+    }
+
+    #[test]
+    fn bkfac_cadence_and_low_memory() {
+        let p = Policy::new(Algo::BKfac, hyper_small());
+        let f = fc_factor(true, "fc0");
+        assert_eq!(p.op_at(0, &f), UpdateOp::Rsvd);
+        assert_eq!(p.op_at(10, &f), UpdateOp::Brand);
+        assert_eq!(p.op_at(50, &f), UpdateOp::Brand); // never overwrites
+        assert!(!p.needs_gram(&f), "pure B-KFAC is low-memory");
+        // non-eligible factor falls back to R-KFAC updates + gram
+        let g = fc_factor(false, "fc0");
+        assert_eq!(p.op_at(50, &g), UpdateOp::Rsvd);
+        assert!(p.needs_gram(&g));
+    }
+
+    #[test]
+    fn brkfac_overwrites_beat_brand() {
+        let p = Policy::new(Algo::BRKfac, hyper_small());
+        let f = fc_factor(true, "fc0");
+        assert_eq!(p.op_at(0, &f), UpdateOp::Rsvd);
+        assert_eq!(p.op_at(10, &f), UpdateOp::Brand);
+        assert_eq!(p.op_at(50, &f), UpdateOp::Rsvd); // overwrite wins
+        assert!(p.needs_gram(&f));
+    }
+
+    #[test]
+    fn bkfacc_corrects() {
+        let p = Policy::new(Algo::BKfacC, hyper_small());
+        let f = fc_factor(true, "fc0");
+        assert_eq!(p.op_at(50, &f), UpdateOp::BrandCorrect);
+        assert_eq!(p.op_at(20, &f), UpdateOp::Brand);
+        assert!(p.needs_gram(&f));
+    }
+
+    #[test]
+    fn brand_layer_restriction() {
+        let mut h = hyper_small();
+        h.brand_layer = Some("fc0".into());
+        let p = Policy::new(Algo::BKfac, h);
+        let f1 = fc_factor(true, "fc1"); // eligible but not the chosen layer
+        assert!(!p.brand_managed(&f1));
+        assert_eq!(p.op_at(50, &f1), UpdateOp::Rsvd);
+    }
+
+    #[test]
+    fn kfac_exact_evd() {
+        let p = Policy::new(Algo::KfacExact, hyper_small());
+        let f = fc_factor(true, "fc0");
+        assert_eq!(p.op_at(0, &f), UpdateOp::ExactEvd);
+        assert_eq!(p.op_at(50, &f), UpdateOp::ExactEvd);
+        assert_eq!(p.op_at(10, &f), UpdateOp::None);
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for (s, a) in [
+            ("sgd", Algo::Sgd),
+            ("seng", Algo::Seng),
+            ("kfac", Algo::KfacExact),
+            ("rkfac", Algo::RKfac),
+            ("b-kfac", Algo::BKfac),
+            ("brkfac", Algo::BRKfac),
+            ("b-kfac-c", Algo::BKfacC),
+        ] {
+            assert_eq!(Algo::parse(s), Some(a));
+        }
+        assert_eq!(Algo::parse("adam"), None);
+    }
+}

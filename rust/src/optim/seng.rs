@@ -1,0 +1,194 @@
+//! SENG baseline — Sketchy Empirical Natural Gradient (Yang et al. 2021,
+//! paper ref [5]), scaled-down faithful reimplementation (DESIGN.md §3).
+//!
+//! SENG preconditions each layer with the *empirical* Fisher
+//! F_l = (1/B) Σ_i vec(g_i)vec(g_i)ᵀ of per-sample gradients, solved via
+//! the Woodbury identity. For FC layers the per-sample gradient has the
+//! rank-1 structure g_i = a_i·γ_iᵀ, so with U = [vec(a_i γ_iᵀ)/√B]_i:
+//!
+//!   (λI + UUᵀ)⁻¹ g = (1/λ)·(g − U·(λI + UᵀU)⁻¹·Uᵀg)
+//!
+//! where UᵀU ∈ R^{B×B} is computed WITHOUT materializing U:
+//!   (UᵀU)_{ij} = (a_iᵀa_j)(γ_iᵀγ_j)/B   — a Hadamard of two small Grams,
+//!   (Uᵀg)_i    = a_iᵀ · G · γ_i / √B     — bilinear forms of the mean grad.
+//!
+//! The `fim_col_sample_size` hyperparameter of the official code maps to
+//! sub-sampling the batch columns used in the sketch (here: keep all
+//! B ≤ 256 columns — B is already below the official 128 sample size...
+//! documented deviation: none in effect at our batch sizes).
+//!
+//! Conv layers (per-sample grads unavailable from Gram statistics — see
+//! DESIGN.md) use the damped empirical diagonal: g / (sqrt(diag(F̂)) + λ),
+//! an RMSProp-style curvature proxy maintained from squared gradients.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::Mat;
+
+pub struct SengState {
+    /// damping λ (official default 2 at CIFAR scale — tuned per run)
+    pub damping: f32,
+    /// running squared-grad diagonal per conv param
+    diag: BTreeMap<String, Vec<f32>>,
+    pub momentum: f32,
+    velocity: BTreeMap<String, Vec<f32>>,
+}
+
+impl SengState {
+    pub fn new(damping: f32, momentum: f32) -> SengState {
+        SengState {
+            damping,
+            diag: BTreeMap::new(),
+            momentum,
+            velocity: BTreeMap::new(),
+        }
+    }
+
+    /// FC-layer Woodbury NG direction. grad: (d_a, d_g) parameter layout;
+    /// a_stat: (d_a, B) (1/√B-scaled activations); g_stat: (d_g, B)
+    /// (√B-scaled preactivation grads). Returns the direction, same shape.
+    pub fn fc_direction(&self, grad: &Mat, a_stat: &Mat, g_stat: &Mat) -> Mat {
+        let b = a_stat.cols;
+        let lam = self.damping;
+        // small Grams: Ka = AᵀA (B×B), Kg = GᵀG (B×B)
+        let ka = a_stat.t_matmul(a_stat);
+        let kg = g_stat.t_matmul(g_stat);
+        // UᵀU = (Ka ∘ Kg) / B
+        let mut utu = Mat::zeros(b, b);
+        for i in 0..b {
+            for j in 0..b {
+                utu[(i, j)] = ka[(i, j)] * kg[(i, j)] / b as f32;
+            }
+        }
+        // Uᵀg: u_i = vec(a_i γ_iᵀ)/√B ⇒ (Uᵀg)_i = a_iᵀ·grad·γ_i/√B
+        let ag = a_stat.t_matmul(grad); // (B, d_g)
+        let mut utg = Mat::zeros(b, 1);
+        for i in 0..b {
+            let mut s = 0.0f32;
+            for j in 0..g_stat.rows {
+                s += ag[(i, j)] * g_stat[(j, i)];
+            }
+            utg[(i, 0)] = s / (b as f32).sqrt();
+        }
+        // c = (λI + UᵀU)⁻¹ Uᵀg
+        let mut damped = utu;
+        for i in 0..b {
+            damped[(i, i)] += lam;
+        }
+        let c = damped
+            .spd_solve(&utg)
+            .expect("SENG Woodbury core must be SPD");
+        // direction = (g − U c)/λ ; U c = Σ_i c_i a_i γ_iᵀ / √B
+        let mut correction = Mat::zeros(grad.rows, grad.cols);
+        for i in 0..b {
+            let ci = c[(i, 0)] / (b as f32).sqrt();
+            if ci == 0.0 {
+                continue;
+            }
+            for r in 0..grad.rows {
+                let ar = a_stat[(r, i)] * ci;
+                if ar == 0.0 {
+                    continue;
+                }
+                let row = correction.row_mut(r);
+                for (cc, out) in row.iter_mut().enumerate() {
+                    *out += ar * g_stat[(cc, i)];
+                }
+            }
+        }
+        grad.sub(&correction).scale(1.0 / lam)
+    }
+
+    /// Conv/BN params: adaptive diagonal scaling.
+    pub fn diag_direction(&mut self, name: &str, grad: &[f32]) -> Vec<f32> {
+        let d = self
+            .diag
+            .entry(name.to_string())
+            .or_insert_with(|| vec![0.0; grad.len()]);
+        let beta = 0.95f32;
+        for (acc, g) in d.iter_mut().zip(grad) {
+            *acc = beta * *acc + (1.0 - beta) * g * g;
+        }
+        let lam = self.damping;
+        grad.iter()
+            .zip(d.iter())
+            .map(|(g, v)| g / (v.sqrt() + lam.sqrt() * 1e-2 + 1e-8))
+            .collect()
+    }
+
+    /// SENG uses momentum 0.9 (appendix D); velocity update.
+    pub fn momentum_step(&mut self, name: &str, direction: &[f32]) -> Vec<f32> {
+        let v = self
+            .velocity
+            .entry(name.to_string())
+            .or_insert_with(|| vec![0.0; direction.len()]);
+        for (vi, di) in v.iter_mut().zip(direction) {
+            *vi = self.momentum * *vi + di;
+        }
+        v.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The Woodbury direction must equal the dense (λI + F)⁻¹ g solve.
+    #[test]
+    fn fc_direction_matches_dense_woodbury() {
+        let mut rng = Rng::new(100);
+        let (d_a, d_g, b) = (7, 4, 5);
+        let a_stat = Mat::gauss(d_a, b, 1.0, &mut rng);
+        let g_stat = Mat::gauss(d_g, b, 1.0, &mut rng);
+        let grad = Mat::gauss(d_a, d_g, 1.0, &mut rng);
+        let lam = 0.7f32;
+        let seng = SengState::new(lam, 0.0);
+        let got = seng.fc_direction(&grad, &a_stat, &g_stat);
+        // dense reference in the vec space (p = d_a*d_g)
+        let p = d_a * d_g;
+        let mut u = Mat::zeros(p, b);
+        for i in 0..b {
+            for r in 0..d_a {
+                for c in 0..d_g {
+                    u[(r * d_g + c, i)] =
+                        a_stat[(r, i)] * g_stat[(c, i)] / (b as f32).sqrt();
+                }
+            }
+        }
+        let mut f = u.matmul_t(&u);
+        for i in 0..p {
+            f[(i, i)] += lam;
+        }
+        let gvec = Mat::from_vec(p, 1, grad.data.clone());
+        let want = f.spd_solve(&gvec).unwrap();
+        let got_vec = Mat::from_vec(p, 1, got.data.clone());
+        assert!(
+            got_vec.rel_err(&want) < 1e-3,
+            "rel err {}",
+            got_vec.rel_err(&want)
+        );
+    }
+
+    #[test]
+    fn diag_direction_shrinks_large_coords() {
+        let mut seng = SengState::new(1.0, 0.0);
+        let g = vec![10.0, 0.1];
+        let mut d = vec![0.0, 0.0];
+        for _ in 0..50 {
+            d = seng.diag_direction("p", &g);
+        }
+        // large-gradient coordinate gets proportionally smaller step
+        assert!(d[0] / g[0] < d[1] / g[1]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut seng = SengState::new(1.0, 0.9);
+        let d = vec![1.0, 1.0];
+        let v1 = seng.momentum_step("p", &d);
+        let v2 = seng.momentum_step("p", &d);
+        assert_eq!(v1, vec![1.0, 1.0]);
+        assert!((v2[0] - 1.9).abs() < 1e-6);
+    }
+}

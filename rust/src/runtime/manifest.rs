@@ -1,0 +1,311 @@
+//! Typed view over `artifacts/<config>/manifest.json` — the contract
+//! emitted by `python/compile/aot.py`. Single source of truth for every
+//! shape the coordinator touches.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::ser::Json;
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<Vec<usize>>,
+    pub output_names: Option<Vec<String>>,
+}
+
+/// One K-factor's plan (an FC/conv layer has two: A and G).
+#[derive(Clone, Debug)]
+pub struct FactorPlan {
+    pub id: String,
+    pub layer: String,
+    pub kind: String,
+    pub side: String,
+    pub dim: usize,
+    pub rank: usize,
+    pub sketch: usize,
+    pub brand: bool,
+    pub n: usize,
+    pub n_crc: usize,
+    /// operation → artifact name ("syrk_ea", "rsvd_p1", "tall_matmul",
+    /// "brand_p1", "brand_p2", "corr_p1", "corr_p2")
+    pub ops: BTreeMap<String, String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: String,
+    pub d_a: usize,
+    pub d_g: usize,
+    pub k_pad: usize,
+    pub k_full: usize,
+    pub grad_param: String,
+    /// dropout applied to this FC layer's input (0.0 for conv layers)
+    pub dropout: f64,
+    /// "precond", "precond_exact", "linear_apply"(fc only)
+    pub ops: BTreeMap<String, String>,
+    pub factors: Vec<FactorPlan>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigSpec {
+    pub name: String,
+    pub image: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub rank: usize,
+    pub oversample: usize,
+    pub n_pwr: usize,
+    pub phi_corct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ConfigSpec,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub layers: Vec<LayerSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect())
+}
+
+fn str_map(j: &Json) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    if let Json::Obj(m) = j {
+        for (k, v) in m {
+            if let Some(s) = v.as_str() {
+                out.insert(k.clone(), s.to_string());
+            }
+        }
+    }
+    out
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let c = j.get("config").context("manifest missing 'config'")?;
+        let g = |k: &str| -> Result<usize> {
+            c.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let config = ConfigSpec {
+            name: c
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string(),
+            image: g("image")?,
+            channels: g("channels")?,
+            n_classes: g("n_classes")?,
+            batch: g("batch")?,
+            rank: g("rank")?,
+            oversample: g("oversample")?,
+            n_pwr: g("n_pwr")?,
+            phi_corct: c
+                .get("phi_corct")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.5),
+        };
+
+        let params = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing 'params'")?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.get("name")
+                        .and_then(|v| v.as_str())
+                        .context("param name")?
+                        .to_string(),
+                    shape_of(p.get("shape").context("param shape")?)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let parse_factor = |f: &Json| -> Result<FactorPlan> {
+            let gu = |k: &str| f.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            Ok(FactorPlan {
+                id: f.get("id").and_then(|v| v.as_str()).unwrap_or("").into(),
+                layer: f.get("layer").and_then(|v| v.as_str()).unwrap_or("").into(),
+                kind: f.get("kind").and_then(|v| v.as_str()).unwrap_or("").into(),
+                side: f.get("side").and_then(|v| v.as_str()).unwrap_or("").into(),
+                dim: gu("dim"),
+                rank: gu("rank"),
+                sketch: gu("sketch"),
+                brand: f.get("brand").and_then(|v| v.as_bool()).unwrap_or(false),
+                n: gu("n"),
+                n_crc: gu("n_crc"),
+                ops: f.get("ops").map(str_map).unwrap_or_default(),
+            })
+        };
+
+        let layers = j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing 'layers'")?
+            .iter()
+            .map(|l| {
+                let gu = |k: &str| l.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                let factors = l
+                    .get("factors")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_factor)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(LayerSpec {
+                    name: l.get("name").and_then(|v| v.as_str()).unwrap_or("").into(),
+                    kind: l.get("kind").and_then(|v| v.as_str()).unwrap_or("").into(),
+                    d_a: gu("d_a"),
+                    d_g: gu("d_g"),
+                    k_pad: gu("k_pad"),
+                    k_full: gu("k_full"),
+                    grad_param: l
+                        .get("grad_param")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .into(),
+                    dropout: l.get("dropout").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    ops: l.get("ops").map(str_map).unwrap_or_default(),
+                    factors,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("artifacts").map(|v| v.clone()) {
+            for (name, a) in m {
+                let inputs = a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| {
+                        Ok(IoSpec {
+                            name: i
+                                .get("name")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or("")
+                                .into(),
+                            shape: shape_of(i.get("shape").context("input shape")?)?,
+                            dtype: i
+                                .get("dtype")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or("f32")
+                                .into(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(shape_of)
+                    .collect::<Result<Vec<_>>>()?;
+                let output_names = a.get("output_names").and_then(|v| v.as_arr()).map(|ns| {
+                    ns.iter()
+                        .filter_map(|n| n.as_str().map(|s| s.to_string()))
+                        .collect()
+                });
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        file: a
+                            .get("file")
+                            .and_then(|v| v.as_str())
+                            .context("artifact file")?
+                            .to_string(),
+                        inputs,
+                        outputs,
+                        output_names,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            config,
+            params,
+            layers,
+            artifacts,
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerSpec> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Index of a named output of the train_step artifact.
+    pub fn train_output_index(&self, output: &str) -> Option<usize> {
+        self.artifacts
+            .get("train_step")?
+            .output_names
+            .as_ref()?
+            .iter()
+            .position(|n| n == output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "config": {"name":"t","image":8,"channels":3,"n_classes":10,"batch":4,
+                 "rank":6,"oversample":2,"n_pwr":1,"phi_corct":0.5},
+      "params": [{"name":"fc0/w","shape":[5,10]}],
+      "layers": [{"name":"fc0","kind":"fc","d_a":5,"d_g":10,"k_pad":6,
+                  "k_full":10,"grad_param":"fc0/w",
+                  "ops":{"precond":"precond_10_5_6"},
+                  "factors":[{"id":"fc0/A","layer":"fc0","kind":"fc","side":"A",
+                              "dim":5,"rank":4,"sketch":6,"brand":false,"n":4,
+                              "ops":{"rsvd_p1":"rsvd_p1_5_6"}}]}],
+      "artifacts": {"train_step":{"file":"train_step.hlo.txt",
+        "inputs":[{"name":"x","shape":[4,8,8,3],"dtype":"f32"}],
+        "outputs":[[],[5,10]],
+        "output_names":["loss","grad:fc0/w"]}}
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.config.batch, 4);
+        assert_eq!(m.params[0].1, vec![5, 10]);
+        let l = m.layer("fc0").unwrap();
+        assert_eq!(l.d_a, 5);
+        assert_eq!(l.ops["precond"], "precond_10_5_6");
+        assert_eq!(l.factors[0].sketch, 6);
+        assert!(!l.factors[0].brand);
+        let a = &m.artifacts["train_step"];
+        assert_eq!(a.inputs[0].shape, vec![4, 8, 8, 3]);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(m.train_output_index("grad:fc0/w"), Some(1));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

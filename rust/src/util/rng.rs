@@ -1,0 +1,230 @@
+//! Deterministic PRNG substrate (no `rand` crate available offline).
+//!
+//! xoshiro256++ seeded via SplitMix64, plus Gaussian sampling (Box–Muller)
+//! and the small sampling utilities the optimizers need (Gaussian sketch
+//! matrices for RSVD, Fisher–Yates index choice for the Alg-6 correction,
+//! shuffles for the data pipeline).
+
+/// SplitMix64: used to expand a single u64 seed into xoshiro state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box–Muller deviate
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive an independent stream (for per-layer / per-worker RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n). Lemire-style rejection-free enough for our use.
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_f64() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn next_gauss(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    #[inline]
+    pub fn next_gauss_f32(&mut self) -> f32 {
+        self.next_gauss() as f32
+    }
+
+    /// Fill a slice with standard normal f32s (RSVD sketches, data gen, init).
+    pub fn fill_gauss(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_gauss_f32();
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices out of `0..n` (Alg 6 line 2:
+    /// `random_choice(r, n_crc)` without replacement). Sorted output.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher–Yates: first k slots
+        for i in 0..k {
+            let j = i + self.next_below(n - i);
+            idx.swap(i, j);
+        }
+        let mut out = idx[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn choose_is_distinct_sorted_in_range() {
+        let mut r = Rng::new(5);
+        for _ in 0..200 {
+            let n = 1 + r.next_below(50);
+            let k = r.next_below(n + 1);
+            let c = r.choose(n, k);
+            assert_eq!(c.len(), k);
+            for w in c.windows(2) {
+                assert!(w[0] < w[1], "not strictly sorted: {c:?}");
+            }
+            assert!(c.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = Rng::new(13);
+        for n in [1usize, 2, 3, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(21);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let av: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let bv: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(av, bv);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal scoped-parallelism substrate (no `rayon` available offline).
+//!
+//! Provides `parallel_chunks`: split an index range into contiguous chunks
+//! and run a closure per chunk on std::thread::scope threads. Used by the
+//! blocked matmul / syrk hot paths in `linalg` and by multi-run benches.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: respects BNKFAC_THREADS, defaults to
+/// available_parallelism capped at 8 (diminishing returns for our sizes).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("BNKFAC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get().min(8))
+        .unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint contiguous chunks of `0..n` on up to
+/// `threads` scoped threads. `f` must be Sync (it is shared by reference).
+pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads <= 1 || n < 2 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(start, end));
+        }
+    });
+}
+
+/// Dynamic work-stealing variant for uneven work items: each worker grabs
+/// the next index atomically. Used where per-item cost varies (per-layer
+/// decomposition updates).
+pub fn parallel_items<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n < 2 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fref = &f;
+            let cref = &counter;
+            scope.spawn(move || loop {
+                let i = cref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                fref(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let n = 1003;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(n, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn items_cover_everything_once() {
+        let n = 517;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_items(n, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_one_items() {
+        parallel_ranges(0, 4, |_, _| panic!("must not run on n=0 via threads"));
+        let ran = AtomicU64::new(0);
+        parallel_items(1, 4, |_| {
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_ranges(100, 1, |s, e| {
+            for i in s..e {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+}

@@ -1,0 +1,128 @@
+//! Phase timers + simple stats — backs the t_epoch measurements of
+//! Table 1/Table 2 and the §Perf iteration log.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Accumulates named wall-clock phases (e.g. "fwd_bwd", "ea_update",
+/// "brand", "rsvd", "precond", "step").
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimers {
+    acc: BTreeMap<String, (f64, u64)>, // seconds, count
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        let e = self.acc.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.acc.get(phase).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.acc.get(phase).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.acc.values().map(|e| e.0).sum()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64, u64)> {
+        self.acc.iter().map(|(k, (s, c))| (k.as_str(), *s, *c))
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (k, (s, c)) in &other.acc {
+            let e = self.acc.entry(k.clone()).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += c;
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.acc.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        let mut out = String::new();
+        for (k, (s, c)) in rows {
+            out.push_str(&format!(
+                "{k:<24} {s:>10.3}s  x{c:<8} {:>10.3}ms/call\n",
+                1000.0 * s / (*c).max(1) as f64
+            ));
+        }
+        out
+    }
+}
+
+/// Mean ± sample standard deviation of a series (Table 1/2 cells).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = PhaseTimers::new();
+        t.add("a", 1.0);
+        t.add("a", 2.0);
+        t.add("b", 0.5);
+        assert_eq!(t.total("a"), 3.0);
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.grand_total(), 3.5);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("x", || 42);
+        assert_eq!(v, 42);
+        assert!(t.total("x") >= 0.0);
+        assert_eq!(t.count("x"), 1);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimers::new();
+        a.add("p", 1.0);
+        let mut b = PhaseTimers::new();
+        b.add("p", 2.0);
+        b.add("q", 3.0);
+        a.merge(&b);
+        assert_eq!(a.total("p"), 3.0);
+        assert_eq!(a.total("q"), 3.0);
+    }
+
+    #[test]
+    fn mean_std_known() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.138089935).abs() < 1e-6);
+        let (m1, s1) = mean_std(&[3.0]);
+        assert_eq!((m1, s1), (3.0, 0.0));
+    }
+}

@@ -1,0 +1,290 @@
+//! Artifact ⇄ host-linalg cross-validation: every XLA artifact must agree
+//! with the pure-rust oracle on the same inputs (the two implementations
+//! are written independently — python/jax vs rust — so agreement is a
+//! strong end-to-end correctness signal for BOTH).
+
+use std::sync::OnceLock;
+
+use bnkfac::linalg::{LowRank, Mat, RsvdOpts};
+use bnkfac::runtime::{Runtime, Value};
+use bnkfac::util::rng::Rng;
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"));
+        Runtime::open(dir).expect("run `make artifacts` before cargo test")
+    })
+}
+
+/// tiny config fc0: d_a = 129, rank 16, batch 8, sketch 22.
+const D: usize = 129;
+const R: usize = 16;
+const N: usize = 8;
+const K: usize = 22;
+
+#[test]
+fn syrk_ea_artifact_matches_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let m = Mat::psd_with_decay(D, 0.9, &mut rng);
+    let a = Mat::gauss(D, N, 1.0, &mut rng);
+    let rho = 0.95f32;
+    let outs = rt
+        .exec(
+            "syrk_ea_129x8",
+            &[Value::M(m.clone()), Value::M(a.clone()), Value::S(rho)],
+        )
+        .unwrap();
+    let got = outs[0].as_mat();
+    let mut want = a.syrk().scale(1.0 - rho);
+    want.axpy_inplace(rho, &m);
+    assert!(got.rel_err(&want) < 1e-4, "rel err {}", got.rel_err(&want));
+}
+
+#[test]
+fn rsvd_stages_match_host_rsvd() {
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let m = Mat::psd_with_decay(D, 0.8, &mut rng);
+    let omega = Mat::gauss(D, K, 1.0, &mut rng);
+    // artifact path
+    let outs = rt
+        .exec("rsvd_p1_129_22", &[Value::M(m.clone()), Value::M(omega.clone())])
+        .unwrap();
+    let q = outs[0].as_mat().clone();
+    let s = outs[1].as_mat();
+    let ev = s.eigh();
+    let u_s = ev.u.slice_cols(0, R);
+    let outs = rt
+        .exec("tmm_129_22_16", &[Value::M(q), Value::M(u_s)])
+        .unwrap();
+    let u = outs[0].as_mat().clone();
+    let art = LowRank::new(u, ev.d[..R].iter().map(|&x| x.max(0.0)).collect());
+    // host path, same sketch
+    let host = m.rsvd_with_sketch(
+        &omega,
+        RsvdOpts {
+            rank: R,
+            oversample: K - R,
+            n_pwr: 2, // tiny config n_pwr
+        },
+    );
+    // same subspace => same reconstruction (vectors may differ by sign)
+    let da = art.to_dense();
+    let dh = host.to_dense();
+    assert!(da.rel_err(&dh) < 1e-3, "rel err {}", da.rel_err(&dh));
+    // and both approximate M well
+    assert!(da.rel_err(&m) < 0.25);
+}
+
+#[test]
+fn brand_stages_match_host_brand() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    // start from an RSVD-style rep of a PSD matrix
+    let m = Mat::psd_with_decay(D, 0.8, &mut rng);
+    let rep = LowRank::from_eigh(&m.eigh(), R);
+    let a = Mat::gauss(D, N, 0.7, &mut rng);
+    let rho = 0.95f32;
+    // artifact path: p1 -> host EVD -> p2
+    let outs = rt
+        .exec(
+            "brand_p1_129_16_8",
+            &[
+                Value::M(rep.u.clone()),
+                Value::V(rep.d.clone()),
+                Value::M(a.clone()),
+                Value::S(rho),
+            ],
+        )
+        .unwrap();
+    let m_s = outs[0].as_mat();
+    let q_a = outs[1].as_mat().clone();
+    assert_eq!((m_s.rows, m_s.cols), (R + N, R + N));
+    let ev = m_s.eigh();
+    let outs = rt
+        .exec(
+            "brand_p2_129_16_8",
+            &[Value::M(rep.u.clone()), Value::M(q_a), Value::M(ev.u.clone())],
+        )
+        .unwrap();
+    let u_new = outs[0].as_mat().clone();
+    let art = LowRank::new(u_new, ev.d.iter().map(|&x| x.max(0.0)).collect());
+    // host path
+    let host = rep.brand_ea_update(&a, rho, R);
+    let (da, dh) = (art.to_dense(), host.to_dense());
+    assert!(da.rel_err(&dh) < 1e-3, "rel err {}", da.rel_err(&dh));
+    // exactness vs direct formula
+    let want = rep.to_dense().scale(rho).add(&a.syrk().scale(1.0 - rho));
+    assert!(da.rel_err(&want) < 1e-3, "vs formula {}", da.rel_err(&want));
+}
+
+#[test]
+fn correction_stages_match_host_correction() {
+    let rt = runtime();
+    let mut rng = Rng::new(4);
+    let m = Mat::psd_with_decay(D, 0.8, &mut rng);
+    // rep of width R+N (post-Brand width, what corr artifacts expect)
+    let rep = LowRank::from_eigh(&m.eigh(), R + N);
+    // perturb it so there is something to correct
+    let noisy = {
+        let mut u = rep.u.clone();
+        let noise = Mat::gauss(D, R + N, 0.05, &mut rng);
+        u.axpy_inplace(1.0, &noise);
+        let (q, _) = u.qr();
+        LowRank::new(q, rep.d.clone())
+    };
+    let c = 8; // tiny config n_crc = phi 0.5 * rank 16
+    let mut rng_idx = Rng::new(99);
+    let idx = rng_idx.choose(R + N, c);
+    let idx_i32: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+    // artifact path
+    let outs = rt
+        .exec(
+            "corr_p1_129_24_8",
+            &[
+                Value::M(noisy.u.clone()),
+                Value::M(m.clone()),
+                Value::I(idx_i32.clone()),
+            ],
+        )
+        .unwrap();
+    let u_c = outs[0].as_mat().clone();
+    let m_s = outs[1].as_mat();
+    let ev = m_s.eigh();
+    let outs = rt
+        .exec(
+            "corr_p2_129_24_8",
+            &[
+                Value::M(noisy.u.clone()),
+                Value::M(u_c),
+                Value::M(ev.u.clone()),
+                Value::I(idx_i32),
+            ],
+        )
+        .unwrap();
+    let u_new = outs[0].as_mat().clone();
+    let mut d_new = noisy.d.clone();
+    for (jj, &j) in idx.iter().enumerate() {
+        d_new[j] = ev.d[jj].max(0.0);
+    }
+    let art = LowRank::new(u_new, d_new);
+    // host path (same indices)
+    let host = noisy.correction(&m, &idx);
+    assert!(
+        art.to_dense().rel_err(&host.to_dense()) < 1e-3,
+        "rel err {}",
+        art.to_dense().rel_err(&host.to_dense())
+    );
+    // correction must not increase the error (paper footnote 11)
+    let before = noisy.to_dense().sub(&m).fro_norm();
+    let after = art.to_dense().sub(&m).fro_norm();
+    assert!(after <= before + 1e-3, "{before} -> {after}");
+}
+
+#[test]
+fn precond_artifact_matches_host_apply() {
+    let rt = runtime();
+    let mut rng = Rng::new(5);
+    // fc0 layer in tiny: d_a=129, d_g=32, k_pad=24
+    let (d_a, d_g, k_pad) = (129usize, 32usize, 24usize);
+    let ma = Mat::psd_with_decay(d_a, 0.8, &mut rng);
+    let mg = Mat::psd_with_decay(d_g, 0.8, &mut rng);
+    let ra = LowRank::from_eigh(&ma.eigh(), k_pad);
+    let rg = LowRank::from_eigh(&mg.eigh(), k_pad);
+    let grad = Mat::gauss(d_a, d_g, 1.0, &mut rng);
+    let (lam_a, lam_g) = (0.3f32, 0.2f32);
+    let outs = rt
+        .exec(
+            "precond_32_129_24",
+            &[
+                Value::M(rg.u.clone()),
+                Value::V(rg.d.clone()),
+                Value::S(lam_g),
+                Value::M(ra.u.clone()),
+                Value::V(ra.d.clone()),
+                Value::S(lam_a),
+                Value::M(grad.clone()),
+            ],
+        )
+        .unwrap();
+    let got = outs[0].as_mat();
+    let m1 = ra.apply_inv_left(&grad, lam_a, false);
+    let want = rg.apply_inv_right(&m1, lam_g, false);
+    assert!(got.rel_err(&want) < 1e-3, "rel err {}", got.rel_err(&want));
+}
+
+#[test]
+fn linear_apply_artifact_matches_host() {
+    let rt = runtime();
+    let mut rng = Rng::new(6);
+    let (d_a, d_g, k_pad, n) = (129usize, 32usize, 24usize, 8usize);
+    let ma = Mat::psd_with_decay(d_a, 0.8, &mut rng);
+    let mg = Mat::psd_with_decay(d_g, 0.8, &mut rng);
+    let ra = LowRank::from_eigh(&ma.eigh(), k_pad);
+    let rg = LowRank::from_eigh(&mg.eigh(), k_pad);
+    let a_stat = Mat::gauss(d_a, n, 1.0, &mut rng);
+    let g_stat = Mat::gauss(d_g, n, 1.0, &mut rng);
+    let (lam_a, lam_g) = (0.5f32, 0.4f32);
+    let outs = rt
+        .exec(
+            "linear_apply_32_129_24_8",
+            &[
+                Value::M(rg.u.clone()),
+                Value::V(rg.d.clone()),
+                Value::S(lam_g),
+                Value::M(ra.u.clone()),
+                Value::V(ra.d.clone()),
+                Value::S(lam_a),
+                Value::M(a_stat.clone()),
+                Value::M(g_stat.clone()),
+            ],
+        )
+        .unwrap();
+    let got = outs[0].as_mat();
+    let g_pre = rg.apply_inv_left(&g_stat, lam_g, false);
+    let at_pre = ra.apply_inv_right(&a_stat.transpose(), lam_a, false);
+    let want = g_pre.matmul(&at_pre).transpose();
+    assert!(got.rel_err(&want) < 1e-3, "rel err {}", got.rel_err(&want));
+}
+
+#[test]
+fn train_step_artifact_runs_and_is_deterministic() {
+    let rt = runtime();
+    let mut rng = Rng::new(7);
+    let manifest = &rt.manifest;
+    let params = bnkfac::model::ParamStore::init(manifest, &mut rng);
+    let b = manifest.config.batch;
+    let img = manifest.config.image;
+    let ch = manifest.config.channels;
+    let mut x = vec![0.0f32; b * img * img * ch];
+    rng.fill_gauss(&mut x);
+    let y: Vec<i32> = (0..b as i32).map(|i| i % 10).collect();
+    let run = || {
+        let mut inputs = params.as_values();
+        inputs.push(Value::T(x.clone(), vec![b, img, img, ch]));
+        inputs.push(Value::I(y.clone()));
+        rt.exec("train_step", &inputs).unwrap()
+    };
+    let o1 = run();
+    let o2 = run();
+    assert_eq!(o1[0].as_scalar(), o2[0].as_scalar(), "loss deterministic");
+    assert!(o1[0].as_scalar().is_finite());
+    // grads deterministic too
+    assert_eq!(o1[2].as_mat().data, o2[2].as_mat().data);
+}
+
+#[test]
+fn exec_rejects_wrong_arity_and_shape() {
+    let rt = runtime();
+    assert!(rt.exec("syrk_ea_129x8", &[]).is_err());
+    let bad = Mat::zeros(3, 3);
+    assert!(rt
+        .exec(
+            "syrk_ea_129x8",
+            &[Value::M(bad.clone()), Value::M(bad), Value::S(0.5)]
+        )
+        .is_err());
+    assert!(rt.exec("nonexistent_artifact", &[]).is_err());
+}

@@ -1,0 +1,305 @@
+//! End-to-end integration over the `tiny` artifacts: every optimizer
+//! trains the tiny CNN on synthetic data and the loss must drop.
+//!
+//! Requires `make artifacts` (artifacts/tiny). Tests share one Runtime
+//! (PJRT client) via a process-global, because creating several CPU
+//! clients in one process is wasteful.
+
+use std::sync::OnceLock;
+
+use bnkfac::coordinator::{Trainer, TrainerCfg};
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::{Algo, Hyper};
+use bnkfac::runtime::Runtime;
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"));
+        Runtime::open(dir).expect("run `make artifacts` before cargo test")
+    })
+}
+
+fn tiny_dataset() -> Dataset {
+    Dataset::generate(DatasetCfg {
+        image: 8,
+        n_train: 256,
+        n_test: 64,
+        noise: 0.25,
+        seed: 7,
+        ..DatasetCfg::default()
+    })
+}
+
+/// Fast cadences so every update kind fires within a short run.
+fn tiny_hyper() -> Hyper {
+    Hyper {
+        t_updt: 2,
+        t_inv: 8,
+        t_brand: 4,
+        t_rsvd: 16,
+        t_corct: 8,
+        brand_layer: Some("fc0".to_string()),
+        ..Hyper::default()
+    }
+}
+
+fn train_with(algo: Algo, epochs: usize) -> (f32, f32, f32) {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let cfg = TrainerCfg {
+        algo,
+        hyper: tiny_hyper(),
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let (loss0, _) = tr.evaluate(&ds).unwrap();
+    let log = tr.run(&ds, epochs, 0).unwrap();
+    let last = log.eval.last().unwrap();
+    (loss0, last.test_loss, last.test_acc)
+}
+
+#[test]
+fn sgd_learns() {
+    let (l0, l1, acc) = train_with(Algo::Sgd, 3);
+    assert!(l1 < l0, "SGD loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "SGD acc {acc}");
+}
+
+#[test]
+fn kfac_exact_learns() {
+    let (l0, l1, acc) = train_with(Algo::KfacExact, 3);
+    assert!(l1 < l0, "K-FAC loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "K-FAC acc {acc}");
+}
+
+#[test]
+fn rkfac_learns() {
+    let (l0, l1, acc) = train_with(Algo::RKfac, 3);
+    assert!(l1 < l0, "R-KFAC loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "R-KFAC acc {acc}");
+}
+
+#[test]
+fn bkfac_learns() {
+    let (l0, l1, acc) = train_with(Algo::BKfac, 3);
+    assert!(l1 < l0, "B-KFAC loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "B-KFAC acc {acc}");
+}
+
+#[test]
+fn brkfac_learns() {
+    let (l0, l1, acc) = train_with(Algo::BRKfac, 3);
+    assert!(l1 < l0, "B-R-KFAC loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "B-R-KFAC acc {acc}");
+}
+
+#[test]
+fn bkfacc_learns() {
+    let (l0, l1, acc) = train_with(Algo::BKfacC, 3);
+    assert!(l1 < l0, "B-KFAC-C loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "B-KFAC-C acc {acc}");
+}
+
+#[test]
+fn seng_learns() {
+    let (l0, l1, acc) = train_with(Algo::Seng, 3);
+    assert!(l1 < l0, "SENG loss did not drop: {l0} -> {l1}");
+    assert!(acc > 0.15, "SENG acc {acc}");
+}
+
+#[test]
+fn linear_apply_variant_learns() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mut hyper = tiny_hyper();
+    hyper.linear_apply = true;
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper,
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let (l0, _) = tr.evaluate(&ds).unwrap();
+    let log = tr.run(&ds, 3, 0).unwrap();
+    let last = log.eval.last().unwrap();
+    assert!(
+        last.test_loss < l0,
+        "B-KFAC(linear apply) loss did not drop: {l0} -> {}",
+        last.test_loss
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mk = || {
+        let cfg = TrainerCfg {
+            algo: Algo::RKfac,
+            hyper: tiny_hyper(),
+            seed: 11,
+            ..TrainerCfg::default()
+        };
+        let mut tr = Trainer::new(rt, cfg).unwrap();
+        let log = tr.run(&ds, 1, 0).unwrap();
+        log.eval.last().unwrap().test_loss
+    };
+    assert_eq!(mk(), mk(), "same seed must reproduce exactly");
+}
+
+#[test]
+fn probe_produces_rows() {
+    use bnkfac::coordinator::probe::ErrorProbe;
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper: tiny_hyper(),
+        seed: 5,
+        probe_layer: Some("fc0".to_string()),
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let mut probe = ErrorProbe::new("fc0");
+    probe.run(&mut tr, &ds, 8, 16).unwrap();
+    assert!(
+        probe.rows.len() >= 12,
+        "expected measured rows, got {}",
+        probe.rows.len()
+    );
+    let avg = probe.averages();
+    for (i, &m) in avg.iter().enumerate() {
+        assert!(m.is_finite() && m >= 0.0, "metric {i} = {m}");
+    }
+    // an approximate algorithm has nonzero inverse error
+    assert!(avg[0] > 1e-6 || avg[1] > 1e-6);
+}
+
+#[test]
+fn pure_bkfac_is_gram_free_on_brand_layer() {
+    // §3.5 "B-KFAC is a low-memory K-FAC": the brand-managed factors
+    // must never materialize the dense EA Gram.
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper: tiny_hyper(),
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let _ = tr.run(&ds, 1, 0).unwrap();
+    let fc0 = tr.layers.iter().find(|l| l.spec.name == "fc0").unwrap();
+    assert!(fc0.a.gram.is_none(), "fc0/A gram materialized under B-KFAC");
+    assert!(fc0.g.gram.is_none(), "fc0/G gram materialized under B-KFAC");
+    assert!(fc0.a.rep.is_some(), "fc0/A rep missing");
+    // non-brand layers DO keep grams (R-KFAC fallback needs them)
+    let conv0 = tr.layers.iter().find(|l| l.spec.name == "conv0").unwrap();
+    assert!(conv0.a.gram.is_some());
+    // B-R-KFAC keeps the gram even on the brand layer (overwrites need it)
+    let cfg = TrainerCfg {
+        algo: Algo::BRKfac,
+        hyper: tiny_hyper(),
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let _ = tr.run(&ds, 1, 0).unwrap();
+    let fc0 = tr.layers.iter().find(|l| l.spec.name == "fc0").unwrap();
+    assert!(fc0.a.gram.is_some(), "B-R-KFAC must keep the gram");
+}
+
+#[test]
+fn brand_rep_width_is_r_plus_n_after_update() {
+    // Alg 4: truncation to r happens just BEFORE each Brand update, so
+    // the live representation carries r+n modes ("we use the r + n rank
+    // approximation when applying our K-factors inverse", §3.1).
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper: tiny_hyper(),
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let _ = tr.run(&ds, 1, 0).unwrap(); // enough steps for t_brand=4 to fire
+    let fc0 = tr.layers.iter().find(|l| l.spec.name == "fc0").unwrap();
+    let plan = &fc0.a.plan;
+    assert_eq!(
+        fc0.a.rep.as_ref().unwrap().rank(),
+        plan.rank + plan.n,
+        "post-Brand representation must have rank r+n"
+    );
+}
+
+#[test]
+fn light_and_full_steps_agree_on_loss() {
+    // the stat-skipping fast path must be a numerical no-op for the
+    // training trajectory: same seeds, T_updt=1 (all full) vs T_updt=2
+    // (alternating light) start identically on step 0.
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let run_first_loss = |t_updt: usize| {
+        let cfg = TrainerCfg {
+            algo: Algo::Sgd,
+            hyper: Hyper {
+                t_updt,
+                ..tiny_hyper()
+            },
+            seed: 9,
+            ..TrainerCfg::default()
+        };
+        let mut tr = Trainer::new(rt, cfg).unwrap();
+        let batches = {
+            let mut rng = bnkfac::util::rng::Rng::new(1);
+            ds.epoch_batches(rt.manifest.config.batch, &mut rng)
+        };
+        // step 0 is a stat step either way; step 1 differs (light vs full)
+        let _ = tr.train_step(&batches[0], 0).unwrap();
+        tr.train_step(&batches[1], 0).unwrap().loss
+    };
+    let full = run_first_loss(1);
+    let light = run_first_loss(2);
+    assert_eq!(full, light, "light step changed the training trajectory");
+}
+
+#[test]
+fn brand_layer_all_extends_updates() {
+    // brand_layer=None (all) must B-manage every eligible factor,
+    // including fc1/A — and still learn.
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mut hyper = tiny_hyper();
+    hyper.brand_layer = None;
+    let cfg = TrainerCfg {
+        algo: Algo::BKfac,
+        hyper,
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let log = tr.run(&ds, 2, 0).unwrap();
+    let fc1 = tr.layers.iter().find(|l| l.spec.name == "fc1").unwrap();
+    assert!(fc1.a.gram.is_none(), "fc1/A should be brand-managed (gram-free)");
+    assert!(log.eval.last().unwrap().test_acc > 0.12);
+}
+
+#[test]
+fn eval_is_side_effect_free() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let cfg = TrainerCfg {
+        algo: Algo::Sgd,
+        hyper: tiny_hyper(),
+        seed: 3,
+        ..TrainerCfg::default()
+    };
+    let mut tr = Trainer::new(rt, cfg).unwrap();
+    let a = tr.evaluate(&ds).unwrap();
+    let b = tr.evaluate(&ds).unwrap();
+    assert_eq!(a, b, "evaluate must not mutate model state");
+}

@@ -1,0 +1,252 @@
+//! The paper's theoretical results as executable properties
+//! (Propositions 3.1, 3.2, 4.1, 4.2 + the §3.3 psd argument), checked
+//! over randomized EA K-factor streams with the in-repo property harness.
+
+use bnkfac::linalg::{LowRank, Mat};
+use bnkfac::util::proptest::{check, run, PropConfig};
+use bnkfac::util::rng::Rng;
+
+/// Random EA stream setup shared by the propositions.
+struct Stream {
+    d: usize,
+    r: usize,
+    n: usize,
+    rho: f32,
+    steps: usize,
+    seed: u64,
+}
+
+impl std::fmt::Debug for Stream {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Stream(d={},r={},n={},rho={},steps={},seed={})",
+            self.d, self.r, self.n, self.rho, self.steps, self.seed
+        )
+    }
+}
+
+fn gen_stream(rng: &mut Rng) -> Stream {
+    let n = 2 + rng.next_below(4);
+    let r = (3 + rng.next_below(6)).max(n);
+    let d = r + n + 5 + rng.next_below(20);
+    Stream {
+        d,
+        r,
+        n,
+        rho: 0.8 + 0.15 * rng.next_f32(),
+        steps: 2 + rng.next_below(5),
+        seed: rng.next_u64(),
+    }
+}
+
+/// Evolve the exact EA factor and the pure-B process together.
+fn evolve(s: &Stream) -> (Mat, LowRank) {
+    let mut rng = Rng::new(s.seed);
+    let a0 = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+    let mut m_true = a0.syrk();
+    let mut b_est = LowRank::from_eigh(&m_true.eigh(), s.r.min(s.n) + 0);
+    for _ in 0..s.steps {
+        let a = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+        m_true = m_true.scale(s.rho).add(&a.syrk().scale(1.0 - s.rho));
+        b_est = b_est.brand_ea_update(&a, s.rho, s.r);
+    }
+    (m_true, b_est)
+}
+
+/// Prop 3.1 (part 2): ‖M_k − M̃_{B,k}‖ ≥ ‖M_k − M̃_{R,k,r+n}‖ — the
+/// Brand-maintained rank-(r+n) estimate can never beat the OPTIMAL
+/// rank-(r+n) truncation, in Frobenius norm.
+#[test]
+fn prop_3_1_brand_error_bounded_below_by_optimal() {
+    check("prop 3.1", gen_stream, |s| {
+        let (m_true, b_est) = evolve(s);
+        let err_b = b_est.to_dense().sub(&m_true).fro_norm();
+        let opt = LowRank::from_eigh(&m_true.eigh(), s.r + s.n).to_dense();
+        let err_opt = opt.sub(&m_true).fro_norm();
+        if err_b >= err_opt - 1e-3 * (1.0 + err_opt) {
+            Ok(())
+        } else {
+            Err(format!("brand err {err_b} < optimal {err_opt}"))
+        }
+    });
+}
+
+/// Prop 3.1 (part 1): the rank-r truncation 𝓑_k of the B-process is no
+/// better than the optimal rank-r truncation of M_k.
+#[test]
+fn prop_3_1_truncated_brand_vs_optimal_rank_r() {
+    check("prop 3.1 part 1", gen_stream, |s| {
+        let (m_true, b_est) = evolve(s);
+        let b_trunc = b_est.truncate(s.r).to_dense();
+        let err_b = b_trunc.sub(&m_true).fro_norm();
+        let opt = LowRank::from_eigh(&m_true.eigh(), s.r).to_dense();
+        let err_opt = opt.sub(&m_true).fro_norm();
+        if err_b >= err_opt - 1e-3 * (1.0 + err_opt) {
+            Ok(())
+        } else {
+            Err(format!("B_k err {err_b} < optimal {err_opt}"))
+        }
+    });
+}
+
+/// Prop 3.2 structure: truncation-error matrices M̃_{B,k} − 𝓑_k are
+/// symmetric PSD along the whole B-process.
+#[test]
+fn prop_3_2_truncation_errors_are_psd() {
+    check("prop 3.2 psd", gen_stream, |s| {
+        let (_, b_est) = evolve(s);
+        let err = b_est.to_dense().sub(&b_est.truncate(s.r).to_dense());
+        // symmetry
+        let sym_err = err.sub(&err.transpose()).max_abs();
+        if sym_err > 1e-3 {
+            return Err(format!("not symmetric: {sym_err}"));
+        }
+        let ev = err.eigh();
+        let min_eig = ev.d.last().copied().unwrap_or(0.0);
+        if min_eig > -1e-3 * (1.0 + ev.d[0].abs()) {
+            Ok(())
+        } else {
+            Err(format!("truncation error not PSD: min eig {min_eig}"))
+        }
+    });
+}
+
+/// Prop 3.2 one-step consequence: overwriting 𝓑_i with the optimal
+/// rank-r truncation gives a better (or equal) error at i+1 than the
+/// pure B process: ‖E^{R@i}_{i+1}‖ ≤ ‖E^{pure}_{i+1}‖.
+#[test]
+fn prop_3_2_overwrite_helps_next_iteration() {
+    check("prop 3.2 overwrite", gen_stream, |s| {
+        let (m_true, b_est) = evolve(s);
+        let mut rng = Rng::new(s.seed ^ 0xFEED);
+        let a_next = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+        let m_next = m_true.scale(s.rho).add(&a_next.syrk().scale(1.0 - s.rho));
+        // pure: truncate the B estimate; overwritten: truncate M_true optimally
+        let pure_next = b_est.brand_ea_update(&a_next, s.rho, s.r);
+        let over_start = LowRank::from_eigh(&m_true.eigh(), s.r);
+        let over_next = over_start.brand_update(&a_next.scale((1.0 - s.rho).sqrt()));
+        // scale over_start inside brand: use brand_ea semantics directly
+        let over_next2 = {
+            let scaled = LowRank::new(
+                over_start.u.clone(),
+                over_start.d.iter().map(|&x| s.rho * x).collect(),
+            );
+            let _ = over_next;
+            scaled.brand_update(&a_next.scale((1.0 - s.rho).sqrt()))
+        };
+        let e_pure = pure_next.to_dense().sub(&m_next).fro_norm();
+        let e_over = over_next2.to_dense().sub(&m_next).fro_norm();
+        if e_over <= e_pure + 1e-3 * (1.0 + e_pure) {
+            Ok(())
+        } else {
+            Err(format!("overwrite worsened next step: {e_over} > {e_pure}"))
+        }
+    });
+}
+
+/// Prop 4.1/4.2: B-updates beat NO updates. Starting both from the
+/// optimal rank-r truncation at k=0, after several EA arrivals the
+/// B-updated estimate must have error ≤ the frozen estimate's error.
+#[test]
+fn prop_4_x_b_updates_beat_no_updates() {
+    // statistically true for decaying spectra; use more steps to separate
+    run(
+        "prop 4.x",
+        PropConfig {
+            cases: 16,
+            ..Default::default()
+        },
+        |rng| {
+            let mut s = gen_stream(rng);
+            s.steps = 6 + rng.next_below(6);
+            s
+        },
+        |s| {
+            let mut rng = Rng::new(s.seed);
+            let a0 = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+            let mut m_true = a0.syrk();
+            let init = LowRank::from_eigh(&m_true.eigh(), s.r);
+            let frozen = init.clone();
+            let mut b_est = init;
+            for _ in 0..s.steps {
+                let a = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+                m_true = m_true.scale(s.rho).add(&a.syrk().scale(1.0 - s.rho));
+                b_est = b_est.brand_ea_update(&a, s.rho, s.r);
+            }
+            let e_b = b_est.to_dense().sub(&m_true).fro_norm();
+            let e_frozen = frozen.to_dense().sub(&m_true).fro_norm();
+            if e_b <= e_frozen + 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("B-update worse than frozen: {e_b} > {e_frozen}"))
+            }
+        },
+    );
+}
+
+/// Prop 4.2 bound: per-arrival truncation error of the B-process is
+/// bounded by ‖M_j M_jᵀ‖_F (the (1−ρ)-scaled incoming term, eq. 18).
+#[test]
+fn prop_4_2_per_step_error_bound() {
+    check("prop 4.2 bound", gen_stream, |s| {
+        let mut rng = Rng::new(s.seed);
+        let a0 = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+        let m0 = a0.syrk();
+        let mut b_est = LowRank::from_eigh(&m0.eigh(), s.r);
+        for _ in 0..s.steps {
+            let a = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+            let before = b_est.truncate(s.r);
+            let after = before.brand_ea_update(&a, s.rho, s.r);
+            // E_j = (M̃_j − 𝓑_j)/(1−ρ) where the truncation error is taken
+            // at the next truncation; bound: ‖E_j‖_F ≤ ‖M_jM_jᵀ‖_F
+            let trunc_err = after
+                .to_dense()
+                .sub(&after.truncate(s.r).to_dense())
+                .fro_norm()
+                / (1.0 - s.rho);
+            let bound = a.syrk().fro_norm();
+            if trunc_err <= bound * (1.0 + 1e-3) + 1e-4 {
+                b_est = after;
+            } else {
+                return Err(format!("‖E_j‖={trunc_err} > bound {bound}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// §3.3 "Why use M̃_B,k, not 𝓑_k": ‖M_k − 𝓑_k‖ ≥ ‖M_k − M̃_{B,k}‖.
+#[test]
+fn sec_3_3_full_rep_beats_truncated_rep() {
+    check("§3.3 ordering", gen_stream, |s| {
+        let (m_true, b_est) = evolve(s);
+        let e_full = b_est.to_dense().sub(&m_true).fro_norm();
+        let e_trunc = b_est.truncate(s.r).to_dense().sub(&m_true).fro_norm();
+        if e_trunc >= e_full - 1e-3 * (1.0 + e_full) {
+            Ok(())
+        } else {
+            Err(format!("truncated beat full: {e_trunc} < {e_full}"))
+        }
+    });
+}
+
+/// Brand exactness (§2.3): one un-truncated Brand update reproduces the
+/// dense EA update to float precision, for any stream dims.
+#[test]
+fn brand_update_is_exact_property() {
+    check("brand exactness", gen_stream, |s| {
+        let mut rng = Rng::new(s.seed);
+        let g = Mat::gauss(s.d, s.r, 1.0, &mut rng);
+        let rep = LowRank::from_eigh(&g.syrk().eigh(), s.r);
+        let a = Mat::gauss(s.d, s.n, 1.0, &mut rng);
+        let upd = rep.brand_ea_update(&a, s.rho, s.r);
+        let want = rep.to_dense().scale(s.rho).add(&a.syrk().scale(1.0 - s.rho));
+        let rel = upd.to_dense().rel_err(&want);
+        if rel < 5e-4 {
+            Ok(())
+        } else {
+            Err(format!("brand not exact: rel err {rel}"))
+        }
+    });
+}
