@@ -1,0 +1,211 @@
+//! E6 — the async sharded preconditioner service (DESIGN.md §9) as a
+//! wall-clock experiment: per-step cost of a multi-FC-layer training loop
+//! with decomposition updates run (a) inline on the critical path,
+//! (b) through the service in sync mode (overhead check: must be ≈
+//! inline), and (c) asynchronously with ≥2 workers and a bounded
+//! staleness — the paper's amortization argument turned into overlap.
+//!
+//! Host linalg only (no artifacts needed). Emits the `async_precond`
+//! section of BENCH_scaling.json at the repo root.
+//!
+//! Env: BNKFAC_ASYNC_FACTORS (default 8), BNKFAC_ASYNC_D (default 320),
+//!      BNKFAC_ASYNC_STEPS (default 20).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use bnkfac::linalg::Mat;
+use bnkfac::optim::factor::{FactorState, Stat};
+use bnkfac::optim::{Algo, Hyper, OpRequest, Policy, UpdateOp};
+use bnkfac::precond::{PrecondCfg, PrecondService};
+use bnkfac::runtime::FactorPlan;
+use bnkfac::util::rng::Rng;
+use bnkfac::util::ser::Json;
+use bnkfac::util::timer::PhaseTimers;
+use common::{env_usize, update_bench_json, Table};
+
+const RANK: usize = 40;
+const N_STAT: usize = 16;
+
+fn plan(i: usize, dim: usize) -> FactorPlan {
+    FactorPlan {
+        id: format!("fc{}/{}", i / 2, if i % 2 == 0 { "A" } else { "G" }),
+        layer: format!("fc{}", i / 2),
+        kind: "fc".into(),
+        side: if i % 2 == 0 { "A" } else { "G" }.into(),
+        dim,
+        rank: RANK,
+        sketch: RANK + 16,
+        brand: true,
+        n: N_STAT,
+        n_crc: RANK / 2,
+        ops: BTreeMap::new(),
+    }
+}
+
+/// Op schedule: even factors are RSVD-managed (heavy, R-KFAC-style,
+/// every stat step); odd factors are Brand-managed (light, B-KFAC).
+fn op_for(i: usize, k: usize) -> UpdateOp {
+    if i % 2 == 0 {
+        UpdateOp::Rsvd
+    } else if k == 0 {
+        UpdateOp::Rsvd // init from gram
+    } else {
+        UpdateOp::Brand
+    }
+}
+
+/// Stand-in for the fwd/bwd + apply work of one optimizer step — the
+/// compute async decomposition updates overlap with.
+fn fwd_spin(a: &Mat, b: &Mat) {
+    std::hint::black_box(a.matmul(b));
+}
+
+fn run_inline(plans: &[FactorPlan], steps: &[Vec<Mat>], rho: f32) -> f64 {
+    let policy = Policy::new(Algo::BKfac, Hyper::default());
+    let mut t = PhaseTimers::new();
+    let mut rng = Rng::new(42);
+    let mut data_rng = Rng::new(43);
+    let mut factors: Vec<FactorState> = plans
+        .iter()
+        .map(|p| FactorState::new(p.clone(), true))
+        .collect();
+    let fwd_a = Mat::gauss(192, 192, 1.0, &mut data_rng);
+    let fwd_b = Mat::gauss(192, 192, 1.0, &mut data_rng);
+    let t0 = Instant::now();
+    for (k, stats) in steps.iter().enumerate() {
+        fwd_spin(&fwd_a, &fwd_b);
+        for (i, f) in factors.iter_mut().enumerate() {
+            f.stat_update(&Stat::Raw(&stats[i]), rho, None, &mut t).unwrap();
+        }
+        for (i, f) in factors.iter_mut().enumerate() {
+            f.run_op(op_for(i, k), Some(&stats[i]), rho, &policy, None, &mut rng, &mut t)
+                .unwrap();
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn run_service(
+    plans: &[FactorPlan],
+    steps: &[Vec<Mat>],
+    rho: f32,
+    workers: usize,
+    max_staleness: usize,
+) -> f64 {
+    let mut t = PhaseTimers::new();
+    let mut rng = Rng::new(42);
+    let mut data_rng = Rng::new(43);
+    let mut mirrors: Vec<FactorState> = plans
+        .iter()
+        .map(|p| FactorState::new(p.clone(), true))
+        .collect();
+    let svc = PrecondService::new(
+        PrecondCfg {
+            workers,
+            max_staleness,
+        },
+        plans.iter().map(|p| p.id.clone()).collect(),
+    );
+    let fwd_a = Mat::gauss(192, 192, 1.0, &mut data_rng);
+    let fwd_b = Mat::gauss(192, 192, 1.0, &mut data_rng);
+    let t0 = Instant::now();
+    for (k, stats) in steps.iter().enumerate() {
+        svc.enforce_staleness(k as u64);
+        fwd_spin(&fwd_a, &fwd_b);
+        for (i, f) in mirrors.iter_mut().enumerate() {
+            f.stat_update(&Stat::Raw(&stats[i]), rho, None, &mut t).unwrap();
+        }
+        for (i, f) in mirrors.iter().enumerate() {
+            if let Some(req) = OpRequest::prepare(
+                op_for(i, k),
+                &f.plan,
+                f.gram.as_ref(),
+                Some(&stats[i]),
+                rho,
+                &mut rng,
+            ) {
+                svc.submit(i, req, k as u64, None, &mut t).unwrap();
+            }
+        }
+    }
+    svc.drain().unwrap(); // all decompositions applied before we stop the clock
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let n_factors = env_usize("BNKFAC_ASYNC_FACTORS", 8);
+    let d = env_usize("BNKFAC_ASYNC_D", 320);
+    let n_steps = env_usize("BNKFAC_ASYNC_STEPS", 20);
+    let rho = 0.95f32;
+    let plans: Vec<FactorPlan> = (0..n_factors).map(|i| plan(i, d)).collect();
+    // pre-generate the raw statistics so data generation is not timed
+    let mut data_rng = Rng::new(7);
+    let steps: Vec<Vec<Mat>> = (0..n_steps)
+        .map(|_| {
+            plans
+                .iter()
+                .map(|p| Mat::gauss(p.dim, p.n, 1.0, &mut data_rng))
+                .collect()
+        })
+        .collect();
+
+    // warmup (allocators, page faults)
+    let _ = run_inline(&plans, &steps[..2.min(n_steps)], rho);
+
+    let t_inline = run_inline(&plans, &steps, rho);
+    let t_sync = run_service(&plans, &steps, rho, 1, 0);
+    let t_async2 = run_service(&plans, &steps, rho, 2, 4);
+    let t_async4 = run_service(&plans, &steps, rho, 4, 4);
+
+    let per = |t: f64| 1e3 * t / n_steps as f64;
+    let mut tab = Table::new(&["variant", "workers", "staleness", "ms_per_step", "speedup"]);
+    for (name, w, s, t) in [
+        ("inline", 0usize, 0usize, t_inline),
+        ("service_sync", 1, 0, t_sync),
+        ("service_async", 2, 4, t_async2),
+        ("service_async", 4, 4, t_async4),
+    ] {
+        tab.row(vec![
+            name.to_string(),
+            w.to_string(),
+            s.to_string(),
+            format!("{:.2}", per(t)),
+            format!("{:.2}x", t_inline / t),
+        ]);
+    }
+    println!(
+        "\n== E6: async preconditioner service ({n_factors} factors, d={d}, {n_steps} steps) =="
+    );
+    tab.print();
+
+    update_bench_json(
+        "async_precond",
+        Json::obj(vec![
+            ("factors", Json::Num(n_factors as f64)),
+            ("d", Json::Num(d as f64)),
+            ("steps", Json::Num(n_steps as f64)),
+            ("inline_ms_per_step", Json::Num(per(t_inline))),
+            ("sync_ms_per_step", Json::Num(per(t_sync))),
+            ("async2_ms_per_step", Json::Num(per(t_async2))),
+            ("async4_ms_per_step", Json::Num(per(t_async4))),
+            ("speedup_async2", Json::Num(t_inline / t_async2)),
+            ("speedup_async4", Json::Num(t_inline / t_async4)),
+        ]),
+    );
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 4 {
+        assert!(
+            t_async2 < t_inline,
+            "async service with 2 workers must beat inline updates: {:.1}ms vs {:.1}ms per step",
+            per(t_async2),
+            per(t_inline)
+        );
+    } else {
+        println!("[only {cores} cores: skipping the overlap speedup assertion]");
+    }
+}

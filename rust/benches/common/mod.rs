@@ -50,6 +50,30 @@ pub fn env_flag(key: &str) -> bool {
     std::env::var(key).map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
+/// Merge one bench's machine-readable results into `BENCH_scaling.json`
+/// at the repo root (benches each own a top-level section; re-runs
+/// overwrite only their own). This is the perf-trajectory artifact CI
+/// and future PRs diff against.
+#[allow(dead_code)]
+pub fn update_bench_json(section: &str, value: bnkfac::util::ser::Json) {
+    use bnkfac::util::ser::Json;
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_scaling.json");
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or(Json::Obj(Default::default()));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(Default::default());
+    }
+    if let Json::Obj(m) = &mut root {
+        m.insert(section.to_string(), value);
+    }
+    std::fs::write(&path, root.to_string_pretty()).expect("write BENCH_scaling.json");
+    println!("[updated {} section '{section}']", path.display());
+}
+
 /// Write a CSV string under results/, creating the directory.
 pub fn write_results(name: &str, contents: &str) {
     let path = std::path::Path::new("results").join(name);

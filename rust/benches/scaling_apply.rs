@@ -9,7 +9,8 @@ mod common;
 
 use bnkfac::linalg::{LowRank, Mat};
 use bnkfac::util::rng::Rng;
-use common::{env_usize, loglog_slope, time_fn, write_results, Table};
+use bnkfac::util::ser::Json;
+use common::{env_usize, loglog_slope, time_fn, update_bench_json, write_results, Table};
 
 fn main() {
     let max_d = env_usize("BNKFAC_SCALE_MAX_D", 4096);
@@ -88,4 +89,21 @@ fn main() {
         "Alg 8 must not be slower than the standard apply at any width"
     );
     write_results("scaling_apply.csv", &tab.to_csv());
+
+    // machine-readable perf trajectory (BENCH_scaling.json at repo root)
+    let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let pts_json = |pts: &[(f64, f64)]| {
+        Json::arr(pts.iter().map(|&(d, s)| {
+            Json::obj(vec![("d_a", Json::Num(d)), ("ms", Json::Num(s * 1e3))])
+        }))
+    };
+    update_bench_json(
+        "apply",
+        Json::obj(vec![
+            ("standard_ms", pts_json(&std_pts)),
+            ("linear_alg8_ms", pts_json(&lin_pts)),
+            ("slope_standard", num(slope_std)),
+            ("slope_linear", num(slope_lin)),
+        ]),
+    );
 }

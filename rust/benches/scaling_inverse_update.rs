@@ -17,7 +17,8 @@ mod common;
 
 use bnkfac::linalg::{LowRank, Mat, RsvdOpts};
 use bnkfac::util::rng::Rng;
-use common::{env_usize, loglog_slope, time_fn, write_results, Table};
+use bnkfac::util::ser::Json;
+use common::{env_usize, loglog_slope, time_fn, update_bench_json, write_results, Table};
 
 fn main() {
     let max_d = env_usize("BNKFAC_SCALE_MAX_D", 2048);
@@ -99,4 +100,23 @@ fn main() {
         "complexity ordering violated: brand {s_brand} rsvd {s_rsvd} evd {s_evd}"
     );
     write_results("scaling_inverse_update.csv", &tab.to_csv());
+
+    // machine-readable perf trajectory (BENCH_scaling.json at repo root)
+    let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+    let pts_json = |pts: &[(f64, f64)]| {
+        Json::arr(pts.iter().map(|&(d, s)| {
+            Json::obj(vec![("d", Json::Num(d)), ("ms", Json::Num(s * 1e3))])
+        }))
+    };
+    update_bench_json(
+        "inverse_update",
+        Json::obj(vec![
+            ("kfac_evd_ms", pts_json(&evd_pts)),
+            ("rkfac_rsvd_ms", pts_json(&rsvd_pts)),
+            ("bkfac_brand_ms", pts_json(&brand_pts)),
+            ("slope_evd", num(s_evd)),
+            ("slope_rsvd", num(s_rsvd)),
+            ("slope_brand", num(s_brand)),
+        ]),
+    );
 }

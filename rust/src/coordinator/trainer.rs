@@ -2,28 +2,37 @@
 //!
 //! One `Trainer` = one optimizer run. Per step:
 //!   1. `train_step` artifact: loss, grads, K-factor statistics
-//!   2. on stat steps (k % T_updt == 0): EA updates + the policy's
-//!      decomposition ops (RSVD / Brand / correction / exact EVD)
+//!   2. on stat steps (k % T_updt == 0): per-layer EA updates
+//!      (work-stolen across layers), then the policy's decomposition ops
+//!      (RSVD / Brand / correction / exact EVD) — executed inline, or
+//!      submitted to the async preconditioner service (`precond`,
+//!      DESIGN.md §9) when `TrainerCfg::precond` is set
 //!   3. per-layer preconditioned step (artifact), BN/SGD for the rest
 //!   4. global step clipping, weight decay, parameter update
 //!   5. BN running-stat EA
 //!
 //! The rust side owns ALL state and randomness; python never runs here.
+//! In service mode, randomness for decomposition ops is still drawn on
+//! this thread at submission (see `OpRequest::prepare`), which is why
+//! the service's sync mode bit-matches the inline path.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::data::{Batch, Dataset};
 use crate::linalg::Mat;
-use crate::metrics::{EvalRecord, RunLog, TrainRecord};
+use crate::metrics::{EvalRecord, RunLog, ServiceRecord, TrainRecord};
 use crate::model::{BnState, ParamStore};
-use crate::optim::factor::{FactorState, Stat};
+use crate::optim::factor::{FactorState, OpRequest, Stat};
 use crate::optim::{Algo, Hyper, LayerState, Policy};
 use crate::optim::seng::SengState;
+use crate::precond::{PrecondCfg, PrecondService};
 use crate::runtime::{Runtime, Value};
 use crate::util::rng::Rng;
+use crate::util::threadpool;
 use crate::util::timer::PhaseTimers;
 
 #[derive(Clone, Debug)]
@@ -40,6 +49,9 @@ pub struct TrainerCfg {
     pub seng_wd: f32,
     /// capture per-step grad/direction/stats of this layer (error probe)
     pub probe_layer: Option<String>,
+    /// run decomposition updates through the async sharded
+    /// preconditioner service (None = historical inline path)
+    pub precond: Option<PrecondCfg>,
 }
 
 /// Per-step capture for the §4.2 error study.
@@ -64,6 +76,7 @@ impl Default for TrainerCfg {
             seng_lr0: 0.05,
             seng_wd: 1e-2,
             probe_layer: None,
+            precond: None,
         }
     }
 }
@@ -81,6 +94,11 @@ pub struct Trainer<'rt> {
     pub step: usize,
     /// most recent probe capture (when cfg.probe_layer is set)
     pub last_capture: Option<Capture>,
+    /// async preconditioner service (cfg.precond); factor shard i maps
+    /// to layer i/2, side A (even) / G (odd)
+    pub service: Option<PrecondService>,
+    /// last published version installed per factor shard
+    installed_versions: Vec<u64>,
     /// output index map for the train_step artifact
     out_idx: BTreeMap<String, usize>,
     /// output index map for train_step_light (None if not in manifest)
@@ -144,6 +162,15 @@ impl<'rt> Trainer<'rt> {
             .filter(|l| l.kind == "fc" && l.dropout > 0.0)
             .map(|l| (l.name.clone(), l.dropout, l.d_a - 1))
             .collect();
+        let service = cfg.precond.as_ref().map(|pc| {
+            let mut ids = Vec::with_capacity(layers.len() * 2);
+            for l in &layers {
+                ids.push(l.a.plan.id.clone());
+                ids.push(l.g.plan.id.clone());
+            }
+            PrecondService::new(pc.clone(), ids)
+        });
+        let installed_versions = vec![0u64; layers.len() * 2];
         Ok(Trainer {
             rt,
             seng: SengState::new(cfg.seng_damping, cfg.seng_momentum),
@@ -155,6 +182,8 @@ impl<'rt> Trainer<'rt> {
             timers: PhaseTimers::new(),
             step: 0,
             last_capture: None,
+            service,
+            installed_versions,
             out_idx,
             out_idx_light,
             dropout_layers,
@@ -265,44 +294,99 @@ impl<'rt> Trainer<'rt> {
         let rho = self.policy.hyper.rho;
         let stat_step = k % self.policy.hyper.t_updt == 0;
         if self.policy.algo.is_kfac_family() && stat_step {
-            for li in 0..self.layers.len() {
-                let lname = self.layers[li].spec.name.clone();
+            // bounded staleness: block only if a factor's oldest
+            // unfinished decomposition fell too far behind (no-op inline
+            // and in sync mode)
+            if let Some(svc) = &self.service {
+                let t0 = Instant::now();
+                svc.enforce_staleness(k as u64);
+                self.timers.add("svc_staleness_wait", t0.elapsed().as_secs_f64());
+            }
+            // gather this step's statistics (artifact outputs) per layer
+            let mut stats: Vec<(Mat, Mat, bool)> = Vec::with_capacity(self.layers.len());
+            for layer in &self.layers {
+                let lname = &layer.spec.name;
                 let a_stat = pick(&outs, &idx_map, &format!("stat:{lname}/A")).as_mat().clone();
                 let g_stat = pick(&outs, &idx_map, &format!("stat:{lname}/G")).as_mat().clone();
-                let kind_conv = self.layers[li].spec.kind == "conv";
-                let (sa, sg) = if kind_conv {
-                    (Stat::Gram(&a_stat), Stat::Gram(&g_stat))
-                } else {
-                    (Stat::Raw(&a_stat), Stat::Raw(&g_stat))
-                };
-                let layer = &mut self.layers[li];
-                layer.a.stat_update(&sa, rho, Some(self.rt), &mut self.timers)?;
-                layer.g.stat_update(&sg, rho, Some(self.rt), &mut self.timers)?;
-                // decomposition ops per policy
-                let op_a = self.policy.op_at(k, &layer.a.plan);
-                let op_g = self.policy.op_at(k, &layer.g.plan);
-                let raw_a = (!kind_conv).then_some(&a_stat);
-                let raw_g = (!kind_conv).then_some(&g_stat);
-                layer.a.run_op(
-                    op_a,
-                    raw_a,
-                    rho,
-                    &self.policy,
-                    Some(self.rt),
-                    &mut self.rng,
-                    &mut self.timers,
-                )?;
-                layer.g.run_op(
-                    op_g,
-                    raw_g,
-                    rho,
-                    &self.policy,
-                    Some(self.rt),
-                    &mut self.rng,
-                    &mut self.timers,
-                )?;
+                stats.push((a_stat, g_stat, layer.spec.kind == "conv"));
+            }
+            // EA updates are independent across layers and uneven in cost
+            // (fc syrk vs conv axpy) — work-steal them across threads.
+            // Concurrent rt.exec relies on Runtime's documented PJRT
+            // thread-safety; the outer width is capped at 4 because the
+            // host syrk fallback threads internally (linalg::gemm) and
+            // nesting both at default_threads() would oversubscribe.
+            let rt = self.rt;
+            let n_layers = self.layers.len();
+            let threads = threadpool::default_threads().min(n_layers.max(1)).min(4);
+            let mut ea_results: Vec<Result<()>> = Vec::with_capacity(n_layers);
+            let mut ea_timers = PhaseTimers::new();
+            {
+                let items: Vec<Mutex<(&mut LayerState, PhaseTimers, Result<()>)>> = self
+                    .layers
+                    .iter_mut()
+                    .map(|l| Mutex::new((l, PhaseTimers::new(), Ok(()))))
+                    .collect();
+                threadpool::parallel_items(n_layers, threads, |i| {
+                    let mut cell = items[i].lock().unwrap();
+                    let (layer, timers, res) = &mut *cell;
+                    let (a_stat, g_stat, kind_conv) = &stats[i];
+                    let (sa, sg) = if *kind_conv {
+                        (Stat::Gram(a_stat), Stat::Gram(g_stat))
+                    } else {
+                        (Stat::Raw(a_stat), Stat::Raw(g_stat))
+                    };
+                    *res = layer
+                        .a
+                        .stat_update(&sa, rho, Some(rt), timers)
+                        .and_then(|()| layer.g.stat_update(&sg, rho, Some(rt), timers));
+                });
+                for item in items {
+                    let (_, t, r) = item.into_inner().unwrap();
+                    ea_timers.merge(&t);
+                    ea_results.push(r);
+                }
+            }
+            self.timers.merge(&ea_timers);
+            for r in ea_results {
+                r?;
+            }
+            // decomposition ops per policy: inline (historical path) or
+            // submitted to the sharded service
+            if self.service.is_some() {
+                self.submit_ops(k, &stats)?;
+            } else {
+                for (li, (a_stat, g_stat, kind_conv)) in stats.iter().enumerate() {
+                    let conv = *kind_conv;
+                    let layer = &mut self.layers[li];
+                    let op_a = self.policy.op_at(k, &layer.a.plan);
+                    let op_g = self.policy.op_at(k, &layer.g.plan);
+                    let raw_a = (!conv).then_some(a_stat);
+                    let raw_g = (!conv).then_some(g_stat);
+                    layer.a.run_op(
+                        op_a,
+                        raw_a,
+                        rho,
+                        &self.policy,
+                        Some(self.rt),
+                        &mut self.rng,
+                        &mut self.timers,
+                    )?;
+                    layer.g.run_op(
+                        op_g,
+                        raw_g,
+                        rho,
+                        &self.policy,
+                        Some(self.rt),
+                        &mut self.rng,
+                        &mut self.timers,
+                    )?;
+                }
             }
         }
+        // pull the freshest complete decompositions the service published
+        // (every step — async completions can land between stat steps)
+        self.install_published(k as u64);
 
         // ---- 3. directions --------------------------------------------
         let alpha = self.lr(epoch);
@@ -462,6 +546,89 @@ impl<'rt> Trainer<'rt> {
         })
     }
 
+    /// Submit this stat step's decomposition ops to the preconditioner
+    /// service. Randomness is pre-sampled here (submitting thread), in
+    /// exactly the order the inline path would draw it — the sync-mode
+    /// bit-match invariant.
+    fn submit_ops(&mut self, k: usize, stats: &[(Mat, Mat, bool)]) -> Result<()> {
+        let svc = self
+            .service
+            .as_ref()
+            .expect("submit_ops requires the service");
+        let rho = self.policy.hyper.rho;
+        for (li, (a_stat, g_stat, kind_conv)) in stats.iter().enumerate() {
+            let conv = *kind_conv;
+            for (fi, stat) in [a_stat, g_stat].into_iter().enumerate() {
+                let fs = if fi == 0 {
+                    &self.layers[li].a
+                } else {
+                    &self.layers[li].g
+                };
+                let op = self.policy.op_at(k, &fs.plan);
+                let raw = (!conv).then_some(stat);
+                if let Some(req) =
+                    OpRequest::prepare(op, &fs.plan, fs.gram.as_ref(), raw, rho, &mut self.rng)
+                {
+                    svc.submit(2 * li + fi, req, k as u64, Some(self.rt), &mut self.timers)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Install the freshest complete decompositions the service has
+    /// published into the per-layer factor states (no-op in inline mode).
+    fn install_published(&mut self, step: u64) {
+        let Some(svc) = self.service.as_ref() else {
+            return;
+        };
+        for li in 0..self.layers.len() {
+            for fi in 0..2 {
+                let idx = 2 * li + fi;
+                let cell = svc.cell(idx);
+                if cell.published_version() == self.installed_versions[idx] {
+                    continue;
+                }
+                if let Some(snap) = cell.load_published() {
+                    self.installed_versions[idx] = snap.version;
+                    svc.note_install(step.saturating_sub(snap.step));
+                    let layer = &mut self.layers[li];
+                    let fs = if fi == 0 { &mut layer.a } else { &mut layer.g };
+                    fs.rep = Some(snap.rep.clone());
+                }
+            }
+        }
+    }
+
+    /// Snapshot of the service counters for the run log (None inline).
+    pub fn service_record(&self) -> Option<ServiceRecord> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let svc = self.service.as_ref()?;
+        let c = svc.counters();
+        Some(ServiceRecord {
+            workers: svc.workers(),
+            max_staleness_cfg: svc.cfg().max_staleness,
+            submitted: c.submitted.load(Relaxed),
+            completed: c.completed.load(Relaxed),
+            max_queue_depth: c.max_queue_depth.load(Relaxed),
+            max_staleness_steps: c.max_staleness_steps.load(Relaxed),
+            blocked_drains: c.blocked_drains.load(Relaxed),
+            blocked_wait_s: c.blocked_wait_ns.load(Relaxed) as f64 * 1e-9,
+            worker_busy_s: svc.worker_busy_seconds(),
+            installs: c.installs.load(Relaxed),
+        })
+    }
+
+    /// Block until every pending decomposition has been applied and
+    /// install the results (no-op in inline mode). Surfaces worker errors.
+    pub fn drain_service(&mut self) -> Result<()> {
+        if let Some(svc) = self.service.as_ref() {
+            svc.drain()?;
+        }
+        self.install_published(self.step as u64);
+        Ok(())
+    }
+
     fn lr(&self, epoch: usize) -> f32 {
         self.policy.hyper.lr(epoch)
     }
@@ -536,6 +703,9 @@ impl<'rt> Trainer<'rt> {
                 );
             }
         }
+        // settle outstanding async decompositions (surfaces worker errors)
+        self.drain_service()?;
+        log.service = self.service_record();
         Ok(log)
     }
 }

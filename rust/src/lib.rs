@@ -19,5 +19,6 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod precond;
 pub mod runtime;
 pub mod util;

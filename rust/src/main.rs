@@ -14,6 +14,7 @@ use bnkfac::coordinator::probe::ErrorProbe;
 use bnkfac::coordinator::{Trainer, TrainerCfg};
 use bnkfac::data::{Dataset, DatasetCfg};
 use bnkfac::optim::{Algo, Hyper};
+use bnkfac::precond::PrecondCfg;
 use bnkfac::runtime::Runtime;
 use bnkfac::util::cli::Args;
 
@@ -106,6 +107,21 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--precond-workers N [--precond-staleness S]` turns on the async
+/// sharded preconditioner service; S=0 (default) is the bit-matching
+/// synchronous mode, S≥1 allows decompositions to trail by S steps.
+fn precond_from(args: &Args) -> Option<PrecondCfg> {
+    let workers = args.get_usize("precond-workers", 0);
+    let staleness = args.get_usize("precond-staleness", 0);
+    if workers == 0 && staleness == 0 {
+        return None;
+    }
+    Some(PrecondCfg {
+        workers: workers.max(1),
+        max_staleness: staleness,
+    })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let algo = Algo::parse(args.get_or("algo", "bkfac"))
@@ -118,6 +134,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         algo,
         hyper: hyper_from(args),
         seed,
+        precond: precond_from(args),
         ..TrainerCfg::default()
     };
     let ds = dataset_for(&rt, args);
@@ -142,6 +159,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("total {wall:.1}s  t_epoch {:.2}s", wall / epochs as f64);
     println!("--- phase timers ---\n{}", tr.timers.report());
+    if log.service.is_some() {
+        println!("--- preconditioner service ---\n{}", log.service_summary());
+    }
     if let Some(path) = out {
         std::fs::write(&path, log.to_csv())?;
         println!("wrote {path}");

@@ -1,8 +1,10 @@
 //! Metrics: the paper's four error metrics (§4.2), training-curve logging
-//! and CSV emission for the Fig 1/2 + Table 1/2 harnesses.
+//! and CSV emission for the Fig 1/2 + Table 1/2 harnesses, plus the
+//! preconditioner-service counters (queue depth / staleness / worker
+//! utilization) attached to the run log when the async service is on.
 
 use crate::linalg::{LowRank, Mat};
-use crate::util::ser::CsvWriter;
+use crate::util::ser::{CsvWriter, Json};
 
 /// §4.2 error metrics between an approximate K-factor representation and
 /// the exact (benchmark) one, all computed on dense materializations:
@@ -65,12 +67,57 @@ pub struct EvalRecord {
     pub wall_s: f64,
 }
 
+/// End-of-run snapshot of the async preconditioner service (DESIGN.md
+/// §9.4): how much decomposition work left the critical path and at what
+/// staleness cost.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceRecord {
+    pub workers: usize,
+    pub max_staleness_cfg: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    /// max observed per-factor pending-queue depth
+    pub max_queue_depth: u64,
+    /// max observed staleness (steps) of an installed decomposition
+    pub max_staleness_steps: u64,
+    /// times the trainer had to block on the staleness bound
+    pub blocked_drains: u64,
+    /// total seconds the trainer spent blocked draining
+    pub blocked_wait_s: f64,
+    /// seconds workers spent executing decomposition jobs
+    pub worker_busy_s: f64,
+    /// published-decomposition installs into the trainer's factor states
+    pub installs: u64,
+}
+
+impl ServiceRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("max_staleness_cfg", Json::Num(self.max_staleness_cfg as f64)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("max_queue_depth", Json::Num(self.max_queue_depth as f64)),
+            (
+                "max_staleness_steps",
+                Json::Num(self.max_staleness_steps as f64),
+            ),
+            ("blocked_drains", Json::Num(self.blocked_drains as f64)),
+            ("blocked_wait_s", Json::Num(self.blocked_wait_s)),
+            ("worker_busy_s", Json::Num(self.worker_busy_s)),
+            ("installs", Json::Num(self.installs as f64)),
+        ])
+    }
+}
+
 /// Collects the curves a run produces and serializes them.
 #[derive(Default, Clone, Debug)]
 pub struct RunLog {
     pub name: String,
     pub train: Vec<TrainRecord>,
     pub eval: Vec<EvalRecord>,
+    /// present when the run used the async preconditioner service
+    pub service: Option<ServiceRecord>,
 }
 
 impl RunLog {
@@ -113,6 +160,14 @@ impl RunLog {
             w.row_display(&[&"eval", &e.step, &e.epoch, &e.test_loss, &e.test_acc, &e.wall_s]);
         }
         w.to_string()
+    }
+
+    /// Compact one-line service summary for logs (empty if inline mode).
+    pub fn service_summary(&self) -> String {
+        match &self.service {
+            Some(s) => s.to_json().to_string_compact(),
+            None => String::new(),
+        }
     }
 }
 
@@ -159,6 +214,29 @@ mod tests {
         assert!((angle_err(&a, &b) - 2.0).abs() < 1e-5);
         let z = Mat::zeros(5, 5);
         assert_eq!(angle_err(&a, &z), 0.0);
+    }
+
+    #[test]
+    fn service_record_serializes() {
+        let rec = ServiceRecord {
+            workers: 4,
+            max_staleness_cfg: 3,
+            submitted: 100,
+            completed: 100,
+            max_queue_depth: 7,
+            max_staleness_steps: 2,
+            blocked_drains: 1,
+            blocked_wait_s: 0.25,
+            worker_busy_s: 1.5,
+            installs: 48,
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(j.get("max_queue_depth").and_then(|v| v.as_usize()), Some(7));
+        let mut log = RunLog::new("x");
+        assert_eq!(log.service_summary(), "");
+        log.service = Some(rec);
+        assert!(log.service_summary().contains("\"installs\""));
     }
 
     #[test]

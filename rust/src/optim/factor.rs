@@ -114,13 +114,16 @@ impl FactorState {
 
     // --------------------------------------------------------- inverses
 
-    /// Dispatch one policy op.
+    /// Dispatch one policy op. Randomness (RSVD sketch, correction column
+    /// choice) is drawn from `rng` here, in the same order as
+    /// [`OpRequest::prepare`] — which is what lets the async service's
+    /// sync mode bit-match this inline path.
     pub fn run_op(
         &mut self,
         op: UpdateOp,
         raw_stat: Option<&Mat>,
         rho: f32,
-        policy: &Policy,
+        _policy: &Policy,
         rt: Option<&Runtime>,
         rng: &mut Rng,
         timers: &mut PhaseTimers,
@@ -130,7 +133,8 @@ impl FactorState {
             UpdateOp::ExactEvd => self.exact_evd(timers),
             UpdateOp::Rsvd => {
                 if self.gram.is_some() {
-                    self.rsvd(rt, rng, timers)
+                    let omega = sample_omega(&self.plan, rng);
+                    self.rsvd_with_omega(omega, rt, timers)
                 } else {
                     // pure-B-KFAC init at k=0: exact decomposition of the
                     // first statistic AAᵀ without forming the Gram
@@ -145,7 +149,8 @@ impl FactorState {
             UpdateOp::BrandCorrect => {
                 let a = raw_stat.expect("Brand update needs the raw statistic");
                 self.brand(a, rho, rt, timers)?;
-                self.correction(policy, rt, rng, timers)
+                let idx = sample_corr_idx(&self.plan, self.rep.as_ref(), rng);
+                self.correction_with_idx(idx, rt, timers)
             }
         }
     }
@@ -168,11 +173,21 @@ impl FactorState {
         rng: &mut Rng,
         timers: &mut PhaseTimers,
     ) -> Result<()> {
+        let omega = sample_omega(&self.plan, rng);
+        self.rsvd_with_omega(omega, rt, timers)
+    }
+
+    /// RSVD with a pre-sampled Gaussian sketch (the worker-side entry:
+    /// randomness is drawn on the submitting thread for determinism).
+    pub fn rsvd_with_omega(
+        &mut self,
+        omega: Mat,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
         let gram = self.gram.as_ref().expect("RSVD needs the dense Gram");
-        let d = self.dim();
         let k = self.plan.sketch;
         let r = self.plan.rank.min(k);
-        let omega = Mat::gauss(d, k, 1.0, rng);
         let rep = match (
             rt,
             self.plan.ops.get("rsvd_p1"),
@@ -280,6 +295,17 @@ impl FactorState {
         rng: &mut Rng,
         timers: &mut PhaseTimers,
     ) -> Result<()> {
+        let idx = sample_corr_idx(&self.plan, self.rep.as_ref(), rng);
+        self.correction_with_idx(idx, rt, timers)
+    }
+
+    /// Alg 6 correction with pre-sampled mode indices (worker-side entry).
+    pub fn correction_with_idx(
+        &mut self,
+        idx: Vec<usize>,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
         let gram = self
             .gram
             .as_ref()
@@ -287,7 +313,6 @@ impl FactorState {
             .clone();
         let rep = self.rep.take().expect("correction needs a representation");
         let c = self.plan.n_crc.max(1);
-        let idx = rng.choose(rep.rank(), c.min(rep.rank()));
         let new_rep = match (
             rt,
             self.plan.ops.get("corr_p1"),
@@ -357,6 +382,160 @@ impl FactorState {
         let mut d = vec![0.0f32; k_pad];
         d[..r].copy_from_slice(&d_eff[..r]);
         (u, d, lam_eff.max(1e-8))
+    }
+}
+
+/// Gaussian RSVD sketch for a factor plan (dim × sketch). Kept as a free
+/// function so the inline path and `OpRequest::prepare` draw identically.
+fn sample_omega(plan: &FactorPlan, rng: &mut Rng) -> Mat {
+    Mat::gauss(plan.dim, plan.sketch, 1.0, rng)
+}
+
+/// Mode indices for the Alg 6 correction. When no representation is
+/// available yet (submission-time sampling), the post-Brand rank r+n is
+/// used — the invariant the correction always runs under.
+fn sample_corr_idx(plan: &FactorPlan, rep: Option<&LowRank>, rng: &mut Rng) -> Vec<usize> {
+    let rank = rep.map(|r| r.rank()).unwrap_or(plan.rank + plan.n);
+    let c = plan.n_crc.max(1);
+    rng.choose(rank, c.min(rank))
+}
+
+/// Self-contained, `Send` description of one decomposition op — the unit
+/// of work the async preconditioner service ships to its workers
+/// (DESIGN.md §9). Carries snapshots of everything the op reads
+/// (EA Gram, raw statistic) plus pre-sampled randomness, so execution is
+/// a pure function of the request and the factor's previous
+/// representation; workers never touch the trainer's RNG or state.
+#[derive(Clone, Debug)]
+pub struct OpRequest {
+    pub op: UpdateOp,
+    pub plan: FactorPlan,
+    /// snapshot of the dense EA Gram (ops that read it: ExactEvd, Rsvd
+    /// when maintained, the correction half of BrandCorrect)
+    pub gram: Option<Mat>,
+    /// snapshot of the current raw statistic (Brand / BrandCorrect /
+    /// gram-free Rsvd init)
+    pub raw_stat: Option<Mat>,
+    /// pre-sampled Gaussian sketch for Rsvd
+    pub omega: Option<Mat>,
+    /// pre-sampled mode indices for the BrandCorrect correction
+    pub corr_idx: Option<Vec<usize>>,
+    pub rho: f32,
+}
+
+impl OpRequest {
+    /// Build the request on the submitting thread, drawing randomness
+    /// from `rng` in exactly the order [`FactorState::run_op`] would —
+    /// the invariant behind the service's sync-mode bit-match guarantee.
+    /// Returns None for `UpdateOp::None` (nothing to do).
+    ///
+    /// Snapshots are owned clones so the request is `Send`; the O(d²)
+    /// Gram copy is a factor `sketch` cheaper than the O(d²·k)
+    /// decomposition it precedes, so it does not change the complexity
+    /// class of a stat step (and buys the worker a race-free input).
+    pub fn prepare(
+        op: UpdateOp,
+        plan: &FactorPlan,
+        gram: Option<&Mat>,
+        raw_stat: Option<&Mat>,
+        rho: f32,
+        rng: &mut Rng,
+    ) -> Option<OpRequest> {
+        let mut req = OpRequest {
+            op,
+            plan: plan.clone(),
+            gram: None,
+            raw_stat: None,
+            omega: None,
+            corr_idx: None,
+            rho,
+        };
+        match op {
+            UpdateOp::None => return None,
+            UpdateOp::ExactEvd => {
+                req.gram = gram.cloned();
+            }
+            UpdateOp::Rsvd => {
+                if gram.is_some() {
+                    req.omega = Some(sample_omega(plan, rng));
+                    req.gram = gram.cloned();
+                } else {
+                    req.raw_stat = raw_stat.cloned();
+                }
+            }
+            UpdateOp::Brand => {
+                req.raw_stat = raw_stat.cloned();
+            }
+            UpdateOp::BrandCorrect => {
+                req.raw_stat = raw_stat.cloned();
+                req.gram = gram.cloned();
+                req.corr_idx = Some(sample_corr_idx(plan, None, rng));
+            }
+        }
+        Some(req)
+    }
+
+    /// Execute the op against the factor's previous representation and
+    /// return the new one. Pure: all inputs travel in the request. Errors
+    /// instead of panicking so worker threads survive malformed requests.
+    pub fn execute(
+        self,
+        prev: Option<LowRank>,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<Option<LowRank>> {
+        let keep = self.gram.is_some();
+        let mut fs = FactorState {
+            plan: self.plan,
+            gram: self.gram,
+            rep: prev,
+            seen_stats: true,
+            keep_gram: keep,
+        };
+        match self.op {
+            UpdateOp::None => return Ok(None),
+            UpdateOp::ExactEvd => {
+                anyhow::ensure!(fs.gram.is_some(), "ExactEvd op without a Gram snapshot");
+                fs.exact_evd(timers)?;
+            }
+            UpdateOp::Rsvd => match self.omega {
+                Some(omega) => {
+                    anyhow::ensure!(fs.gram.is_some(), "Rsvd op without a Gram snapshot");
+                    fs.rsvd_with_omega(omega, rt, timers)?;
+                }
+                None => {
+                    let a = self.raw_stat.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("gram-free Rsvd init needs the raw statistic")
+                    })?;
+                    fs.init_from_stat(a, timers)?;
+                }
+            },
+            UpdateOp::Brand => {
+                anyhow::ensure!(fs.rep.is_some(), "Brand op without an existing representation");
+                let a = self
+                    .raw_stat
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("Brand op needs the raw statistic"))?;
+                fs.brand(a, self.rho, rt, timers)?;
+            }
+            UpdateOp::BrandCorrect => {
+                anyhow::ensure!(
+                    fs.rep.is_some(),
+                    "BrandCorrect op without an existing representation"
+                );
+                anyhow::ensure!(fs.gram.is_some(), "BrandCorrect op without a Gram snapshot");
+                let a = self
+                    .raw_stat
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("BrandCorrect op needs the raw statistic"))?;
+                fs.brand(&a, self.rho, rt, timers)?;
+                let idx = self
+                    .corr_idx
+                    .ok_or_else(|| anyhow::anyhow!("BrandCorrect op without sampled indices"))?;
+                fs.correction_with_idx(idx, rt, timers)?;
+            }
+        }
+        Ok(fs.rep)
     }
 }
 
@@ -509,6 +688,89 @@ mod tests {
         // spectrum continuation: λ_eff > λ, smallest retained eig shifted to 0
         assert!(lam > 0.1);
         assert!(d[4].abs() < 1e-5);
+    }
+
+    /// OpRequest::prepare + execute must reproduce run_op bit-for-bit —
+    /// the invariant the async service's sync mode is built on.
+    #[test]
+    fn op_request_bitmatches_run_op() {
+        use crate::optim::policy::Algo;
+        let policy = Policy::new(Algo::BKfacC, crate::optim::Hyper::default());
+        for op in [UpdateOp::ExactEvd, UpdateOp::Rsvd, UpdateOp::Brand, UpdateOp::BrandCorrect] {
+            let mut t = PhaseTimers::new();
+            let mut rng_a = Rng::new(500);
+            let mut rng_b = Rng::new(500);
+            let mut data_rng = Rng::new(501);
+            let p = plan(18, 5, 3, true);
+            // shared starting state: gram + an initial rep of rank r+n
+            let mut inline = FactorState::new(p.clone(), true);
+            let a0 = Mat::gauss(18, 8, 1.0, &mut data_rng);
+            inline.stat_update(&Stat::Raw(&a0), 0.9, None, &mut t).unwrap();
+            inline.init_from_stat(&a0, &mut t).unwrap();
+            let trunc = truncate_or_pad(inline.rep.as_ref().unwrap(), p.rank + p.n);
+            inline.rep = Some(trunc);
+            let mut via_req = FactorState::new(p.clone(), true);
+            via_req.gram = inline.gram.clone();
+            via_req.rep = inline.rep.clone();
+            let stat = Mat::gauss(18, 3, 1.0, &mut data_rng);
+
+            inline
+                .run_op(op, Some(&stat), 0.9, &policy, None, &mut rng_a, &mut t)
+                .unwrap();
+            let req = OpRequest::prepare(
+                op,
+                &via_req.plan,
+                via_req.gram.as_ref(),
+                Some(&stat),
+                0.9,
+                &mut rng_b,
+            )
+            .expect("non-None op");
+            let new_rep = req
+                .execute(via_req.rep.take(), None, &mut t)
+                .unwrap()
+                .expect("op produces a rep");
+            let want = inline.rep.as_ref().unwrap();
+            assert_eq!(want.u.data, new_rep.u.data, "U mismatch for {op:?}");
+            assert_eq!(want.d, new_rep.d, "d mismatch for {op:?}");
+            // identical RNG consumption
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "rng drift for {op:?}");
+        }
+    }
+
+    #[test]
+    fn op_request_none_is_empty() {
+        let mut rng = Rng::new(502);
+        let p = plan(10, 4, 2, true);
+        assert!(OpRequest::prepare(UpdateOp::None, &p, None, None, 0.9, &mut rng).is_none());
+    }
+
+    #[test]
+    fn op_request_errors_instead_of_panicking() {
+        let mut t = PhaseTimers::new();
+        let p = plan(10, 4, 2, true);
+        // Brand without a previous representation must be an Err, not a panic
+        let req = OpRequest {
+            op: UpdateOp::Brand,
+            plan: p.clone(),
+            gram: None,
+            raw_stat: Some(Mat::zeros(10, 2)),
+            omega: None,
+            corr_idx: None,
+            rho: 0.9,
+        };
+        assert!(req.execute(None, None, &mut t).is_err());
+        // ExactEvd without a gram snapshot likewise
+        let req = OpRequest {
+            op: UpdateOp::ExactEvd,
+            plan: p,
+            gram: None,
+            raw_stat: None,
+            omega: None,
+            corr_idx: None,
+            rho: 0.9,
+        };
+        assert!(req.execute(None, None, &mut t).is_err());
     }
 
     #[test]

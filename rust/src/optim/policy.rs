@@ -64,6 +64,25 @@ pub enum UpdateOp {
     BrandCorrect,
 }
 
+impl UpdateOp {
+    /// Does this op read the dense EA Gram? (`Rsvd` reads it when the
+    /// factor maintains one; the gram-free k=0 init does not.)
+    pub fn reads_gram(&self) -> bool {
+        matches!(self, UpdateOp::ExactEvd | UpdateOp::Rsvd | UpdateOp::BrandCorrect)
+    }
+
+    /// Does this op consume the step's raw statistic?
+    pub fn reads_raw_stat(&self) -> bool {
+        matches!(self, UpdateOp::Brand | UpdateOp::BrandCorrect | UpdateOp::Rsvd)
+    }
+
+    /// Ops that replace the representation wholesale (vs incremental
+    /// updates that need the previous representation to exist).
+    pub fn is_overwrite(&self) -> bool {
+        matches!(self, UpdateOp::Rsvd | UpdateOp::ExactEvd)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Policy {
     pub algo: Algo,
@@ -281,6 +300,19 @@ mod tests {
         assert_eq!(p.op_at(0, &f), UpdateOp::ExactEvd);
         assert_eq!(p.op_at(50, &f), UpdateOp::ExactEvd);
         assert_eq!(p.op_at(10, &f), UpdateOp::None);
+    }
+
+    #[test]
+    fn op_io_requirements() {
+        assert!(UpdateOp::ExactEvd.reads_gram());
+        assert!(!UpdateOp::ExactEvd.reads_raw_stat());
+        assert!(UpdateOp::Brand.reads_raw_stat());
+        assert!(!UpdateOp::Brand.reads_gram());
+        assert!(UpdateOp::BrandCorrect.reads_gram());
+        assert!(UpdateOp::BrandCorrect.reads_raw_stat());
+        assert!(UpdateOp::Rsvd.is_overwrite());
+        assert!(!UpdateOp::Brand.is_overwrite());
+        assert!(!UpdateOp::None.reads_gram());
     }
 
     #[test]

@@ -1,0 +1,32 @@
+//! Asynchronous, per-layer-sharded preconditioner service (DESIGN.md §9).
+//!
+//! The paper's central amortization argument — K-factor inverses are only
+//! refreshed every `T_inv`/`T_brand`/`T_rsvd` steps while factors are
+//! EA-accumulated continuously (Alg 1 lines 12–13) — means decomposition
+//! updates tolerate bounded staleness. This subsystem moves them off the
+//! training step's critical path:
+//!
+//! * the trainer *submits* [`optim::OpRequest`](crate::optim::OpRequest)s
+//!   (RSVD / Brand / correction / exact EVD, with randomness pre-sampled
+//!   on the submitting thread) on stat steps and keeps training;
+//! * a [`WorkerPool`](crate::util::threadpool::WorkerPool) drains
+//!   per-factor FIFO shard queues ([`service::FactorCell`]), folding each
+//!   op over the factor's authoritative representation;
+//! * finished decompositions are published through a double-buffered,
+//!   epoch-versioned [`state::VersionedRep`] — readers always observe a
+//!   complete decomposition, publication is an atomic buffer flip;
+//! * a configurable max-staleness bound (in optimizer steps) blocks the
+//!   trainer only when the oldest unfinished op falls too far behind,
+//!   and `max_staleness = 0` degenerates to a fully synchronous mode
+//!   that bit-matches the historical inline update path.
+//!
+//! Shard-queue FIFO order makes async results *schedule-independent*:
+//! every factor reaches exactly the representations sync mode produces,
+//! just later — the trainer meanwhile preconditions with the latest
+//! published (possibly stale, always complete) decomposition.
+
+pub mod service;
+pub mod state;
+
+pub use service::{FactorCell, PrecondCfg, PrecondService, ServiceCounters};
+pub use state::{RepSnapshot, VersionedRep};

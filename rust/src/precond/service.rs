@@ -1,0 +1,557 @@
+//! The asynchronous sharded preconditioner service (DESIGN.md §9).
+//!
+//! One [`FactorCell`] per K-factor shard holds (a) a FIFO queue of
+//! pending [`OpRequest`]s, (b) the worker-side authoritative
+//! representation the op chain folds over, and (c) the double-buffered
+//! [`VersionedRep`] the trainer reads. Cells are drained by a shared
+//! [`WorkerPool`]; per-cell draining is serialized (an "actor" per
+//! factor), which both preserves the Brand-chain ordering and makes the
+//! final state independent of worker interleaving — async mode reaches
+//! exactly the same representations as sync mode, just later.
+//!
+//! Modes (`PrecondCfg::max_staleness`):
+//! * `0` — **sync**: `submit` executes the op on the calling thread
+//!   through the same request/publish machinery, so training is
+//!   bit-identical to the historical inline path (and may use the XLA
+//!   artifact path via `rt`).
+//! * `s ≥ 1` — **async**: ops run on workers (host linalg path); the
+//!   trainer blocks in [`PrecondService::enforce_staleness`] only when a
+//!   factor's oldest unfinished op is more than `s` steps behind.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::LowRank;
+use crate::optim::OpRequest;
+use crate::runtime::Runtime;
+use crate::util::threadpool::WorkerPool;
+use crate::util::timer::PhaseTimers;
+
+use super::state::{RepSnapshot, VersionedRep};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct PrecondCfg {
+    /// decomposition worker threads (async mode; ≥ 1)
+    pub workers: usize,
+    /// max allowed age (in optimizer steps) of a factor's oldest
+    /// unfinished op before the trainer blocks; 0 = fully synchronous
+    pub max_staleness: usize,
+}
+
+impl Default for PrecondCfg {
+    fn default() -> Self {
+        PrecondCfg {
+            workers: 2,
+            max_staleness: 0,
+        }
+    }
+}
+
+struct PendingTask {
+    req: OpRequest,
+    step: u64,
+}
+
+/// Mutable half of a factor shard (behind the cell mutex).
+struct CellWork {
+    queue: VecDeque<PendingTask>,
+    /// worker-side authoritative representation (the op-chain state)
+    rep: Option<LowRank>,
+    /// a worker is currently draining this cell's queue
+    busy: bool,
+    /// submission steps of queued + in-flight ops (front = oldest)
+    pending_steps: VecDeque<u64>,
+    /// first worker error, surfaced on the next drain
+    failed: Option<String>,
+}
+
+/// One K-factor shard: queue + authoritative rep + published snapshots.
+pub struct FactorCell {
+    pub id: String,
+    work: Mutex<CellWork>,
+    cv: Condvar,
+    published: VersionedRep,
+}
+
+impl FactorCell {
+    fn new(id: String) -> FactorCell {
+        FactorCell {
+            id,
+            work: Mutex::new(CellWork {
+                queue: VecDeque::new(),
+                rep: None,
+                busy: false,
+                pending_steps: VecDeque::new(),
+                failed: None,
+            }),
+            cv: Condvar::new(),
+            published: VersionedRep::new(),
+        }
+    }
+
+    /// Latest complete published decomposition (lock-light).
+    pub fn load_published(&self) -> Option<Arc<RepSnapshot>> {
+        self.published.load()
+    }
+
+    pub fn published_version(&self) -> u64 {
+        self.published.version()
+    }
+
+    /// Submission step of the oldest unfinished op, if any.
+    pub fn oldest_pending_step(&self) -> Option<u64> {
+        self.work.lock().unwrap().pending_steps.front().copied()
+    }
+
+    /// Queued + in-flight op count.
+    pub fn pending_len(&self) -> usize {
+        self.work.lock().unwrap().pending_steps.len()
+    }
+
+    /// Synchronous execution on the calling thread (sync mode / tests):
+    /// same fold + publish as the worker path, including `rt` support.
+    fn execute_now(
+        &self,
+        req: OpRequest,
+        step: u64,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let mut w = self.work.lock().unwrap();
+        let prev = w.rep.take();
+        let fallback = prev.clone();
+        match req.execute(prev, rt, timers) {
+            Ok(Some(rep)) => {
+                w.rep = Some(rep.clone());
+                self.published.publish(rep, step);
+                Ok(())
+            }
+            Ok(None) => {
+                w.rep = fallback;
+                Ok(())
+            }
+            Err(e) => {
+                w.rep = fallback;
+                Err(e.context(format!("decomposition op failed for factor '{}'", self.id)))
+            }
+        }
+    }
+
+    /// Worker body: drain this cell's queue until empty. The `busy` flag
+    /// guarantees a single drainer per cell, serializing the op chain.
+    fn drain_worker(cell: Arc<FactorCell>, counters: Arc<ServiceCounters>) {
+        loop {
+            let (task, prev, chain_failed) = {
+                let mut w = cell.work.lock().unwrap();
+                match w.queue.pop_front() {
+                    Some(t) => {
+                        let chain_failed = w.failed.is_some();
+                        let prev = w.rep.take();
+                        (t, prev, chain_failed)
+                    }
+                    None => {
+                        w.busy = false;
+                        cell.cv.notify_all();
+                        return;
+                    }
+                }
+            };
+            if chain_failed {
+                // an earlier op in this cell's chain failed: executing
+                // successors against the rolled-back rep would silently
+                // corrupt the chain — discard them (still accounted)
+                let mut w = cell.work.lock().unwrap();
+                w.rep = prev;
+                w.pending_steps.pop_front();
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+                cell.cv.notify_all();
+                continue;
+            }
+            // compute OUTSIDE the cell lock: the trainer stays free to
+            // submit to (or read from) this factor while we decompose.
+            // Panics are caught — an unwinding worker would otherwise
+            // poison the cell mutex and leave pending_steps non-empty,
+            // hanging enforce_staleness/drain forever.
+            let fallback = prev.clone();
+            let mut timers = PhaseTimers::new();
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                task.req.execute(prev, None, &mut timers)
+            }));
+            let mut w = cell.work.lock().unwrap();
+            match result {
+                Ok(Ok(Some(rep))) => {
+                    w.rep = Some(rep.clone());
+                    cell.published.publish(rep, task.step);
+                }
+                Ok(Ok(None)) => w.rep = fallback,
+                Ok(Err(e)) => {
+                    w.rep = fallback;
+                    if w.failed.is_none() {
+                        w.failed = Some(format!("factor '{}': {e:#}", cell.id));
+                    }
+                }
+                Err(panic) => {
+                    w.rep = fallback;
+                    if w.failed.is_none() {
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "opaque panic payload".to_string());
+                        w.failed = Some(format!("factor '{}': op panicked: {msg}", cell.id));
+                    }
+                }
+            }
+            w.pending_steps.pop_front();
+            counters.completed.fetch_add(1, Ordering::Relaxed);
+            cell.cv.notify_all();
+        }
+    }
+
+    /// Block until the oldest unfinished op is within `bound` steps of
+    /// `step`. Returns true if it had to wait.
+    fn wait_staleness(&self, step: u64, bound: u64) -> bool {
+        let mut w = self.work.lock().unwrap();
+        let mut blocked = false;
+        while let Some(&oldest) = w.pending_steps.front() {
+            if step.saturating_sub(oldest) <= bound {
+                break;
+            }
+            blocked = true;
+            w = self.cv.wait(w).unwrap();
+        }
+        blocked
+    }
+
+    /// Block until this cell has no unfinished ops; surface worker errors.
+    fn wait_empty(&self) -> Result<()> {
+        let mut w = self.work.lock().unwrap();
+        while !w.pending_steps.is_empty() {
+            w = self.cv.wait(w).unwrap();
+        }
+        match w.failed.take() {
+            Some(msg) => Err(anyhow!("preconditioner worker failed: {msg}")),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Aggregate counters for the run log (`metrics::ServiceRecord`).
+/// Worker utilization comes from `WorkerPool::busy_seconds`.
+#[derive(Default)]
+pub struct ServiceCounters {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub max_queue_depth: AtomicU64,
+    pub max_staleness_steps: AtomicU64,
+    pub blocked_drains: AtomicU64,
+    pub blocked_wait_ns: AtomicU64,
+    pub installs: AtomicU64,
+}
+
+impl ServiceCounters {
+    fn note_max(slot: &AtomicU64, value: u64) {
+        slot.fetch_max(value, Ordering::Relaxed);
+    }
+}
+
+/// The per-layer-sharded asynchronous preconditioner service.
+pub struct PrecondService {
+    cfg: PrecondCfg,
+    pool: WorkerPool,
+    cells: Vec<Arc<FactorCell>>,
+    counters: Arc<ServiceCounters>,
+}
+
+impl PrecondService {
+    /// One cell per factor id (the trainer uses `2*layer + {0=A, 1=G}`).
+    pub fn new(cfg: PrecondCfg, factor_ids: Vec<String>) -> PrecondService {
+        let pool = WorkerPool::new(cfg.workers.max(1));
+        let cells = factor_ids
+            .into_iter()
+            .map(|id| Arc::new(FactorCell::new(id)))
+            .collect();
+        PrecondService {
+            cfg,
+            pool,
+            cells,
+            counters: Arc::new(ServiceCounters::default()),
+        }
+    }
+
+    pub fn cfg(&self) -> &PrecondCfg {
+        &self.cfg
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn cell(&self, idx: usize) -> &Arc<FactorCell> {
+        &self.cells[idx]
+    }
+
+    pub fn counters(&self) -> &Arc<ServiceCounters> {
+        &self.counters
+    }
+
+    pub fn is_sync(&self) -> bool {
+        self.cfg.max_staleness == 0
+    }
+
+    /// Seconds workers spent executing jobs (utilization numerator).
+    pub fn worker_busy_seconds(&self) -> f64 {
+        self.pool.busy_seconds()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Submit one decomposition op for factor `idx`, produced at
+    /// optimizer step `step`. Sync mode executes inline (using `rt` when
+    /// provided); async mode enqueues onto the factor's shard queue and
+    /// schedules a drain job if none is running.
+    pub fn submit(
+        &self,
+        idx: usize,
+        req: OpRequest,
+        step: u64,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let counters = &self.counters;
+        let cell = &self.cells[idx];
+        if self.is_sync() {
+            counters.submitted.fetch_add(1, Ordering::Relaxed);
+            let out = cell.execute_now(req, step, rt, timers);
+            if out.is_ok() {
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            return out;
+        }
+        let mut w = cell.work.lock().unwrap();
+        // fail fast: once a chain op failed, queueing successors would
+        // only produce discarded work and delay the error to end-of-run
+        if let Some(msg) = &w.failed {
+            return Err(anyhow!(
+                "preconditioner factor '{}' already failed: {msg}",
+                cell.id
+            ));
+        }
+        counters.submitted.fetch_add(1, Ordering::Relaxed);
+        w.queue.push_back(PendingTask { req, step });
+        w.pending_steps.push_back(step);
+        ServiceCounters::note_max(&counters.max_queue_depth, w.pending_steps.len() as u64);
+        if !w.busy {
+            w.busy = true;
+            let cell = cell.clone();
+            let ctr = counters.clone();
+            self.pool
+                .submit(move || FactorCell::drain_worker(cell, ctr));
+        }
+        Ok(())
+    }
+
+    /// Enforce the staleness bound before step `step`: block until every
+    /// factor's oldest unfinished op is at most `max_staleness` steps
+    /// old. No-op in sync mode (nothing is ever pending).
+    pub fn enforce_staleness(&self, step: u64) {
+        if self.is_sync() {
+            return;
+        }
+        let bound = self.cfg.max_staleness as u64;
+        let t0 = std::time::Instant::now();
+        let mut blocked = false;
+        for cell in &self.cells {
+            blocked |= cell.wait_staleness(step, bound);
+        }
+        if blocked {
+            self.counters.blocked_drains.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .blocked_wait_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record the observed staleness of an install (steps between the
+    /// consuming step and the step that produced the decomposition).
+    pub fn note_install(&self, staleness_steps: u64) {
+        self.counters.installs.fetch_add(1, Ordering::Relaxed);
+        ServiceCounters::note_max(&self.counters.max_staleness_steps, staleness_steps);
+    }
+
+    /// Block until every shard queue is empty; surfaces the first worker
+    /// error. Used at end-of-run and by the sync barrier in tests.
+    pub fn drain(&self) -> Result<()> {
+        let mut first_err = None;
+        for cell in &self.cells {
+            if let Err(e) = cell.wait_empty() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::optim::policy::UpdateOp;
+    use crate::runtime::FactorPlan;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn plan(dim: usize, rank: usize, n: usize) -> FactorPlan {
+        FactorPlan {
+            id: "t/A".into(),
+            layer: "t".into(),
+            kind: "fc".into(),
+            side: "A".into(),
+            dim,
+            rank,
+            sketch: rank + 4,
+            brand: true,
+            n,
+            n_crc: (rank / 2).max(1),
+            ops: BTreeMap::new(),
+        }
+    }
+
+    fn rsvd_req(p: &FactorPlan, gram: &Mat, rng: &mut Rng) -> OpRequest {
+        OpRequest::prepare(UpdateOp::Rsvd, p, Some(gram), None, 0.9, rng).unwrap()
+    }
+
+    #[test]
+    fn sync_mode_publishes_immediately() {
+        let p = plan(16, 5, 3);
+        let mut rng = Rng::new(1);
+        let gram = Mat::psd_with_decay(16, 0.7, &mut rng);
+        let svc = PrecondService::new(
+            PrecondCfg {
+                workers: 1,
+                max_staleness: 0,
+            },
+            vec!["t/A".into()],
+        );
+        let mut t = PhaseTimers::new();
+        svc.submit(0, rsvd_req(&p, &gram, &mut rng), 0, None, &mut t)
+            .unwrap();
+        let snap = svc.cell(0).load_published().expect("published in sync mode");
+        assert_eq!(snap.version, 1);
+        assert_eq!(snap.step, 0);
+        assert_eq!(snap.rep.rank(), 5);
+        assert_eq!(svc.cell(0).pending_len(), 0);
+        svc.drain().unwrap();
+    }
+
+    #[test]
+    fn async_mode_reaches_sync_final_state() {
+        // Brand-chain stream: each op folds over the previous rep, so the
+        // result is only correct if the shard queue preserves FIFO order.
+        let p = plan(20, 6, 3);
+        let seed = 99;
+        let run = |workers: usize, staleness: usize| -> (Vec<f32>, Vec<f32>) {
+            let mut rng = Rng::new(seed);
+            let mut data_rng = Rng::new(seed + 1);
+            let svc = PrecondService::new(
+                PrecondCfg {
+                    workers,
+                    max_staleness: staleness,
+                },
+                vec!["t/A".into()],
+            );
+            let mut t = PhaseTimers::new();
+            for step in 0..12u64 {
+                svc.enforce_staleness(step);
+                let stat = Mat::gauss(20, 3, 1.0, &mut data_rng);
+                let op = if step == 0 { UpdateOp::Rsvd } else { UpdateOp::Brand };
+                let req =
+                    OpRequest::prepare(op, &p, None, Some(&stat), 0.9, &mut rng).unwrap();
+                svc.submit(0, req, step, None, &mut t).unwrap();
+            }
+            svc.drain().unwrap();
+            let snap = svc.cell(0).load_published().unwrap();
+            assert_eq!(snap.step, 11);
+            (snap.rep.u.data.clone(), snap.rep.d.clone())
+        };
+        let sync = run(1, 0);
+        let async2 = run(2, 3);
+        // per-cell FIFO + pre-sampled randomness ⇒ identical final state
+        assert_eq!(sync.0, async2.0);
+        assert_eq!(sync.1, async2.1);
+    }
+
+    #[test]
+    fn worker_panics_are_caught_and_chain_fails_fast() {
+        let p = plan(12, 4, 2);
+        let mut rng = Rng::new(3);
+        let mut t = PhaseTimers::new();
+        let svc = PrecondService::new(
+            PrecondCfg {
+                workers: 2,
+                max_staleness: 4,
+            },
+            vec!["t/A".into()],
+        );
+        let stat = Mat::gauss(12, 2, 1.0, &mut rng);
+        let init =
+            OpRequest::prepare(UpdateOp::Rsvd, &p, None, Some(&stat), 0.9, &mut rng).unwrap();
+        svc.submit(0, init, 0, None, &mut t).unwrap();
+        // dimension-mismatched Brand statistic: panics inside linalg —
+        // must be caught, not hang enforce_staleness/drain forever
+        let bad = OpRequest {
+            op: UpdateOp::Brand,
+            plan: p.clone(),
+            gram: None,
+            raw_stat: Some(Mat::zeros(8, 2)),
+            omega: None,
+            corr_idx: None,
+            rho: 0.9,
+        };
+        svc.submit(0, bad, 1, None, &mut t).unwrap();
+        while svc.cell(0).pending_len() > 0 {
+            std::thread::yield_now();
+        }
+        // chain marked failed → further submissions are rejected eagerly
+        let again =
+            OpRequest::prepare(UpdateOp::Rsvd, &p, None, Some(&stat), 0.9, &mut rng).unwrap();
+        assert!(svc.submit(0, again, 2, None, &mut t).is_err());
+        let err = svc.drain().expect_err("panic must surface as an error");
+        assert!(format!("{err:#}").contains("t/A"), "{err:#}");
+    }
+
+    #[test]
+    fn worker_errors_surface_on_drain() {
+        let p = plan(12, 4, 2);
+        // Brand with no previous representation → worker-side error
+        let bad = OpRequest {
+            op: UpdateOp::Brand,
+            plan: p,
+            gram: None,
+            raw_stat: Some(Mat::zeros(12, 2)),
+            omega: None,
+            corr_idx: None,
+            rho: 0.9,
+        };
+        let svc = PrecondService::new(
+            PrecondCfg {
+                workers: 2,
+                max_staleness: 4,
+            },
+            vec!["t/A".into()],
+        );
+        let mut t = PhaseTimers::new();
+        svc.submit(0, bad, 0, None, &mut t).unwrap();
+        let err = svc.drain().expect_err("worker error must surface");
+        assert!(format!("{err:#}").contains("t/A"), "{err:#}");
+    }
+}

@@ -1,10 +1,19 @@
 //! Minimal scoped-parallelism substrate (no `rayon` available offline).
 //!
-//! Provides `parallel_chunks`: split an index range into contiguous chunks
-//! and run a closure per chunk on std::thread::scope threads. Used by the
-//! blocked matmul / syrk hot paths in `linalg` and by multi-run benches.
+//! Provides `parallel_ranges`/`parallel_items`: split an index range into
+//! contiguous chunks (or steal items dynamically) and run a closure on
+//! std::thread::scope threads. Used by the blocked matmul / syrk hot
+//! paths in `linalg`, the per-layer EA stat-update loop in the trainer,
+//! and multi-run benches.
+//!
+//! Also provides [`WorkerPool`], the persistent job-queue pool backing
+//! the async preconditioner service (`precond`, DESIGN.md §9): N
+//! long-lived threads draining a shared FIFO of boxed jobs, with busy-
+//! time accounting for the worker-utilization metric.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use: respects BNKFAC_THREADS, defaults to
 /// available_parallelism capped at 8 (diminishing returns for our sizes).
@@ -77,6 +86,111 @@ where
     });
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    busy_ns: AtomicU64,
+    jobs_run: AtomicU64,
+}
+
+/// Persistent worker pool: `threads` long-lived threads draining a shared
+/// FIFO job queue. Unlike `parallel_items` (scoped, blocking), submitted
+/// jobs run in the background; the pool joins its threads on drop.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            busy_ns: AtomicU64::new(0),
+            jobs_run: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("bnkfac-worker-{t}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn worker thread"),
+            );
+        }
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+        }
+    }
+
+    /// Enqueue a job; a free worker picks it up in FIFO order.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Jobs currently waiting (not including jobs being executed).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Total wall-clock seconds workers spent executing jobs.
+    pub fn busy_seconds(&self) -> f64 {
+        self.shared.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn jobs_run(&self) -> u64 {
+        self.shared.jobs_run.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let t0 = std::time::Instant::now();
+        job();
+        sh.busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        sh.jobs_run.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +225,44 @@ mod tests {
         parallel_items(1, 4, |_| {
             ran.fetch_add(1, Ordering::Relaxed);
         });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        // drop joins after draining currently-running jobs; wait for all
+        let t0 = std::time::Instant::now();
+        while counter.load(Ordering::Relaxed) != 4950 {
+            assert!(t0.elapsed().as_secs() < 10, "pool stalled");
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.jobs_run(), 100);
+        assert!(pool.busy_seconds() >= 0.0);
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn worker_pool_drop_joins_cleanly() {
+        let ran = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            let r = ran.clone();
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                r.fetch_add(1, Ordering::Relaxed);
+            });
+            // pool dropped here while the job may still be running
+        }
+        // shutdown drains queued jobs that already started; the flag only
+        // stops workers once the queue is empty, so the job completed
         assert_eq!(ran.load(Ordering::Relaxed), 1);
     }
 

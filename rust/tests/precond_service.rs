@@ -1,0 +1,206 @@
+//! Integration tests for the async sharded preconditioner service
+//! (DESIGN.md §9): the sync-mode bit-match guarantee against the inline
+//! decomposition path, the max-staleness bound, and schedule-independent
+//! final state in async mode. Everything here runs on the host linalg
+//! substrate — no artifacts required.
+
+use std::collections::BTreeMap;
+
+use bnkfac::linalg::Mat;
+use bnkfac::optim::factor::{FactorState, Stat};
+use bnkfac::optim::{Algo, Hyper, OpRequest, Policy, UpdateOp};
+use bnkfac::precond::{PrecondCfg, PrecondService};
+use bnkfac::runtime::FactorPlan;
+use bnkfac::util::rng::Rng;
+use bnkfac::util::timer::PhaseTimers;
+
+fn plan(layer: &str, side: &str, dim: usize, rank: usize, n: usize, brand: bool) -> FactorPlan {
+    FactorPlan {
+        id: format!("{layer}/{side}"),
+        layer: layer.into(),
+        kind: "fc".into(),
+        side: side.into(),
+        dim,
+        rank,
+        sketch: rank + 4,
+        brand,
+        n,
+        n_crc: (rank / 2).max(1),
+        ops: BTreeMap::new(),
+    }
+}
+
+/// The determinism contract: a sync-mode (staleness 0) service must
+/// reproduce the inline trainer decomposition path bit-for-bit over a
+/// long multi-factor run covering every op kind the B-KFAC-C policy
+/// schedules (RSVD overwrite, Brand, Brand+correction).
+#[test]
+fn sync_service_bitmatches_inline_over_50_steps() {
+    let hyper = Hyper {
+        t_updt: 2,
+        t_inv: 8,
+        t_brand: 4,
+        t_rsvd: 16,
+        t_corct: 8,
+        brand_layer: Some("fc0".into()),
+        ..Hyper::default()
+    };
+    let policy = Policy::new(Algo::BKfacC, hyper);
+    let plans = [
+        plan("fc0", "A", 24, 6, 3, true),  // brand-managed: Brand + corrections
+        plan("fc0", "G", 10, 4, 3, true),  // brand-managed, smaller
+        plan("fc1", "A", 16, 5, 3, true),  // not the brand layer → RSVD path
+    ];
+    let mut t = PhaseTimers::new();
+    let mut inline: Vec<FactorState> = plans
+        .iter()
+        .map(|p| FactorState::new(p.clone(), policy.needs_gram(p)))
+        .collect();
+    // service side: the trainer keeps Gram authority in its factor
+    // states; representations live in (and are published by) the service
+    let mut mirrors: Vec<FactorState> = plans
+        .iter()
+        .map(|p| FactorState::new(p.clone(), policy.needs_gram(p)))
+        .collect();
+    let svc = PrecondService::new(
+        PrecondCfg {
+            workers: 2,
+            max_staleness: 0,
+        },
+        plans.iter().map(|p| p.id.clone()).collect(),
+    );
+    let mut rng_inline = Rng::new(7);
+    let mut rng_svc = Rng::new(7);
+    let mut data_rng = Rng::new(8);
+    let rho = policy.hyper.rho;
+    let mut compared = 0usize;
+    for k in 0..60usize {
+        if k % policy.hyper.t_updt != 0 {
+            continue;
+        }
+        let stats: Vec<Mat> = plans
+            .iter()
+            .map(|p| Mat::gauss(p.dim, p.n, 1.0, &mut data_rng))
+            .collect();
+        for (i, f) in inline.iter_mut().enumerate() {
+            f.stat_update(&Stat::Raw(&stats[i]), rho, None, &mut t).unwrap();
+        }
+        for (i, f) in mirrors.iter_mut().enumerate() {
+            f.stat_update(&Stat::Raw(&stats[i]), rho, None, &mut t).unwrap();
+        }
+        for i in 0..plans.len() {
+            let op = policy.op_at(k, &plans[i]);
+            inline[i]
+                .run_op(op, Some(&stats[i]), rho, &policy, None, &mut rng_inline, &mut t)
+                .unwrap();
+            if let Some(req) = OpRequest::prepare(
+                op,
+                &plans[i],
+                mirrors[i].gram.as_ref(),
+                Some(&stats[i]),
+                rho,
+                &mut rng_svc,
+            ) {
+                svc.submit(i, req, k as u64, None, &mut t).unwrap();
+            }
+        }
+        for i in 0..plans.len() {
+            match (inline[i].rep.as_ref(), svc.cell(i).load_published()) {
+                (Some(want), Some(got)) => {
+                    assert_eq!(want.u.data, got.rep.u.data, "factor {i} U at step {k}");
+                    assert_eq!(want.d, got.rep.d, "factor {i} d at step {k}");
+                    compared += 1;
+                }
+                (None, None) => {}
+                (w, g) => panic!(
+                    "presence mismatch factor {i} step {k}: inline={} svc={}",
+                    w.is_some(),
+                    g.is_some()
+                ),
+            }
+        }
+    }
+    assert!(compared >= 50, "only {compared} comparisons ran");
+    // identical RNG consumption on both sides
+    assert_eq!(rng_inline.next_u64(), rng_svc.next_u64(), "rng drift");
+    svc.drain().unwrap();
+}
+
+/// Property: after `enforce_staleness(k)` returns, no factor has an
+/// unfinished op older than the configured bound — and because shard
+/// queues are FIFO with pre-sampled randomness, the drained final state
+/// equals the sequential execution of the same op stream, bit for bit.
+#[test]
+fn staleness_bound_is_enforced_and_final_state_matches() {
+    for &(workers, bound) in &[(2usize, 1u64), (3, 2), (2, 4)] {
+        let p = plan("fc0", "A", 20, 5, 3, true);
+        let seed = 1000 + workers as u64 * 10 + bound;
+        let svc = PrecondService::new(
+            PrecondCfg {
+                workers,
+                max_staleness: bound as usize,
+            },
+            vec![p.id.clone()],
+        );
+        let mut rng = Rng::new(seed);
+        let mut data_rng = Rng::new(seed + 1);
+        let mut t = PhaseTimers::new();
+        let mut reqs: Vec<OpRequest> = Vec::new();
+        for k in 0..30u64 {
+            svc.enforce_staleness(k);
+            if let Some(oldest) = svc.cell(0).oldest_pending_step() {
+                assert!(
+                    k.saturating_sub(oldest) <= bound,
+                    "staleness bound {bound} violated at step {k} (oldest {oldest})"
+                );
+            }
+            let stat = Mat::gauss(20, 3, 1.0, &mut data_rng);
+            let op = if k == 0 { UpdateOp::Rsvd } else { UpdateOp::Brand };
+            let req = OpRequest::prepare(op, &p, None, Some(&stat), 0.9, &mut rng).unwrap();
+            reqs.push(req.clone());
+            svc.submit(0, req, k, None, &mut t).unwrap();
+        }
+        svc.drain().unwrap();
+        // sequential reference: fold the identical requests in order
+        let mut rep = None;
+        for r in reqs {
+            rep = r.execute(rep, None, &mut t).unwrap();
+        }
+        let want = rep.expect("stream produces a representation");
+        let got = svc.cell(0).load_published().expect("published");
+        assert_eq!(got.step, 29);
+        assert_eq!(want.u.data, got.rep.u.data, "workers={workers} bound={bound}");
+        assert_eq!(want.d, got.rep.d, "workers={workers} bound={bound}");
+        assert_eq!(svc.cell(0).pending_len(), 0);
+    }
+}
+
+/// The counters the run log reports must account for every submission.
+#[test]
+fn service_counters_track_activity() {
+    use std::sync::atomic::Ordering::Relaxed;
+    let p = plan("fc0", "A", 16, 4, 2, true);
+    let svc = PrecondService::new(
+        PrecondCfg {
+            workers: 2,
+            max_staleness: 3,
+        },
+        vec![p.id.clone()],
+    );
+    let mut rng = Rng::new(5);
+    let mut data_rng = Rng::new(6);
+    let mut t = PhaseTimers::new();
+    for k in 0..20u64 {
+        svc.enforce_staleness(k);
+        let stat = Mat::gauss(16, 2, 1.0, &mut data_rng);
+        let op = if k == 0 { UpdateOp::Rsvd } else { UpdateOp::Brand };
+        let req = OpRequest::prepare(op, &p, None, Some(&stat), 0.9, &mut rng).unwrap();
+        svc.submit(0, req, k, None, &mut t).unwrap();
+    }
+    svc.drain().unwrap();
+    let c = svc.counters();
+    assert_eq!(c.submitted.load(Relaxed), 20);
+    assert_eq!(c.completed.load(Relaxed), 20);
+    assert!(c.max_queue_depth.load(Relaxed) >= 1);
+    assert!(svc.worker_busy_seconds() >= 0.0);
+}

@@ -1,0 +1,46 @@
+//! Offline stand-in for the `log` facade: the five level macros, written
+//! straight to stderr. Verbosity is controlled by `BNKFAC_LOG`
+//! (unset → warn+error only; any value → all levels).
+
+#[doc(hidden)]
+pub fn __emit(level: &str, always: bool, msg: std::fmt::Arguments<'_>) {
+    if always || std::env::var_os("BNKFAC_LOG").is_some() {
+        eprintln!("[{level}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", false, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand() {
+        // smoke test: must compile and not panic
+        info!("x = {}", 1);
+        debug!("y");
+        trace!("z");
+    }
+}

@@ -1,0 +1,124 @@
+//! API-shaped stub of the XLA/PJRT rust bindings used by `bnkfac::runtime`.
+//!
+//! The offline build environment carries no PJRT shared library, so this
+//! crate provides the exact type/method surface the runtime layer links
+//! against, with `PjRtClient::cpu()` reporting unavailability. Every
+//! code path that would execute an artifact therefore fails fast at
+//! `Runtime::open` with a clear message, while the host-linalg fallback
+//! paths (`rt = None`) remain fully functional. Swapping this path
+//! dependency for the real bindings re-enables artifact execution with
+//! zero changes to `bnkfac`.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime not available in this build (vendor stub); \
+         host linalg paths remain functional"
+            .to_string(),
+    ))
+}
+
+/// Element types exchangeable with literals.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("stub must error");
+        assert!(e.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn literal_constructors_are_usable() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2, 1]).is_ok());
+        let mut l = Literal::scalar(3.0);
+        assert!(l.decompose_tuple().is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
