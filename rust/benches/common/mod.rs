@@ -56,10 +56,17 @@ pub fn env_flag(key: &str) -> bool {
 /// and future PRs diff against.
 #[allow(dead_code)]
 pub fn update_bench_json(section: &str, value: bnkfac::util::ser::Json) {
+    update_bench_json_file("BENCH_scaling.json", section, value);
+}
+
+/// Same, but into an arbitrary repo-root JSON artifact (e.g.
+/// `BENCH_server.json` for the multi-tenant throughput trajectory).
+#[allow(dead_code)]
+pub fn update_bench_json_file(file: &str, section: &str, value: bnkfac::util::ser::Json) {
     use bnkfac::util::ser::Json;
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
-        .join("BENCH_scaling.json");
+        .join(file);
     let mut root = std::fs::read_to_string(&path)
         .ok()
         .and_then(|t| Json::parse(&t).ok())
@@ -70,7 +77,8 @@ pub fn update_bench_json(section: &str, value: bnkfac::util::ser::Json) {
     if let Json::Obj(m) = &mut root {
         m.insert(section.to_string(), value);
     }
-    std::fs::write(&path, root.to_string_pretty()).expect("write BENCH_scaling.json");
+    std::fs::write(&path, root.to_string_pretty())
+        .unwrap_or_else(|e| panic!("write {file}: {e}"));
     println!("[updated {} section '{section}']", path.display());
 }
 

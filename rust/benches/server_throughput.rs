@@ -1,0 +1,139 @@
+//! E7 — multi-tenant serving throughput (DESIGN.md §11.7).
+//!
+//! Measures aggregate optimizer steps/sec for N concurrent host sessions
+//! sharing one decomposition pool versus the same N sessions run
+//! sequentially (one at a time, each with the same server config). The
+//! concurrency win comes from two overlaps the session server creates:
+//! decomposition ops of different tenants filling the shared workers,
+//! and one tenant's cheap apply steps hiding another's decompositions.
+//!
+//! Emits the `server_throughput` section of BENCH_server.json at the
+//! repo root: aggregate steps/sec at 1/2/4 concurrent sessions vs the
+//! 4-session sequential baseline, plus the speedup ratio (the ≥2×
+//! acceptance target for the multi-tenant server PR).
+//!
+//! Env: BNKFAC_SRV_D (factor dim, default 256), BNKFAC_SRV_STEPS
+//! (steps per session, default 12), BNKFAC_SRV_WORKERS (default 4).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use bnkfac::optim::Algo;
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager};
+use bnkfac::util::ser::Json;
+use common::{env_usize, update_bench_json_file, Table};
+
+fn session_cfg(seed: u64, dim: usize, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 1,
+        dim,
+        // wide Brand chain → each decomposition op is genuinely heavy
+        // relative to the apply half of a step (the regime the server's
+        // overlap targets)
+        rank: 48,
+        n_stat: 16,
+        grad_cols: 8,
+        t_updt: 2,
+        algo: Algo::BKfac,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+/// Wall seconds to run `n` sessions concurrently on one server.
+fn run_concurrent(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers,
+        max_sessions: n.max(1),
+        staleness: 1,
+    });
+    for i in 0..n {
+        mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps))
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    mgr.run_to_completion(10_000_000).unwrap();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Wall seconds to run the same `n` sessions one after another.
+fn run_sequential(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
+    let mut total = 0.0;
+    for i in 0..n {
+        let mut mgr = SessionManager::new(ServerCfg {
+            workers,
+            max_sessions: 1,
+            staleness: 1,
+        });
+        mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps))
+            .unwrap();
+        let t0 = Instant::now();
+        mgr.run_to_completion(10_000_000).unwrap();
+        total += t0.elapsed().as_secs_f64();
+    }
+    total
+}
+
+fn main() {
+    let dim = env_usize("BNKFAC_SRV_D", 384);
+    let steps = env_usize("BNKFAC_SRV_STEPS", 12) as u64;
+    let workers = env_usize("BNKFAC_SRV_WORKERS", 4);
+    // pin the host linalg to one thread per op so worker-level scaling is
+    // what gets measured (not nested gemm parallelism oversubscribing)
+    if std::env::var("BNKFAC_THREADS").is_err() {
+        std::env::set_var("BNKFAC_THREADS", "1");
+        println!("(pinned BNKFAC_THREADS=1 for clean worker scaling)");
+    }
+
+    println!("server throughput: dim={dim} steps/session={steps} workers={workers}");
+    let mut table = Table::new(&["sessions", "mode", "wall_s", "agg steps/s"]);
+    let mut sections = Vec::new();
+
+    // warmup (thread pools, allocator)
+    let _ = run_concurrent(1, workers, dim, steps.min(4));
+
+    let mut concurrent4 = 0.0;
+    for &n in &[1usize, 2, 4] {
+        let wall = run_concurrent(n, workers, dim, steps);
+        let sps = (n as u64 * steps) as f64 / wall;
+        if n == 4 {
+            concurrent4 = sps;
+        }
+        table.row(vec![
+            n.to_string(),
+            "concurrent".into(),
+            format!("{wall:.3}"),
+            format!("{sps:.1}"),
+        ]);
+        sections.push((format!("concurrent_{n}"), Json::Num(sps)));
+    }
+    let seq_wall = run_sequential(4, workers, dim, steps);
+    let seq_sps = (4 * steps) as f64 / seq_wall;
+    table.row(vec![
+        "4".into(),
+        "sequential".into(),
+        format!("{seq_wall:.3}"),
+        format!("{seq_sps:.1}"),
+    ]);
+    table.print();
+
+    let speedup = concurrent4 / seq_sps;
+    println!("4-session concurrent vs sequential speedup: {speedup:.2}x (target ≥ 2x)");
+
+    let mut obj = vec![
+        ("dim", Json::Num(dim as f64)),
+        ("steps_per_session", Json::Num(steps as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("sequential_4", Json::Num(seq_sps)),
+        ("speedup_4", Json::Num(speedup)),
+    ];
+    let owned: Vec<(String, Json)> = sections;
+    for (k, v) in &owned {
+        obj.push((k.as_str(), v.clone()));
+    }
+    update_bench_json_file("BENCH_server.json", "server_throughput", Json::obj(obj));
+}

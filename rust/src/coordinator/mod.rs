@@ -8,4 +8,4 @@
 pub mod probe;
 pub mod trainer;
 
-pub use trainer::{Trainer, TrainerCfg};
+pub use trainer::{Trainer, TrainerCfg, TrainerState};

@@ -26,12 +26,12 @@ use crate::data::{Batch, Dataset};
 use crate::linalg::Mat;
 use crate::metrics::{EvalRecord, RunLog, ServiceRecord, TrainRecord};
 use crate::model::{BnState, ParamStore};
-use crate::optim::factor::{FactorState, OpRequest, Stat};
+use crate::optim::factor::{FactorSnapshot, FactorState, OpRequest, Stat};
 use crate::optim::{Algo, Hyper, LayerState, Policy};
 use crate::optim::seng::SengState;
 use crate::precond::{PrecondCfg, PrecondService};
-use crate::runtime::{Runtime, Value};
-use crate::util::rng::Rng;
+use crate::runtime::{Manifest, Runtime, Value};
+use crate::util::rng::{Rng, RngState};
 use crate::util::threadpool;
 use crate::util::timer::PhaseTimers;
 
@@ -114,8 +114,51 @@ pub struct StepStats {
     pub acc: f32,
 }
 
+/// The resumable half of a [`Trainer`] — everything the training
+/// trajectory depends on, detached from the runtime/config/artifacts
+/// (which are rebuilt from the manifest on restore). Serialized by
+/// `server::ckpt`; restoring it continues the run bit-identically.
+#[derive(Clone, Debug)]
+pub struct TrainerState {
+    pub step: usize,
+    pub rng: RngState,
+    /// parameter tensors by name (canonical `ParamStore` order)
+    pub params: Vec<(String, Vec<f32>)>,
+    pub bn_means: Vec<(String, Vec<f32>)>,
+    pub bn_vars: Vec<(String, Vec<f32>)>,
+    pub bn_initialized: bool,
+    /// per-factor snapshots, `2*layer + {0=A, 1=G}` order
+    pub factors: Vec<FactorSnapshot>,
+}
+
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: TrainerCfg) -> Result<Trainer<'rt>> {
+        let service = cfg.precond.as_ref().map(|pc| {
+            PrecondService::new(pc.clone(), Self::factor_ids(&rt.manifest))
+        });
+        Self::with_service(rt, cfg, service)
+    }
+
+    /// Cell ids of the per-factor decomposition shards, in the order the
+    /// trainer submits to them (`2*layer + {0=A, 1=G}`).
+    pub fn factor_ids(manifest: &Manifest) -> Vec<String> {
+        let mut ids = Vec::with_capacity(manifest.layers.len() * 2);
+        for l in &manifest.layers {
+            ids.push(l.factors[0].id.clone());
+            ids.push(l.factors[1].id.clone());
+        }
+        ids
+    }
+
+    /// Build a trainer around an externally constructed preconditioner
+    /// service — the multi-tenant server path, where the service is in
+    /// shared mode over the server's worker pool. `service = None` is
+    /// the historical inline decomposition path.
+    pub fn with_service(
+        rt: &'rt Runtime,
+        cfg: TrainerCfg,
+        service: Option<PrecondService>,
+    ) -> Result<Trainer<'rt>> {
         let manifest = &rt.manifest;
         let mut rng = Rng::new(cfg.seed);
         let params = ParamStore::init(manifest, &mut rng);
@@ -162,14 +205,14 @@ impl<'rt> Trainer<'rt> {
             .filter(|l| l.kind == "fc" && l.dropout > 0.0)
             .map(|l| (l.name.clone(), l.dropout, l.d_a - 1))
             .collect();
-        let service = cfg.precond.as_ref().map(|pc| {
-            let mut ids = Vec::with_capacity(layers.len() * 2);
-            for l in &layers {
-                ids.push(l.a.plan.id.clone());
-                ids.push(l.g.plan.id.clone());
-            }
-            PrecondService::new(pc.clone(), ids)
-        });
+        if let Some(svc) = &service {
+            anyhow::ensure!(
+                svc.n_cells() == layers.len() * 2,
+                "preconditioner service has {} cells, model needs {}",
+                svc.n_cells(),
+                layers.len() * 2
+            );
+        }
         let installed_versions = vec![0u64; layers.len() * 2];
         Ok(Trainer {
             rt,
@@ -211,15 +254,6 @@ impl<'rt> Trainer<'rt> {
             .unwrap_or_else(|| panic!("train_step has no output '{name}'"))]
     }
 
-    fn out_light<'a>(&self, outs: &'a [Value], name: &str) -> &'a Value {
-        let idx = self
-            .out_idx_light
-            .as_ref()
-            .expect("light artifact")
-            .get(name)
-            .unwrap_or_else(|| panic!("train_step_light has no output '{name}'"));
-        &outs[*idx]
-    }
 
     /// Execute one optimizer step on a batch. `epoch` drives schedules.
     pub fn train_step(&mut self, batch: &Batch, epoch: usize) -> Result<StepStats> {
@@ -626,6 +660,112 @@ impl<'rt> Trainer<'rt> {
             svc.drain()?;
         }
         self.install_published(self.step as u64);
+        Ok(())
+    }
+
+    /// Non-blocking probe: would the next step's staleness enforcement
+    /// pass without waiting? The multi-tenant server pauses the session
+    /// when this is false instead of letting `train_step` block.
+    pub fn staleness_ok(&self) -> bool {
+        match &self.service {
+            None => true,
+            Some(svc) => svc.staleness_ok(self.step as u64),
+        }
+    }
+
+    /// Extract the resumable state (see [`TrainerState`]). Pair with
+    /// [`drain_service`](Self::drain_service) first so no decomposition
+    /// is in flight.
+    pub fn snapshot_state(&self) -> TrainerState {
+        let params = self
+            .params
+            .names()
+            .iter()
+            .map(|n| (n.clone(), self.params.get(n).data().to_vec()))
+            .collect();
+        let bn_means = self
+            .bn
+            .means
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let bn_vars = self
+            .bn
+            .vars
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let mut factors = Vec::with_capacity(self.layers.len() * 2);
+        for l in &self.layers {
+            factors.push(l.a.snapshot());
+            factors.push(l.g.snapshot());
+        }
+        TrainerState {
+            step: self.step,
+            rng: self.rng.state(),
+            params,
+            bn_means,
+            bn_vars,
+            bn_initialized: self.bn.initialized(),
+            factors,
+        }
+    }
+
+    /// Restore a state captured by [`snapshot_state`](Self::snapshot_state)
+    /// into a freshly constructed trainer (same manifest/config). If a
+    /// service is attached, its cells must have been seeded BEFORE this
+    /// call (`PrecondService::seed`) — install bookkeeping is re-synced
+    /// here so seeded publications are not re-installed.
+    pub fn restore_state(&mut self, st: TrainerState) -> Result<()> {
+        anyhow::ensure!(
+            st.factors.len() == self.layers.len() * 2,
+            "state has {} factors, model needs {}",
+            st.factors.len(),
+            self.layers.len() * 2
+        );
+        self.step = st.step;
+        self.rng = Rng::from_state(&st.rng);
+        for (name, data) in &st.params {
+            let t = self.params.get_mut(name);
+            anyhow::ensure!(
+                t.data().len() == data.len(),
+                "param '{name}' length changed"
+            );
+            t.data_mut().copy_from_slice(data);
+        }
+        for (name, data) in &st.bn_means {
+            let slot = self
+                .bn
+                .means
+                .get_mut(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown bn layer '{name}'"))?;
+            anyhow::ensure!(slot.len() == data.len(), "bn '{name}' length changed");
+            slot.copy_from_slice(data);
+        }
+        for (name, data) in &st.bn_vars {
+            let slot = self
+                .bn
+                .vars
+                .get_mut(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown bn layer '{name}'"))?;
+            anyhow::ensure!(slot.len() == data.len(), "bn '{name}' length changed");
+            slot.copy_from_slice(data);
+        }
+        if st.bn_initialized {
+            self.bn.mark_initialized();
+        }
+        let mut it = st.factors.into_iter();
+        for l in self.layers.iter_mut() {
+            l.a.restore(it.next().unwrap());
+            l.g.restore(it.next().unwrap());
+        }
+        // seeded publications are already reflected in the restored reps;
+        // start install tracking from the current published versions
+        if let Some(svc) = &self.service {
+            for (i, v) in self.installed_versions.iter_mut().enumerate() {
+                *v = svc.cell(i).published_version();
+            }
+        }
         Ok(())
     }
 

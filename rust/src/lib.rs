@@ -6,7 +6,8 @@
 //!
 //! - **L3 (this crate)**: training coordinator — the decomposition-update
 //!   scheduler, the six optimizers (K-FAC, R-KFAC, B-KFAC, B-R-KFAC,
-//!   B-KFAC-C, SENG), data pipeline, metrics, CLI.
+//!   B-KFAC-C, SENG), data pipeline, metrics, CLI, and the multi-tenant
+//!   training session server (`server`, `bnkfac serve`).
 //! - **L2/L1 (python/compile, build-time only)**: JAX model fwd/bwd and
 //!   Pallas kernels, AOT-lowered to HLO text in `artifacts/`, executed
 //!   here through the PJRT CPU client (`runtime`).
@@ -21,4 +22,5 @@ pub mod model;
 pub mod optim;
 pub mod precond;
 pub mod runtime;
+pub mod server;
 pub mod util;

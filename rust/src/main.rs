@@ -4,11 +4,12 @@
 //!   info           inspect an artifact directory
 //!   train          train with any optimizer, log curves to CSV
 //!   error-study    §4.2 probe: per-step error metrics vs exact benchmark
+//!   serve          multi-tenant session server driven by a job file
 //!
 //! All experiment harnesses (Fig 1/2, Tables 1/2, scaling) live in
 //! `cargo bench` targets; see README.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use bnkfac::coordinator::probe::ErrorProbe;
 use bnkfac::coordinator::{Trainer, TrainerCfg};
@@ -24,8 +25,36 @@ fn main() -> Result<()> {
         Some("info") | None => cmd_info(&args),
         Some("train") => cmd_train(&args),
         Some("error-study") => cmd_error_study(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (info|train|error-study)"),
+        Some("serve") => cmd_serve(&args),
+        Some(other) => bail!("unknown subcommand '{other}' (info|train|error-study|serve)"),
     }
+}
+
+/// Multi-tenant session server, driven by a scripted job file (see
+/// `server::driver` for the format; `examples/jobs_smoke.json` is a
+/// runnable sample). Runs entirely on the host substrate — no artifacts
+/// or PJRT needed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args
+        .get("jobs")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("serve requires --jobs <file>"))?;
+    let workers = args.get_usize("workers", 0);
+    let workers = (workers > 0).then_some(workers);
+    let max_rounds = args.get_u64("max-rounds", 1_000_000);
+    let out = args.get("out").map(|s| s.to_string());
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let rec = bnkfac::server::driver::run_jobs(&jobs, workers, max_rounds)?;
+    println!("--- session server ---\n{}", rec.summary());
+    if let Some(path) = out {
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, rec.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn open_runtime(args: &Args) -> Result<Runtime> {

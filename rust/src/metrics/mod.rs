@@ -110,6 +110,116 @@ impl ServiceRecord {
     }
 }
 
+/// Per-session slice of a multi-tenant server run (DESIGN.md §11.6).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionRecord {
+    pub id: u64,
+    pub name: String,
+    pub weight: u32,
+    /// optimizer steps served
+    pub steps: u64,
+    /// decomposition ops submitted / completed by this tenant
+    pub submitted: u64,
+    pub completed: u64,
+    /// fraction of all scheduler dispatches that went to this tenant
+    pub ops_share: f64,
+    /// wall time this session spent paused on backpressure
+    pub pause_s: f64,
+    pub paused_rounds: u64,
+    pub status: String,
+    /// first error the session hit (empty when healthy)
+    pub error: String,
+}
+
+impl SessionRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("name", Json::str(&self.name)),
+            ("weight", Json::Num(self.weight as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("ops_share", Json::Num(self.ops_share)),
+            ("pause_s", Json::Num(self.pause_s)),
+            ("paused_rounds", Json::Num(self.paused_rounds as f64)),
+            ("status", Json::str(&self.status)),
+            ("error", Json::str(&self.error)),
+        ])
+    }
+}
+
+/// End-of-run snapshot of the multi-tenant session server: aggregate
+/// throughput, scheduling fairness (Jain index over weight-normalized
+/// service), and the per-session queue shares / pause times.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServerRecord {
+    pub workers: usize,
+    pub max_sessions: usize,
+    pub rounds: u64,
+    pub wall_s: f64,
+    pub total_steps: u64,
+    pub steps_per_s: f64,
+    /// Jain fairness over per-tenant (ops served / weight); 1.0 = ideal
+    pub fairness_jain: f64,
+    /// seconds the shared pool's workers spent executing ops
+    pub worker_busy_s: f64,
+    pub sessions: Vec<SessionRecord>,
+}
+
+impl ServerRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("max_sessions", Json::Num(self.max_sessions as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("total_steps", Json::Num(self.total_steps as f64)),
+            ("steps_per_s", Json::Num(self.steps_per_s)),
+            ("fairness_jain", Json::Num(self.fairness_jain)),
+            ("worker_busy_s", Json::Num(self.worker_busy_s)),
+            (
+                "sessions",
+                Json::Arr(self.sessions.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable per-session summary table.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "workers={} sessions={} rounds={} wall={:.2}s agg={:.1} steps/s \
+             fairness={:.3}\n",
+            self.workers,
+            self.sessions.len(),
+            self.rounds,
+            self.wall_s,
+            self.steps_per_s,
+            self.fairness_jain
+        );
+        for s in &self.sessions {
+            out.push_str(&format!(
+                "  [{}] {:<12} w={} steps={} ops={}/{} share={:.2} \
+                 paused={} ({:.3}s) {}\n",
+                s.id,
+                s.name,
+                s.weight,
+                s.steps,
+                s.completed,
+                s.submitted,
+                s.ops_share,
+                s.paused_rounds,
+                s.pause_s,
+                s.status
+            ));
+            if !s.error.is_empty() {
+                out.push_str(&format!("      error: {}\n", s.error));
+            }
+        }
+        out
+    }
+}
+
 /// Collects the curves a run produces and serializes them.
 #[derive(Default, Clone, Debug)]
 pub struct RunLog {
@@ -237,6 +347,39 @@ mod tests {
         assert_eq!(log.service_summary(), "");
         log.service = Some(rec);
         assert!(log.service_summary().contains("\"installs\""));
+    }
+
+    #[test]
+    fn server_record_serializes() {
+        let rec = ServerRecord {
+            workers: 4,
+            max_sessions: 8,
+            rounds: 100,
+            wall_s: 2.0,
+            total_steps: 96,
+            steps_per_s: 48.0,
+            fairness_jain: 0.98,
+            worker_busy_s: 6.5,
+            sessions: vec![SessionRecord {
+                id: 1,
+                name: "a".into(),
+                weight: 2,
+                steps: 48,
+                submitted: 24,
+                completed: 24,
+                ops_share: 0.5,
+                pause_s: 0.01,
+                paused_rounds: 3,
+                status: "Done".into(),
+                error: String::new(),
+            }],
+        };
+        let j = rec.to_json();
+        assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
+        let sessions = j.get("sessions").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions[0].get("name").and_then(|v| v.as_str()), Some("a"));
+        assert!(rec.summary().contains("fairness=0.980"));
     }
 
     #[test]

@@ -190,6 +190,12 @@ impl BnState {
         self.initialized = true;
     }
 
+    /// Whether the first batch's stats have been absorbed (checkpointed
+    /// so a restored run keeps the EA warmup semantics).
+    pub fn initialized(&self) -> bool {
+        self.initialized
+    }
+
     /// eval_step bn inputs: all means then all vars, manifest layer order.
     pub fn as_values(&self, manifest: &Manifest) -> Vec<Value> {
         let mut out = Vec::new();

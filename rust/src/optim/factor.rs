@@ -355,6 +355,28 @@ impl FactorState {
         Ok(())
     }
 
+    // ------------------------------------------------- snapshot/restore
+
+    /// Serializable snapshot of the mutable factor state (checkpointing;
+    /// the immutable `plan` is re-derived from the manifest/config on
+    /// restore).
+    pub fn snapshot(&self) -> FactorSnapshot {
+        FactorSnapshot {
+            gram: self.gram.clone(),
+            rep: self.rep.clone(),
+            seen_stats: self.seen_stats,
+        }
+    }
+
+    /// Restore a snapshot taken by [`snapshot`](Self::snapshot). The
+    /// EA-decay warmup flag is part of the state: restoring `seen_stats`
+    /// keeps the κ(0)=1 first-update semantics bit-identical.
+    pub fn restore(&mut self, s: FactorSnapshot) {
+        self.gram = s.gram;
+        self.rep = s.rep;
+        self.seen_stats = s.seen_stats;
+    }
+
     // ------------------------------------------------------------ apply
 
     /// Inputs for the `precond` artifact: (U zero-padded to width k_pad,
@@ -383,6 +405,15 @@ impl FactorState {
         d[..r].copy_from_slice(&d_eff[..r]);
         (u, d, lam_eff.max(1e-8))
     }
+}
+
+/// Mutable half of a [`FactorState`], detached for checkpoint/resume
+/// (see `server::ckpt`).
+#[derive(Clone, Debug)]
+pub struct FactorSnapshot {
+    pub gram: Option<Mat>,
+    pub rep: Option<LowRank>,
+    pub seen_stats: bool,
 }
 
 /// Gaussian RSVD sketch for a factor plan (dim × sketch). Kept as a free

@@ -11,7 +11,7 @@ pub mod layer;
 pub mod policy;
 pub mod seng;
 
-pub use factor::{FactorState, OpRequest};
+pub use factor::{FactorSnapshot, FactorState, OpRequest};
 pub use layer::LayerState;
 pub use policy::{Algo, Policy, UpdateOp};
 

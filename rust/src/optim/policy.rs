@@ -24,7 +24,7 @@ impl Algo {
         Some(match s.to_ascii_lowercase().as_str() {
             "sgd" => Algo::Sgd,
             "seng" => Algo::Seng,
-            "kfac" => Algo::KfacExact,
+            "kfac" | "k-fac" => Algo::KfacExact,
             "rkfac" | "r-kfac" | "rs-kfac" => Algo::RKfac,
             "bkfac" | "b-kfac" => Algo::BKfac,
             "brkfac" | "b-r-kfac" => Algo::BRKfac,

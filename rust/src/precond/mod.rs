@@ -24,6 +24,12 @@
 //! every factor reaches exactly the representations sync mode produces,
 //! just later — the trainer meanwhile preconditions with the latest
 //! published (possibly stale, always complete) decomposition.
+//!
+//! Multi-tenant mode ([`PrecondService::shared`], DESIGN.md §11): many
+//! services share ONE worker pool, and instead of direct FIFO drain
+//! jobs, ops are dispatched by the session server's weighted fair-share
+//! scheduler (`server::sched`) — per-cell FIFO (and hence the
+//! schedule-independence guarantee) is preserved.
 
 pub mod service;
 pub mod state;

@@ -27,6 +27,7 @@ use anyhow::{anyhow, Result};
 use crate::linalg::LowRank;
 use crate::optim::OpRequest;
 use crate::runtime::Runtime;
+use crate::server::sched::{FairScheduler, ReadyCell};
 use crate::util::threadpool::WorkerPool;
 use crate::util::timer::PhaseTimers;
 
@@ -61,8 +62,11 @@ struct CellWork {
     queue: VecDeque<PendingTask>,
     /// worker-side authoritative representation (the op-chain state)
     rep: Option<LowRank>,
-    /// a worker is currently draining this cell's queue
+    /// a worker is currently draining this cell's queue (own-pool mode)
     busy: bool,
+    /// the cell sits in a scheduler ready-queue or is being drained by a
+    /// dispatch job (shared-pool mode)
+    scheduled: bool,
     /// submission steps of queued + in-flight ops (front = oldest)
     pending_steps: VecDeque<u64>,
     /// first worker error, surfaced on the next drain
@@ -78,13 +82,14 @@ pub struct FactorCell {
 }
 
 impl FactorCell {
-    fn new(id: String) -> FactorCell {
+    pub(crate) fn new(id: String) -> FactorCell {
         FactorCell {
             id,
             work: Mutex::new(CellWork {
                 queue: VecDeque::new(),
                 rep: None,
                 busy: false,
+                scheduled: false,
                 pending_steps: VecDeque::new(),
                 failed: None,
             }),
@@ -141,36 +146,39 @@ impl FactorCell {
         }
     }
 
-    /// Worker body: drain this cell's queue until empty. The `busy` flag
-    /// guarantees a single drainer per cell, serializing the op chain.
-    fn drain_worker(cell: Arc<FactorCell>, counters: Arc<ServiceCounters>) {
-        loop {
-            let (task, prev, chain_failed) = {
-                let mut w = cell.work.lock().unwrap();
-                match w.queue.pop_front() {
-                    Some(t) => {
-                        let chain_failed = w.failed.is_some();
-                        let prev = w.rep.take();
-                        (t, prev, chain_failed)
-                    }
-                    None => {
-                        w.busy = false;
-                        cell.cv.notify_all();
-                        return;
-                    }
+    /// Pop and execute exactly ONE queued op. Returns whether more ops
+    /// remain queued afterwards; when the queue is found (or left) empty
+    /// the `scheduled` flag is cleared under the same lock, so shared-
+    /// mode re-enqueue decisions race-free compose with `submit`.
+    ///
+    /// This is the unit of work both drain paths share: the own-pool
+    /// `drain_worker` loop and the fair-share scheduler's per-op dispatch
+    /// (`server::sched`, DESIGN.md §11) — per-cell serialization (one
+    /// drainer at a time) is the caller's responsibility via `busy` /
+    /// `scheduled`.
+    pub(crate) fn drain_one(cell: &Arc<FactorCell>, counters: &ServiceCounters) -> bool {
+        let (task, prev, chain_failed) = {
+            let mut w = cell.work.lock().unwrap();
+            match w.queue.pop_front() {
+                Some(t) => {
+                    let chain_failed = w.failed.is_some();
+                    let prev = w.rep.take();
+                    (t, prev, chain_failed)
                 }
-            };
-            if chain_failed {
-                // an earlier op in this cell's chain failed: executing
-                // successors against the rolled-back rep would silently
-                // corrupt the chain — discard them (still accounted)
-                let mut w = cell.work.lock().unwrap();
-                w.rep = prev;
-                w.pending_steps.pop_front();
-                counters.completed.fetch_add(1, Ordering::Relaxed);
-                cell.cv.notify_all();
-                continue;
+                None => {
+                    w.scheduled = false;
+                    return false;
+                }
             }
+        };
+        let mut w;
+        if chain_failed {
+            // an earlier op in this cell's chain failed: executing
+            // successors against the rolled-back rep would silently
+            // corrupt the chain — discard them (still accounted below)
+            w = cell.work.lock().unwrap();
+            w.rep = prev;
+        } else {
             // compute OUTSIDE the cell lock: the trainer stays free to
             // submit to (or read from) this factor while we decompose.
             // Panics are caught — an unwinding worker would otherwise
@@ -181,7 +189,7 @@ impl FactorCell {
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 task.req.execute(prev, None, &mut timers)
             }));
-            let mut w = cell.work.lock().unwrap();
+            w = cell.work.lock().unwrap();
             match result {
                 Ok(Ok(Some(rep))) => {
                     w.rep = Some(rep.clone());
@@ -206,10 +214,47 @@ impl FactorCell {
                     }
                 }
             }
-            w.pending_steps.pop_front();
-            counters.completed.fetch_add(1, Ordering::Relaxed);
-            cell.cv.notify_all();
         }
+        w.pending_steps.pop_front();
+        counters.completed.fetch_add(1, Ordering::Relaxed);
+        cell.cv.notify_all();
+        let more = !w.queue.is_empty();
+        if !more {
+            w.scheduled = false;
+        }
+        more
+    }
+
+    /// Worker body (own-pool mode): drain this cell's queue until empty.
+    /// The `busy` flag guarantees a single drainer per cell, serializing
+    /// the op chain.
+    fn drain_worker(cell: Arc<FactorCell>, counters: Arc<ServiceCounters>) {
+        loop {
+            if !FactorCell::drain_one(&cell, &counters) {
+                let mut w = cell.work.lock().unwrap();
+                // re-check under the lock: a submit that observed
+                // busy=true may have queued between drain_one and here
+                if w.queue.is_empty() {
+                    w.busy = false;
+                    cell.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drop all ops that have not started executing (graceful shutdown).
+    /// The in-flight op (if any) keeps its `pending_steps` head and
+    /// completes normally. Returns the number of cancelled ops.
+    pub(crate) fn cancel_pending(&self) -> usize {
+        let mut w = self.work.lock().unwrap();
+        let dropped = w.queue.len();
+        w.queue.clear();
+        for _ in 0..dropped {
+            w.pending_steps.pop_back();
+        }
+        self.cv.notify_all();
+        dropped
     }
 
     /// Block until the oldest unfinished op is within `bound` steps of
@@ -259,18 +304,51 @@ impl ServiceCounters {
     }
 }
 
+/// Shared-pool dispatch context: this service belongs to one tenant
+/// (`key`) of a multi-session server; its decomposition ops go through
+/// the fair-share scheduler instead of direct FIFO drain jobs.
+struct SharedCtx {
+    sched: Arc<FairScheduler>,
+    key: u64,
+}
+
 /// The per-layer-sharded asynchronous preconditioner service.
 pub struct PrecondService {
     cfg: PrecondCfg,
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     cells: Vec<Arc<FactorCell>>,
     counters: Arc<ServiceCounters>,
+    shared: Option<SharedCtx>,
 }
 
 impl PrecondService {
     /// One cell per factor id (the trainer uses `2*layer + {0=A, 1=G}`).
+    /// The service owns a private worker pool (single-tenant mode).
     pub fn new(cfg: PrecondCfg, factor_ids: Vec<String>) -> PrecondService {
-        let pool = WorkerPool::new(cfg.workers.max(1));
+        let pool = Arc::new(WorkerPool::new(cfg.workers.max(1)));
+        Self::build(cfg, factor_ids, pool, None)
+    }
+
+    /// Multi-tenant mode: ops are executed by the SHARED `pool`, and the
+    /// choice of which tenant's op runs next is delegated to the
+    /// fair-share scheduler (`server::sched`). `key` must have been
+    /// registered with the scheduler (the session id).
+    pub fn shared(
+        cfg: PrecondCfg,
+        factor_ids: Vec<String>,
+        pool: Arc<WorkerPool>,
+        sched: Arc<FairScheduler>,
+        key: u64,
+    ) -> PrecondService {
+        Self::build(cfg, factor_ids, pool, Some(SharedCtx { sched, key }))
+    }
+
+    fn build(
+        cfg: PrecondCfg,
+        factor_ids: Vec<String>,
+        pool: Arc<WorkerPool>,
+        shared: Option<SharedCtx>,
+    ) -> PrecondService {
         let cells = factor_ids
             .into_iter()
             .map(|id| Arc::new(FactorCell::new(id)))
@@ -280,6 +358,7 @@ impl PrecondService {
             pool,
             cells,
             counters: Arc::new(ServiceCounters::default()),
+            shared,
         }
     }
 
@@ -347,12 +426,35 @@ impl PrecondService {
         w.queue.push_back(PendingTask { req, step });
         w.pending_steps.push_back(step);
         ServiceCounters::note_max(&counters.max_queue_depth, w.pending_steps.len() as u64);
-        if !w.busy {
-            w.busy = true;
-            let cell = cell.clone();
-            let ctr = counters.clone();
-            self.pool
-                .submit(move || FactorCell::drain_worker(cell, ctr));
+        match &self.shared {
+            None => {
+                if !w.busy {
+                    w.busy = true;
+                    let cell = cell.clone();
+                    let ctr = counters.clone();
+                    self.pool
+                        .submit(move || FactorCell::drain_worker(cell, ctr));
+                }
+            }
+            Some(ctx) => {
+                // hand the cell to the fair-share scheduler (once per
+                // burst; the dispatcher re-enqueues while ops remain) and
+                // add one dispatch job per op so pool parallelism tracks
+                // the amount of outstanding work
+                if !w.scheduled {
+                    w.scheduled = true;
+                    ctx.sched.enqueue(
+                        ctx.key,
+                        ReadyCell {
+                            cell: cell.clone(),
+                            counters: counters.clone(),
+                        },
+                    );
+                }
+                drop(w);
+                let sched = ctx.sched.clone();
+                self.pool.submit(move || sched.dispatch());
+            }
         }
         Ok(())
     }
@@ -397,6 +499,70 @@ impl PrecondService {
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
+        }
+    }
+
+    /// Non-blocking staleness probe: would `enforce_staleness(step)` pass
+    /// without waiting? The multi-tenant server uses this to PAUSE a
+    /// session that hit its bound instead of blocking the serving loop.
+    pub fn staleness_ok(&self, step: u64) -> bool {
+        if self.is_sync() {
+            return true;
+        }
+        let bound = self.cfg.max_staleness as u64;
+        self.cells.iter().all(|c| match c.oldest_pending_step() {
+            None => true,
+            Some(oldest) => step.saturating_sub(oldest) <= bound,
+        })
+    }
+
+    /// Total queued + in-flight ops across all cells.
+    pub fn pending_total(&self) -> usize {
+        self.cells.iter().map(|c| c.pending_len()).sum()
+    }
+
+    /// Checkpoint support: the worker-side authoritative representation
+    /// (Brand-chain position) and the step of the latest published
+    /// snapshot. Only meaningful after [`drain`](Self::drain) — with ops
+    /// in flight the pair may be torn.
+    pub fn chain_state(&self, idx: usize) -> (Option<LowRank>, u64) {
+        let cell = &self.cells[idx];
+        let rep = cell.work.lock().unwrap().rep.clone();
+        let step = cell.load_published().map(|s| s.step).unwrap_or(0);
+        (rep, step)
+    }
+
+    /// Restore support: seed the worker-side chain representation (and
+    /// publish it at `step` so installs observe it) on a fresh service.
+    /// Must be called before any ops are submitted for the cell.
+    pub fn seed(&self, idx: usize, rep: Option<LowRank>, step: u64) {
+        let cell = &self.cells[idx];
+        let mut w = cell.work.lock().unwrap();
+        w.rep = rep.clone();
+        drop(w);
+        if let Some(r) = rep {
+            cell.published.publish(r, step);
+        }
+    }
+
+    /// Cancel all not-yet-started ops (the in-flight one, if any, still
+    /// completes). Part of graceful shutdown; also called on drop.
+    pub fn cancel_pending(&self) -> usize {
+        self.cells.iter().map(|c| c.cancel_pending()).sum()
+    }
+}
+
+impl Drop for PrecondService {
+    /// Graceful teardown when a trainer / session is dropped mid-queue:
+    /// queued ops are cancelled (so the pool drains only in-flight work),
+    /// and in shared mode the tenant is removed from the scheduler. The
+    /// worker threads themselves are joined by the `WorkerPool` drop once
+    /// its last `Arc` owner goes away — cancelled cells make that prompt
+    /// rather than waiting out the whole backlog.
+    fn drop(&mut self) {
+        self.cancel_pending();
+        if let Some(ctx) = &self.shared {
+            ctx.sched.unregister(ctx.key);
         }
     }
 }

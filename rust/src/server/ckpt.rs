@@ -1,0 +1,662 @@
+//! Checkpoint / restore of session state (DESIGN.md §11.4).
+//!
+//! Serializes a session's FULL state through `util::ser::Json`: EA
+//! factor statistics, installed low-rank representations, the worker-
+//! side Brand-chain position (the decomposition each cell would fold the
+//! next op over), RNG streams, parameter blocks, and step counters.
+//!
+//! **Bit-identical resume is the correctness contract.** Two properties
+//! make it hold:
+//!
+//! 1. every `f32`/`f64` travels through Rust's shortest-roundtrip float
+//!    formatting (`Display` ↔ `FromStr` are exact inverses for finite
+//!    floats, and every `f32` is exactly representable as `f64`), and
+//!    `u64` RNG words travel as hex strings (they do NOT fit in `f64`);
+//! 2. checkpoints are taken after draining the session's shard queues,
+//!    so the chain position is a well-defined point of the (schedule-
+//!    independent) op sequence, and the *installed* representations are
+//!    stored separately from the chain — a resumed session installs the
+//!    seeded publication at exactly the stat step the uninterrupted run
+//!    would have.
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::coordinator::{TrainerCfg, TrainerState};
+use crate::linalg::{LowRank, Mat};
+use crate::optim::factor::FactorSnapshot;
+use crate::optim::{Algo, Hyper};
+use crate::precond::{PrecondCfg, PrecondService};
+use crate::util::rng::{Rng, RngState};
+use crate::util::ser::Json;
+
+use super::session::{HostSession, HostSessionCfg, ModelSession};
+
+pub const FORMAT: &str = "bnkfac-ckpt";
+pub const VERSION: f64 = 1.0;
+
+// ---------------------------------------------------------- primitives
+
+fn f32s_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f32s_from(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected f32 array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| anyhow!("non-numeric f32 entry"))
+        })
+        .collect()
+}
+
+fn u64_json(v: u64) -> Json {
+    Json::Str(format!("{v:#x}"))
+}
+
+fn u64_from(j: &Json) -> Result<u64> {
+    let s = j.as_str().ok_or_else(|| anyhow!("expected hex u64 string"))?;
+    let digits = s
+        .strip_prefix("0x")
+        .ok_or_else(|| anyhow!("u64 missing 0x prefix: '{s}'"))?;
+    u64::from_str_radix(digits, 16).with_context(|| format!("bad u64 '{s}'"))
+}
+
+fn mat_json(m: &Mat) -> Json {
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows as f64)),
+        ("cols", Json::Num(m.cols as f64)),
+        ("data", f32s_json(&m.data)),
+    ])
+}
+
+fn mat_from(j: &Json) -> Result<Mat> {
+    let rows = j
+        .get("rows")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("mat missing rows"))?;
+    let cols = j
+        .get("cols")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("mat missing cols"))?;
+    let data = f32s_from(j.get("data").ok_or_else(|| anyhow!("mat missing data"))?)?;
+    ensure!(data.len() == rows * cols, "mat data len mismatch");
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn opt_json(v: Option<Json>) -> Json {
+    v.unwrap_or(Json::Null)
+}
+
+fn lowrank_json(r: &LowRank) -> Json {
+    Json::obj(vec![("u", mat_json(&r.u)), ("d", f32s_json(&r.d))])
+}
+
+fn lowrank_from(j: &Json) -> Result<LowRank> {
+    let u = mat_from(j.get("u").ok_or_else(|| anyhow!("lowrank missing u"))?)?;
+    let d = f32s_from(j.get("d").ok_or_else(|| anyhow!("lowrank missing d"))?)?;
+    ensure!(u.cols == d.len(), "lowrank u/d width mismatch");
+    Ok(LowRank::new(u, d))
+}
+
+fn opt_lowrank_from(j: Option<&Json>) -> Result<Option<LowRank>> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(lowrank_from(v)?)),
+    }
+}
+
+fn opt_mat_from(j: Option<&Json>) -> Result<Option<Mat>> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => Ok(Some(mat_from(v)?)),
+    }
+}
+
+fn rng_json(st: &RngState) -> Json {
+    Json::obj(vec![
+        ("s", Json::Arr(st.s.iter().map(|&w| u64_json(w)).collect())),
+        (
+            "spare",
+            st.gauss_spare.map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn rng_from(j: &Json) -> Result<RngState> {
+    let arr = j
+        .get("s")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("rng missing s"))?;
+    ensure!(arr.len() == 4, "rng state needs 4 words");
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        s[i] = u64_from(w)?;
+    }
+    let gauss_spare = match j.get("spare") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_f64().ok_or_else(|| anyhow!("bad rng spare"))?),
+    };
+    Ok(RngState { s, gauss_spare })
+}
+
+fn factor_json(s: &FactorSnapshot) -> Json {
+    Json::obj(vec![
+        ("seen", Json::Bool(s.seen_stats)),
+        ("gram", opt_json(s.gram.as_ref().map(mat_json))),
+        ("rep", opt_json(s.rep.as_ref().map(lowrank_json))),
+    ])
+}
+
+fn factor_from(j: &Json) -> Result<FactorSnapshot> {
+    Ok(FactorSnapshot {
+        seen_stats: j
+            .get("seen")
+            .and_then(|v| v.as_bool())
+            .ok_or_else(|| anyhow!("factor missing seen"))?,
+        gram: opt_mat_from(j.get("gram"))?,
+        rep: opt_lowrank_from(j.get("rep"))?,
+    })
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("checkpoint missing numeric '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    Ok(req_f64(j, key)? as usize)
+}
+
+fn req_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("checkpoint missing string '{key}'"))
+}
+
+fn algo_json(a: Algo) -> Json {
+    Json::str(&a.name().to_ascii_lowercase())
+}
+
+fn algo_from(j: &Json, key: &str) -> Result<Algo> {
+    let s = req_str(j, key)?;
+    Algo::parse(s).ok_or_else(|| anyhow!("unknown algo '{s}'"))
+}
+
+// ------------------------------------------------------- host sessions
+
+fn host_cfg_json(c: &HostSessionCfg) -> Json {
+    Json::obj(vec![
+        ("factors", Json::Num(c.factors as f64)),
+        ("dim", Json::Num(c.dim as f64)),
+        ("rank", Json::Num(c.rank as f64)),
+        ("n_stat", Json::Num(c.n_stat as f64)),
+        ("grad_cols", Json::Num(c.grad_cols as f64)),
+        ("t_updt", Json::Num(c.t_updt as f64)),
+        ("algo", algo_json(c.algo)),
+        ("seed", u64_json(c.seed)),
+        ("steps", Json::Num(c.steps as f64)),
+        ("rho", Json::Num(c.rho as f64)),
+        ("lambda", Json::Num(c.lambda as f64)),
+    ])
+}
+
+pub fn host_cfg_from(j: &Json) -> Result<HostSessionCfg> {
+    Ok(HostSessionCfg {
+        factors: req_usize(j, "factors")?,
+        dim: req_usize(j, "dim")?,
+        rank: req_usize(j, "rank")?,
+        n_stat: req_usize(j, "n_stat")?,
+        grad_cols: req_usize(j, "grad_cols")?,
+        t_updt: req_usize(j, "t_updt")?,
+        algo: algo_from(j, "algo")?,
+        seed: u64_from(j.get("seed").ok_or_else(|| anyhow!("cfg missing seed"))?)?,
+        steps: req_f64(j, "steps")? as u64,
+        rho: req_f64(j, "rho")? as f32,
+        lambda: req_f64(j, "lambda")? as f32,
+    })
+}
+
+/// Serialize a host session. Precondition: the session's shard queues
+/// are drained (`PrecondService::drain`) — enforced here.
+pub fn encode_host(
+    name: &str,
+    weight: u32,
+    hs: &HostSession,
+    svc: &PrecondService,
+) -> Result<Json> {
+    ensure!(
+        svc.pending_total() == 0,
+        "checkpoint requires drained shard queues"
+    );
+    let mut factors = Vec::with_capacity(hs.factors.len());
+    for (i, f) in hs.factors.iter().enumerate() {
+        let (chain, chain_step) = svc.chain_state(i);
+        let mut obj = match factor_json(&f.snapshot()) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        obj.insert(
+            "chain".into(),
+            opt_json(chain.as_ref().map(lowrank_json)),
+        );
+        obj.insert("chain_step".into(), Json::Num(chain_step as f64));
+        factors.push(Json::Obj(obj));
+    }
+    Ok(Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("version", Json::Num(VERSION)),
+        ("kind", Json::str("host")),
+        ("name", Json::str(name)),
+        ("weight", Json::Num(weight as f64)),
+        ("cfg", host_cfg_json(&hs.cfg)),
+        (
+            "state",
+            Json::obj(vec![
+                ("step", Json::Num(hs.step as f64)),
+                ("loss_proxy", Json::Num(hs.loss_proxy as f64)),
+                ("rng", rng_json(&hs.rng.state())),
+                (
+                    "last_installed",
+                    Json::Arr(
+                        hs.last_installed
+                            .iter()
+                            .map(|&v| Json::Num(v as f64))
+                            .collect(),
+                    ),
+                ),
+                ("params", Json::Arr(hs.params.iter().map(mat_json).collect())),
+                ("factors", Json::Arr(factors)),
+            ]),
+        ),
+    ]))
+}
+
+/// A decoded host checkpoint, ready to be re-attached to a service.
+pub struct HostRestore {
+    pub name: String,
+    pub weight: u32,
+    pub session: HostSession,
+    /// per-cell worker chain position: (rep, published step)
+    pub chains: Vec<(Option<LowRank>, u64)>,
+}
+
+pub fn decode_host(j: &Json) -> Result<HostRestore> {
+    ensure!(
+        j.get("format").and_then(|v| v.as_str()) == Some(FORMAT),
+        "not a bnkfac checkpoint"
+    );
+    ensure!(
+        j.get("kind").and_then(|v| v.as_str()) == Some("host"),
+        "not a host-session checkpoint"
+    );
+    let cfg = host_cfg_from(j.get("cfg").ok_or_else(|| anyhow!("missing cfg"))?)?;
+    let st = j.get("state").ok_or_else(|| anyhow!("missing state"))?;
+    let mut hs = HostSession::new(cfg);
+    hs.step = req_f64(st, "step")? as u64;
+    hs.loss_proxy = req_f64(st, "loss_proxy")? as f32;
+    hs.rng = Rng::from_state(&rng_from(
+        st.get("rng").ok_or_else(|| anyhow!("missing rng"))?,
+    )?);
+    let li = st
+        .get("last_installed")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing last_installed"))?;
+    ensure!(li.len() == hs.factors.len(), "last_installed arity");
+    hs.last_installed = li
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as i64))
+        .collect::<Option<Vec<i64>>>()
+        .ok_or_else(|| anyhow!("bad last_installed"))?;
+    let params = st
+        .get("params")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing params"))?;
+    ensure!(params.len() == hs.params.len(), "params arity");
+    for (slot, pj) in hs.params.iter_mut().zip(params) {
+        *slot = mat_from(pj)?;
+    }
+    let factors = st
+        .get("factors")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing factors"))?;
+    ensure!(factors.len() == hs.factors.len(), "factors arity");
+    let mut chains = Vec::with_capacity(factors.len());
+    for (fs, fj) in hs.factors.iter_mut().zip(factors) {
+        fs.restore(factor_from(fj)?);
+        let chain = opt_lowrank_from(fj.get("chain"))?;
+        let chain_step = req_f64(fj, "chain_step")? as u64;
+        chains.push((chain, chain_step));
+    }
+    Ok(HostRestore {
+        name: req_str(j, "name")?.to_string(),
+        weight: req_f64(j, "weight")? as u32,
+        session: hs,
+        chains,
+    })
+}
+
+// ------------------------------------------------------ model sessions
+
+fn hyper_json(h: &Hyper) -> Json {
+    Json::obj(vec![
+        ("rho", Json::Num(h.rho as f64)),
+        ("t_updt", Json::Num(h.t_updt as f64)),
+        ("t_inv", Json::Num(h.t_inv as f64)),
+        ("t_brand", Json::Num(h.t_brand as f64)),
+        ("t_rsvd", Json::Num(h.t_rsvd as f64)),
+        ("t_corct", Json::Num(h.t_corct as f64)),
+        ("weight_decay", Json::Num(h.weight_decay as f64)),
+        ("clip", Json::Num(h.clip as f64)),
+        ("spectrum_continuation", Json::Bool(h.spectrum_continuation)),
+        (
+            "brand_layer",
+            opt_json(h.brand_layer.as_ref().map(|s| Json::str(s))),
+        ),
+        ("linear_apply", Json::Bool(h.linear_apply)),
+        ("lr_scale", Json::Num(h.lr_scale as f64)),
+    ])
+}
+
+fn hyper_from(j: &Json) -> Result<Hyper> {
+    Ok(Hyper {
+        rho: req_f64(j, "rho")? as f32,
+        t_updt: req_usize(j, "t_updt")?,
+        t_inv: req_usize(j, "t_inv")?,
+        t_brand: req_usize(j, "t_brand")?,
+        t_rsvd: req_usize(j, "t_rsvd")?,
+        t_corct: req_usize(j, "t_corct")?,
+        weight_decay: req_f64(j, "weight_decay")? as f32,
+        clip: req_f64(j, "clip")? as f32,
+        spectrum_continuation: j
+            .get("spectrum_continuation")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(true),
+        brand_layer: j
+            .get("brand_layer")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string()),
+        linear_apply: j
+            .get("linear_apply")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false),
+        lr_scale: req_f64(j, "lr_scale")? as f32,
+    })
+}
+
+fn named_f32s_json(items: &[(String, Vec<f32>)]) -> Json {
+    Json::Arr(
+        items
+            .iter()
+            .map(|(n, d)| Json::obj(vec![("name", Json::str(n)), ("data", f32s_json(d))]))
+            .collect(),
+    )
+}
+
+fn named_f32s_from(j: &Json) -> Result<Vec<(String, Vec<f32>)>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected named-array list"))?
+        .iter()
+        .map(|e| {
+            Ok((
+                req_str(e, "name")?.to_string(),
+                f32s_from(e.get("data").ok_or_else(|| anyhow!("missing data"))?)?,
+            ))
+        })
+        .collect()
+}
+
+/// Serialize an artifact-backed trainer session, including the data-
+/// pipeline position (epoch, batch index, epoch-start shuffle RNG) so a
+/// restore replays the identical batch stream. SENG is rejected (its
+/// momentum buffers are not serialized). Precondition: the trainer's
+/// service is drained (`Trainer::drain_service`).
+pub fn encode_model(
+    name: &str,
+    weight: u32,
+    m: &ModelSession,
+) -> Result<Json> {
+    let tr = &m.tr;
+    let target_steps = m.target_steps;
+    let (epoch, bi, epoch_rng_start) = m.pipeline_state();
+    ensure!(
+        tr.cfg.algo != Algo::Seng,
+        "SENG checkpointing unsupported (momentum buffers not serialized)"
+    );
+    if let Some(svc) = &tr.service {
+        ensure!(
+            svc.pending_total() == 0,
+            "checkpoint requires a drained service"
+        );
+    }
+    let st = tr.snapshot_state();
+    let chains: Vec<Json> = match &tr.service {
+        Some(svc) => (0..svc.n_cells())
+            .map(|i| {
+                let (rep, step) = svc.chain_state(i);
+                Json::obj(vec![
+                    ("rep", opt_json(rep.as_ref().map(lowrank_json))),
+                    ("step", Json::Num(step as f64)),
+                ])
+            })
+            .collect(),
+        None => Vec::new(),
+    };
+    let precond = tr
+        .service
+        .as_ref()
+        .map(|s| s.cfg().clone())
+        .unwrap_or_default();
+    Ok(Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("version", Json::Num(VERSION)),
+        ("kind", Json::str("model")),
+        ("name", Json::str(name)),
+        ("weight", Json::Num(weight as f64)),
+        ("target_steps", Json::Num(target_steps as f64)),
+        (
+            "pipeline",
+            Json::obj(vec![
+                ("epoch", Json::Num(epoch as f64)),
+                ("bi", Json::Num(bi as f64)),
+                ("epoch_rng_start", rng_json(&epoch_rng_start)),
+            ]),
+        ),
+        (
+            "cfg",
+            Json::obj(vec![
+                ("algo", algo_json(tr.cfg.algo)),
+                ("seed", u64_json(tr.cfg.seed)),
+                ("eval_every", Json::Num(tr.cfg.eval_every as f64)),
+                ("hyper", hyper_json(&tr.cfg.hyper)),
+                (
+                    "precond",
+                    Json::obj(vec![
+                        ("workers", Json::Num(precond.workers as f64)),
+                        ("max_staleness", Json::Num(precond.max_staleness as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "state",
+            Json::obj(vec![
+                ("step", Json::Num(st.step as f64)),
+                ("rng", rng_json(&st.rng)),
+                ("params", named_f32s_json(&st.params)),
+                (
+                    "bn",
+                    Json::obj(vec![
+                        ("means", named_f32s_json(&st.bn_means)),
+                        ("vars", named_f32s_json(&st.bn_vars)),
+                        ("initialized", Json::Bool(st.bn_initialized)),
+                    ]),
+                ),
+                (
+                    "factors",
+                    Json::Arr(st.factors.iter().map(factor_json).collect()),
+                ),
+            ]),
+        ),
+        ("chains", Json::Arr(chains)),
+    ]))
+}
+
+/// A decoded model checkpoint.
+pub struct ModelRestore {
+    pub name: String,
+    pub weight: u32,
+    pub target_steps: u64,
+    pub cfg: TrainerCfg,
+    pub precond: PrecondCfg,
+    pub state: TrainerState,
+    pub chains: Vec<(Option<LowRank>, u64)>,
+    /// data-pipeline position: (epoch, batch index, epoch-start RNG)
+    pub pipeline: (usize, usize, RngState),
+}
+
+pub fn decode_model(j: &Json) -> Result<ModelRestore> {
+    ensure!(
+        j.get("format").and_then(|v| v.as_str()) == Some(FORMAT),
+        "not a bnkfac checkpoint"
+    );
+    ensure!(
+        j.get("kind").and_then(|v| v.as_str()) == Some("model"),
+        "not a model-session checkpoint"
+    );
+    let cj = j.get("cfg").ok_or_else(|| anyhow!("missing cfg"))?;
+    let pj = cj.get("precond").ok_or_else(|| anyhow!("missing precond"))?;
+    let precond = PrecondCfg {
+        workers: req_usize(pj, "workers")?,
+        max_staleness: req_usize(pj, "max_staleness")?,
+    };
+    let cfg = TrainerCfg {
+        algo: algo_from(cj, "algo")?,
+        hyper: hyper_from(cj.get("hyper").ok_or_else(|| anyhow!("missing hyper"))?)?,
+        seed: u64_from(cj.get("seed").ok_or_else(|| anyhow!("missing seed"))?)?,
+        eval_every: req_usize(cj, "eval_every")?,
+        // the manager supplies the shared service; cfg.precond is unused
+        precond: None,
+        ..TrainerCfg::default()
+    };
+    let st = j.get("state").ok_or_else(|| anyhow!("missing state"))?;
+    let bn = st.get("bn").ok_or_else(|| anyhow!("missing bn"))?;
+    let factors = st
+        .get("factors")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing factors"))?
+        .iter()
+        .map(factor_from)
+        .collect::<Result<Vec<_>>>()?;
+    let state = TrainerState {
+        step: req_usize(st, "step")?,
+        rng: rng_from(st.get("rng").ok_or_else(|| anyhow!("missing rng"))?)?,
+        params: named_f32s_from(
+            st.get("params").ok_or_else(|| anyhow!("missing params"))?,
+        )?,
+        bn_means: named_f32s_from(
+            bn.get("means").ok_or_else(|| anyhow!("missing bn means"))?,
+        )?,
+        bn_vars: named_f32s_from(
+            bn.get("vars").ok_or_else(|| anyhow!("missing bn vars"))?,
+        )?,
+        bn_initialized: bn
+            .get("initialized")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false),
+        factors,
+    };
+    let chains = j
+        .get("chains")
+        .and_then(|v| v.as_arr())
+        .unwrap_or(&[])
+        .iter()
+        .map(|c| {
+            Ok((
+                opt_lowrank_from(c.get("rep"))?,
+                req_f64(c, "step")? as u64,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let pl = j.get("pipeline").ok_or_else(|| anyhow!("missing pipeline"))?;
+    let pipeline = (
+        req_usize(pl, "epoch")?,
+        req_usize(pl, "bi")?,
+        rng_from(
+            pl.get("epoch_rng_start")
+                .ok_or_else(|| anyhow!("missing epoch_rng_start"))?,
+        )?,
+    );
+    Ok(ModelRestore {
+        name: req_str(j, "name")?.to_string(),
+        weight: req_f64(j, "weight")? as u32,
+        target_steps: req_f64(j, "target_steps")? as u64,
+        cfg,
+        precond,
+        state,
+        chains,
+        pipeline,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_roundtrip_is_bit_exact() {
+        // awkward f32s: subnormal-ish, negative zero, long fractions
+        let xs = vec![
+            1.0f32,
+            -0.0,
+            0.1,
+            1.5e-30,
+            3.402_823e38,
+            -7.654_321e-12,
+            f32::MIN_POSITIVE,
+        ];
+        let j = f32s_json(&xs);
+        let text = j.to_string_pretty();
+        let back = f32s_from(&Json::parse(&text).unwrap()).unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn u64_roundtrip_full_range() {
+        for v in [0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            let j = u64_json(v);
+            let text = j.to_string_compact();
+            assert_eq!(u64_from(&Json::parse(&text).unwrap()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn rng_state_roundtrip() {
+        let mut r = Rng::new(9);
+        let _ = r.next_gauss(); // populate the spare
+        let st = r.state();
+        let text = rng_json(&st).to_string_pretty();
+        let back = rng_from(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(st, back);
+    }
+
+    #[test]
+    fn host_cfg_roundtrip() {
+        let cfg = HostSessionCfg {
+            algo: Algo::BKfacC,
+            seed: u64::MAX - 7,
+            ..HostSessionCfg::default()
+        };
+        let j = host_cfg_json(&cfg);
+        let back = host_cfg_from(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.algo, Algo::BKfacC);
+        assert_eq!(back.seed, u64::MAX - 7);
+        assert_eq!(back.dim, cfg.dim);
+        assert_eq!(back.steps, cfg.steps);
+    }
+}

@@ -1,0 +1,219 @@
+//! Scripted job-file driver for `bnkfac serve` (DESIGN.md §11.5).
+//!
+//! There is no network runtime in this build, so the server is driven by
+//! a declarative job file: a server config plus a timeline of lifecycle
+//! actions applied at serving-loop rounds. Example:
+//!
+//! ```json
+//! {
+//!   "server": {"workers": 3, "max_sessions": 4, "staleness": 1},
+//!   "jobs": [
+//!     {"at": 0,  "action": "create", "name": "a", "weight": 2,
+//!      "session": {"factors": 2, "dim": 48, "rank": 6, "n_stat": 3,
+//!                   "grad_cols": 4, "t_updt": 2, "algo": "b-kfac",
+//!                   "seed": "0x1", "steps": 24, "rho": 0.95,
+//!                   "lambda": 0.1}},
+//!     {"at": 6,  "action": "checkpoint", "name": "a",
+//!      "path": "results/ckpt_a.json"},
+//!     {"at": 8,  "action": "pause",  "name": "a"},
+//!     {"at": 12, "action": "resume", "name": "a"},
+//!     {"at": 14, "action": "restore", "name": "a2",
+//!      "path": "results/ckpt_a.json"},
+//!     {"at": 16, "action": "drop", "name": "a2"}
+//!   ]
+//! }
+//! ```
+//!
+//! `at` is a round index; actions due at or before the current round are
+//! applied in file order before the round is served. `session.seed`
+//! accepts either a JSON number or a hex string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::ServerRecord;
+use crate::util::ser::Json;
+
+use super::ckpt;
+use super::manager::{ServerCfg, SessionManager};
+use super::session::HostSessionCfg;
+
+struct Job {
+    at: u64,
+    action: String,
+    name: String,
+    weight: u32,
+    path: Option<String>,
+    session: Option<HostSessionCfg>,
+}
+
+fn parse_session_cfg(j: &Json) -> Result<HostSessionCfg> {
+    // tolerate a numeric seed in hand-written job files
+    if let Some(Json::Num(n)) = j.get("seed") {
+        let mut m = match j {
+            Json::Obj(m) => m.clone(),
+            _ => bail!("session spec must be an object"),
+        };
+        m.insert("seed".into(), Json::Str(format!("{:#x}", *n as u64)));
+        return ckpt::host_cfg_from(&Json::Obj(m));
+    }
+    ckpt::host_cfg_from(j)
+}
+
+fn parse_jobs(root: &Json) -> Result<(ServerCfg, Vec<Job>)> {
+    let null = Json::Null;
+    let sj = root.get("server").unwrap_or(&null);
+    let d = ServerCfg::default();
+    let cfg = ServerCfg {
+        workers: sj
+            .get("workers")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(d.workers),
+        max_sessions: sj
+            .get("max_sessions")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(d.max_sessions),
+        staleness: sj
+            .get("staleness")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(d.staleness),
+    };
+    let jobs = root
+        .get("jobs")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("job file missing 'jobs' array"))?
+        .iter()
+        .map(|j| {
+            let action = j
+                .get("action")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("job missing 'action'"))?
+                .to_string();
+            let session = match j.get("session") {
+                Some(s) => Some(parse_session_cfg(s)?),
+                None => None,
+            };
+            Ok(Job {
+                at: j.get("at").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                action,
+                name: j
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                weight: j.get("weight").and_then(|v| v.as_usize()).unwrap_or(1) as u32,
+                path: j.get("path").and_then(|v| v.as_str()).map(|s| s.to_string()),
+                session,
+            })
+        })
+        .collect::<Result<Vec<Job>>>()?;
+    Ok((cfg, jobs))
+}
+
+fn apply(
+    mgr: &mut SessionManager,
+    names: &mut BTreeMap<String, u64>,
+    job: &Job,
+) -> Result<()> {
+    let lookup = |names: &BTreeMap<String, u64>, name: &str| -> Result<u64> {
+        names
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no session named '{name}'"))
+    };
+    match job.action.as_str() {
+        "create" => {
+            let scfg = job
+                .session
+                .clone()
+                .ok_or_else(|| anyhow!("create needs a 'session' spec"))?;
+            let id = mgr.create_host(&job.name, job.weight, scfg)?;
+            names.insert(job.name.clone(), id);
+            println!("[round {}] created session '{}' (id {id})", mgr.round, job.name);
+        }
+        "pause" => {
+            mgr.pause(lookup(names, &job.name)?)?;
+            println!("[round {}] paused '{}'", mgr.round, job.name);
+        }
+        "resume" => {
+            mgr.resume(lookup(names, &job.name)?)?;
+            println!("[round {}] resumed '{}'", mgr.round, job.name);
+        }
+        "checkpoint" => {
+            let path = job
+                .path
+                .as_deref()
+                .ok_or_else(|| anyhow!("checkpoint needs a 'path'"))?;
+            let j = mgr.checkpoint(lookup(names, &job.name)?)?;
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            std::fs::write(path, j.to_string_pretty())
+                .with_context(|| format!("writing checkpoint {path}"))?;
+            println!("[round {}] checkpointed '{}' -> {path}", mgr.round, job.name);
+        }
+        "restore" => {
+            let path = job
+                .path
+                .as_deref()
+                .ok_or_else(|| anyhow!("restore needs a 'path'"))?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading checkpoint {path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("checkpoint json: {e}"))?;
+            let id = mgr.restore(&j, &job.name)?;
+            names.insert(job.name.clone(), id);
+            println!("[round {}] restored '{}' (id {id}) from {path}", mgr.round, job.name);
+        }
+        "drop" => {
+            let id = lookup(names, &job.name)?;
+            mgr.drop_session(id)?;
+            names.remove(&job.name);
+            println!("[round {}] dropped '{}'", mgr.round, job.name);
+        }
+        other => bail!("unknown job action '{other}'"),
+    }
+    Ok(())
+}
+
+/// Run a job file to completion; returns the final server record.
+pub fn run_jobs(
+    path: &str,
+    workers_override: Option<usize>,
+    max_rounds: u64,
+) -> Result<ServerRecord> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
+    let root = Json::parse(&text).map_err(|e| anyhow!("job file json: {e}"))?;
+    let (mut cfg, jobs) = parse_jobs(&root)?;
+    if let Some(w) = workers_override {
+        cfg.workers = w;
+    }
+    let mut mgr = SessionManager::new(cfg);
+    let mut names: BTreeMap<String, u64> = BTreeMap::new();
+    let mut ji = 0usize;
+    loop {
+        while ji < jobs.len() && jobs[ji].at <= mgr.round {
+            apply(&mut mgr, &mut names, &jobs[ji])?;
+            ji += 1;
+        }
+        let pending_jobs = ji < jobs.len();
+        if !mgr.any_running() && !pending_jobs {
+            break;
+        }
+        if mgr.round >= max_rounds {
+            bail!("job driver exceeded {max_rounds} rounds");
+        }
+        if mgr.any_running() {
+            let st = mgr.run_round()?;
+            if st.stepped == 0 && st.blocked > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        } else {
+            // idle rounds advance time toward the next scheduled job
+            mgr.run_round_counter_only();
+        }
+    }
+    mgr.drain_all();
+    Ok(mgr.record())
+}

@@ -1,0 +1,609 @@
+//! Multi-tenant session manager (DESIGN.md §11.1).
+//!
+//! Owns N independent training sessions, one shared [`WorkerPool`] for
+//! decomposition work, and the [`FairScheduler`] that multiplexes it.
+//! The serving loop is cooperative round-robin over sessions: each round
+//! steps every runnable session once; a session whose staleness bound is
+//! hit is PAUSED for the round (backpressure) instead of blocking the
+//! pool, and resumes automatically once its decompositions catch up.
+//!
+//! Lifecycle: `create → (run_round)* → pause/resume → checkpoint →
+//! drop`, plus `restore` (rebuild a session from a checkpoint — the
+//! resumed trajectory is bit-identical to the uninterrupted one, see
+//! `server::ckpt`). Admission control rejects creations beyond
+//! `ServerCfg::max_sessions` active sessions.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::{Trainer, TrainerCfg};
+use crate::data::Dataset;
+use crate::metrics::{ServerRecord, SessionRecord};
+use crate::precond::{PrecondCfg, PrecondService};
+use crate::runtime::Runtime;
+use crate::util::ser::Json;
+use crate::util::threadpool::WorkerPool;
+use crate::util::timer::PhaseTimers;
+
+use super::ckpt;
+use super::sched::FairScheduler;
+use super::session::{HostSession, HostSessionCfg, ModelSession, Workload};
+
+/// Server-level configuration.
+#[derive(Clone, Debug)]
+pub struct ServerCfg {
+    /// decomposition workers in the shared pool
+    pub workers: usize,
+    /// admission-control capacity (active sessions)
+    pub max_sessions: usize,
+    /// staleness bound in stat-periods: a session pauses when ops older
+    /// than this lag are still unfinished (1 = deterministic pipeline)
+    pub staleness: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg {
+            workers: 2,
+            max_sessions: 4,
+            staleness: 1,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    Running,
+    /// explicitly paused by the operator (distinct from transient
+    /// backpressure pauses, which are per-round)
+    Paused,
+    Done,
+    /// the session's own step or decomposition chain errored; the error
+    /// is recorded on the session and every other tenant keeps serving
+    Failed,
+}
+
+/// One tenant: workload + its shared-mode preconditioner service +
+/// serving-loop accounting.
+pub struct Session<'rt> {
+    pub id: u64,
+    pub name: String,
+    pub weight: u32,
+    pub status: SessionStatus,
+    pub work: Workload<'rt>,
+    /// host sessions keep the service here; model sessions own theirs
+    /// inside the trainer
+    pub svc: Option<PrecondService>,
+    pub timers: PhaseTimers,
+    /// first error this session hit (status == Failed)
+    pub error: Option<String>,
+    /// wall time spent paused on backpressure
+    pause_ns: u64,
+    pub paused_rounds: u64,
+    pause_started: Option<Instant>,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn steps_done(&self) -> u64 {
+        match &self.work {
+            Workload::Host(h) => h.step,
+            Workload::Model(m) => m.tr.step as u64,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        match &self.work {
+            Workload::Host(h) => h.done(),
+            Workload::Model(m) => m.done(),
+        }
+    }
+
+    fn ready(&self, staleness: usize) -> bool {
+        match (&self.work, &self.svc) {
+            (Workload::Host(h), Some(svc)) => h.ready(svc, staleness),
+            (Workload::Model(m), _) => m.ready(),
+            _ => true,
+        }
+    }
+
+    fn step_once(&mut self) -> Result<()> {
+        match (&mut self.work, &self.svc) {
+            (Workload::Host(h), Some(svc)) => h.step(svc, &mut self.timers),
+            (Workload::Model(m), _) => m.step(),
+            _ => bail!("host session without a service"),
+        }
+    }
+
+    /// Backpressure pause time, including a still-open pause interval
+    /// (so sessions that end their run blocked are not underreported).
+    pub fn pause_s(&self) -> f64 {
+        let open = self
+            .pause_started
+            .map(|t0| t0.elapsed().as_nanos() as u64)
+            .unwrap_or(0);
+        (self.pause_ns + open) as f64 * 1e-9
+    }
+
+    fn settle_pause(&mut self) {
+        if let Some(t0) = self.pause_started.take() {
+            self.pause_ns += t0.elapsed().as_nanos() as u64;
+        }
+    }
+
+    fn counters_snapshot(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let svc = match (&self.work, &self.svc) {
+            (Workload::Model(m), _) => m.tr.service.as_ref(),
+            (_, svc) => svc.as_ref(),
+        };
+        match svc {
+            Some(s) => {
+                let c = s.counters();
+                (c.submitted.load(Relaxed), c.completed.load(Relaxed))
+            }
+            None => (0, 0),
+        }
+    }
+}
+
+/// Outcome of one serving round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundStats {
+    pub stepped: usize,
+    /// sessions skipped this round because their staleness bound is hit
+    pub blocked: usize,
+}
+
+pub struct SessionManager<'rt> {
+    pub cfg: ServerCfg,
+    pool: Arc<WorkerPool>,
+    sched: Arc<FairScheduler>,
+    sessions: BTreeMap<u64, Session<'rt>>,
+    rt: Option<&'rt Runtime>,
+    next_id: u64,
+    pub round: u64,
+    wall0: Instant,
+}
+
+impl<'rt> SessionManager<'rt> {
+    pub fn new(cfg: ServerCfg) -> SessionManager<'rt> {
+        let pool = Arc::new(WorkerPool::new(cfg.workers.max(1)));
+        SessionManager {
+            cfg,
+            pool,
+            sched: Arc::new(FairScheduler::new()),
+            sessions: BTreeMap::new(),
+            rt: None,
+            next_id: 1,
+            round: 0,
+            wall0: Instant::now(),
+        }
+    }
+
+    /// A manager that can also host artifact-backed [`ModelSession`]s.
+    pub fn with_runtime(cfg: ServerCfg, rt: &'rt Runtime) -> SessionManager<'rt> {
+        let mut m = Self::new(cfg);
+        m.rt = Some(rt);
+        m
+    }
+
+    fn admit(&self) -> Result<()> {
+        let active = self
+            .sessions
+            .values()
+            .filter(|s| s.status != SessionStatus::Done)
+            .count();
+        ensure!(
+            active < self.cfg.max_sessions,
+            "admission rejected: {active} active sessions at capacity {}",
+            self.cfg.max_sessions
+        );
+        Ok(())
+    }
+
+    /// Staleness bound in optimizer steps for a given stat period.
+    fn staleness_steps(&self, t_updt: usize) -> usize {
+        (self.cfg.staleness.max(1) * t_updt).max(1)
+    }
+
+    /// Create a host-substrate session. Fails when at capacity.
+    pub fn create_host(
+        &mut self,
+        name: &str,
+        weight: u32,
+        scfg: HostSessionCfg,
+    ) -> Result<u64> {
+        self.admit()?;
+        let hs = HostSession::new(scfg);
+        let id = self.alloc_id();
+        self.sched.register(id, weight.max(1));
+        let svc = PrecondService::shared(
+            PrecondCfg {
+                workers: self.cfg.workers,
+                max_staleness: self.staleness_steps(hs.t_updt()),
+            },
+            hs.factor_ids(),
+            self.pool.clone(),
+            self.sched.clone(),
+            id,
+        );
+        self.insert_session(id, name, weight, Workload::Host(hs), Some(svc));
+        Ok(id)
+    }
+
+    /// Create an artifact-backed session (requires `with_runtime`). The
+    /// trainer's decomposition service is built in shared mode over the
+    /// server's pool and scheduler.
+    pub fn create_model(
+        &mut self,
+        name: &str,
+        weight: u32,
+        tcfg: TrainerCfg,
+        ds: Dataset,
+        target_steps: u64,
+    ) -> Result<u64> {
+        let rt = self
+            .rt
+            .ok_or_else(|| anyhow!("model sessions need a runtime (with_runtime)"))?;
+        self.admit()?;
+        let id = self.alloc_id();
+        self.sched.register(id, weight.max(1));
+        let pc = tcfg.precond.clone().unwrap_or(PrecondCfg {
+            workers: self.cfg.workers,
+            max_staleness: self.staleness_steps(tcfg.hyper.t_updt),
+        });
+        let svc = PrecondService::shared(
+            pc,
+            Trainer::factor_ids(&rt.manifest),
+            self.pool.clone(),
+            self.sched.clone(),
+            id,
+        );
+        let tr = match Trainer::with_service(rt, tcfg, Some(svc)) {
+            Ok(tr) => tr,
+            Err(e) => {
+                self.sched.unregister(id);
+                return Err(e);
+            }
+        };
+        let ms = ModelSession::new(tr, ds, target_steps);
+        self.insert_session(id, name, weight, Workload::Model(Box::new(ms)), None);
+        Ok(id)
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn insert_session(
+        &mut self,
+        id: u64,
+        name: &str,
+        weight: u32,
+        work: Workload<'rt>,
+        svc: Option<PrecondService>,
+    ) {
+        self.sessions.insert(
+            id,
+            Session {
+                id,
+                name: name.to_string(),
+                weight: weight.max(1),
+                status: SessionStatus::Running,
+                work,
+                svc,
+                timers: PhaseTimers::new(),
+                error: None,
+                pause_ns: 0,
+                paused_rounds: 0,
+                pause_started: None,
+            },
+        );
+    }
+
+    pub fn session(&self, id: u64) -> Option<&Session<'rt>> {
+        self.sessions.get(&id)
+    }
+
+    pub fn session_ids(&self) -> Vec<u64> {
+        self.sessions.keys().copied().collect()
+    }
+
+    pub fn n_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn get_mut(&mut self, id: u64) -> Result<&mut Session<'rt>> {
+        self.sessions
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("no session {id}"))
+    }
+
+    pub fn pause(&mut self, id: u64) -> Result<()> {
+        let s = self.get_mut(id)?;
+        if s.status == SessionStatus::Running {
+            s.status = SessionStatus::Paused;
+        }
+        Ok(())
+    }
+
+    pub fn resume(&mut self, id: u64) -> Result<()> {
+        let s = self.get_mut(id)?;
+        if s.status == SessionStatus::Paused {
+            s.status = SessionStatus::Running;
+        }
+        Ok(())
+    }
+
+    /// Drop a session mid-queue: its queued decomposition ops are
+    /// cancelled and the tenant leaves the scheduler (see
+    /// `PrecondService::drop`); the shared pool and all other sessions
+    /// are unaffected.
+    pub fn drop_session(&mut self, id: u64) -> Result<()> {
+        self.sessions
+            .remove(&id)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("no session {id}"))
+    }
+
+    /// Serialize a session's full state. Drains the session's in-flight
+    /// decomposition chain first (the checkpoint captures the chain
+    /// position, so resume is bit-identical).
+    pub fn checkpoint(&mut self, id: u64) -> Result<Json> {
+        let s = self.get_mut(id)?;
+        match &mut s.work {
+            Workload::Host(hs) => {
+                let svc = s.svc.as_ref().expect("host session service");
+                svc.drain()?;
+                ckpt::encode_host(&s.name, s.weight, hs, svc)
+            }
+            Workload::Model(m) => {
+                m.tr.drain_service()?;
+                ckpt::encode_model(&s.name, s.weight, &**m)
+            }
+        }
+    }
+
+    /// Rebuild a host session from a checkpoint produced by
+    /// [`checkpoint`](Self::checkpoint). Subject to admission control;
+    /// `name` overrides the stored name when non-empty.
+    pub fn restore(&mut self, j: &Json, name: &str) -> Result<u64> {
+        let kind = j.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+        ensure!(
+            kind == "host",
+            "restore: unsupported checkpoint kind '{kind}' (model restores \
+             need restore_model with a dataset)"
+        );
+        let r = ckpt::decode_host(j)?;
+        self.admit()?;
+        let id = self.alloc_id();
+        self.sched.register(id, r.weight);
+        let svc = PrecondService::shared(
+            PrecondCfg {
+                workers: self.cfg.workers,
+                max_staleness: self.staleness_steps(r.session.t_updt()),
+            },
+            r.session.factor_ids(),
+            self.pool.clone(),
+            self.sched.clone(),
+            id,
+        );
+        for (i, (rep, step)) in r.chains.into_iter().enumerate() {
+            svc.seed(i, rep, step);
+        }
+        let label = if name.is_empty() { &r.name } else { name };
+        self.insert_session(id, label, r.weight, Workload::Host(r.session), Some(svc));
+        Ok(id)
+    }
+
+    /// Rebuild an artifact-backed session from a model checkpoint.
+    pub fn restore_model(&mut self, j: &Json, name: &str, ds: Dataset) -> Result<u64> {
+        let rt = self
+            .rt
+            .ok_or_else(|| anyhow!("model sessions need a runtime (with_runtime)"))?;
+        let r = ckpt::decode_model(j)?;
+        self.admit()?;
+        let id = self.alloc_id();
+        self.sched.register(id, r.weight);
+        let svc = PrecondService::shared(
+            r.precond.clone(),
+            Trainer::factor_ids(&rt.manifest),
+            self.pool.clone(),
+            self.sched.clone(),
+            id,
+        );
+        for (i, (rep, step)) in r.chains.iter().enumerate() {
+            svc.seed(i, rep.clone(), *step);
+        }
+        let mut tr = match Trainer::with_service(rt, r.cfg.clone(), Some(svc)) {
+            Ok(tr) => tr,
+            Err(e) => {
+                self.sched.unregister(id);
+                return Err(e);
+            }
+        };
+        tr.restore_state(r.state)?;
+        let mut ms = ModelSession::new(tr, ds, r.target_steps);
+        ms.restore_pipeline(r.pipeline.0, r.pipeline.1, &r.pipeline.2);
+        let label = if name.is_empty() { &r.name } else { name };
+        self.insert_session(id, label, r.weight, Workload::Model(Box::new(ms)), None);
+        Ok(id)
+    }
+
+    /// Advance the round clock without serving — the scripted driver uses
+    /// this to reach the next scheduled action when no session is active.
+    pub fn run_round_counter_only(&mut self) {
+        self.round += 1;
+    }
+
+    pub fn any_running(&self) -> bool {
+        self.sessions
+            .values()
+            .any(|s| s.status == SessionStatus::Running)
+    }
+
+    /// One cooperative round: step every runnable session once.
+    pub fn run_round(&mut self) -> Result<RoundStats> {
+        self.round += 1;
+        let staleness = self.cfg.staleness;
+        let mut stats = RoundStats::default();
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            let s = self.sessions.get_mut(&id).unwrap();
+            if s.status != SessionStatus::Running {
+                continue;
+            }
+            if s.done() {
+                s.settle_pause();
+                s.status = SessionStatus::Done;
+                continue;
+            }
+            if !s.ready(staleness) {
+                // backpressure: pause this session for the round rather
+                // than blocking the pool on its behalf
+                stats.blocked += 1;
+                s.paused_rounds += 1;
+                if s.pause_started.is_none() {
+                    s.pause_started = Some(Instant::now());
+                }
+                continue;
+            }
+            s.settle_pause();
+            // failure containment: one tenant's error must not take the
+            // server (and every other tenant's run) down with it
+            if let Err(e) = s.step_once() {
+                log::warn!("session '{}' (id {}) failed: {e:#}", s.name, s.id);
+                s.error = Some(format!("{e:#}"));
+                s.status = SessionStatus::Failed;
+                continue;
+            }
+            stats.stepped += 1;
+            if s.done() {
+                s.status = SessionStatus::Done;
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Serve until every session is Done, Failed, or user-Paused. Sleeps
+    /// briefly when all runnable sessions are backpressure-blocked
+    /// (workers need the CPU); errors out only on a whole-server stall
+    /// (`max_rounds`) — individual session failures are contained and
+    /// reported per-session. Outstanding decomposition ops are settled
+    /// before returning.
+    pub fn run_to_completion(&mut self, max_rounds: u64) -> Result<()> {
+        while self.any_running() {
+            if self.round >= max_rounds {
+                bail!("server stalled: {max_rounds} rounds without completion");
+            }
+            let st = self.run_round()?;
+            if st.stepped == 0 {
+                if st.blocked == 0 {
+                    break; // only user-paused sessions remain runnable
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        self.drain_all();
+        Ok(())
+    }
+
+    /// Block until every session's outstanding decomposition ops finish.
+    /// Worker errors surfacing here are contained per-session (status →
+    /// Failed, error recorded), not propagated — a tenant's bad op must
+    /// not poison its neighbours' shutdown. Makes `record()` counters
+    /// consistent.
+    pub fn drain_all(&mut self) {
+        for s in self.sessions.values_mut() {
+            let res = match (&mut s.work, &s.svc) {
+                (Workload::Host(_), Some(svc)) => svc.drain(),
+                (Workload::Model(m), _) => m.tr.drain_service(),
+                _ => Ok(()),
+            };
+            if let Err(e) = res {
+                log::warn!("session '{}' (id {}) drain failed: {e:#}", s.name, s.id);
+                if s.error.is_none() {
+                    s.error = Some(format!("{e:#}"));
+                }
+                s.status = SessionStatus::Failed;
+            }
+        }
+    }
+
+    /// Aggregate + per-session metrics for the run log / `serve` output.
+    pub fn record(&self) -> ServerRecord {
+        let served: BTreeMap<u64, (u64, u32)> = self
+            .sched
+            .served()
+            .into_iter()
+            .map(|(k, s, w)| (k, (s, w)))
+            .collect();
+        let total_served: u64 = self.sched.total_served().max(1);
+        let mut sessions = Vec::new();
+        let mut total_steps = 0u64;
+        for s in self.sessions.values() {
+            let (submitted, completed) = s.counters_snapshot();
+            let ops = served.get(&s.id).map(|(v, _)| *v).unwrap_or(0);
+            total_steps += s.steps_done();
+            sessions.push(SessionRecord {
+                id: s.id,
+                name: s.name.clone(),
+                weight: s.weight,
+                steps: s.steps_done(),
+                submitted,
+                completed,
+                ops_share: ops as f64 / total_served as f64,
+                pause_s: s.pause_s(),
+                paused_rounds: s.paused_rounds,
+                status: format!("{:?}", s.status),
+                error: s.error.clone().unwrap_or_default(),
+            });
+        }
+        // Jain fairness over weight-normalized service rates. Tenants
+        // that never ASKED for service are excluded, but a tenant that
+        // submitted ops and got none contributes x=0 — total starvation
+        // must drag the index down, not be filtered out of it.
+        let xs: Vec<f64> = sessions
+            .iter()
+            .filter(|s| s.submitted > 0)
+            .map(|s| {
+                let ops = served.get(&s.id).map(|(v, _)| *v).unwrap_or(0);
+                ops as f64 / s.weight.max(1) as f64
+            })
+            .collect();
+        let sq: f64 = xs.iter().map(|x| x * x).sum();
+        let fairness = if xs.is_empty() || sq == 0.0 {
+            1.0 // nothing dispatched yet: neutral
+        } else {
+            let sum: f64 = xs.iter().sum();
+            (sum * sum) / (xs.len() as f64 * sq)
+        };
+        let wall_s = self.wall0.elapsed().as_secs_f64();
+        ServerRecord {
+            workers: self.cfg.workers,
+            max_sessions: self.cfg.max_sessions,
+            rounds: self.round,
+            wall_s,
+            total_steps,
+            steps_per_s: total_steps as f64 / wall_s.max(1e-9),
+            fairness_jain: fairness,
+            worker_busy_s: self.pool.busy_seconds(),
+            sessions,
+        }
+    }
+}
+
+impl<'rt> Drop for SessionManager<'rt> {
+    /// Graceful shutdown ordering: sessions first (each cancels its
+    /// queued ops and leaves the scheduler), then the pool — whose drop
+    /// joins the worker threads after at most one in-flight op each.
+    fn drop(&mut self) {
+        self.sessions.clear();
+        self.pool.discard_pending();
+    }
+}

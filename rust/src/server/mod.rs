@@ -1,0 +1,31 @@
+//! Multi-tenant training session server (DESIGN.md §11).
+//!
+//! Serves N concurrent training jobs from ONE process, multiplexing the
+//! expensive decomposition workers across tenants the way a production
+//! optimizer-as-a-service would — the next step after PR 1 moved
+//! decompositions off a single run's critical path:
+//!
+//! * [`manager::SessionManager`] owns the sessions, the shared
+//!   [`WorkerPool`](crate::util::threadpool::WorkerPool), and the session
+//!   lifecycle (`create / pause / resume / checkpoint / restore / drop`)
+//!   with admission control and backpressure-as-pause;
+//! * [`sched::FairScheduler`] replaces the single-tenant FIFO drain with
+//!   weighted round-robin over tenants (virtual-time fair queuing),
+//!   starvation-free by construction and property-tested;
+//! * [`session`] defines the workloads: host-substrate sessions (no
+//!   artifacts needed — tests, smoke runs, benches) and artifact-backed
+//!   [`Trainer`](crate::coordinator::Trainer) sessions;
+//! * [`ckpt`] serializes full session state — EA factor stats, `LowRank`
+//!   reps + Brand-chain position, RNG streams, step counters — with
+//!   bit-identical resume as the correctness contract;
+//! * [`driver`] runs the scripted job files behind `bnkfac serve`.
+
+pub mod ckpt;
+pub mod driver;
+pub mod manager;
+pub mod sched;
+pub mod session;
+
+pub use manager::{RoundStats, ServerCfg, Session, SessionManager, SessionStatus};
+pub use sched::FairScheduler;
+pub use session::{HostSession, HostSessionCfg, ModelSession, Workload};

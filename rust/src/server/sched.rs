@@ -1,0 +1,290 @@
+//! Weighted fair-share scheduler for the shared decomposition pool
+//! (DESIGN.md §11.2).
+//!
+//! Replaces the single-tenant FIFO drain of `precond`: each tenant
+//! (training session) has a ready-queue of factor cells with pending
+//! decomposition ops, and every dispatch picks ONE op from the tenant
+//! with the smallest *virtual time* `served / weight` — classic weighted
+//! round-robin via virtual finishing times. Properties:
+//!
+//! * **weighted shares** — with all tenants backlogged, tenant i receives
+//!   ops in proportion `w_i / Σw`;
+//! * **starvation freedom** — a ready tenant's virtual time is frozen
+//!   while it waits and every other tenant's grows per op served, so any
+//!   ready tenant is picked within a bounded number of dispatches
+//!   (property-tested below);
+//! * **per-cell FIFO is untouched** — the scheduler orders *cells*, each
+//!   cell's op chain still drains in submission order under a single
+//!   drainer ([`FactorCell::drain_one`]), so the Brand-chain
+//!   schedule-independence guarantee of the single-tenant service
+//!   carries over verbatim.
+//!
+//! Late-registering tenants start at the current minimum virtual time
+//! (not zero), so a newcomer cannot monopolize the pool to "catch up".
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::precond::service::ServiceCounters;
+use crate::precond::FactorCell;
+
+/// One schedulable unit: a factor cell plus its owning service's
+/// counters (completion accounting is per-tenant).
+pub(crate) struct ReadyCell {
+    pub(crate) cell: Arc<FactorCell>,
+    pub(crate) counters: Arc<ServiceCounters>,
+}
+
+struct SessEntry {
+    weight: u32,
+    /// ops actually dispatched to this tenant (metrics: queue share)
+    served: u64,
+    /// virtual-time offset applied at registration so latecomers start
+    /// at the current minimum VT instead of 0 (kept separate from
+    /// `served` so metrics report true dispatch counts)
+    vt_base: u64,
+    ready: VecDeque<ReadyCell>,
+}
+
+fn vt(e: &SessEntry) -> f64 {
+    (e.vt_base + e.served) as f64 / e.weight as f64
+}
+
+#[derive(Default)]
+struct Inner {
+    sessions: BTreeMap<u64, SessEntry>,
+    total_served: u64,
+}
+
+/// Weighted round-robin dispatcher shared by all sessions of a server.
+#[derive(Default)]
+pub struct FairScheduler {
+    inner: Mutex<Inner>,
+}
+
+impl FairScheduler {
+    pub fn new() -> FairScheduler {
+        FairScheduler::default()
+    }
+
+    /// Add a tenant. Its virtual time starts at the current minimum so it
+    /// competes fairly from now on (no retroactive catch-up burst).
+    pub fn register(&self, key: u64, weight: u32) {
+        let mut inn = self.inner.lock().unwrap();
+        let start_vt = inn
+            .sessions
+            .values()
+            .map(vt)
+            .fold(f64::INFINITY, f64::min);
+        let vt_base = if start_vt.is_finite() {
+            (start_vt * weight.max(1) as f64).floor() as u64
+        } else {
+            0
+        };
+        inn.sessions.insert(
+            key,
+            SessEntry {
+                weight: weight.max(1),
+                served: 0,
+                vt_base,
+                ready: VecDeque::new(),
+            },
+        );
+    }
+
+    /// Remove a tenant; its queued ready-cells are dropped (their op
+    /// queues are cancelled separately by the owning service's drop).
+    pub fn unregister(&self, key: u64) {
+        self.inner.lock().unwrap().sessions.remove(&key);
+    }
+
+    pub fn n_sessions(&self) -> usize {
+        self.inner.lock().unwrap().sessions.len()
+    }
+
+    /// Ops dispatched per tenant: `(key, served, weight)`.
+    pub fn served(&self) -> Vec<(u64, u64, u32)> {
+        let inn = self.inner.lock().unwrap();
+        inn.sessions
+            .iter()
+            .map(|(k, e)| (*k, e.served, e.weight))
+            .collect()
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.inner.lock().unwrap().total_served
+    }
+
+    /// Mark a cell ready for this tenant (called by the owning service at
+    /// submit time, under the cell lock — lock order is cell → sched).
+    pub(crate) fn enqueue(&self, key: u64, rc: ReadyCell) {
+        let mut inn = self.inner.lock().unwrap();
+        if let Some(e) = inn.sessions.get_mut(&key) {
+            e.ready.push_back(rc);
+        }
+        // unknown key: the tenant was dropped; the entry is discarded and
+        // the cell's queue has been cancelled by the service drop
+    }
+
+    /// Pick the next (tenant, cell) by minimum virtual time; ties break
+    /// toward the lowest key for determinism.
+    fn pick(&self) -> Option<(u64, ReadyCell)> {
+        let mut inn = self.inner.lock().unwrap();
+        let key = inn
+            .sessions
+            .iter()
+            .filter(|(_, e)| !e.ready.is_empty())
+            .min_by(|x, y| {
+                vt(x.1)
+                    .partial_cmp(&vt(y.1))
+                    .unwrap()
+                    .then(x.0.cmp(y.0))
+            })
+            .map(|(k, _)| *k)?;
+        let rc = {
+            let e = inn.sessions.get_mut(&key).unwrap();
+            let rc = e.ready.pop_front().unwrap();
+            e.served += 1;
+            rc
+        };
+        inn.total_served += 1;
+        Some((key, rc))
+    }
+
+    /// Worker-pool job body: keep draining one op from the fairest ready
+    /// tenant until nothing is ready. One such job is submitted per op,
+    /// and a job that re-enqueues work keeps looping, so no op is ever
+    /// stranded even when a sibling job exits early.
+    pub(crate) fn dispatch(&self) {
+        while let Some((key, rc)) = self.pick() {
+            let more = FactorCell::drain_one(&rc.cell, &rc.counters);
+            if more {
+                self.enqueue(key, rc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn dummy(id: &str) -> ReadyCell {
+        ReadyCell {
+            cell: Arc::new(FactorCell::new(id.into())),
+            counters: Arc::new(ServiceCounters::default()),
+        }
+    }
+
+    /// Simulate an always-backlogged tenant set: after each pick the same
+    /// tenant is immediately re-enqueued, mirroring a cell whose queue
+    /// never empties. Returns the pick sequence.
+    fn simulate(sched: &FairScheduler, keys: &[u64], picks: usize) -> Vec<u64> {
+        for &k in keys {
+            sched.enqueue(k, dummy("c"));
+        }
+        let mut order = Vec::with_capacity(picks);
+        for _ in 0..picks {
+            let (k, rc) = sched.pick().expect("always ready");
+            order.push(k);
+            sched.enqueue(k, rc);
+        }
+        order
+    }
+
+    #[test]
+    fn weighted_shares_are_proportional() {
+        let sched = FairScheduler::new();
+        sched.register(1, 3);
+        sched.register(2, 1);
+        let order = simulate(&sched, &[1, 2], 40);
+        let c1 = order.iter().filter(|&&k| k == 1).count();
+        let c2 = order.iter().filter(|&&k| k == 2).count();
+        assert!((29..=31).contains(&c1), "weight-3 share {c1}/40");
+        assert!((9..=11).contains(&c2), "weight-1 share {c2}/40");
+        assert_eq!(sched.total_served(), 40);
+    }
+
+    #[test]
+    fn late_registration_does_not_monopolize() {
+        let sched = FairScheduler::new();
+        sched.register(1, 1);
+        let _ = simulate(&sched, &[1], 50); // tenant 1 far ahead in served
+        sched.register(2, 1); // starts at current min VT, not 0
+        sched.enqueue(2, dummy("c2"));
+        let mut burst = 0usize;
+        for _ in 0..10 {
+            let (k, rc) = sched.pick().unwrap();
+            if k == 2 {
+                burst += 1;
+            }
+            sched.enqueue(k, rc);
+        }
+        // equal weights from equal virtual times → roughly alternating
+        assert!(burst <= 6, "newcomer burst {burst}/10");
+    }
+
+    /// Starvation freedom under adversarial weights/tenant counts: with
+    /// every tenant always ready, any tenant is served at least once in
+    /// every window of `2·⌈Σw / w_i⌉ + n` consecutive dispatches.
+    #[test]
+    fn prop_no_ready_session_starves() {
+        proptest::check(
+            "fair scheduler bounded wait",
+            |rng: &mut Rng| {
+                let n = 2 + rng.next_below(6);
+                let weights: Vec<u32> =
+                    (0..n).map(|_| 1 + rng.next_below(8) as u32).collect();
+                weights
+            },
+            |weights| {
+                let sched = FairScheduler::new();
+                let keys: Vec<u64> = (0..weights.len() as u64).collect();
+                for (k, w) in keys.iter().zip(weights) {
+                    sched.register(*k, *w);
+                }
+                let total_w: u32 = weights.iter().sum();
+                let picks = 40 * weights.len();
+                let order = simulate(&sched, &keys, picks);
+                for (i, w) in weights.iter().enumerate() {
+                    let bound =
+                        2 * (total_w as usize).div_ceil(*w as usize) + weights.len();
+                    let mut last = 0usize; // window start
+                    for (pos, k) in order.iter().enumerate() {
+                        if *k == i as u64 {
+                            if pos - last > bound {
+                                return Err(format!(
+                                    "tenant {i} (w={w}) waited {} > bound {bound}",
+                                    pos - last
+                                ));
+                            }
+                            last = pos;
+                        }
+                    }
+                    if order.len() - last > bound {
+                        return Err(format!(
+                            "tenant {i} (w={w}) starved at tail: {} > {bound}",
+                            order.len() - last
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn unregister_drops_ready_work() {
+        let sched = FairScheduler::new();
+        sched.register(1, 1);
+        sched.enqueue(1, dummy("c"));
+        sched.unregister(1);
+        assert!(sched.pick().is_none());
+        assert_eq!(sched.n_sessions(), 0);
+        // enqueue after unregister is a silent no-op
+        sched.enqueue(1, dummy("c"));
+        assert!(sched.pick().is_none());
+    }
+}

@@ -1,0 +1,362 @@
+//! Per-tenant training workloads (DESIGN.md §11.3).
+//!
+//! A session is one independent training job multiplexed onto the shared
+//! decomposition pool. Two workload kinds:
+//!
+//! * [`HostSession`] — a self-contained K-factor optimizer pipeline on
+//!   the host linalg substrate (no artifacts / PJRT needed): per step it
+//!   draws synthetic statistics and gradients from the session RNG,
+//!   EA-updates its factors, submits the policy's decomposition ops
+//!   ([`OpRequest`]) to the shared pool, and applies the installed
+//!   low-rank inverses to a parameter block. This is the workload the
+//!   offline tests, the `serve` smoke run, and the throughput bench use.
+//! * [`ModelSession`] — a full artifact-backed [`Trainer`] (model
+//!   fwd/bwd via PJRT) whose `PrecondService` was constructed in shared
+//!   mode. Requires a compiled artifact bundle, so it is exercised only
+//!   when a runtime is available (mirrors the e2e test gating).
+//!
+//! Determinism contract (the checkpoint/resume bit-match foundation):
+//! a `HostSession` draws ALL randomness on its stepping thread in a
+//! fixed order, installs published decompositions only at stat steps,
+//! and — with `staleness = 1` stat-period — only when its cells have
+//! fully drained. The trajectory is then a pure function of the config,
+//! independent of worker scheduling.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Trainer;
+use crate::data::{Batch, Dataset};
+use crate::linalg::Mat;
+use crate::optim::factor::{OpRequest, Stat};
+use crate::optim::{Algo, FactorState, Hyper, Policy};
+use crate::precond::PrecondService;
+use crate::runtime::FactorPlan;
+use crate::util::rng::{Rng, RngState};
+use crate::util::timer::PhaseTimers;
+
+/// Configuration of a host-substrate session (serializable; part of the
+/// checkpoint so a restore rebuilds an identical pipeline).
+#[derive(Clone, Debug)]
+pub struct HostSessionCfg {
+    /// number of independent K-factor shards this session maintains
+    pub factors: usize,
+    /// factor dimension d
+    pub dim: usize,
+    /// target rank r
+    pub rank: usize,
+    /// columns of the raw statistic per stat step (paper's n)
+    pub n_stat: usize,
+    /// columns of the synthetic gradient block
+    pub grad_cols: usize,
+    /// stat-update period (decomposition cadences derive from it)
+    pub t_updt: usize,
+    pub algo: Algo,
+    pub seed: u64,
+    /// total optimizer steps this session runs
+    pub steps: u64,
+    pub rho: f32,
+    /// damping for the inverse application
+    pub lambda: f32,
+}
+
+impl Default for HostSessionCfg {
+    fn default() -> Self {
+        HostSessionCfg {
+            factors: 2,
+            dim: 48,
+            rank: 6,
+            n_stat: 3,
+            grad_cols: 4,
+            t_updt: 2,
+            algo: Algo::BKfac,
+            seed: 1,
+            steps: 24,
+            rho: 0.95,
+            lambda: 0.1,
+        }
+    }
+}
+
+fn plan_for(cfg: &HostSessionCfg, i: usize) -> FactorPlan {
+    FactorPlan {
+        id: format!("f{i}/A"),
+        layer: format!("f{i}"),
+        kind: "fc".into(),
+        side: "A".into(),
+        dim: cfg.dim,
+        rank: cfg.rank,
+        sketch: cfg.rank + 4,
+        brand: true,
+        n: cfg.n_stat,
+        n_crc: (cfg.rank / 2).max(1),
+        ops: Default::default(),
+    }
+}
+
+fn policy_for(cfg: &HostSessionCfg) -> Policy {
+    Policy::new(
+        cfg.algo,
+        Hyper {
+            rho: cfg.rho,
+            t_updt: cfg.t_updt,
+            t_inv: cfg.t_updt * 4,
+            t_brand: cfg.t_updt,
+            t_rsvd: cfg.t_updt * 8,
+            t_corct: cfg.t_updt * 4,
+            // every eligible factor is brand-managed in host sessions
+            brand_layer: None,
+            ..Hyper::default()
+        },
+    )
+}
+
+/// Host-substrate training session (no artifacts required).
+pub struct HostSession {
+    pub cfg: HostSessionCfg,
+    pub policy: Policy,
+    /// session-side factor states: EA Gram authority + INSTALLED reps
+    pub factors: Vec<FactorState>,
+    /// one parameter block per factor, updated with the preconditioned
+    /// synthetic gradient each step
+    pub params: Vec<Mat>,
+    pub rng: Rng,
+    pub step: u64,
+    /// step of the latest installed published decomposition, per factor
+    /// (-1 = nothing installed yet)
+    pub last_installed: Vec<i64>,
+    /// ‖direction‖_F of the last applied step (a loss-like probe)
+    pub loss_proxy: f32,
+}
+
+impl HostSession {
+    pub fn new(cfg: HostSessionCfg) -> HostSession {
+        let policy = policy_for(&cfg);
+        let factors: Vec<FactorState> = (0..cfg.factors)
+            .map(|i| {
+                let p = plan_for(&cfg, i);
+                let keep = policy.needs_gram(&p);
+                FactorState::new(p, keep)
+            })
+            .collect();
+        let params = (0..cfg.factors)
+            .map(|_| Mat::zeros(cfg.dim, cfg.grad_cols))
+            .collect();
+        let rng = Rng::new(cfg.seed);
+        let n = cfg.factors;
+        HostSession {
+            cfg,
+            policy,
+            factors,
+            params,
+            rng,
+            step: 0,
+            last_installed: vec![-1; n],
+            loss_proxy: 0.0,
+        }
+    }
+
+    /// Cell ids for the session's `PrecondService` (index-aligned with
+    /// `self.factors`).
+    pub fn factor_ids(&self) -> Vec<String> {
+        self.factors.iter().map(|f| f.plan.id.clone()).collect()
+    }
+
+    pub fn t_updt(&self) -> usize {
+        self.policy.hyper.t_updt
+    }
+
+    pub fn done(&self) -> bool {
+        self.step >= self.cfg.steps
+    }
+
+    /// Backpressure probe: may the next step run without violating the
+    /// staleness bound (`staleness_periods` stat-periods of decomposition
+    /// lag)? Only stat steps gate; the serving loop pauses the session
+    /// (rather than blocking the pool) while this is false.
+    pub fn ready(&self, svc: &PrecondService, staleness_periods: usize) -> bool {
+        let t = self.t_updt() as u64;
+        if self.step % t != 0 {
+            return true;
+        }
+        let horizon = self.step as i64 - (staleness_periods.max(1) as u64 * t) as i64;
+        (0..self.factors.len()).all(|i| match svc.cell(i).oldest_pending_step() {
+            None => true,
+            Some(o) => o as i64 > horizon,
+        })
+    }
+
+    /// Install the freshest published decompositions. Called only at stat
+    /// steps, and only cells with no in-flight ops are read — with a
+    /// staleness bound of 1 stat-period this makes install points (and
+    /// hence the whole trajectory) deterministic.
+    fn install(&mut self, svc: &PrecondService) {
+        for i in 0..self.factors.len() {
+            let cell = svc.cell(i);
+            if cell.pending_len() != 0 {
+                continue;
+            }
+            if let Some(snap) = cell.load_published() {
+                if snap.step as i64 > self.last_installed[i] {
+                    self.last_installed[i] = snap.step as i64;
+                    svc.note_install(self.step.saturating_sub(snap.step));
+                    self.factors[i].rep = Some(snap.rep.clone());
+                }
+            }
+        }
+    }
+
+    /// One optimizer step: (stat steps) install + EA update + submit
+    /// decomposition ops; (every step) precondition a synthetic gradient
+    /// and update the parameter block.
+    pub fn step(&mut self, svc: &PrecondService, timers: &mut PhaseTimers) -> Result<()> {
+        let k = self.step;
+        let stat_step = k as usize % self.t_updt() == 0;
+        if stat_step {
+            self.install(svc);
+            let rho = self.policy.hyper.rho;
+            // draw all statistics first, in factor order (fixed RNG order)
+            let stats: Vec<Mat> = (0..self.factors.len())
+                .map(|_| Mat::gauss(self.cfg.dim, self.cfg.n_stat, 1.0, &mut self.rng))
+                .collect();
+            for (f, stat) in self.factors.iter_mut().zip(&stats) {
+                f.stat_update(&Stat::Raw(stat), rho, None, timers)?;
+            }
+            for (i, stat) in stats.iter().enumerate() {
+                let f = &self.factors[i];
+                let op = self.policy.op_at(k as usize, &f.plan);
+                if let Some(req) = OpRequest::prepare(
+                    op,
+                    &f.plan,
+                    f.gram.as_ref(),
+                    Some(stat),
+                    rho,
+                    &mut self.rng,
+                ) {
+                    svc.submit(i, req, k, None, timers)?;
+                }
+            }
+        }
+        // "training" half of the step: preconditioned parameter update
+        let alpha = 0.01f32;
+        for i in 0..self.factors.len() {
+            let grad = Mat::gauss(self.cfg.dim, self.cfg.grad_cols, 1.0, &mut self.rng);
+            let dir = match &self.factors[i].rep {
+                Some(rep) => timers.time("apply", || {
+                    rep.apply_inv_left(&grad, self.cfg.lambda, true)
+                }),
+                None => grad,
+            };
+            self.loss_proxy = dir.fro_norm();
+            self.params[i].axpy_inplace(-alpha, &dir);
+        }
+        self.step += 1;
+        Ok(())
+    }
+
+    /// Flat fingerprint of all trajectory-determined state (tests compare
+    /// this across interleavings / checkpoint-resume boundaries).
+    pub fn state_vector(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend_from_slice(&p.data);
+        }
+        for f in &self.factors {
+            if let Some(rep) = &f.rep {
+                out.extend_from_slice(&rep.u.data);
+                out.extend_from_slice(&rep.d);
+            }
+            if let Some(g) = &f.gram {
+                out.extend_from_slice(&g.data);
+            }
+        }
+        out.push(self.loss_proxy);
+        out
+    }
+}
+
+/// Artifact-backed session: a full [`Trainer`] stepped batch-by-batch by
+/// the serving loop. The trainer's `PrecondService` must have been built
+/// in shared mode (see `SessionManager::create_model`).
+pub struct ModelSession<'rt> {
+    pub tr: Trainer<'rt>,
+    ds: Dataset,
+    batches: Vec<Batch>,
+    shuffle_rng: Rng,
+    /// shuffle-RNG state captured just before `batches` was generated —
+    /// checkpointing this lets a restore regenerate the SAME epoch order
+    /// and land the RNG on the identical continuation state
+    epoch_rng_start: RngState,
+    epoch: usize,
+    bi: usize,
+    pub target_steps: u64,
+}
+
+impl<'rt> ModelSession<'rt> {
+    pub fn new(tr: Trainer<'rt>, ds: Dataset, target_steps: u64) -> ModelSession<'rt> {
+        let b = tr.rt.manifest.config.batch;
+        let mut shuffle_rng = Rng::new(tr.cfg.seed ^ 0xDA7A);
+        let epoch_rng_start = shuffle_rng.state();
+        let batches = ds.epoch_batches(b, &mut shuffle_rng);
+        ModelSession {
+            tr,
+            ds,
+            batches,
+            shuffle_rng,
+            epoch_rng_start,
+            epoch: 0,
+            bi: 0,
+            target_steps,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.tr.step as u64 >= self.target_steps
+    }
+
+    pub fn ready(&self) -> bool {
+        self.tr.staleness_ok()
+    }
+
+    pub fn step(&mut self) -> Result<()> {
+        ensure!(!self.done(), "model session already finished");
+        if self.bi >= self.batches.len() {
+            self.epoch += 1;
+            self.bi = 0;
+            let b = self.tr.rt.manifest.config.batch;
+            self.epoch_rng_start = self.shuffle_rng.state();
+            self.batches = self.ds.epoch_batches(b, &mut self.shuffle_rng);
+        }
+        self.tr.train_step(&self.batches[self.bi], self.epoch)?;
+        self.bi += 1;
+        Ok(())
+    }
+
+    /// Data-pipeline position for checkpointing: `(epoch, batch index,
+    /// shuffle-RNG state at the start of the current epoch)`.
+    pub fn pipeline_state(&self) -> (usize, usize, RngState) {
+        (self.epoch, self.bi, self.epoch_rng_start.clone())
+    }
+
+    /// Restore the pipeline position saved by
+    /// [`pipeline_state`](Self::pipeline_state): rebuilds the current
+    /// epoch's batch order from the epoch-start RNG state (which also
+    /// advances the RNG to the exact continuation point) and resumes at
+    /// batch `bi`. Requires the same dataset the checkpointed session
+    /// used (same `DatasetCfg`) for bit-identical resume.
+    pub fn restore_pipeline(&mut self, epoch: usize, bi: usize, start: &RngState) {
+        self.epoch = epoch;
+        self.bi = bi;
+        self.epoch_rng_start = start.clone();
+        self.shuffle_rng = Rng::from_state(start);
+        let b = self.tr.rt.manifest.config.batch;
+        self.batches = self.ds.epoch_batches(b, &mut self.shuffle_rng);
+    }
+}
+
+/// The two workload kinds a [`super::manager::SessionManager`] can own.
+/// The model variant is boxed: a `Trainer` is much larger inline than a
+/// host session.
+pub enum Workload<'rt> {
+    Host(HostSession),
+    Model(Box<ModelSession<'rt>>),
+}

@@ -157,6 +157,16 @@ impl WorkerPool {
     pub fn jobs_run(&self) -> u64 {
         self.shared.jobs_run.load(Ordering::Relaxed)
     }
+
+    /// Discard jobs that have not started yet (graceful shutdown: the
+    /// in-flight jobs finish, queued ones are dropped). Returns how many
+    /// were discarded.
+    pub fn discard_pending(&self) -> usize {
+        let mut q = self.shared.queue.lock().unwrap();
+        let n = q.len();
+        q.clear();
+        n
+    }
 }
 
 impl Drop for WorkerPool {

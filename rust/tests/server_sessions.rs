@@ -1,0 +1,353 @@
+//! Integration tests for the multi-tenant session server (DESIGN.md §11):
+//! session isolation under the shared pool, checkpoint/resume
+//! bit-identity (including an in-flight Brand chain), admission control,
+//! fair-share non-starvation under flooding, and graceful shutdown of a
+//! service dropped mid-queue. Host substrate only — no artifacts needed.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use bnkfac::linalg::Mat;
+use bnkfac::optim::{Algo, OpRequest, UpdateOp};
+use bnkfac::precond::{PrecondCfg, PrecondService};
+use bnkfac::runtime::FactorPlan;
+use bnkfac::server::{
+    FairScheduler, HostSessionCfg, ServerCfg, SessionManager, SessionStatus, Workload,
+};
+use bnkfac::util::rng::Rng;
+use bnkfac::util::threadpool::WorkerPool;
+use bnkfac::util::timer::PhaseTimers;
+
+fn scfg(seed: u64, algo: Algo, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 2,
+        dim: 36,
+        rank: 5,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+fn host_fingerprint(mgr: &SessionManager, id: u64) -> (Vec<f32>, [u64; 4]) {
+    let s = mgr.session(id).expect("session");
+    match &s.work {
+        Workload::Host(h) => (h.state_vector(), h.rng.state().s),
+        _ => panic!("expected host session"),
+    }
+}
+
+/// Two sessions interleaved on one shared pool must produce EXACTLY the
+/// state each produces when run alone — tenant isolation is bit-level.
+#[test]
+fn interleaved_sessions_bitmatch_solo_runs() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+    };
+    let mut mgr = SessionManager::new(cfg.clone());
+    let a = mgr.create_host("a", 2, scfg(11, Algo::BKfac, 20)).unwrap();
+    let b = mgr.create_host("b", 1, scfg(22, Algo::BKfacC, 20)).unwrap();
+    mgr.run_to_completion(100_000).unwrap();
+    let fa = host_fingerprint(&mgr, a);
+    let fb = host_fingerprint(&mgr, b);
+
+    for (seed, algo, want) in [(11, Algo::BKfac, &fa), (22, Algo::BKfacC, &fb)] {
+        let mut solo = SessionManager::new(cfg.clone());
+        let id = solo.create_host("solo", 1, scfg(seed, algo, 20)).unwrap();
+        solo.run_to_completion(100_000).unwrap();
+        let f = host_fingerprint(&solo, id);
+        assert_eq!(f.0, want.0, "state diverged for seed {seed}");
+        assert_eq!(f.1, want.1, "rng diverged for seed {seed}");
+    }
+
+    let rec = mgr.record();
+    assert_eq!(rec.total_steps, 40);
+    assert!(rec.fairness_jain > 0.0 && rec.fairness_jain <= 1.0 + 1e-12);
+    for s in &rec.sessions {
+        assert_eq!(s.submitted, s.completed, "ops lost for {}", s.name);
+        assert_eq!(s.status, "Done");
+    }
+}
+
+/// Checkpoint a session mid-run (with a live Brand chain), restore it in
+/// a fresh server, and run both to completion: the resumed trajectory
+/// must be bit-identical to the uninterrupted one.
+#[test]
+fn checkpoint_restore_resumes_bit_identically() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 2,
+        staleness: 1,
+    };
+    // uninterrupted reference
+    let mut reference = SessionManager::new(cfg.clone());
+    let rid = reference
+        .create_host("ref", 1, scfg(7, Algo::BKfac, 40))
+        .unwrap();
+    reference.run_to_completion(100_000).unwrap();
+    let want = host_fingerprint(&reference, rid);
+
+    // interrupted run: checkpoint mid-flight, then continue
+    let mut mgr = SessionManager::new(cfg.clone());
+    let id = mgr.create_host("x", 1, scfg(7, Algo::BKfac, 40)).unwrap();
+    while mgr.session(id).unwrap().steps_done() < 21 {
+        let st = mgr.run_round().unwrap();
+        if st.stepped == 0 {
+            std::thread::yield_now();
+        }
+        assert!(mgr.round < 1_000_000, "stalled before checkpoint point");
+    }
+    let ckpt = mgr.checkpoint(id).unwrap();
+    // the Brand chain must actually be in the checkpoint by step 21
+    let text = ckpt.to_string_pretty();
+    assert!(text.contains("\"chain\""), "checkpoint lacks chain state");
+    mgr.run_to_completion(100_000).unwrap();
+    assert_eq!(
+        host_fingerprint(&mgr, id),
+        want,
+        "checkpointing perturbed the continuing run"
+    );
+
+    // resumed run in a fresh server
+    let mut resumed = SessionManager::new(cfg);
+    let rid2 = resumed.restore(&ckpt, "x-resumed").unwrap();
+    let at_restore = resumed.session(rid2).unwrap().steps_done();
+    assert!((21..40).contains(&at_restore), "bad resume point {at_restore}");
+    resumed.run_to_completion(100_000).unwrap();
+    assert_eq!(
+        host_fingerprint(&resumed, rid2),
+        want,
+        "resumed trajectory diverged"
+    );
+}
+
+#[test]
+fn admission_control_rejects_past_capacity() {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 1,
+        max_sessions: 2,
+        staleness: 1,
+    });
+    let a = mgr.create_host("a", 1, scfg(1, Algo::BKfac, 8)).unwrap();
+    let _b = mgr.create_host("b", 1, scfg(2, Algo::BKfac, 8)).unwrap();
+    let err = mgr.create_host("c", 1, scfg(3, Algo::BKfac, 8));
+    assert!(err.is_err(), "third session admitted past capacity 2");
+    // dropping one frees the slot
+    mgr.drop_session(a).unwrap();
+    mgr.create_host("c", 1, scfg(3, Algo::BKfac, 8)).unwrap();
+    mgr.run_to_completion(100_000).unwrap();
+}
+
+#[test]
+fn pause_resume_lifecycle() {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 1,
+        max_sessions: 2,
+        staleness: 1,
+    });
+    let id = mgr.create_host("p", 1, scfg(5, Algo::BKfac, 10)).unwrap();
+    mgr.run_round().unwrap();
+    mgr.pause(id).unwrap();
+    let before = mgr.session(id).unwrap().steps_done();
+    for _ in 0..5 {
+        mgr.run_round().unwrap();
+    }
+    assert_eq!(
+        mgr.session(id).unwrap().steps_done(),
+        before,
+        "paused session stepped"
+    );
+    assert_eq!(mgr.session(id).unwrap().status, SessionStatus::Paused);
+    mgr.resume(id).unwrap();
+    mgr.run_to_completion(100_000).unwrap();
+    assert_eq!(mgr.session(id).unwrap().steps_done(), 10);
+}
+
+/// One tenant's decomposition chain failing must mark THAT session
+/// Failed (error recorded) while every other tenant completes — the
+/// failure-containment half of the isolation contract.
+#[test]
+fn session_failure_is_contained() {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 1,
+        max_sessions: 2,
+        staleness: 1,
+    });
+    let bad = mgr.create_host("bad", 1, scfg(41, Algo::BKfac, 12)).unwrap();
+    let good = mgr.create_host("good", 1, scfg(42, Algo::BKfac, 12)).unwrap();
+    // poison the bad session's first cell: a Brand op with no predecessor
+    // representation errors on the worker and fails the chain
+    {
+        let svc = mgr.session(bad).unwrap().svc.as_ref().unwrap();
+        let req = OpRequest {
+            op: UpdateOp::Brand,
+            plan: heavy_plan("f0/A", 36),
+            gram: None,
+            raw_stat: Some(Mat::zeros(36, 2)),
+            omega: None,
+            corr_idx: None,
+            rho: 0.9,
+        };
+        let mut t = PhaseTimers::new();
+        svc.submit(0, req, 0, None, &mut t).unwrap();
+    }
+    mgr.run_to_completion(100_000).unwrap();
+    let b = mgr.session(bad).unwrap();
+    assert_eq!(b.status, SessionStatus::Failed, "poisoned session not Failed");
+    assert!(b.error.is_some(), "failure not recorded");
+    let g = mgr.session(good).unwrap();
+    assert_eq!(g.status, SessionStatus::Done, "healthy tenant was taken down");
+    assert_eq!(g.steps_done(), 12);
+}
+
+fn heavy_plan(id: &str, dim: usize) -> FactorPlan {
+    FactorPlan {
+        id: id.into(),
+        layer: "l".into(),
+        kind: "fc".into(),
+        side: "A".into(),
+        dim,
+        rank: 16,
+        sketch: 20,
+        brand: true,
+        n: 4,
+        n_crc: 8,
+        ops: BTreeMap::new(),
+    }
+}
+
+fn heavy_rsvd(plan: &FactorPlan, gram: &Mat, rng: &mut Rng) -> OpRequest {
+    OpRequest::prepare(UpdateOp::Rsvd, plan, Some(gram), None, 0.9, rng).unwrap()
+}
+
+/// A tenant submitting one op must not wait behind another tenant's
+/// entire backlog — the scheduler serves the newcomer within its fair
+/// share (the end-to-end counterpart of the unit-level proptest).
+#[test]
+fn fair_share_newcomer_is_not_starved_by_flood() {
+    let pool = Arc::new(WorkerPool::new(1));
+    let sched = Arc::new(FairScheduler::new());
+    sched.register(1, 1);
+    sched.register(2, 1);
+    let plan = heavy_plan("flood/A", 160);
+    let cfg = PrecondCfg {
+        workers: 1,
+        max_staleness: 64,
+    };
+    let svc_flood = PrecondService::shared(
+        cfg.clone(),
+        vec!["flood/A".into()],
+        pool.clone(),
+        sched.clone(),
+        1,
+    );
+    let svc_small = PrecondService::shared(
+        cfg,
+        vec!["small/A".into()],
+        pool.clone(),
+        sched.clone(),
+        2,
+    );
+    let mut rng = Rng::new(3);
+    let gram = Mat::psd_with_decay(160, 0.7, &mut rng);
+    let mut t = PhaseTimers::new();
+    for k in 0..24u64 {
+        svc_flood
+            .submit(0, heavy_rsvd(&plan, &gram, &mut rng), k, None, &mut t)
+            .unwrap();
+    }
+    let small_plan = heavy_plan("small/A", 160);
+    svc_small
+        .submit(0, heavy_rsvd(&small_plan, &gram, &mut rng), 0, None, &mut t)
+        .unwrap();
+    svc_small.drain().unwrap();
+    let flood_done = svc_flood
+        .counters()
+        .completed
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(
+        flood_done < 20,
+        "newcomer waited behind {flood_done}/24 flood ops — not fair-shared"
+    );
+    svc_flood.drain().unwrap();
+}
+
+/// Regression (graceful shutdown): dropping a service mid-queue cancels
+/// the unstarted backlog and joins the drainer threads instead of
+/// leaking them or draining everything first.
+#[test]
+fn dropping_service_mid_queue_cancels_and_joins() {
+    let plan = heavy_plan("big/A", 220);
+    let svc = PrecondService::new(
+        PrecondCfg {
+            workers: 1,
+            max_staleness: 32,
+        },
+        vec!["big/A".into()],
+    );
+    let mut rng = Rng::new(9);
+    let gram = Mat::psd_with_decay(220, 0.7, &mut rng);
+    let mut t = PhaseTimers::new();
+    for k in 0..12u64 {
+        svc.submit(0, heavy_rsvd(&plan, &gram, &mut rng), k, None, &mut t)
+            .unwrap();
+    }
+    let counters = svc.counters().clone();
+    drop(svc); // cancels queued ops, then joins the pool threads
+    use std::sync::atomic::Ordering::Relaxed;
+    let completed = counters.completed.load(Relaxed);
+    assert_eq!(counters.submitted.load(Relaxed), 12);
+    assert!(
+        completed < 12,
+        "drop drained the whole backlog instead of cancelling ({completed}/12)"
+    );
+}
+
+/// Dropping a whole manager with live sessions and queued ops must
+/// return promptly (threads joined, queue cancelled) — regression for
+/// the drop-ordering contract.
+#[test]
+fn dropping_manager_mid_run_is_clean() {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+    });
+    let big = HostSessionCfg {
+        dim: 180,
+        rank: 16,
+        steps: 50,
+        ..scfg(31, Algo::BKfac, 50)
+    };
+    mgr.create_host("m1", 1, big.clone()).unwrap();
+    mgr.create_host("m2", 1, HostSessionCfg { seed: 32, ..big }).unwrap();
+    for _ in 0..6 {
+        mgr.run_round().unwrap();
+    }
+    drop(mgr); // must not hang or leak threads
+}
+
+/// The scripted job driver end-to-end on the shipped smoke file
+/// (create / pause / resume / checkpoint / restore / drop).
+#[test]
+fn job_driver_runs_smoke_file() {
+    let path = format!(
+        "{}/../examples/jobs_smoke.json",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let rec = bnkfac::server::driver::run_jobs(&path, None, 500_000).unwrap();
+    assert!(rec.total_steps > 0);
+    assert!(rec.fairness_jain > 0.0 && rec.fairness_jain <= 1.0 + 1e-12);
+    // the restored session ran alongside the original three (one dropped)
+    assert_eq!(rec.sessions.len(), 3, "{:?}", rec.sessions);
+    for s in &rec.sessions {
+        assert_eq!(s.submitted, s.completed, "ops lost for {}", s.name);
+    }
+}
