@@ -129,6 +129,10 @@ pub struct TrainerState {
     pub bn_initialized: bool,
     /// per-factor snapshots, `2*layer + {0=A, 1=G}` order
     pub factors: Vec<FactorSnapshot>,
+    /// SENG running squared-gradient diagonals (empty for other algos)
+    pub seng_diag: Vec<(String, Vec<f32>)>,
+    /// SENG momentum velocity buffers (empty for other algos)
+    pub seng_velocity: Vec<(String, Vec<f32>)>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -700,6 +704,7 @@ impl<'rt> Trainer<'rt> {
             factors.push(l.a.snapshot());
             factors.push(l.g.snapshot());
         }
+        let (seng_diag, seng_velocity) = self.seng.snapshot();
         TrainerState {
             step: self.step,
             rng: self.rng.state(),
@@ -708,6 +713,8 @@ impl<'rt> Trainer<'rt> {
             bn_vars,
             bn_initialized: self.bn.initialized(),
             factors,
+            seng_diag,
+            seng_velocity,
         }
     }
 
@@ -759,6 +766,7 @@ impl<'rt> Trainer<'rt> {
             l.a.restore(it.next().unwrap());
             l.g.restore(it.next().unwrap());
         }
+        self.seng.restore(st.seng_diag, st.seng_velocity);
         // seeded publications are already reflected in the restored reps;
         // start install tracking from the current published versions
         if let Some(svc) = &self.service {

@@ -111,7 +111,9 @@ impl LowRank {
         }
         // re-sort descending
         let mut order: Vec<usize> = (0..d_new.len()).collect();
-        order.sort_by(|&a, &b| d_new[b].partial_cmp(&d_new[a]).unwrap());
+        // total_cmp: NaN eigenvalues (degenerate spectra, overflow) must
+        // yield a deterministic order, not a comparator panic
+        order.sort_by(|&a, &b| d_new[b].total_cmp(&d_new[a]));
         let mut u_sorted = Mat::zeros(self.dim(), d_new.len());
         let mut d_sorted = vec![0.0f32; d_new.len()];
         for (newj, &oldj) in order.iter().enumerate() {
@@ -268,5 +270,20 @@ mod tests {
         let lr = LowRank::from_eigh(&g.syrk().eigh(), 8);
         let a = Mat::gauss(d, 4, 1.0, &mut rng); // 8+4 > 10
         let _ = lr.brand_update(&a);
+    }
+
+    /// Regression: `correction`'s re-sort used `partial_cmp(..).unwrap()`
+    /// and panicked when an uncorrected mode carried a NaN eigenvalue
+    /// (the non-corrected entries of `d_new` are copied through as-is).
+    #[test]
+    fn correction_survives_nan_mode() {
+        let mut rng = Rng::new(47);
+        let m = Mat::psd_with_decay(8, 0.6, &mut rng);
+        let ev = m.eigh();
+        let mut rep = LowRank::from_eigh(&ev, 4);
+        rep.d[2] = f32::NAN; // a blown-up mode outside the corrected set
+        let out = rep.correction(&m, &[0, 1]);
+        assert_eq!(out.rank(), 4);
+        assert!(out.d.iter().any(|x| x.is_nan()));
     }
 }

@@ -67,7 +67,8 @@ impl Mat {
         tqli(&mut d, &mut e, n, &mut a);
         // sort descending
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+        // total_cmp: never panic on NaN eigenvalues (non-finite input)
+        order.sort_by(|&i, &j| d[j].total_cmp(&d[i]));
         let mut u = Mat::zeros(n, n);
         let mut dv = vec![0.0f32; n];
         for (newj, &oldj) in order.iter().enumerate() {
@@ -139,7 +140,8 @@ impl Mat {
             }
         }
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&i, &j| a[j * n + j].partial_cmp(&a[i * n + i]).unwrap());
+        // total_cmp: never panic on NaN eigenvalues (non-finite input)
+        order.sort_by(|&i, &j| a[j * n + j].total_cmp(&a[i * n + i]));
         let mut u = Mat::zeros(n, n);
         let mut dv = vec![0.0f32; n];
         for (newj, &oldj) in order.iter().enumerate() {
@@ -411,5 +413,19 @@ mod tests {
             assert!((l - 1.0).abs() < 1e-6);
         }
         check_evd(&m, &ev, 1e-5);
+    }
+
+    /// Regression: the descending eigenvalue sort used `partial_cmp(..)
+    /// .unwrap()` and panicked when a non-finite input produced NaN
+    /// diagonal entries. Jacobi runs a fixed sweep budget, so NaN input
+    /// reaches the sort — it must order deterministically, not panic.
+    #[test]
+    fn jacobi_sort_survives_nan_input() {
+        let mut m = Mat::eye(5);
+        m[(1, 3)] = f32::NAN;
+        m[(3, 1)] = f32::NAN;
+        let ev = m.eigh_jacobi();
+        assert_eq!(ev.d.len(), 5);
+        assert!(ev.d.iter().any(|x| x.is_nan()));
     }
 }

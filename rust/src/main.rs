@@ -4,20 +4,26 @@
 //!   info           inspect an artifact directory
 //!   train          train with any optimizer, log curves to CSV
 //!   error-study    §4.2 probe: per-step error metrics vs exact benchmark
-//!   serve          multi-tenant session server driven by a job file
+//!   serve          multi-tenant session server: --jobs <file> runs a
+//!                  scripted timeline, --listen <addr> serves the
+//!                  line-delimited JSON socket protocol (DESIGN.md §12)
+//!   client         speak the socket protocol to a live server
 //!
 //! All experiment harnesses (Fig 1/2, Tables 1/2, scaling) live in
 //! `cargo bench` targets; see README.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use bnkfac::coordinator::probe::ErrorProbe;
 use bnkfac::coordinator::{Trainer, TrainerCfg};
 use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::metrics::ServerRecord;
 use bnkfac::optim::{Algo, Hyper};
 use bnkfac::precond::PrecondCfg;
 use bnkfac::runtime::Runtime;
+use bnkfac::server::{frontend, proto, ServerCfg};
 use bnkfac::util::cli::Args;
+use bnkfac::util::ser::Json;
 
 fn main() -> Result<()> {
     let args = Args::parse();
@@ -26,26 +32,14 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("error-study") => cmd_error_study(&args),
         Some("serve") => cmd_serve(&args),
-        Some(other) => bail!("unknown subcommand '{other}' (info|train|error-study|serve)"),
+        Some("client") => cmd_client(&args),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (info|train|error-study|serve|client)")
+        }
     }
 }
 
-/// Multi-tenant session server, driven by a scripted job file (see
-/// `server::driver` for the format; `examples/jobs_smoke.json` is a
-/// runnable sample). Runs entirely on the host substrate — no artifacts
-/// or PJRT needed.
-fn cmd_serve(args: &Args) -> Result<()> {
-    let jobs = args
-        .get("jobs")
-        .map(|s| s.to_string())
-        .ok_or_else(|| anyhow!("serve requires --jobs <file>"))?;
-    let workers = args.get_usize("workers", 0);
-    let workers = (workers > 0).then_some(workers);
-    let max_rounds = args.get_u64("max-rounds", 1_000_000);
-    let out = args.get("out").map(|s| s.to_string());
-    args.finish().map_err(|e| anyhow!(e))?;
-
-    let rec = bnkfac::server::driver::run_jobs(&jobs, workers, max_rounds)?;
+fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
     println!("--- session server ---\n{}", rec.summary());
     if let Some(path) = out {
         if let Some(dir) = std::path::Path::new(&path).parent() {
@@ -54,6 +48,166 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::fs::write(&path, rec.to_json().to_string_pretty())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Multi-tenant session server. Two frontends over the same command
+/// core (`server::driver::ServerCore`):
+///
+/// * `--jobs <file>` — scripted timeline (`examples/jobs_smoke.json`);
+/// * `--listen <addr>` — line-delimited JSON protocol over TCP
+///   (DESIGN.md §12); `--port-file <path>` writes the bound address
+///   (resolving `:0`) for scripting, `--artifacts <dir>` additionally
+///   enables model sessions, `--ckpt-dir <dir>` (default `results`)
+///   confines wire-supplied checkpoint paths.
+///
+/// Host sessions run entirely on the host substrate — no artifacts or
+/// PJRT needed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.get("jobs").map(|s| s.to_string());
+    let listen = args.get("listen").map(|s| s.to_string());
+    let workers = args.get_usize("workers", 0);
+    let out = args.get("out").map(|s| s.to_string());
+    match (jobs, listen) {
+        (Some(_), Some(_)) => bail!("serve takes --jobs OR --listen, not both"),
+        (None, None) => bail!("serve requires --jobs <file> or --listen <addr>"),
+        (Some(jobs), None) => {
+            // finite scripts need a runaway guard
+            let max_rounds = args.get_u64("max-rounds", 1_000_000);
+            args.finish().map_err(|e| anyhow!(e))?;
+            let workers = (workers > 0).then_some(workers);
+            let rec = bnkfac::server::driver::run_jobs(&jobs, workers, max_rounds)?;
+            write_record(&rec, out)
+        }
+        (None, Some(addr)) => {
+            // a long-lived network server is unbounded unless capped:
+            // the scripted driver's round budget must not become an
+            // uptime bound that kills live sessions undrained
+            let max_rounds = args.get_u64("max-rounds", u64::MAX);
+            let d = ServerCfg::default();
+            let cfg = ServerCfg {
+                workers: if workers > 0 { workers } else { d.workers },
+                max_sessions: args.get_usize("max-sessions", d.max_sessions),
+                staleness: args.get_usize("staleness", d.staleness),
+            };
+            let rt = match args.get("artifacts") {
+                Some(dir) => Some(Runtime::open(dir.to_string())?),
+                None => None,
+            };
+            let port_file = args.get("port-file").map(|s| s.to_string());
+            // wire-supplied checkpoint paths are confined under this dir
+            let ckpt_dir = args.get_or("ckpt-dir", "results").to_string();
+            args.finish().map_err(|e| anyhow!(e))?;
+            let mut fe = frontend::bind(&addr)?;
+            fe.set_ckpt_root(Some(ckpt_dir.into()));
+            let local = fe.local_addr();
+            println!("listening on {local}");
+            if let Some(pf) = port_file {
+                if let Some(dir) = std::path::Path::new(&pf).parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(&pf, local.to_string())?;
+            }
+            let rec = fe.run(cfg, rt.as_ref(), max_rounds)?;
+            write_record(&rec, out)
+        }
+    }
+}
+
+/// Minimal protocol client for smoke tests and scripting: builds ONE
+/// request from flags (or sends `--req '<json>'` verbatim), prints the
+/// reply line, and exits non-zero on an error reply.
+///
+/// `bnkfac client --addr 127.0.0.1:4815 --op create --name a --steps 24`
+fn cmd_client(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args
+        .get("addr")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("client requires --addr <host:port>"))?;
+    let line = match args.get("req") {
+        Some(raw) => {
+            let raw = raw.to_string();
+            // validate locally so typos fail before they hit the wire
+            proto::parse_request(&raw)
+                .map_err(|(code, msg)| anyhow!("bad --req ({code}): {msg}"))?;
+            raw
+        }
+        None => {
+            let op = args
+                .get("op")
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow!("client requires --op <kind> or --req '<json>'"))?;
+            let mut req = vec![("op".to_string(), Json::str(&op))];
+            for key in ["name", "path"] {
+                if let Some(v) = args.get(key) {
+                    req.push((key.to_string(), Json::str(v)));
+                }
+            }
+            if let Some(w) = args.get("weight") {
+                req.push((
+                    "weight".to_string(),
+                    Json::Num(w.parse::<f64>().map_err(|_| anyhow!("bad --weight"))?),
+                ));
+            }
+            // session spec flags (create); missing fields take server
+            // defaults — the lenient spec parser fills them in. The key
+            // list is shared with the parser so the CLI cannot drift.
+            let mut session = Vec::new();
+            for key in proto::SESSION_NUM_KEYS {
+                let flag = key.replace('_', "-");
+                if let Some(v) = args.get(&flag) {
+                    session.push((
+                        key.to_string(),
+                        Json::Num(
+                            v.parse::<f64>().map_err(|_| anyhow!("bad --{flag}"))?,
+                        ),
+                    ));
+                }
+            }
+            if let Some(a) = args.get("algo") {
+                session.push(("algo".to_string(), Json::str(a)));
+            }
+            if let Some(s) = args.get("seed") {
+                // seeds travel as strings ("0x…" hex or decimal): a JSON
+                // number would round seeds above 2^53 through f64
+                if s.strip_prefix("0x").is_none() {
+                    s.parse::<u64>().map_err(|_| anyhow!("bad --seed"))?;
+                }
+                session.push(("seed".to_string(), Json::str(s)));
+            }
+            if op == "create" {
+                req.push((
+                    "session".to_string(),
+                    Json::Obj(session.into_iter().collect()),
+                ));
+            }
+            let j = Json::Obj(req.into_iter().collect());
+            // validate the assembled request before sending
+            proto::parse_request(&j.to_string_compact())
+                .map_err(|(code, msg)| anyhow!("bad request ({code}): {msg}"))?;
+            j.to_string_compact()
+        }
+    };
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let stream = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    out.write_all(line.as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()?;
+    let mut reply = String::new();
+    ensure!(
+        reader.read_line(&mut reply)? > 0,
+        "server closed the connection without replying"
+    );
+    let reply = reply.trim_end();
+    println!("{reply}");
+    let r = proto::parse_reply(reply)?;
+    ensure!(r.ok, "server error [{}]: {}", r.code, r.error);
     Ok(())
 }
 

@@ -149,6 +149,39 @@ impl SessionRecord {
     }
 }
 
+/// Network-frontend counters (DESIGN.md §12.5): connection and request
+/// volume, requests by kind, and rejects (protocol-level + apply-level).
+/// Attached to [`ServerRecord`] when `serve --listen` was used.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrontendRecord {
+    pub connections: u64,
+    pub requests: u64,
+    pub rejected: u64,
+    /// decoded requests per command kind, sorted by kind (includes
+    /// requests later rejected at apply time; `requests` additionally
+    /// counts undecodable lines, so `rejected <= requests` always)
+    pub by_kind: Vec<(String, u64)>,
+}
+
+impl FrontendRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("connections", Json::Num(self.connections as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            (
+                "by_kind",
+                Json::Obj(
+                    self.by_kind
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// End-of-run snapshot of the multi-tenant session server: aggregate
 /// throughput, scheduling fairness (Jain index over weight-normalized
 /// service), and the per-session queue shares / pause times.
@@ -165,6 +198,8 @@ pub struct ServerRecord {
     /// seconds the shared pool's workers spent executing ops
     pub worker_busy_s: f64,
     pub sessions: Vec<SessionRecord>,
+    /// present when the run was driven over the network frontend
+    pub frontend: Option<FrontendRecord>,
 }
 
 impl ServerRecord {
@@ -181,6 +216,13 @@ impl ServerRecord {
             (
                 "sessions",
                 Json::Arr(self.sessions.iter().map(|s| s.to_json()).collect()),
+            ),
+            (
+                "frontend",
+                self.frontend
+                    .as_ref()
+                    .map(|f| f.to_json())
+                    .unwrap_or(Json::Null),
             ),
         ])
     }
@@ -215,6 +257,20 @@ impl ServerRecord {
             if !s.error.is_empty() {
                 out.push_str(&format!("      error: {}\n", s.error));
             }
+        }
+        if let Some(f) = &self.frontend {
+            let kinds: Vec<String> = f
+                .by_kind
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            out.push_str(&format!(
+                "  frontend: {} connections, {} requests ({}), {} rejected\n",
+                f.connections,
+                f.requests,
+                kinds.join(" "),
+                f.rejected
+            ));
         }
         out
     }
@@ -373,6 +429,7 @@ mod tests {
                 status: "Done".into(),
                 error: String::new(),
             }],
+            frontend: None,
         };
         let j = rec.to_json();
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
@@ -380,6 +437,30 @@ mod tests {
         assert_eq!(sessions.len(), 1);
         assert_eq!(sessions[0].get("name").and_then(|v| v.as_str()), Some("a"));
         assert!(rec.summary().contains("fairness=0.980"));
+        assert_eq!(j.get("frontend"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn frontend_record_serializes() {
+        let rec = ServerRecord {
+            frontend: Some(FrontendRecord {
+                connections: 2,
+                requests: 5,
+                rejected: 1,
+                by_kind: vec![("create".into(), 1), ("stats".into(), 4)],
+            }),
+            ..Default::default()
+        };
+        let j = rec.to_json();
+        let f = j.get("frontend").unwrap();
+        assert_eq!(f.get("connections").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            f.get("by_kind").and_then(|b| b.get("stats")).and_then(|v| v.as_usize()),
+            Some(4)
+        );
+        let s = rec.summary();
+        assert!(s.contains("2 connections"), "{s}");
+        assert!(s.contains("create=1"), "{s}");
     }
 
     #[test]

@@ -590,7 +590,8 @@ pub fn truncate_or_pad(rep: &LowRank, r: usize) -> LowRank {
 /// Sort modes by eigenvalue descending (host side of the correction).
 fn sort_modes(rep: LowRank) -> LowRank {
     let mut order: Vec<usize> = (0..rep.rank()).collect();
-    order.sort_by(|&a, &b| rep.d[b].partial_cmp(&rep.d[a]).unwrap());
+    // total_cmp: a NaN mode (blown-up correction) must not panic the sort
+    order.sort_by(|&a, &b| rep.d[b].total_cmp(&rep.d[a]));
     if order.windows(2).all(|w| w[0] < w[1]) {
         return rep;
     }
@@ -816,5 +817,20 @@ mod tests {
         assert_eq!(t9.d[8], 0.0);
         // padding preserves the matrix
         assert!(t9.to_dense().rel_err(&rep.to_dense()) < 1e-5);
+    }
+
+    /// Regression: `sort_modes` used `partial_cmp(..).unwrap()` and
+    /// panicked on a NaN eigenvalue; it must order deterministically.
+    #[test]
+    fn sort_modes_survives_nan_eigenvalue() {
+        let mut rng = crate::util::rng::Rng::new(87);
+        let g = Mat::gauss(10, 5, 1.0, &mut rng);
+        let mut rep = LowRank::from_eigh(&g.syrk().eigh(), 5);
+        rep.d[1] = f32::NAN;
+        rep.d[3] = 0.0; // force an actual reorder
+        rep.d[0] = -1.0;
+        let out = sort_modes(rep);
+        assert_eq!(out.rank(), 5);
+        assert!(out.d.iter().any(|x| x.is_nan()));
     }
 }

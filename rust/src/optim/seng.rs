@@ -25,6 +25,9 @@ use std::collections::BTreeMap;
 
 use crate::linalg::Mat;
 
+/// Named per-parameter buffers in name order (checkpoint wire shape).
+pub type NamedBufs = Vec<(String, Vec<f32>)>;
+
 pub struct SengState {
     /// damping λ (official default 2 at CIFAR scale — tuned per run)
     pub damping: f32,
@@ -126,6 +129,25 @@ impl SengState {
             *vi = self.momentum * *vi + di;
         }
         v.clone()
+    }
+
+    /// Checkpoint support: the per-parameter running squared-gradient
+    /// diagonal and momentum velocity buffers, in name order. These are
+    /// the only trajectory-determining state SENG holds outside the
+    /// parameter store — serializing them (`server::ckpt`) is what makes
+    /// SENG resume bit-identical.
+    pub fn snapshot(&self) -> (NamedBufs, NamedBufs) {
+        let dump = |m: &BTreeMap<String, Vec<f32>>| {
+            m.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        (dump(&self.diag), dump(&self.velocity))
+    }
+
+    /// Restore buffers captured by [`snapshot`](Self::snapshot),
+    /// replacing any accumulated state.
+    pub fn restore(&mut self, diag: NamedBufs, velocity: NamedBufs) {
+        self.diag = diag.into_iter().collect();
+        self.velocity = velocity.into_iter().collect();
     }
 }
 

@@ -24,6 +24,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 use crate::coordinator::{TrainerCfg, TrainerState};
 use crate::linalg::{LowRank, Mat};
 use crate::optim::factor::FactorSnapshot;
+use crate::optim::seng::NamedBufs;
 use crate::optim::{Algo, Hyper};
 use crate::precond::{PrecondCfg, PrecondService};
 use crate::util::rng::{Rng, RngState};
@@ -32,7 +33,9 @@ use crate::util::ser::Json;
 use super::session::{HostSession, HostSessionCfg, ModelSession};
 
 pub const FORMAT: &str = "bnkfac-ckpt";
-pub const VERSION: f64 = 1.0;
+/// 1.1 added the `state.seng` buffers (SENG checkpointing); decoders
+/// treat the section as optional, so 1.0 checkpoints still restore.
+pub const VERSION: f64 = 1.1;
 
 // ---------------------------------------------------------- primitives
 
@@ -188,7 +191,7 @@ fn algo_from(j: &Json, key: &str) -> Result<Algo> {
 
 // ------------------------------------------------------- host sessions
 
-fn host_cfg_json(c: &HostSessionCfg) -> Json {
+pub(crate) fn host_cfg_json(c: &HostSessionCfg) -> Json {
     Json::obj(vec![
         ("factors", Json::Num(c.factors as f64)),
         ("dim", Json::Num(c.dim as f64)),
@@ -411,9 +414,10 @@ fn named_f32s_from(j: &Json) -> Result<Vec<(String, Vec<f32>)>> {
 
 /// Serialize an artifact-backed trainer session, including the data-
 /// pipeline position (epoch, batch index, epoch-start shuffle RNG) so a
-/// restore replays the identical batch stream. SENG is rejected (its
-/// momentum buffers are not serialized). Precondition: the trainer's
-/// service is drained (`Trainer::drain_service`).
+/// restore replays the identical batch stream, and — for SENG — the
+/// running squared-gradient diagonals and momentum velocities.
+/// Precondition: the trainer's service is drained
+/// (`Trainer::drain_service`).
 pub fn encode_model(
     name: &str,
     weight: u32,
@@ -422,10 +426,6 @@ pub fn encode_model(
     let tr = &m.tr;
     let target_steps = m.target_steps;
     let (epoch, bi, epoch_rng_start) = m.pipeline_state();
-    ensure!(
-        tr.cfg.algo != Algo::Seng,
-        "SENG checkpointing unsupported (momentum buffers not serialized)"
-    );
     if let Some(svc) = &tr.service {
         ensure!(
             svc.pending_total() == 0,
@@ -473,6 +473,15 @@ pub fn encode_model(
                 ("eval_every", Json::Num(tr.cfg.eval_every as f64)),
                 ("hyper", hyper_json(&tr.cfg.hyper)),
                 (
+                    "seng",
+                    Json::obj(vec![
+                        ("damping", Json::Num(tr.cfg.seng_damping as f64)),
+                        ("momentum", Json::Num(tr.cfg.seng_momentum as f64)),
+                        ("lr0", Json::Num(tr.cfg.seng_lr0 as f64)),
+                        ("wd", Json::Num(tr.cfg.seng_wd as f64)),
+                    ]),
+                ),
+                (
                     "precond",
                     Json::obj(vec![
                         ("workers", Json::Num(precond.workers as f64)),
@@ -499,10 +508,43 @@ pub fn encode_model(
                     "factors",
                     Json::Arr(st.factors.iter().map(factor_json).collect()),
                 ),
+                (
+                    "seng",
+                    seng_state_json(&st.seng_diag, &st.seng_velocity),
+                ),
             ]),
         ),
         ("chains", Json::Arr(chains)),
     ]))
+}
+
+/// The `state.seng` checkpoint section: SENG's running squared-gradient
+/// diagonals and momentum velocities (empty arrays for other algos).
+/// Public so the SENG resume bit-match test can round-trip the buffers
+/// without an artifact runtime.
+pub fn seng_state_json(
+    diag: &[(String, Vec<f32>)],
+    velocity: &[(String, Vec<f32>)],
+) -> Json {
+    Json::obj(vec![
+        ("diag", named_f32s_json(diag)),
+        ("velocity", named_f32s_json(velocity)),
+    ])
+}
+
+/// Decode a `state.seng` section. `None`/absent decodes to empty buffers
+/// so version-1.0 checkpoints (which predate SENG support) still load.
+pub fn seng_state_from(j: Option<&Json>) -> Result<(NamedBufs, NamedBufs)> {
+    match j {
+        None | Some(Json::Null) => Ok((Vec::new(), Vec::new())),
+        Some(sj) => Ok((
+            named_f32s_from(sj.get("diag").ok_or_else(|| anyhow!("seng missing diag"))?)?,
+            named_f32s_from(
+                sj.get("velocity")
+                    .ok_or_else(|| anyhow!("seng missing velocity"))?,
+            )?,
+        )),
+    }
 }
 
 /// A decoded model checkpoint.
@@ -533,11 +575,25 @@ pub fn decode_model(j: &Json) -> Result<ModelRestore> {
         workers: req_usize(pj, "workers")?,
         max_staleness: req_usize(pj, "max_staleness")?,
     };
+    // SENG hyperparameters determine the resumed trajectory; an absent
+    // section (pre-1.1 checkpoint) falls back to the defaults
+    let dflt = TrainerCfg::default();
+    let seng_f32 = |key: &str, d: f32| -> f32 {
+        cj.get("seng")
+            .and_then(|s| s.get(key))
+            .and_then(|v| v.as_f64())
+            .map(|f| f as f32)
+            .unwrap_or(d)
+    };
     let cfg = TrainerCfg {
         algo: algo_from(cj, "algo")?,
         hyper: hyper_from(cj.get("hyper").ok_or_else(|| anyhow!("missing hyper"))?)?,
         seed: u64_from(cj.get("seed").ok_or_else(|| anyhow!("missing seed"))?)?,
         eval_every: req_usize(cj, "eval_every")?,
+        seng_damping: seng_f32("damping", dflt.seng_damping),
+        seng_momentum: seng_f32("momentum", dflt.seng_momentum),
+        seng_lr0: seng_f32("lr0", dflt.seng_lr0),
+        seng_wd: seng_f32("wd", dflt.seng_wd),
         // the manager supplies the shared service; cfg.precond is unused
         precond: None,
         ..TrainerCfg::default()
@@ -551,6 +607,7 @@ pub fn decode_model(j: &Json) -> Result<ModelRestore> {
         .iter()
         .map(factor_from)
         .collect::<Result<Vec<_>>>()?;
+    let (seng_diag, seng_velocity) = seng_state_from(st.get("seng"))?;
     let state = TrainerState {
         step: req_usize(st, "step")?,
         rng: rng_from(st.get("rng").ok_or_else(|| anyhow!("missing rng"))?)?,
@@ -568,6 +625,8 @@ pub fn decode_model(j: &Json) -> Result<ModelRestore> {
             .and_then(|v| v.as_bool())
             .unwrap_or(false),
         factors,
+        seng_diag,
+        seng_velocity,
     };
     let chains = j
         .get("chains")

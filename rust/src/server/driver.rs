@@ -1,12 +1,23 @@
-//! Scripted job-file driver for `bnkfac serve` (DESIGN.md §11.5).
+//! Command application core + scripted job-file driver (DESIGN.md §11.5,
+//! §12.4).
 //!
-//! There is no network runtime in this build, so the server is driven by
-//! a declarative job file: a server config plus a timeline of lifecycle
-//! actions applied at serving-loop rounds. Example:
+//! [`ServerCore`] is the single place lifecycle commands meet the
+//! [`SessionManager`]: both frontends — the scripted job file behind
+//! `bnkfac serve --jobs` and the TCP socket behind `bnkfac serve
+//! --listen` (`server::frontend`) — decode their input into
+//! [`proto::Command`]s and run the same `apply-commands-then-serve-round`
+//! loop. Commands are only ever applied *between* serving rounds, on the
+//! serving thread, so the determinism and fair-share guarantees of the
+//! scripted driver carry over to the network path unchanged.
+//!
+//! Job-file format: a server config, an optional artifacts dir (enables
+//! model sessions), and a timeline of commands applied at serving-loop
+//! rounds. Example:
 //!
 //! ```json
 //! {
 //!   "server": {"workers": 3, "max_sessions": 4, "staleness": 1},
+//!   "artifacts": "artifacts/tiny",
 //!   "jobs": [
 //!     {"at": 0,  "action": "create", "name": "a", "weight": 2,
 //!      "session": {"factors": 2, "dim": 48, "rank": 6, "n_stat": 3,
@@ -19,49 +30,265 @@
 //!     {"at": 12, "action": "resume", "name": "a"},
 //!     {"at": 14, "action": "restore", "name": "a2",
 //!      "path": "results/ckpt_a.json"},
-//!     {"at": 16, "action": "drop", "name": "a2"}
+//!     {"at": 16, "action": "drop", "name": "a2"},
+//!     {"at": 18, "action": "create-model", "name": "m", "weight": 1,
+//!      "model": {"algo": "seng", "seed": "0x2a", "steps": 12},
+//!      "dataset": {"n_train": 256, "n_test": 64}},
+//!     {"at": 30, "action": "checkpoint", "name": "m",
+//!      "path": "results/ckpt_m.json"},
+//!     {"at": 32, "action": "restore", "name": "m2",
+//!      "path": "results/ckpt_m.json", "dataset": {"n_train": 256,
+//!      "n_test": 64}}
 //!   ]
 //! }
 //! ```
 //!
-//! `at` is a round index; actions due at or before the current round are
-//! applied in file order before the round is served. `session.seed`
-//! accepts either a JSON number or a hex string.
+//! `at` is a round index; commands due at or before the current round
+//! are applied in file order before the round is served. Session specs
+//! are parsed leniently (missing fields take defaults, seeds are numbers
+//! or hex strings — `proto::host_cfg_lenient`). Model commands
+//! (`create-model`, `restore` of a model checkpoint) require the
+//! `artifacts` dir; their `dataset` spec regenerates the synthetic data
+//! pipeline, whose geometry comes from the artifact manifest.
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use crate::coordinator::TrainerCfg;
+use crate::data::{Dataset, DatasetCfg};
 use crate::metrics::ServerRecord;
+use crate::runtime::Runtime;
 use crate::util::ser::Json;
 
-use super::ckpt;
-use super::manager::{ServerCfg, SessionManager};
-use super::session::HostSessionCfg;
+use super::manager::{RoundStats, ServerCfg, SessionManager};
+use super::proto::{Command, DataSpec};
+
+/// Shared command-application core: the session manager, the name → id
+/// map both frontends address sessions by, and the shutdown latch.
+pub struct ServerCore<'rt> {
+    pub mgr: SessionManager<'rt>,
+    names: BTreeMap<String, u64>,
+    rt: Option<&'rt Runtime>,
+    shutdown: bool,
+    /// When set, checkpoint/restore paths must be relative (no `..`)
+    /// and are resolved under this root. The network frontend sets it —
+    /// remote peers must not be able to name arbitrary server-side
+    /// files — while operator-authored job files keep full paths.
+    ckpt_root: Option<std::path::PathBuf>,
+}
+
+impl<'rt> ServerCore<'rt> {
+    /// Build the core; with a runtime the server can also host
+    /// artifact-backed model sessions.
+    pub fn new(cfg: ServerCfg, rt: Option<&'rt Runtime>) -> ServerCore<'rt> {
+        let mgr = match rt {
+            Some(r) => SessionManager::with_runtime(cfg, r),
+            None => SessionManager::new(cfg),
+        };
+        ServerCore {
+            mgr,
+            names: BTreeMap::new(),
+            rt,
+            shutdown: false,
+            ckpt_root: None,
+        }
+    }
+
+    /// Confine checkpoint/restore paths under `root` (see `ckpt_root`).
+    pub fn set_ckpt_root(&mut self, root: Option<std::path::PathBuf>) {
+        self.ckpt_root = root;
+    }
+
+    /// Has a `shutdown` command been applied?
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown
+    }
+
+    fn resolve_path(&self, path: &str) -> Result<std::path::PathBuf> {
+        let p = std::path::Path::new(path);
+        match &self.ckpt_root {
+            None => Ok(p.to_path_buf()),
+            Some(root) => {
+                use std::path::Component;
+                ensure!(
+                    p.is_relative()
+                        && p.components()
+                            .all(|c| matches!(c, Component::Normal(_) | Component::CurDir)),
+                    "checkpoint path must be relative without '..' components"
+                );
+                Ok(root.join(p))
+            }
+        }
+    }
+
+    fn lookup(&self, name: &str) -> Result<u64> {
+        self.names
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no session named '{name}'"))
+    }
+
+    fn claim_name(&self, name: &str) -> Result<()> {
+        ensure!(
+            !self.names.contains_key(name),
+            "session name '{name}' already in use"
+        );
+        Ok(())
+    }
+
+    fn dataset(&self, spec: &DataSpec) -> Result<Dataset> {
+        let rt = self
+            .rt
+            .ok_or_else(|| anyhow!("model sessions need a runtime (serve with --artifacts)"))?;
+        let m = &rt.manifest.config;
+        Ok(Dataset::generate(DatasetCfg {
+            image: m.image,
+            channels: m.channels,
+            n_classes: m.n_classes,
+            n_train: spec.n_train,
+            n_test: spec.n_test,
+            noise: spec.noise,
+            label_noise: spec.label_noise,
+            seed: spec.seed,
+            ..DatasetCfg::default()
+        }))
+    }
+
+    /// Apply one lifecycle command; returns the reply payload (the
+    /// `data` object of an `ok` wire reply). Both frontends call this
+    /// between serving rounds, on the serving thread.
+    pub fn apply(&mut self, cmd: &Command) -> Result<Json> {
+        match cmd {
+            Command::Create {
+                name,
+                weight,
+                session,
+            } => {
+                self.claim_name(name)?;
+                let id = self.mgr.create_host(name, *weight, session.clone())?;
+                self.names.insert(name.clone(), id);
+                Ok(Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::str(name)),
+                ]))
+            }
+            Command::CreateModel {
+                name,
+                weight,
+                model,
+                dataset,
+            } => {
+                self.claim_name(name)?;
+                let ds = self.dataset(dataset)?;
+                let tcfg = TrainerCfg {
+                    algo: model.algo,
+                    seed: model.seed,
+                    eval_every: 0,
+                    ..TrainerCfg::default()
+                };
+                let id = self
+                    .mgr
+                    .create_model(name, *weight, tcfg, ds, model.steps)?;
+                self.names.insert(name.clone(), id);
+                Ok(Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::str(name)),
+                ]))
+            }
+            Command::Pause { name } => {
+                self.mgr.pause(self.lookup(name)?)?;
+                Ok(Json::obj(vec![("name", Json::str(name))]))
+            }
+            Command::Resume { name } => {
+                self.mgr.resume(self.lookup(name)?)?;
+                Ok(Json::obj(vec![("name", Json::str(name))]))
+            }
+            Command::Checkpoint { name, path } => {
+                let id = self.lookup(name)?;
+                let full = self.resolve_path(path)?;
+                let j = self.mgr.checkpoint(id)?;
+                if let Some(dir) = full.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(&full, j.to_string_pretty())
+                    .with_context(|| format!("writing checkpoint {}", full.display()))?;
+                let step = self.mgr.session(id).map(|s| s.steps_done()).unwrap_or(0);
+                Ok(Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("path", Json::Str(full.display().to_string())),
+                    ("step", Json::Num(step as f64)),
+                ]))
+            }
+            Command::Restore {
+                name,
+                path,
+                dataset,
+            } => {
+                self.claim_name(name)?;
+                let full = self.resolve_path(path)?;
+                let text = std::fs::read_to_string(&full)
+                    .with_context(|| format!("reading checkpoint {}", full.display()))?;
+                let j = Json::parse(&text).map_err(|e| anyhow!("checkpoint json: {e}"))?;
+                let kind = j.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+                let id = match kind {
+                    "host" => self.mgr.restore(&j, name)?,
+                    "model" => {
+                        let spec = dataset.ok_or_else(|| {
+                            anyhow!("restoring a model checkpoint needs a 'dataset' spec")
+                        })?;
+                        let ds = self.dataset(&spec)?;
+                        self.mgr.restore_model(&j, name, ds)?
+                    }
+                    other => bail!("unknown checkpoint kind '{other}'"),
+                };
+                self.names.insert(name.clone(), id);
+                let step = self.mgr.session(id).map(|s| s.steps_done()).unwrap_or(0);
+                Ok(Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::str(name)),
+                    ("kind", Json::str(kind)),
+                    ("step", Json::Num(step as f64)),
+                ]))
+            }
+            Command::Drop { name } => {
+                let id = self.lookup(name)?;
+                self.mgr.drop_session(id)?;
+                self.names.remove(name);
+                Ok(Json::obj(vec![("name", Json::str(name))]))
+            }
+            Command::Stats => Ok(self.mgr.record().to_json()),
+            Command::Shutdown => {
+                self.shutdown = true;
+                Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
+            }
+        }
+    }
+
+    /// Serve one round: step every runnable session, or just advance the
+    /// round clock when nothing is running (so `at`-scheduled commands
+    /// still come due). Sleeps briefly when every runnable session is
+    /// backpressure-blocked — the decomposition workers need the CPU.
+    pub fn serve_round(&mut self) -> Result<RoundStats> {
+        if self.mgr.any_running() {
+            let st = self.mgr.run_round()?;
+            if st.stepped == 0 && st.blocked > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Ok(st)
+        } else {
+            self.mgr.run_round_counter_only();
+            Ok(RoundStats::default())
+        }
+    }
+}
 
 struct Job {
     at: u64,
-    action: String,
-    name: String,
-    weight: u32,
-    path: Option<String>,
-    session: Option<HostSessionCfg>,
+    cmd: Command,
 }
 
-fn parse_session_cfg(j: &Json) -> Result<HostSessionCfg> {
-    // tolerate a numeric seed in hand-written job files
-    if let Some(Json::Num(n)) = j.get("seed") {
-        let mut m = match j {
-            Json::Obj(m) => m.clone(),
-            _ => bail!("session spec must be an object"),
-        };
-        m.insert("seed".into(), Json::Str(format!("{:#x}", *n as u64)));
-        return ckpt::host_cfg_from(&Json::Obj(m));
-    }
-    ckpt::host_cfg_from(j)
-}
-
-fn parse_jobs(root: &Json) -> Result<(ServerCfg, Vec<Job>)> {
+fn parse_jobs(root: &Json) -> Result<(ServerCfg, Option<String>, Vec<Job>)> {
     let null = Json::Null;
     let sj = root.get("server").unwrap_or(&null);
     let d = ServerCfg::default();
@@ -79,101 +306,23 @@ fn parse_jobs(root: &Json) -> Result<(ServerCfg, Vec<Job>)> {
             .and_then(|v| v.as_usize())
             .unwrap_or(d.staleness),
     };
+    let artifacts = root
+        .get("artifacts")
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string());
     let jobs = root
         .get("jobs")
         .and_then(|v| v.as_arr())
         .ok_or_else(|| anyhow!("job file missing 'jobs' array"))?
         .iter()
         .map(|j| {
-            let action = j
-                .get("action")
-                .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("job missing 'action'"))?
-                .to_string();
-            let session = match j.get("session") {
-                Some(s) => Some(parse_session_cfg(s)?),
-                None => None,
-            };
             Ok(Job {
                 at: j.get("at").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
-                action,
-                name: j
-                    .get("name")
-                    .and_then(|v| v.as_str())
-                    .unwrap_or("")
-                    .to_string(),
-                weight: j.get("weight").and_then(|v| v.as_usize()).unwrap_or(1) as u32,
-                path: j.get("path").and_then(|v| v.as_str()).map(|s| s.to_string()),
-                session,
+                cmd: super::proto::command_from_json(j)?,
             })
         })
         .collect::<Result<Vec<Job>>>()?;
-    Ok((cfg, jobs))
-}
-
-fn apply(
-    mgr: &mut SessionManager,
-    names: &mut BTreeMap<String, u64>,
-    job: &Job,
-) -> Result<()> {
-    let lookup = |names: &BTreeMap<String, u64>, name: &str| -> Result<u64> {
-        names
-            .get(name)
-            .copied()
-            .ok_or_else(|| anyhow!("no session named '{name}'"))
-    };
-    match job.action.as_str() {
-        "create" => {
-            let scfg = job
-                .session
-                .clone()
-                .ok_or_else(|| anyhow!("create needs a 'session' spec"))?;
-            let id = mgr.create_host(&job.name, job.weight, scfg)?;
-            names.insert(job.name.clone(), id);
-            println!("[round {}] created session '{}' (id {id})", mgr.round, job.name);
-        }
-        "pause" => {
-            mgr.pause(lookup(names, &job.name)?)?;
-            println!("[round {}] paused '{}'", mgr.round, job.name);
-        }
-        "resume" => {
-            mgr.resume(lookup(names, &job.name)?)?;
-            println!("[round {}] resumed '{}'", mgr.round, job.name);
-        }
-        "checkpoint" => {
-            let path = job
-                .path
-                .as_deref()
-                .ok_or_else(|| anyhow!("checkpoint needs a 'path'"))?;
-            let j = mgr.checkpoint(lookup(names, &job.name)?)?;
-            if let Some(dir) = std::path::Path::new(path).parent() {
-                std::fs::create_dir_all(dir)?;
-            }
-            std::fs::write(path, j.to_string_pretty())
-                .with_context(|| format!("writing checkpoint {path}"))?;
-            println!("[round {}] checkpointed '{}' -> {path}", mgr.round, job.name);
-        }
-        "restore" => {
-            let path = job
-                .path
-                .as_deref()
-                .ok_or_else(|| anyhow!("restore needs a 'path'"))?;
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading checkpoint {path}"))?;
-            let j = Json::parse(&text).map_err(|e| anyhow!("checkpoint json: {e}"))?;
-            let id = mgr.restore(&j, &job.name)?;
-            names.insert(job.name.clone(), id);
-            println!("[round {}] restored '{}' (id {id}) from {path}", mgr.round, job.name);
-        }
-        "drop" => {
-            let id = lookup(names, &job.name)?;
-            mgr.drop_session(id)?;
-            names.remove(&job.name);
-            println!("[round {}] dropped '{}'", mgr.round, job.name);
-        }
-        other => bail!("unknown job action '{other}'"),
-    }
-    Ok(())
+    Ok((cfg, artifacts, jobs))
 }
 
 /// Run a job file to completion; returns the final server record.
@@ -185,35 +334,37 @@ pub fn run_jobs(
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
     let root = Json::parse(&text).map_err(|e| anyhow!("job file json: {e}"))?;
-    let (mut cfg, jobs) = parse_jobs(&root)?;
+    let (mut cfg, artifacts, jobs) = parse_jobs(&root)?;
     if let Some(w) = workers_override {
         cfg.workers = w;
     }
-    let mut mgr = SessionManager::new(cfg);
-    let mut names: BTreeMap<String, u64> = BTreeMap::new();
+    let rt = match artifacts {
+        Some(dir) => Some(Runtime::open(dir)?),
+        None => None,
+    };
+    let mut core = ServerCore::new(cfg, rt.as_ref());
     let mut ji = 0usize;
     loop {
-        while ji < jobs.len() && jobs[ji].at <= mgr.round {
-            apply(&mut mgr, &mut names, &jobs[ji])?;
+        while ji < jobs.len() && jobs[ji].at <= core.mgr.round {
+            let cmd = &jobs[ji].cmd;
+            let data = core.apply(cmd)?;
+            println!(
+                "[round {}] {} {}",
+                core.mgr.round,
+                cmd.kind(),
+                data.to_string_compact()
+            );
             ji += 1;
         }
         let pending_jobs = ji < jobs.len();
-        if !mgr.any_running() && !pending_jobs {
+        if core.shutdown_requested() || (!core.mgr.any_running() && !pending_jobs) {
             break;
         }
-        if mgr.round >= max_rounds {
+        if core.mgr.round >= max_rounds {
             bail!("job driver exceeded {max_rounds} rounds");
         }
-        if mgr.any_running() {
-            let st = mgr.run_round()?;
-            if st.stepped == 0 && st.blocked > 0 {
-                std::thread::sleep(std::time::Duration::from_micros(200));
-            }
-        } else {
-            // idle rounds advance time toward the next scheduled job
-            mgr.run_round_counter_only();
-        }
+        core.serve_round()?;
     }
-    mgr.drain_all();
-    Ok(mgr.record())
+    core.mgr.drain_all();
+    Ok(core.mgr.record())
 }

@@ -1,0 +1,343 @@
+//! Network frontend for `bnkfac serve` (DESIGN.md §12).
+//!
+//! A line-delimited-JSON TCP endpoint (`std::net::TcpListener`, no
+//! external deps) that lets external clients create, steer, checkpoint
+//! and drop sessions on a live server — closing the ROADMAP "network
+//! frontend" item left open by the scripted job driver.
+//!
+//! Threading model (and why determinism survives the network):
+//!
+//! * an **accept thread** polls a nonblocking listener and spawns one
+//!   reader thread per connection;
+//! * each **connection thread** reads framed requests
+//!   ([`proto::read_frame`]), validates them ([`proto::parse_request`]),
+//!   and forwards decoded [`Command`]s over an mpsc channel, each paired
+//!   with a oneshot reply channel; protocol-level rejects (malformed,
+//!   oversized, bad request) are answered directly without ever touching
+//!   the serving thread;
+//! * the **serving thread** ([`Frontend::run`]) owns the
+//!   [`ServerCore`]: every loop iteration it drains all commands that
+//!   have arrived — applying them in arrival order, exactly like the job
+//!   driver applies due jobs in file order — replies, then serves one
+//!   round. Commands never interleave with a round, so the fair-share
+//!   scheduler, the staleness bounds, and the bit-identical
+//!   checkpoint/resume contract are untouched by the transport.
+//!
+//! Shutdown: a `shutdown` request latches the core; the serving loop
+//! breaks after replying, stops the accept thread, drains every
+//! session, and returns the final [`ServerRecord`] with the frontend
+//! counters attached. Connection threads die on EOF or when the command
+//! channel closes under them.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::{FrontendRecord, ServerRecord};
+use crate::runtime::Runtime;
+use crate::util::ser::Json;
+
+use super::driver::ServerCore;
+use super::manager::ServerCfg;
+use super::proto::{self, Command, Frame};
+
+/// Request/connection counters, shared between the connection threads
+/// (protocol rejects) and the serving thread (kind counts, apply
+/// rejects). Snapshotted into [`FrontendRecord`] for `stats` replies and
+/// the final server record.
+#[derive(Default)]
+pub struct FrontendCounters {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub rejected: AtomicU64,
+    by_kind: Mutex<BTreeMap<String, u64>>,
+}
+
+impl FrontendCounters {
+    fn note(&self, kind: &str) {
+        self.requests.fetch_add(1, Relaxed);
+        *self
+            .by_kind
+            .lock()
+            .unwrap()
+            .entry(kind.to_string())
+            .or_insert(0) += 1;
+    }
+
+    /// A request line that never decoded into a command (malformed,
+    /// oversized, bad UTF-8): counts as both a request and a reject, so
+    /// `rejected <= requests` always holds.
+    fn note_undecodable(&self) {
+        self.requests.fetch_add(1, Relaxed);
+        self.rejected.fetch_add(1, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FrontendRecord {
+        FrontendRecord {
+            connections: self.connections.load(Relaxed),
+            requests: self.requests.load(Relaxed),
+            rejected: self.rejected.load(Relaxed),
+            by_kind: self
+                .by_kind
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+}
+
+/// One in-flight request: the decoded command plus the channel the
+/// serialized reply line goes back on.
+type Msg = (Command, Sender<String>);
+
+/// A bound (but not yet serving) frontend. `bind` first, read
+/// [`local_addr`](Frontend::local_addr) (for `--listen 127.0.0.1:0`),
+/// then [`run`](Frontend::run) on the thread that owns the sessions.
+pub struct Frontend {
+    addr: SocketAddr,
+    rx: Receiver<Msg>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<FrontendCounters>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    /// Checkpoint/restore paths from the wire are confined under this
+    /// root (relative, no `..`); defaults to `results/`. `None` lifts
+    /// the restriction (trusted/loopback deployments only).
+    ckpt_root: Option<std::path::PathBuf>,
+}
+
+/// Bind the listener and start accepting connections. Requests queue on
+/// the command channel until `run` starts draining them.
+pub fn bind(addr: &str) -> Result<Frontend> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding frontend on {addr}"))?;
+    listener
+        .set_nonblocking(true)
+        .context("nonblocking listener")?;
+    let local = listener.local_addr()?;
+    let (tx, rx) = channel::<Msg>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let counters = Arc::new(FrontendCounters::default());
+    let accept = {
+        let stop = stop.clone();
+        let counters = counters.clone();
+        std::thread::Builder::new()
+            .name("bnkfac-accept".into())
+            .spawn(move || {
+                while !stop.load(Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            counters.connections.fetch_add(1, Relaxed);
+                            let _ = stream.set_nonblocking(false);
+                            let tx = tx.clone();
+                            let counters = counters.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("bnkfac-conn".into())
+                                .spawn(move || handle_conn(stream, tx, counters));
+                        }
+                        // WouldBlock: nothing to accept; anything else is
+                        // transient (per-connection) — poll again either way
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+                // tx (and its per-connection clones' parent) drops here;
+                // the serving loop sees a closed channel once every
+                // connection thread has exited too
+            })?
+    };
+    Ok(Frontend {
+        addr: local,
+        rx,
+        stop,
+        counters,
+        accept: Some(accept),
+        ckpt_root: Some(std::path::PathBuf::from("results")),
+    })
+}
+
+impl Frontend {
+    /// The actually-bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Override the checkpoint-path root (see `ckpt_root`).
+    pub fn set_ckpt_root(&mut self, root: Option<std::path::PathBuf>) {
+        self.ckpt_root = root;
+    }
+
+    /// Serve until a `shutdown` request (or `max_rounds`). Owns the
+    /// sessions for the whole run; commands are applied between rounds
+    /// in arrival order. Returns the final record with frontend
+    /// counters attached.
+    pub fn run(
+        mut self,
+        cfg: ServerCfg,
+        rt: Option<&Runtime>,
+        max_rounds: u64,
+    ) -> Result<ServerRecord> {
+        let mut core = ServerCore::new(cfg, rt);
+        core.set_ckpt_root(self.ckpt_root.clone());
+        let mut inbox: VecDeque<Msg> = VecDeque::new();
+        loop {
+            while let Ok(m) = self.rx.try_recv() {
+                inbox.push_back(m);
+            }
+            if inbox.is_empty() && !core.mgr.any_running() {
+                // idle: block briefly for the next command instead of
+                // spinning the round counter
+                if let Ok(m) = self.rx.recv_timeout(Duration::from_millis(20)) {
+                    inbox.push_back(m);
+                }
+            }
+            for (cmd, reply) in inbox.drain(..) {
+                self.counters.note(cmd.kind());
+                let line = match core.apply(&cmd) {
+                    Ok(data) => proto::ok_line(match (&cmd, data) {
+                        // stats replies additionally carry the live
+                        // frontend counters
+                        (Command::Stats, Json::Obj(mut m)) => {
+                            m.insert(
+                                "frontend".into(),
+                                self.counters.snapshot().to_json(),
+                            );
+                            Json::Obj(m)
+                        }
+                        (_, data) => data,
+                    }),
+                    Err(e) => {
+                        self.counters.rejected.fetch_add(1, Relaxed);
+                        proto::err_line(proto::code_for(&e), &format!("{e:#}"))
+                    }
+                };
+                // a reader that hung up mid-request is not an error
+                let _ = reply.send(line);
+            }
+            if core.shutdown_requested() {
+                break;
+            }
+            // serve only when a session can make progress: an idle
+            // listener must not consume its round budget on wall-clock
+            // time (the `at`-timeline semantics of idle rounds belong to
+            // the scripted driver, not the socket)
+            if core.mgr.any_running() {
+                if core.mgr.round >= max_rounds {
+                    self.stop.store(true, Relaxed);
+                    bail!("frontend exceeded {max_rounds} rounds without shutdown");
+                }
+                core.serve_round()?;
+            }
+        }
+        self.stop.store(true, Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        core.mgr.drain_all();
+        let mut rec = core.mgr.record();
+        rec.frontend = Some(self.counters.snapshot());
+        Ok(rec)
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        self.stop.store(true, Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn write_line(out: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    out.write_all(line.as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()
+}
+
+/// Per-connection reader loop: frame → validate → forward → reply.
+/// Framing-level failures that leave the stream resynchronizable
+/// (malformed JSON, bad request, bad UTF-8 — the terminator was still
+/// found) answer an error and keep the connection; an oversized line
+/// closes it.
+fn handle_conn(stream: TcpStream, tx: Sender<Msg>, counters: Arc<FrontendCounters>) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut out = stream;
+    loop {
+        let line = match proto::read_frame(&mut reader) {
+            Err(_) | Ok(Frame::Eof) => break,
+            Ok(Frame::Oversized) => {
+                counters.note_undecodable();
+                let _ = write_line(
+                    &mut out,
+                    &proto::err_line(
+                        proto::E_OVERSIZED,
+                        &format!("request over {} bytes", proto::MAX_LINE),
+                    ),
+                );
+                break;
+            }
+            Ok(Frame::BadUtf8) => {
+                counters.note_undecodable();
+                if write_line(
+                    &mut out,
+                    &proto::err_line(proto::E_MALFORMED, "request is not utf-8"),
+                )
+                .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+            Ok(Frame::Line(l)) => l,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cmd = match proto::parse_request(&line) {
+            Ok(c) => c,
+            Err((code, msg)) => {
+                counters.note_undecodable();
+                if write_line(&mut out, &proto::err_line(code, &msg)).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        let is_shutdown = matches!(cmd, Command::Shutdown);
+        let (rtx, rrx) = channel::<String>();
+        if tx.send((cmd, rtx)).is_err() {
+            let _ = write_line(
+                &mut out,
+                &proto::err_line(proto::E_INTERNAL, "server is shutting down"),
+            );
+            break;
+        }
+        match rrx.recv() {
+            Ok(reply) => {
+                if write_line(&mut out, &reply).is_err() {
+                    break;
+                }
+            }
+            Err(_) => {
+                let _ = write_line(
+                    &mut out,
+                    &proto::err_line(proto::E_INTERNAL, "server stopped before replying"),
+                );
+                break;
+            }
+        }
+        if is_shutdown {
+            break;
+        }
+    }
+}

@@ -594,6 +594,7 @@ impl<'rt> SessionManager<'rt> {
             fairness_jain: fairness,
             worker_busy_s: self.pool.busy_seconds(),
             sessions,
+            frontend: None,
         }
     }
 }

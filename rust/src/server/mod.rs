@@ -16,16 +16,27 @@
 //!   artifacts needed — tests, smoke runs, benches) and artifact-backed
 //!   [`Trainer`](crate::coordinator::Trainer) sessions;
 //! * [`ckpt`] serializes full session state — EA factor stats, `LowRank`
-//!   reps + Brand-chain position, RNG streams, step counters — with
-//!   bit-identical resume as the correctness contract;
-//! * [`driver`] runs the scripted job files behind `bnkfac serve`.
+//!   reps + Brand-chain position, RNG streams, SENG momentum buffers,
+//!   step counters — with bit-identical resume as the correctness
+//!   contract;
+//! * [`driver`] holds the shared command-application core
+//!   ([`driver::ServerCore`]) and runs the scripted job files behind
+//!   `bnkfac serve --jobs`;
+//! * [`proto`] + [`frontend`] are the network face (DESIGN.md §12): a
+//!   line-delimited JSON protocol over `TcpListener` whose requests
+//!   decode into the same [`proto::Command`]s the job driver applies,
+//!   served by `bnkfac serve --listen` and spoken by `bnkfac client`.
 
 pub mod ckpt;
 pub mod driver;
+pub mod frontend;
 pub mod manager;
+pub mod proto;
 pub mod sched;
 pub mod session;
 
+pub use driver::ServerCore;
 pub use manager::{RoundStats, ServerCfg, Session, SessionManager, SessionStatus};
+pub use proto::Command;
 pub use sched::FairScheduler;
 pub use session::{HostSession, HostSessionCfg, ModelSession, Workload};

@@ -1,0 +1,614 @@
+//! Wire protocol of the network frontend (DESIGN.md §12).
+//!
+//! Line-delimited JSON over a plain TCP stream: every request is ONE
+//! `\n`-terminated JSON object, every reply is ONE `\n`-terminated JSON
+//! object — no length prefixes, no persistent framing state, so the
+//! protocol is debuggable with `nc`. Requests parse into the same
+//! [`Command`] enum the scripted job driver executes, which is what
+//! keeps the two frontends behaviourally identical: a job file is a
+//! timeline of commands, a socket is a stream of them, and both are
+//! applied between serving rounds by `driver::ServerCore`.
+//!
+//! Request schema (`op` selects the command; `action` is accepted as an
+//! alias so job-file entries are valid wire requests verbatim):
+//!
+//! ```json
+//! {"op": "create",     "name": "a", "weight": 2, "session": {…}}
+//! {"op": "create-model","name": "m", "weight": 1, "model": {…}, "dataset": {…}}
+//! {"op": "pause",      "name": "a"}
+//! {"op": "resume",     "name": "a"}
+//! {"op": "checkpoint", "name": "a", "path": "results/a.json"}
+//! {"op": "restore",    "name": "b", "path": "results/a.json", "dataset": {…}?}
+//! {"op": "drop",       "name": "a"}
+//! {"op": "stats"}
+//! {"op": "shutdown"}
+//! ```
+//!
+//! Reply schema:
+//!
+//! ```json
+//! {"ok": true,  "data": {…}}
+//! {"ok": false, "code": "not_found", "error": "no session named 'x'"}
+//! ```
+//!
+//! Error codes are a small closed set (constants below); the transport
+//! layer produces `malformed` / `oversized`, request validation produces
+//! `bad_request`, and command application maps session-manager errors
+//! onto `not_found` / `at_capacity` / `unsupported` / `internal`.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::optim::Algo;
+use crate::util::ser::Json;
+
+use super::ckpt;
+use super::session::HostSessionCfg;
+
+/// Maximum accepted request/reply line length in bytes. Checkpoints
+/// travel by server-side file path, never inline, so real lines are
+/// tiny; the bound exists to stop a misbehaving peer from growing an
+/// unbounded buffer.
+pub const MAX_LINE: usize = 1 << 20;
+
+// ------------------------------------------------------------ error codes
+
+/// Line was not valid JSON (or not terminated before EOF).
+pub const E_MALFORMED: &str = "malformed";
+/// Line exceeded [`MAX_LINE`]; the stream is desynchronized and closed.
+pub const E_OVERSIZED: &str = "oversized";
+/// JSON was well-formed but not a valid request (unknown op, missing or
+/// ill-typed field).
+pub const E_BAD_REQUEST: &str = "bad_request";
+/// Named session does not exist.
+pub const E_NOT_FOUND: &str = "not_found";
+/// Admission control rejected the create/restore.
+pub const E_AT_CAPACITY: &str = "at_capacity";
+/// The command needs a capability this server lacks (e.g. a model
+/// session without an artifacts runtime).
+pub const E_UNSUPPORTED: &str = "unsupported";
+/// Anything else (I/O, serialization, session failure).
+pub const E_INTERNAL: &str = "internal";
+
+/// Map a command-application error onto a wire error code. Coarse
+/// substring matching over the rendered chain — the session manager
+/// reports errors as strings, not typed variants, and the closed code
+/// set only needs the broad category.
+pub fn code_for(e: &anyhow::Error) -> &'static str {
+    let s = format!("{e:#}");
+    if s.contains("no session named") || s.contains("no session ") {
+        E_NOT_FOUND
+    } else if s.contains("admission rejected") {
+        E_AT_CAPACITY
+    } else if s.contains("need a runtime") || s.contains("unsupported") {
+        E_UNSUPPORTED
+    } else if s.contains("needs")
+        || s.contains("missing")
+        || s.contains("unknown")
+        || s.contains("already in use")
+        || s.contains("must be relative")
+    {
+        E_BAD_REQUEST
+    } else {
+        E_INTERNAL
+    }
+}
+
+// --------------------------------------------------------------- commands
+
+/// Synthetic-dataset spec for model sessions (`create-model` and model
+/// `restore`). Image geometry and class count come from the artifact
+/// manifest; these are the free knobs of `data::DatasetCfg`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub noise: f32,
+    pub label_noise: f32,
+    pub seed: u64,
+}
+
+impl Default for DataSpec {
+    fn default() -> Self {
+        DataSpec {
+            n_train: 4096,
+            n_test: 1024,
+            noise: 0.35,
+            label_noise: 0.0,
+            seed: 1234,
+        }
+    }
+}
+
+/// Minimal trainer spec for `create-model`: the algorithm, RNG seed and
+/// target step count; hyperparameters take `optim::Hyper` defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub algo: Algo,
+    pub seed: u64,
+    pub steps: u64,
+}
+
+/// One lifecycle command against the session server. Shared by the
+/// scripted job driver (a timeline of commands) and the socket frontend
+/// (a stream of them) — both are applied between serving rounds by
+/// `driver::ServerCore::apply`, so determinism and the fair-share
+/// scheduler are identical across frontends.
+#[derive(Clone, Debug)]
+pub enum Command {
+    Create {
+        name: String,
+        weight: u32,
+        session: HostSessionCfg,
+    },
+    /// Artifact-backed trainer session; requires the server to have been
+    /// started with an artifacts runtime.
+    CreateModel {
+        name: String,
+        weight: u32,
+        model: ModelSpec,
+        dataset: DataSpec,
+    },
+    Pause {
+        name: String,
+    },
+    Resume {
+        name: String,
+    },
+    /// Serialize the named session to a server-side file path.
+    Checkpoint {
+        name: String,
+        path: String,
+    },
+    /// Rebuild a session from a server-side checkpoint file. Model
+    /// checkpoints additionally need a `dataset` spec (the data pipeline
+    /// is regenerated, not stored).
+    Restore {
+        name: String,
+        path: String,
+        dataset: Option<DataSpec>,
+    },
+    Drop {
+        name: String,
+    },
+    /// Reply with the server's current `ServerRecord`.
+    Stats,
+    /// Stop serving after the current round; sessions are drained.
+    Shutdown,
+}
+
+impl Command {
+    /// Stable request-kind label (metrics key, logs).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Command::Create { .. } => "create",
+            Command::CreateModel { .. } => "create-model",
+            Command::Pause { .. } => "pause",
+            Command::Resume { .. } => "resume",
+            Command::Checkpoint { .. } => "checkpoint",
+            Command::Restore { .. } => "restore",
+            Command::Drop { .. } => "drop",
+            Command::Stats => "stats",
+            Command::Shutdown => "shutdown",
+        }
+    }
+}
+
+// ------------------------------------------------------- request parsing
+
+/// Numeric keys of the wire session spec, in `HostSessionCfg` order.
+/// The `bnkfac client` flag names are these with `-` for `_`; `algo`
+/// and `seed` are handled separately (string-typed). Shared so the CLI
+/// cannot drift from the parser.
+pub const SESSION_NUM_KEYS: &[&str] = &[
+    "factors",
+    "dim",
+    "rank",
+    "n_stat",
+    "grad_cols",
+    "t_updt",
+    "steps",
+    "rho",
+    "lambda",
+];
+
+fn opt_usize(j: &Json, key: &str, d: usize) -> usize {
+    j.get(key).and_then(|v| v.as_usize()).unwrap_or(d)
+}
+
+fn opt_f32(j: &Json, key: &str, d: f32) -> f32 {
+    j.get(key).and_then(|v| v.as_f64()).map(|f| f as f32).unwrap_or(d)
+}
+
+/// Seed fields accept a JSON number, a `"0x…"` hex string (the
+/// checkpoint format always writes hex — u64 does not fit in f64), or a
+/// decimal string. Un-prefixed strings parse as DECIMAL — silently
+/// reading `"100"` as hex 0x100 would corrupt reproducibility.
+fn seed_from(j: &Json, key: &str, d: u64) -> Result<u64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(d),
+        Some(Json::Num(n)) => Ok(*n as u64),
+        Some(Json::Str(s)) => match s.strip_prefix("0x") {
+            Some(digits) => u64::from_str_radix(digits, 16)
+                .map_err(|e| anyhow!("bad hex seed '{s}': {e}")),
+            None => s
+                .parse::<u64>()
+                .map_err(|e| anyhow!("bad decimal seed '{s}': {e}")),
+        },
+        Some(other) => bail!("'{key}' must be a number or hex string, got {other:?}"),
+    }
+}
+
+/// Leniency means optional fields, NOT arbitrary ones: a typo'd key
+/// silently running a session with defaults would corrupt experiments
+/// without a diagnostic.
+fn reject_unknown(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            ensure!(
+                allowed.contains(&k.as_str()),
+                "{what}: unknown field '{k}'"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Lenient host-session spec: every field optional with
+/// [`HostSessionCfg::default`] fallbacks, numeric or hex seeds, unknown
+/// keys rejected. The strict all-fields parser (`ckpt::host_cfg_from`)
+/// stays the checkpoint decoder; hand-written job files and client
+/// flags use this one.
+pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
+    ensure!(matches!(j, Json::Obj(_)), "session spec must be an object");
+    reject_unknown(
+        j,
+        &[SESSION_NUM_KEYS, &["algo", "seed"][..]].concat(),
+        "session spec",
+    )?;
+    let d = HostSessionCfg::default();
+    let algo = match j.get("algo").and_then(|v| v.as_str()) {
+        None => d.algo,
+        Some(s) => Algo::parse(s).ok_or_else(|| anyhow!("unknown algo '{s}'"))?,
+    };
+    Ok(HostSessionCfg {
+        factors: opt_usize(j, "factors", d.factors),
+        dim: opt_usize(j, "dim", d.dim),
+        rank: opt_usize(j, "rank", d.rank),
+        n_stat: opt_usize(j, "n_stat", d.n_stat),
+        grad_cols: opt_usize(j, "grad_cols", d.grad_cols),
+        t_updt: opt_usize(j, "t_updt", d.t_updt),
+        algo,
+        seed: seed_from(j, "seed", d.seed)?,
+        steps: j.get("steps").and_then(|v| v.as_f64()).unwrap_or(d.steps as f64) as u64,
+        rho: opt_f32(j, "rho", d.rho),
+        lambda: opt_f32(j, "lambda", d.lambda),
+    })
+}
+
+pub fn dataspec_from(j: &Json) -> Result<DataSpec> {
+    ensure!(matches!(j, Json::Obj(_)), "dataset spec must be an object");
+    reject_unknown(
+        j,
+        &["n_train", "n_test", "noise", "label_noise", "seed"],
+        "dataset spec",
+    )?;
+    let d = DataSpec::default();
+    Ok(DataSpec {
+        n_train: opt_usize(j, "n_train", d.n_train),
+        n_test: opt_usize(j, "n_test", d.n_test),
+        noise: opt_f32(j, "noise", d.noise),
+        label_noise: opt_f32(j, "label_noise", d.label_noise),
+        seed: seed_from(j, "seed", d.seed)?,
+    })
+}
+
+fn modelspec_from(j: &Json) -> Result<ModelSpec> {
+    ensure!(matches!(j, Json::Obj(_)), "model spec must be an object");
+    reject_unknown(j, &["algo", "seed", "steps"], "model spec")?;
+    let algo_s = j
+        .get("algo")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("model spec missing 'algo'"))?;
+    Ok(ModelSpec {
+        algo: Algo::parse(algo_s).ok_or_else(|| anyhow!("unknown algo '{algo_s}'"))?,
+        seed: seed_from(j, "seed", 42)?,
+        steps: j
+            .get("steps")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("model spec missing 'steps'"))? as u64,
+    })
+}
+
+/// Decode a request object into a [`Command`]. `op` selects the command;
+/// `action` is accepted as an alias so scripted-job entries are valid
+/// wire requests.
+pub fn command_from_json(j: &Json) -> Result<Command> {
+    let op = j
+        .get("op")
+        .or_else(|| j.get("action"))
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("request missing 'op'"))?;
+    let name = || -> Result<String> {
+        let n = j.get("name").and_then(|v| v.as_str()).unwrap_or("");
+        ensure!(!n.is_empty(), "'{op}' needs a non-empty 'name'");
+        Ok(n.to_string())
+    };
+    let path = || -> Result<String> {
+        j.get("path")
+            .and_then(|v| v.as_str())
+            .filter(|p| !p.is_empty())
+            .map(|p| p.to_string())
+            .ok_or_else(|| anyhow!("'{op}' needs a 'path'"))
+    };
+    let weight = j.get("weight").and_then(|v| v.as_usize()).unwrap_or(1).max(1) as u32;
+    Ok(match op {
+        "create" => Command::Create {
+            name: name()?,
+            weight,
+            session: host_cfg_lenient(
+                j.get("session")
+                    .ok_or_else(|| anyhow!("'create' needs a 'session' spec"))?,
+            )?,
+        },
+        "create-model" | "create_model" => Command::CreateModel {
+            name: name()?,
+            weight,
+            model: modelspec_from(
+                j.get("model")
+                    .ok_or_else(|| anyhow!("'create-model' needs a 'model' spec"))?,
+            )?,
+            dataset: match j.get("dataset") {
+                None | Some(Json::Null) => DataSpec::default(),
+                Some(d) => dataspec_from(d)?,
+            },
+        },
+        "pause" => Command::Pause { name: name()? },
+        "resume" => Command::Resume { name: name()? },
+        "checkpoint" => Command::Checkpoint {
+            name: name()?,
+            path: path()?,
+        },
+        "restore" => Command::Restore {
+            name: name()?,
+            path: path()?,
+            dataset: match j.get("dataset") {
+                None | Some(Json::Null) => None,
+                Some(d) => Some(dataspec_from(d)?),
+            },
+        },
+        "drop" => Command::Drop { name: name()? },
+        "stats" => Command::Stats,
+        "shutdown" => Command::Shutdown,
+        other => bail!("unknown op '{other}'"),
+    })
+}
+
+// ------------------------------------------------------ request encoding
+
+pub fn dataspec_json(d: &DataSpec) -> Json {
+    Json::obj(vec![
+        ("n_train", Json::Num(d.n_train as f64)),
+        ("n_test", Json::Num(d.n_test as f64)),
+        ("noise", Json::Num(d.noise as f64)),
+        ("label_noise", Json::Num(d.label_noise as f64)),
+        ("seed", Json::Str(format!("{:#x}", d.seed))),
+    ])
+}
+
+/// Encode a command back to its wire object (client side; also the
+/// round-trip property the proto tests pin down).
+pub fn command_to_json(c: &Command) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![("op", Json::str(c.kind()))];
+    match c {
+        Command::Create {
+            name,
+            weight,
+            session,
+        } => {
+            pairs.push(("name", Json::str(name)));
+            pairs.push(("weight", Json::Num(*weight as f64)));
+            pairs.push(("session", ckpt::host_cfg_json(session)));
+        }
+        Command::CreateModel {
+            name,
+            weight,
+            model,
+            dataset,
+        } => {
+            pairs.push(("name", Json::str(name)));
+            pairs.push(("weight", Json::Num(*weight as f64)));
+            pairs.push((
+                "model",
+                Json::obj(vec![
+                    ("algo", Json::str(&model.algo.name().to_ascii_lowercase())),
+                    ("seed", Json::Str(format!("{:#x}", model.seed))),
+                    ("steps", Json::Num(model.steps as f64)),
+                ]),
+            ));
+            pairs.push(("dataset", dataspec_json(dataset)));
+        }
+        Command::Pause { name } | Command::Resume { name } | Command::Drop { name } => {
+            pairs.push(("name", Json::str(name)));
+        }
+        Command::Checkpoint { name, path } => {
+            pairs.push(("name", Json::str(name)));
+            pairs.push(("path", Json::str(path)));
+        }
+        Command::Restore {
+            name,
+            path,
+            dataset,
+        } => {
+            pairs.push(("name", Json::str(name)));
+            pairs.push(("path", Json::str(path)));
+            if let Some(d) = dataset {
+                pairs.push(("dataset", dataspec_json(d)));
+            }
+        }
+        Command::Stats | Command::Shutdown => {}
+    }
+    Json::obj(pairs)
+}
+
+/// Parse one request line. Errors carry the wire error code.
+pub fn parse_request(line: &str) -> Result<Command, (&'static str, String)> {
+    let j = Json::parse(line).map_err(|e| (E_MALFORMED, format!("bad json: {e}")))?;
+    command_from_json(&j).map_err(|e| (E_BAD_REQUEST, format!("{e:#}")))
+}
+
+// --------------------------------------------------------------- replies
+
+/// A decoded reply line (client side).
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub ok: bool,
+    pub data: Json,
+    pub code: String,
+    pub error: String,
+}
+
+pub fn ok_line(data: Json) -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("data", data)]).to_string_compact()
+}
+
+pub fn err_line(code: &str, msg: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("code", Json::str(code)),
+        ("error", Json::str(msg)),
+    ])
+    .to_string_compact()
+}
+
+pub fn parse_reply(line: &str) -> Result<Reply> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad reply json: {e}"))?;
+    let ok = j
+        .get("ok")
+        .and_then(|v| v.as_bool())
+        .ok_or_else(|| anyhow!("reply missing 'ok'"))?;
+    Ok(Reply {
+        ok,
+        data: j.get("data").cloned().unwrap_or(Json::Null),
+        code: j
+            .get("code")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string(),
+        error: j
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string(),
+    })
+}
+
+// --------------------------------------------------------------- framing
+
+/// Outcome of reading one line-delimited frame.
+#[derive(Debug)]
+pub enum Frame {
+    /// Clean end of stream.
+    Eof,
+    /// One complete line (terminator and trailing `\r` stripped).
+    Line(String),
+    /// The line exceeded [`MAX_LINE`] before a terminator arrived; the
+    /// stream can no longer be resynchronized and must be closed.
+    Oversized,
+    /// The line was not valid UTF-8.
+    BadUtf8,
+}
+
+/// Read one `\n`-terminated frame with the [`MAX_LINE`] bound enforced
+/// *during* the read (an oversized line never occupies more than
+/// `MAX_LINE + 1` bytes of memory).
+pub fn read_frame(r: &mut impl std::io::BufRead) -> std::io::Result<Frame> {
+    use std::io::{BufRead as _, Read as _};
+    let mut buf = Vec::new();
+    let n = r.by_ref().take(MAX_LINE as u64 + 1).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(Frame::Eof);
+    }
+    if buf.last() != Some(&b'\n') && buf.len() > MAX_LINE {
+        return Ok(Frame::Oversized);
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(Frame::Line(s)),
+        Err(_) => Ok(Frame::BadUtf8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenient_session_spec_defaults_and_hex_seed() {
+        let j = Json::parse(r#"{"dim": 24, "seed": "0xff", "steps": 10}"#).unwrap();
+        let cfg = host_cfg_lenient(&j).unwrap();
+        assert_eq!(cfg.dim, 24);
+        assert_eq!(cfg.seed, 0xff);
+        assert_eq!(cfg.steps, 10);
+        let d = HostSessionCfg::default();
+        assert_eq!(cfg.rank, d.rank);
+        assert_eq!(cfg.algo, d.algo);
+
+        let num = Json::parse(r#"{"seed": 7}"#).unwrap();
+        assert_eq!(host_cfg_lenient(&num).unwrap().seed, 7);
+        // un-prefixed string seeds are decimal, NOT hex
+        let dec = Json::parse(r#"{"seed": "100"}"#).unwrap();
+        assert_eq!(host_cfg_lenient(&dec).unwrap().seed, 100);
+        // typo'd keys fail loudly instead of silently running defaults
+        let typo = Json::parse(r#"{"ranks": 8}"#).unwrap();
+        let err = host_cfg_lenient(&typo).unwrap_err().to_string();
+        assert!(err.contains("unknown field 'ranks'"), "{err}");
+    }
+
+    #[test]
+    fn request_requires_op_and_name() {
+        assert!(parse_request("{}").is_err());
+        let (code, _) = parse_request(r#"{"op": "pause"}"#).unwrap_err();
+        assert_eq!(code, E_BAD_REQUEST);
+        let (code, _) = parse_request("not json").unwrap_err();
+        assert_eq!(code, E_MALFORMED);
+        let (code, _) = parse_request(r#"{"op": "frobnicate"}"#).unwrap_err();
+        assert_eq!(code, E_BAD_REQUEST);
+    }
+
+    #[test]
+    fn action_alias_matches_job_schema() {
+        let cmd =
+            parse_request(r#"{"action": "drop", "name": "a"}"#).unwrap();
+        assert_eq!(cmd.kind(), "drop");
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let ok = ok_line(Json::obj(vec![("id", Json::Num(3.0))]));
+        let r = parse_reply(&ok).unwrap();
+        assert!(r.ok);
+        assert_eq!(r.data.get("id").and_then(|v| v.as_usize()), Some(3));
+        let err = err_line(E_NOT_FOUND, "no session named 'x'");
+        let r = parse_reply(&err).unwrap();
+        assert!(!r.ok);
+        assert_eq!(r.code, E_NOT_FOUND);
+        assert!(r.error.contains("'x'"));
+    }
+
+    #[test]
+    fn frame_reader_bounds_and_strips() {
+        use std::io::BufReader;
+        let mut r = BufReader::new("{\"op\":\"stats\"}\r\n".as_bytes());
+        match read_frame(&mut r).unwrap() {
+            Frame::Line(l) => assert_eq!(l, "{\"op\":\"stats\"}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r).unwrap(), Frame::Eof));
+
+        let huge = vec![b'x'; MAX_LINE + 10];
+        let mut r = BufReader::new(&huge[..]);
+        assert!(matches!(read_frame(&mut r).unwrap(), Frame::Oversized));
+    }
+}

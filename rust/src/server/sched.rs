@@ -134,12 +134,7 @@ impl FairScheduler {
             .sessions
             .iter()
             .filter(|(_, e)| !e.ready.is_empty())
-            .min_by(|x, y| {
-                vt(x.1)
-                    .partial_cmp(&vt(y.1))
-                    .unwrap()
-                    .then(x.0.cmp(y.0))
-            })
+            .min_by(|x, y| vt(x.1).total_cmp(&vt(y.1)).then(x.0.cmp(y.0)))
             .map(|(k, _)| *k)?;
         let rc = {
             let e = inn.sessions.get_mut(&key).unwrap();

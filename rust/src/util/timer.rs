@@ -55,7 +55,9 @@ impl PhaseTimers {
 
     pub fn report(&self) -> String {
         let mut rows: Vec<_> = self.acc.iter().collect();
-        rows.sort_by(|a, b| b.1 .0.partial_cmp(&a.1 .0).unwrap());
+        // total_cmp: a NaN total (timed closure returned NaN-adjacent
+        // accounting) must not panic the report
+        rows.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0));
         let mut out = String::new();
         for (k, (s, c)) in rows {
             out.push_str(&format!(
@@ -124,5 +126,18 @@ mod tests {
         assert!((s - 2.138089935).abs() < 1e-6);
         let (m1, s1) = mean_std(&[3.0]);
         assert_eq!((m1, s1), (3.0, 0.0));
+    }
+
+    /// Regression: `report()` sorted phases with `partial_cmp(..)
+    /// .unwrap()` and panicked when a phase total was NaN.
+    #[test]
+    fn report_survives_nan_totals() {
+        let mut t = PhaseTimers::new();
+        t.add("fine", 1.0);
+        t.add("poisoned", f64::NAN);
+        t.add("also_fine", 0.5);
+        let r = t.report();
+        assert!(r.contains("poisoned"));
+        assert!(r.contains("fine"));
     }
 }

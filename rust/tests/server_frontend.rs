@@ -1,0 +1,491 @@
+//! Network-frontend integration tests (DESIGN.md §12): protocol
+//! round-trips, framing rejection, a live localhost server driven
+//! through create → checkpoint → restore → drop → shutdown, the
+//! socket-vs-job-file bit-match, SENG checkpoint/resume bit-identity,
+//! and (artifact-gated) model-session restore through the command core.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use bnkfac::coordinator::TrainerCfg;
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::seng::SengState;
+use bnkfac::optim::Algo;
+use bnkfac::runtime::Runtime;
+use bnkfac::server::proto::{self, Command, DataSpec, ModelSpec};
+use bnkfac::server::{ckpt, driver, frontend, HostSessionCfg, ServerCfg, SessionManager, Workload};
+use bnkfac::util::rng::Rng;
+use bnkfac::util::ser::Json;
+
+fn tmp_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bnkfac_frontend_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    tmp_dir().join(name)
+}
+
+// ------------------------------------------------------------- protocol
+
+fn roundtrip(cmd: Command) {
+    let j = proto::command_to_json(&cmd);
+    let back = proto::parse_request(&j.to_string_compact()).expect("round-trip parse");
+    assert_eq!(
+        proto::command_to_json(&back),
+        j,
+        "command {:?} did not survive the wire",
+        cmd.kind()
+    );
+}
+
+#[test]
+fn proto_roundtrip_every_command() {
+    roundtrip(Command::Create {
+        name: "a".into(),
+        weight: 3,
+        session: HostSessionCfg {
+            algo: Algo::BKfacC,
+            seed: u64::MAX - 7,
+            steps: 17,
+            ..HostSessionCfg::default()
+        },
+    });
+    roundtrip(Command::CreateModel {
+        name: "m".into(),
+        weight: 2,
+        model: ModelSpec {
+            algo: Algo::Seng,
+            seed: 0xDEAD_BEEF,
+            steps: 12,
+        },
+        dataset: DataSpec {
+            n_train: 128,
+            n_test: 32,
+            noise: 0.5,
+            label_noise: 0.1,
+            seed: 7,
+        },
+    });
+    roundtrip(Command::Pause { name: "a".into() });
+    roundtrip(Command::Resume { name: "a".into() });
+    roundtrip(Command::Checkpoint {
+        name: "a".into(),
+        path: "results/a.json".into(),
+    });
+    roundtrip(Command::Restore {
+        name: "b".into(),
+        path: "results/a.json".into(),
+        dataset: None,
+    });
+    roundtrip(Command::Restore {
+        name: "b".into(),
+        path: "results/a.json".into(),
+        dataset: Some(DataSpec::default()),
+    });
+    roundtrip(Command::Drop { name: "a".into() });
+    roundtrip(Command::Stats);
+    roundtrip(Command::Shutdown);
+}
+
+#[test]
+fn proto_rejects_malformed_and_unknown() {
+    let (code, _) = proto::parse_request("{oops").unwrap_err();
+    assert_eq!(code, proto::E_MALFORMED);
+    let (code, _) = proto::parse_request(r#"{"op": "explode"}"#).unwrap_err();
+    assert_eq!(code, proto::E_BAD_REQUEST);
+    let (code, msg) = proto::parse_request(r#"{"op": "checkpoint", "name": "a"}"#).unwrap_err();
+    assert_eq!(code, proto::E_BAD_REQUEST);
+    assert!(msg.contains("path"), "{msg}");
+}
+
+// ------------------------------------------------------ live socket e2e
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            out: stream,
+        }
+    }
+
+    fn send_raw(&mut self, line: &str) -> Option<proto::Reply> {
+        self.out.write_all(line.as_bytes()).ok()?;
+        self.out.write_all(b"\n").ok()?;
+        self.out.flush().ok()?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply).ok()? == 0 {
+            return None;
+        }
+        Some(proto::parse_reply(reply.trim_end()).expect("reply parses"))
+    }
+
+    fn req(&mut self, line: &str) -> proto::Reply {
+        self.send_raw(line).expect("server replied")
+    }
+
+    fn ok(&mut self, line: &str) -> Json {
+        let r = self.req(line);
+        assert!(r.ok, "request {line} failed: [{}] {}", r.code, r.error);
+        r.data
+    }
+}
+
+fn session_spec_json() -> &'static str {
+    r#"{"factors": 2, "dim": 36, "rank": 5, "n_stat": 3, "grad_cols": 4,
+        "t_updt": 2, "algo": "b-kfac", "seed": "0x2a", "steps": 24,
+        "rho": 0.95, "lambda": 0.1}"#
+}
+
+/// Bind a frontend with wire checkpoint paths rooted in the test tmp
+/// dir and serve it on a background thread.
+fn start_server(
+    cfg: ServerCfg,
+) -> (SocketAddr, std::thread::JoinHandle<anyhow::Result<bnkfac::metrics::ServerRecord>>) {
+    let mut fe = frontend::bind("127.0.0.1:0").expect("bind");
+    fe.set_ckpt_root(Some(tmp_dir()));
+    let addr = fe.local_addr();
+    let h = std::thread::spawn(move || fe.run(cfg, None, 100_000_000));
+    (addr, h)
+}
+
+fn wait_status(c: &mut Client, name: &str, want: &str) {
+    for _ in 0..4000 {
+        let data = c.ok(r#"{"op": "stats"}"#);
+        let done = data
+            .get("sessions")
+            .and_then(|v| v.as_arr())
+            .map(|ss| {
+                ss.iter().any(|s| {
+                    s.get("name").and_then(|v| v.as_str()) == Some(name)
+                        && s.get("status").and_then(|v| v.as_str()) == Some(want)
+                })
+            })
+            .unwrap_or(false);
+        if done {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("session '{name}' never reached status {want}");
+}
+
+/// The acceptance path: a live server on a localhost socket serving
+/// create → checkpoint → restore → drop for an external client, with
+/// structured errors for bad requests and counters in the final record.
+#[test]
+fn socket_client_drives_full_lifecycle() {
+    let (addr, server) = start_server(ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+    });
+    let mut c = Client::connect(addr);
+
+    // request validation: structured error replies, connection survives
+    let r = c.req(r#"{"op": "pause", "name": "ghost"}"#);
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_NOT_FOUND);
+    let r = c.req("{not json");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_MALFORMED);
+
+    // create / pause / resume
+    let data = c.ok(&format!(
+        r#"{{"op": "create", "name": "a", "weight": 2, "session": {}}}"#,
+        session_spec_json()
+    ));
+    assert!(data.get("id").and_then(|v| v.as_usize()).unwrap() >= 1);
+    let dup = c.req(&format!(
+        r#"{{"op": "create", "name": "a", "session": {}}}"#,
+        session_spec_json()
+    ));
+    assert!(!dup.ok, "duplicate name admitted");
+    assert_eq!(dup.code, proto::E_BAD_REQUEST);
+    c.ok(r#"{"op": "pause", "name": "a"}"#);
+    c.ok(r#"{"op": "resume", "name": "a"}"#);
+    wait_status(&mut c, "a", "Done");
+
+    // wire paths are confined under the server's checkpoint root:
+    // absolute and parent-escaping paths are rejected up front
+    let r = c.req(r#"{"op": "checkpoint", "name": "a", "path": "../escape.json"}"#);
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_BAD_REQUEST);
+    let r = c.req(r#"{"op": "checkpoint", "name": "a", "path": "/etc/nope.json"}"#);
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_BAD_REQUEST);
+
+    // checkpoint → restore → both checkpoints bit-match (paths on the
+    // wire are relative; files land under the server's root = tmp_dir)
+    let ck1 = tmp_path("socket_a.json");
+    let data = c.ok(r#"{"op": "checkpoint", "name": "a", "path": "socket_a.json"}"#);
+    assert_eq!(data.get("step").and_then(|v| v.as_usize()), Some(24));
+    let data = c.ok(r#"{"op": "restore", "name": "a2", "path": "socket_a.json"}"#);
+    assert_eq!(data.get("kind").and_then(|v| v.as_str()), Some("host"));
+    assert_eq!(data.get("step").and_then(|v| v.as_usize()), Some(24));
+    let ck2 = tmp_path("socket_a2.json");
+    c.ok(r#"{"op": "checkpoint", "name": "a2", "path": "socket_a2.json"}"#);
+    let j1 = Json::parse(&std::fs::read_to_string(&ck1).unwrap()).unwrap();
+    let j2 = Json::parse(&std::fs::read_to_string(&ck2).unwrap()).unwrap();
+    assert_eq!(
+        j1.get("state"),
+        j2.get("state"),
+        "restored session state diverged from its checkpoint"
+    );
+
+    // drop both; stats shows no sessions and carries frontend counters
+    c.ok(r#"{"op": "drop", "name": "a"}"#);
+    c.ok(r#"{"op": "drop", "name": "a2"}"#);
+    let data = c.ok(r#"{"op": "stats"}"#);
+    assert_eq!(
+        data.get("sessions").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(0)
+    );
+    let fc = data.get("frontend").expect("stats carries frontend counters");
+    assert!(fc.get("requests").and_then(|v| v.as_usize()).unwrap() > 5);
+
+    c.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().expect("server run");
+    let f = rec.frontend.expect("record carries frontend counters");
+    assert_eq!(f.connections, 1);
+    // ghost pause + malformed line + duplicate create + 2 bad paths
+    assert!(f.rejected >= 5, "rejected={}", f.rejected);
+    assert!(f.rejected <= f.requests, "rejected > requests");
+    assert!(
+        f.by_kind.iter().any(|(k, n)| k == "checkpoint" && *n >= 2),
+        "{:?}",
+        f.by_kind
+    );
+
+    let _ = std::fs::remove_file(ck1);
+    let _ = std::fs::remove_file(ck2);
+}
+
+/// Determinism across frontends: the same session config driven over the
+/// socket and via a scripted job file must produce bit-identical
+/// checkpoint state (cfg + full session state).
+#[test]
+fn socket_run_bitmatches_job_file_run() {
+    // job-file-driven reference
+    let job_ck = tmp_path("job_a.json");
+    let job_file = tmp_path("jobs.json");
+    std::fs::write(
+        &job_file,
+        format!(
+            r#"{{"server": {{"workers": 2, "max_sessions": 4, "staleness": 1}},
+                "jobs": [
+                  {{"at": 0, "action": "create", "name": "a", "weight": 2,
+                    "session": {}}},
+                  {{"at": 2000, "action": "checkpoint", "name": "a",
+                    "path": "{}"}}
+                ]}}"#,
+            session_spec_json(),
+            job_ck.display()
+        ),
+    )
+    .unwrap();
+    let rec = driver::run_jobs(job_file.to_str().unwrap(), None, 1_000_000).unwrap();
+    assert_eq!(rec.total_steps, 24);
+
+    // socket-driven run of the identical session
+    let (addr, server) = start_server(ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+    });
+    let mut c = Client::connect(addr);
+    c.ok(&format!(
+        r#"{{"op": "create", "name": "a", "weight": 2, "session": {}}}"#,
+        session_spec_json()
+    ));
+    wait_status(&mut c, "a", "Done");
+    // relative on the wire; resolves under the server's root (tmp_dir)
+    let sock_ck = tmp_path("sock_a.json");
+    c.ok(r#"{"op": "checkpoint", "name": "a", "path": "sock_a.json"}"#);
+    c.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+
+    let jj = Json::parse(&std::fs::read_to_string(&job_ck).unwrap()).unwrap();
+    let sj = Json::parse(&std::fs::read_to_string(&sock_ck).unwrap()).unwrap();
+    assert_eq!(jj.get("cfg"), sj.get("cfg"), "session cfg diverged");
+    assert_eq!(
+        jj.get("state"),
+        sj.get("state"),
+        "socket-driven trajectory diverged from the job-file-driven one"
+    );
+
+    for p in [job_ck, job_file, sock_ck] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// An oversized request line is answered with `oversized` and the
+/// connection is closed (the stream cannot be resynchronized).
+#[test]
+fn oversized_request_line_closes_connection() {
+    let (addr, server) = start_server(ServerCfg::default());
+    let mut c = Client::connect(addr);
+    let huge = "x".repeat(proto::MAX_LINE + 16);
+    let r = c.req(&huge);
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_OVERSIZED);
+    // connection is gone: the next request gets no reply
+    assert!(c.send_raw(r#"{"op": "stats"}"#).is_none());
+    // the server itself keeps serving new connections
+    let mut c2 = Client::connect(addr);
+    c2.ok(r#"{"op": "stats"}"#);
+    c2.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------- SENG checkpointing
+
+/// SENG's diag/velocity buffers must round-trip through the checkpoint
+/// encoding bit-identically: a restored state continues exactly like
+/// the uninterrupted one.
+#[test]
+fn seng_buffers_roundtrip_bit_identically() {
+    let mut rng = Rng::new(11);
+    let grads: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..10).map(|_| rng.next_gauss() as f32).collect())
+        .collect();
+    let mut live = SengState::new(2.0, 0.9);
+    for g in &grads[..4] {
+        let d = live.diag_direction("conv0/w", g);
+        live.momentum_step("conv0/w", &d);
+        let d = live.diag_direction("bn0/g", &g[..3]);
+        live.momentum_step("bn0/g", &d);
+    }
+
+    let (diag, vel) = live.snapshot();
+    let text = ckpt::seng_state_json(&diag, &vel).to_string_pretty();
+    let parsed = Json::parse(&text).unwrap();
+    let (diag2, vel2) = ckpt::seng_state_from(Some(&parsed)).unwrap();
+    let mut resumed = SengState::new(2.0, 0.9);
+    resumed.restore(diag2, vel2);
+
+    for g in &grads[4..] {
+        let a = live.diag_direction("conv0/w", g);
+        let b = resumed.diag_direction("conv0/w", g);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "diag direction diverged");
+        }
+        let am = live.momentum_step("conv0/w", &a);
+        let bm = resumed.momentum_step("conv0/w", &b);
+        for (x, y) in am.iter().zip(&bm) {
+            assert_eq!(x.to_bits(), y.to_bits(), "momentum diverged");
+        }
+    }
+
+    // absent section (version-1.0 checkpoint) decodes to empty buffers
+    let (d0, v0) = ckpt::seng_state_from(None).unwrap();
+    assert!(d0.is_empty() && v0.is_empty());
+}
+
+// ------------------------------------- model sessions (artifact-gated)
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"));
+        match Runtime::open(dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping model-session frontend tests ({e:#})");
+                None
+            }
+        }
+    })
+    .as_ref()
+}
+
+fn tiny_dataset(rt: &Runtime) -> Dataset {
+    Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        channels: rt.manifest.config.channels,
+        n_classes: rt.manifest.config.n_classes,
+        n_train: 64,
+        n_test: 32,
+        seed: 77,
+        ..DatasetCfg::default()
+    })
+}
+
+fn model_state(mgr: &SessionManager, id: u64) -> bnkfac::coordinator::TrainerState {
+    match &mgr.session(id).unwrap().work {
+        Workload::Model(m) => m.tr.snapshot_state(),
+        _ => panic!("expected model session"),
+    }
+}
+
+/// SENG model session: checkpoint mid-run (momentum buffers included),
+/// restore through `SessionManager::restore_model`, and verify the
+/// resumed trajectory is bit-identical to the uninterrupted one — the
+/// rejection this PR removed from `server/ckpt.rs`.
+#[test]
+fn seng_model_session_resumes_bit_identically() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 2,
+        staleness: 1,
+    };
+    let tcfg = TrainerCfg {
+        algo: Algo::Seng,
+        seed: 9,
+        eval_every: 0,
+        ..TrainerCfg::default()
+    };
+
+    // uninterrupted reference
+    let mut reference = SessionManager::with_runtime(cfg.clone(), rt);
+    let rid = reference
+        .create_model("ref", 1, tcfg.clone(), tiny_dataset(rt), 12)
+        .unwrap();
+    reference.run_to_completion(1_000_000).unwrap();
+    let want = model_state(&reference, rid);
+    assert!(
+        !want.seng_diag.is_empty(),
+        "SENG diag buffers missing from trainer state"
+    );
+
+    // interrupted: checkpoint at step 5, restore in a fresh server
+    let mut mgr = SessionManager::with_runtime(cfg.clone(), rt);
+    let id = mgr
+        .create_model("x", 1, tcfg, tiny_dataset(rt), 12)
+        .unwrap();
+    while mgr.session(id).unwrap().steps_done() < 5 {
+        let st = mgr.run_round().unwrap();
+        if st.stepped == 0 {
+            std::thread::yield_now();
+        }
+        assert!(mgr.round < 1_000_000, "stalled before checkpoint");
+    }
+    let ck = mgr.checkpoint(id).unwrap();
+    let text = ck.to_string_pretty();
+    assert!(text.contains("\"seng\""), "checkpoint lacks SENG buffers");
+
+    let mut resumed = SessionManager::with_runtime(cfg, rt);
+    let j = Json::parse(&text).unwrap();
+    assert!(
+        resumed.restore(&j, "nope").is_err(),
+        "host restore must reject a model checkpoint"
+    );
+    let rid2 = resumed.restore_model(&j, "x2", tiny_dataset(rt)).unwrap();
+    resumed.run_to_completion(1_000_000).unwrap();
+    let got = model_state(&resumed, rid2);
+    assert_eq!(got.step, want.step);
+    assert_eq!(got.rng, want.rng, "rng diverged");
+    assert_eq!(got.params, want.params, "params diverged");
+    assert_eq!(got.seng_diag, want.seng_diag, "SENG diag diverged");
+    assert_eq!(got.seng_velocity, want.seng_velocity, "SENG velocity diverged");
+}
