@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Bench-regression gate (CI).
+
+Compares the machine-readable bench artifacts the smoke-mode bench run
+emits at the repo root (BENCH_server.json, BENCH_scaling.json) against
+the committed baselines in ci/bench_baselines.json and fails on
+regressions beyond each metric's tolerance (default 25%).
+
+Baselines deliberately pin RATIO-type metrics (speedups, complexity
+slopes) rather than absolute wall times: ratios are stable across CI
+runner generations, absolute milliseconds are not.
+
+Baseline schema:
+
+    { "<bench file>": {
+        "<dotted.path.into.json>": {
+            "value": <number>,     # reference value
+            "dir":   "higher",     # "higher" = bigger is better,
+                                   # "lower"  = smaller is better
+            "tol":   0.25,         # fractional tolerance
+            "note":  "..."         # human context (ignored here)
+        } } }
+
+A "higher" metric fails below value*(1-tol); a "lower" metric fails
+above value*(1+tol). A missing bench file or metric fails loudly — the
+gate's whole point is that the trajectory cannot silently go dark.
+
+Usage:
+    python3 ci/check_bench.py            # gate (exit 1 on regression)
+    python3 ci/check_bench.py --update   # rewrite baseline values from
+                                         # the current BENCH files
+"""
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(ROOT, "ci", "bench_baselines.json")
+DEFAULT_TOL = 0.25
+
+
+def lookup(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main():
+    update = "--update" in sys.argv[1:]
+    with open(BASELINES) as f:
+        baselines = json.load(f)
+
+    failures = []
+    checked = 0
+    for bench_file, metrics in baselines.items():
+        path = os.path.join(ROOT, bench_file)
+        if not os.path.exists(path):
+            failures.append(f"{bench_file}: artifact missing (bench did not run?)")
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        for dotted, spec in metrics.items():
+            value = lookup(doc, dotted)
+            if not isinstance(value, (int, float)):
+                failures.append(f"{bench_file}:{dotted}: metric missing or non-numeric")
+                continue
+            checked += 1
+            if update:
+                spec["value"] = round(float(value), 4)
+                continue
+            ref = float(spec["value"])
+            tol = float(spec.get("tol", DEFAULT_TOL))
+            direction = spec.get("dir", "higher")
+            if direction == "higher":
+                bound = ref * (1.0 - tol)
+                ok = value >= bound
+                rel = "<" if not ok else ">="
+            else:
+                bound = ref * (1.0 + tol)
+                ok = value <= bound
+                rel = ">" if not ok else "<="
+            status = "ok  " if ok else "FAIL"
+            print(
+                f"[{status}] {bench_file}:{dotted} = {value:.4g} "
+                f"({rel} bound {bound:.4g}; baseline {ref:.4g}, tol {tol:.0%}, {direction}-is-better)"
+            )
+            if not ok:
+                failures.append(
+                    f"{bench_file}:{dotted}: {value:.4g} regressed past {bound:.4g} "
+                    f"(baseline {ref:.4g} ±{tol:.0%})"
+                )
+
+    if update:
+        with open(BASELINES, "w") as f:
+            json.dump(baselines, f, indent=2)
+            f.write("\n")
+        print(f"updated {checked} baseline value(s) in {BASELINES}")
+        return 0
+
+    if failures:
+        print("\nbench-regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"\nbench-regression gate passed ({checked} metric(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,9 +50,10 @@ fn run_concurrent(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
         workers,
         max_sessions: n.max(1),
         staleness: 1,
+        ..ServerCfg::default()
     });
     for i in 0..n {
-        mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps))
+        mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps), None)
             .unwrap();
     }
     let t0 = Instant::now();
@@ -68,8 +69,9 @@ fn run_sequential(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
             workers,
             max_sessions: 1,
             staleness: 1,
+            ..ServerCfg::default()
         });
-        mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps))
+        mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps), None)
             .unwrap();
         let t0 = Instant::now();
         mgr.run_to_completion(10_000_000).unwrap();

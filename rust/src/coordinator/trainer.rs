@@ -667,6 +667,34 @@ impl<'rt> Trainer<'rt> {
         Ok(())
     }
 
+    /// Deterministic resident-memory estimate for the server's quota
+    /// governor (DESIGN.md §13.2): parameter tensors plus per-factor
+    /// resident state ([`FactorState::resident_f32s`] — shared with
+    /// `HostSession::resident_bytes`, so host and model quotas agree on
+    /// what "resident" means).
+    pub fn resident_bytes(&self) -> u64 {
+        let factors: usize = self
+            .layers
+            .iter()
+            .map(|l| l.a.resident_f32s() + l.g.resident_f32s())
+            .sum();
+        ((self.params.n_params() + factors) * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Release the dominant resident buffers (per-factor EA Grams and
+    /// low-rank reps) after the server's governor evicts this session —
+    /// the model-session counterpart of
+    /// `HostSession::release_resident`. The trainer must not be stepped
+    /// afterwards.
+    pub fn release_resident(&mut self) {
+        for l in &mut self.layers {
+            for f in [&mut l.a, &mut l.g] {
+                f.gram = None;
+                f.rep = None;
+            }
+        }
+    }
+
     /// Non-blocking probe: would the next step's staleness enforcement
     /// pass without waiting? The multi-tenant server pauses the session
     /// when this is false instead of letting `train_step` block.

@@ -59,7 +59,9 @@ fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
 ///   (DESIGN.md §12); `--port-file <path>` writes the bound address
 ///   (resolving `:0`) for scripting, `--artifacts <dir>` additionally
 ///   enables model sessions, `--ckpt-dir <dir>` (default `results`)
-///   confines wire-supplied checkpoint paths.
+///   confines wire-supplied checkpoint paths, `--idle-timeout <secs>`
+///   reaps idle connections, and `--workers-min/--workers-max` bound
+///   the governor's elastic worker-pool scaling (DESIGN.md §13).
 ///
 /// Host sessions run entirely on the host substrate — no artifacts or
 /// PJRT needed.
@@ -85,10 +87,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // uptime bound that kills live sessions undrained
             let max_rounds = args.get_u64("max-rounds", u64::MAX);
             let d = ServerCfg::default();
+            // --workers-min/--workers-max enable elastic pool scaling
+            // (DESIGN.md §13.3); equal or unset bounds keep the pool
+            // fixed-size (the determinism-contract configuration)
             let cfg = ServerCfg {
                 workers: if workers > 0 { workers } else { d.workers },
                 max_sessions: args.get_usize("max-sessions", d.max_sessions),
                 staleness: args.get_usize("staleness", d.staleness),
+                workers_min: args.get_usize("workers-min", 0),
+                workers_max: args.get_usize("workers-max", 0),
             };
             let rt = match args.get("artifacts") {
                 Some(dir) => Some(Runtime::open(dir.to_string())?),
@@ -97,8 +104,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let port_file = args.get("port-file").map(|s| s.to_string());
             // wire-supplied checkpoint paths are confined under this dir
             let ckpt_dir = args.get_or("ckpt-dir", "results").to_string();
+            // idle-connection reaping (seconds; 0 disables)
+            let idle_s = args.get_f64("idle-timeout", 0.0);
             args.finish().map_err(|e| anyhow!(e))?;
-            let mut fe = frontend::bind(&addr)?;
+            let idle = (idle_s > 0.0)
+                .then(|| std::time::Duration::from_secs_f64(idle_s));
+            let mut fe = frontend::bind_cfg(&addr, idle)?;
             fe.set_ckpt_root(Some(ckpt_dir.into()));
             let local = fe.local_addr();
             println!("listening on {local}");
@@ -182,6 +193,23 @@ fn cmd_client(args: &Args) -> Result<()> {
                     "session".to_string(),
                     Json::Obj(session.into_iter().collect()),
                 ));
+            }
+            // per-session quota ceilings (governor-enforced); key list
+            // shared with the parser so the CLI cannot drift
+            let mut quota = Vec::new();
+            for key in proto::QUOTA_NUM_KEYS {
+                let flag = key.replace('_', "-");
+                if let Some(v) = args.get(&flag) {
+                    quota.push((
+                        key.to_string(),
+                        Json::Num(
+                            v.parse::<f64>().map_err(|_| anyhow!("bad --{flag}"))?,
+                        ),
+                    ));
+                }
+            }
+            if !quota.is_empty() {
+                req.push(("quota".to_string(), Json::Obj(quota.into_iter().collect())));
             }
             let j = Json::Obj(req.into_iter().collect());
             // validate the assembled request before sending

@@ -126,6 +126,14 @@ pub struct SessionRecord {
     /// wall time this session spent paused on backpressure
     pub pause_s: f64,
     pub paused_rounds: u64,
+    /// rounds the resource governor denied this session (throttle /
+    /// governor-pause escalation, DESIGN.md §13)
+    pub throttled_rounds: u64,
+    /// governor eviction reason — closed set `"op_rate"` / `"memory"`,
+    /// empty while the session is resident
+    pub evict_reason: String,
+    /// deterministic resident-memory estimate (quota basis)
+    pub resident_mb: f64,
     pub status: String,
     /// first error the session hit (empty when healthy)
     pub error: String,
@@ -143,6 +151,9 @@ impl SessionRecord {
             ("ops_share", Json::Num(self.ops_share)),
             ("pause_s", Json::Num(self.pause_s)),
             ("paused_rounds", Json::Num(self.paused_rounds as f64)),
+            ("throttled_rounds", Json::Num(self.throttled_rounds as f64)),
+            ("evict_reason", Json::str(&self.evict_reason)),
+            ("resident_mb", Json::Num(self.resident_mb)),
             ("status", Json::str(&self.status)),
             ("error", Json::str(&self.error)),
         ])
@@ -157,6 +168,8 @@ pub struct FrontendRecord {
     pub connections: u64,
     pub requests: u64,
     pub rejected: u64,
+    /// connections dropped by idle-timeout reaping (`--idle-timeout`)
+    pub idle_reaped: u64,
     /// decoded requests per command kind, sorted by kind (includes
     /// requests later rejected at apply time; `requests` additionally
     /// counts undecodable lines, so `rejected <= requests` always)
@@ -169,6 +182,7 @@ impl FrontendRecord {
             ("connections", Json::Num(self.connections as f64)),
             ("requests", Json::Num(self.requests as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("idle_reaped", Json::Num(self.idle_reaped as f64)),
             (
                 "by_kind",
                 Json::Obj(
@@ -187,7 +201,21 @@ impl FrontendRecord {
 /// service), and the per-session queue shares / pause times.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServerRecord {
+    /// configured initial pool size
     pub workers: usize,
+    /// commanded elastic pool size at record time (== `workers` when
+    /// the governor's elasticity is disabled); live threads converge on
+    /// this between jobs — a just-shrunk pool may briefly still be
+    /// finishing in-flight work on its surplus workers
+    pub workers_now: usize,
+    /// elastic bounds the governor honors
+    pub workers_min: usize,
+    pub workers_max: usize,
+    /// elastic resize events over the run
+    pub grow_events: u64,
+    pub shrink_events: u64,
+    /// sessions the governor evicted for sustained quota breach
+    pub evictions: u64,
     pub max_sessions: usize,
     pub rounds: u64,
     pub wall_s: f64,
@@ -206,6 +234,12 @@ impl ServerRecord {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("workers", Json::Num(self.workers as f64)),
+            ("workers_now", Json::Num(self.workers_now as f64)),
+            ("workers_min", Json::Num(self.workers_min as f64)),
+            ("workers_max", Json::Num(self.workers_max as f64)),
+            ("grow_events", Json::Num(self.grow_events as f64)),
+            ("shrink_events", Json::Num(self.shrink_events as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
             ("max_sessions", Json::Num(self.max_sessions as f64)),
             ("rounds", Json::Num(self.rounds as f64)),
             ("wall_s", Json::Num(self.wall_s)),
@@ -230,19 +264,28 @@ impl ServerRecord {
     /// Human-readable per-session summary table.
     pub fn summary(&self) -> String {
         let mut out = format!(
-            "workers={} sessions={} rounds={} wall={:.2}s agg={:.1} steps/s \
-             fairness={:.3}\n",
+            "workers={}/{} [{},{}] sessions={} rounds={} wall={:.2}s \
+             agg={:.1} steps/s fairness={:.3}\n",
+            self.workers_now,
             self.workers,
+            self.workers_min,
+            self.workers_max,
             self.sessions.len(),
             self.rounds,
             self.wall_s,
             self.steps_per_s,
             self.fairness_jain
         );
+        if self.grow_events + self.shrink_events + self.evictions > 0 {
+            out.push_str(&format!(
+                "  governor: {} grow, {} shrink, {} evictions\n",
+                self.grow_events, self.shrink_events, self.evictions
+            ));
+        }
         for s in &self.sessions {
             out.push_str(&format!(
                 "  [{}] {:<12} w={} steps={} ops={}/{} share={:.2} \
-                 paused={} ({:.3}s) {}\n",
+                 paused={} ({:.3}s) throttled={} mem={:.2}MiB {}{}\n",
                 s.id,
                 s.name,
                 s.weight,
@@ -252,7 +295,14 @@ impl ServerRecord {
                 s.ops_share,
                 s.paused_rounds,
                 s.pause_s,
-                s.status
+                s.throttled_rounds,
+                s.resident_mb,
+                s.status,
+                if s.evict_reason.is_empty() {
+                    String::new()
+                } else {
+                    format!(" ({})", s.evict_reason)
+                }
             ));
             if !s.error.is_empty() {
                 out.push_str(&format!("      error: {}\n", s.error));
@@ -265,11 +315,13 @@ impl ServerRecord {
                 .map(|(k, v)| format!("{k}={v}"))
                 .collect();
             out.push_str(&format!(
-                "  frontend: {} connections, {} requests ({}), {} rejected\n",
+                "  frontend: {} connections, {} requests ({}), {} rejected, \
+                 {} idle-reaped\n",
                 f.connections,
                 f.requests,
                 kinds.join(" "),
-                f.rejected
+                f.rejected,
+                f.idle_reaped
             ));
         }
         out
@@ -409,6 +461,12 @@ mod tests {
     fn server_record_serializes() {
         let rec = ServerRecord {
             workers: 4,
+            workers_now: 6,
+            workers_min: 2,
+            workers_max: 8,
+            grow_events: 2,
+            shrink_events: 0,
+            evictions: 1,
             max_sessions: 8,
             rounds: 100,
             wall_s: 2.0,
@@ -426,17 +484,34 @@ mod tests {
                 ops_share: 0.5,
                 pause_s: 0.01,
                 paused_rounds: 3,
-                status: "Done".into(),
+                throttled_rounds: 5,
+                evict_reason: "op_rate".into(),
+                resident_mb: 0.25,
+                status: "Evicted".into(),
                 error: String::new(),
             }],
             frontend: None,
         };
         let j = rec.to_json();
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(j.get("workers_now").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(j.get("workers_max").and_then(|v| v.as_usize()), Some(8));
+        assert_eq!(j.get("evictions").and_then(|v| v.as_usize()), Some(1));
         let sessions = j.get("sessions").and_then(|v| v.as_arr()).unwrap();
         assert_eq!(sessions.len(), 1);
         assert_eq!(sessions[0].get("name").and_then(|v| v.as_str()), Some("a"));
-        assert!(rec.summary().contains("fairness=0.980"));
+        assert_eq!(
+            sessions[0].get("evict_reason").and_then(|v| v.as_str()),
+            Some("op_rate")
+        );
+        assert_eq!(
+            sessions[0].get("throttled_rounds").and_then(|v| v.as_usize()),
+            Some(5)
+        );
+        let s = rec.summary();
+        assert!(s.contains("fairness=0.980"), "{s}");
+        assert!(s.contains("1 evictions"), "{s}");
+        assert!(s.contains("(op_rate)"), "{s}");
         assert_eq!(j.get("frontend"), Some(&Json::Null));
     }
 
@@ -447,6 +522,7 @@ mod tests {
                 connections: 2,
                 requests: 5,
                 rejected: 1,
+                idle_reaped: 1,
                 by_kind: vec![("create".into(), 1), ("stats".into(), 4)],
             }),
             ..Default::default()
@@ -454,6 +530,7 @@ mod tests {
         let j = rec.to_json();
         let f = j.get("frontend").unwrap();
         assert_eq!(f.get("connections").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(f.get("idle_reaped").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(
             f.get("by_kind").and_then(|b| b.get("stats")).and_then(|v| v.as_usize()),
             Some(4)

@@ -56,6 +56,21 @@ impl FactorState {
         self.rep.as_ref().map(|r| r.lambda_max()).unwrap_or(1.0)
     }
 
+    /// Resident f32 count of this factor's state (dense EA Gram + the
+    /// low-rank representation). The single source of truth behind the
+    /// resource governor's memory quotas (DESIGN.md §13.2) — host and
+    /// model sessions both sum this, so the two session kinds cannot
+    /// drift apart on what "resident" means.
+    pub fn resident_f32s(&self) -> usize {
+        let gram = self.gram.as_ref().map(|g| g.data.len()).unwrap_or(0);
+        let rep = self
+            .rep
+            .as_ref()
+            .map(|r| r.u.data.len() + r.d.len())
+            .unwrap_or(0);
+        gram + rep
+    }
+
     // ------------------------------------------------------------ stats
 
     /// EA update of the dense Gram (Alg 1 lines 5/9). `rt=None` → host.

@@ -391,6 +391,16 @@ impl PrecondService {
         self.pool.threads()
     }
 
+    /// Elastically resize the decomposition worker pool (DESIGN.md §13.3).
+    /// Shard queues are untouched — queued and in-flight ops complete in
+    /// their original FIFO order, so the Brand-chain position of every
+    /// cell survives any grow/shrink (bit-match regression-tested).
+    /// In shared mode the pool belongs to the server; resizing through
+    /// one tenant's service resizes it for all tenants.
+    pub fn resize_workers(&self, n: usize) {
+        self.pool.resize(n);
+    }
+
     /// Submit one decomposition op for factor `idx`, produced at
     /// optimizer step `step`. Sync mode executes inline (using `rt` when
     /// provided); async mode enqueues onto the factor's shard queue and

@@ -30,12 +30,15 @@ use crate::precond::{PrecondCfg, PrecondService};
 use crate::util::rng::{Rng, RngState};
 use crate::util::ser::Json;
 
+use super::proto::{opt_quota_from, quota_json, QuotaSpec};
 use super::session::{HostSession, HostSessionCfg, ModelSession};
 
 pub const FORMAT: &str = "bnkfac-ckpt";
-/// 1.1 added the `state.seng` buffers (SENG checkpointing); decoders
-/// treat the section as optional, so 1.0 checkpoints still restore.
-pub const VERSION: f64 = 1.1;
+/// 1.1 added the `state.seng` buffers (SENG checkpointing); 1.2 added
+/// the optional top-level `quota` (resource-governor ceilings survive a
+/// restore). Both sections are optional to the decoder, so 1.0/1.1
+/// checkpoints still restore.
+pub const VERSION: f64 = 1.2;
 
 // ---------------------------------------------------------- primitives
 
@@ -228,6 +231,7 @@ pub fn host_cfg_from(j: &Json) -> Result<HostSessionCfg> {
 pub fn encode_host(
     name: &str,
     weight: u32,
+    quota: Option<&QuotaSpec>,
     hs: &HostSession,
     svc: &PrecondService,
 ) -> Result<Json> {
@@ -255,6 +259,7 @@ pub fn encode_host(
         ("kind", Json::str("host")),
         ("name", Json::str(name)),
         ("weight", Json::Num(weight as f64)),
+        ("quota", opt_json(quota.map(quota_json))),
         ("cfg", host_cfg_json(&hs.cfg)),
         (
             "state",
@@ -282,6 +287,8 @@ pub fn encode_host(
 pub struct HostRestore {
     pub name: String,
     pub weight: u32,
+    /// governor quota the session was created with (absent pre-1.2)
+    pub quota: Option<QuotaSpec>,
     pub session: HostSession,
     /// per-cell worker chain position: (rep, published step)
     pub chains: Vec<(Option<LowRank>, u64)>,
@@ -337,6 +344,7 @@ pub fn decode_host(j: &Json) -> Result<HostRestore> {
     Ok(HostRestore {
         name: req_str(j, "name")?.to_string(),
         weight: req_f64(j, "weight")? as u32,
+        quota: opt_quota_from(j.get("quota"))?,
         session: hs,
         chains,
     })
@@ -421,6 +429,7 @@ fn named_f32s_from(j: &Json) -> Result<Vec<(String, Vec<f32>)>> {
 pub fn encode_model(
     name: &str,
     weight: u32,
+    quota: Option<&QuotaSpec>,
     m: &ModelSession,
 ) -> Result<Json> {
     let tr = &m.tr;
@@ -456,6 +465,7 @@ pub fn encode_model(
         ("kind", Json::str("model")),
         ("name", Json::str(name)),
         ("weight", Json::Num(weight as f64)),
+        ("quota", opt_json(quota.map(quota_json))),
         ("target_steps", Json::Num(target_steps as f64)),
         (
             "pipeline",
@@ -551,6 +561,8 @@ pub fn seng_state_from(j: Option<&Json>) -> Result<(NamedBufs, NamedBufs)> {
 pub struct ModelRestore {
     pub name: String,
     pub weight: u32,
+    /// governor quota the session was created with (absent pre-1.2)
+    pub quota: Option<QuotaSpec>,
     pub target_steps: u64,
     pub cfg: TrainerCfg,
     pub precond: PrecondCfg,
@@ -652,6 +664,7 @@ pub fn decode_model(j: &Json) -> Result<ModelRestore> {
     Ok(ModelRestore {
         name: req_str(j, "name")?.to_string(),
         weight: req_f64(j, "weight")? as u32,
+        quota: opt_quota_from(j.get("quota"))?,
         target_steps: req_f64(j, "target_steps")? as u64,
         cfg,
         precond,

@@ -16,14 +16,16 @@
 //!
 //! ```json
 //! {
-//!   "server": {"workers": 3, "max_sessions": 4, "staleness": 1},
+//!   "server": {"workers": 3, "max_sessions": 4, "staleness": 1,
+//!              "workers_min": 2, "workers_max": 6},
 //!   "artifacts": "artifacts/tiny",
 //!   "jobs": [
 //!     {"at": 0,  "action": "create", "name": "a", "weight": 2,
 //!      "session": {"factors": 2, "dim": 48, "rank": 6, "n_stat": 3,
 //!                   "grad_cols": 4, "t_updt": 2, "algo": "b-kfac",
 //!                   "seed": "0x1", "steps": 24, "rho": 0.95,
-//!                   "lambda": 0.1}},
+//!                   "lambda": 0.1},
+//!      "quota": {"max_op_rate": 4, "max_mem_mb": 64}},
 //!     {"at": 6,  "action": "checkpoint", "name": "a",
 //!      "path": "results/ckpt_a.json"},
 //!     {"at": 8,  "action": "pause",  "name": "a"},
@@ -164,9 +166,12 @@ impl<'rt> ServerCore<'rt> {
                 name,
                 weight,
                 session,
+                quota,
             } => {
                 self.claim_name(name)?;
-                let id = self.mgr.create_host(name, *weight, session.clone())?;
+                let id = self
+                    .mgr
+                    .create_host(name, *weight, session.clone(), *quota)?;
                 self.names.insert(name.clone(), id);
                 Ok(Json::obj(vec![
                     ("id", Json::Num(id as f64)),
@@ -178,6 +183,7 @@ impl<'rt> ServerCore<'rt> {
                 weight,
                 model,
                 dataset,
+                quota,
             } => {
                 self.claim_name(name)?;
                 let ds = self.dataset(dataset)?;
@@ -189,7 +195,7 @@ impl<'rt> ServerCore<'rt> {
                 };
                 let id = self
                     .mgr
-                    .create_model(name, *weight, tcfg, ds, model.steps)?;
+                    .create_model(name, *weight, tcfg, ds, model.steps, *quota)?;
                 self.names.insert(name.clone(), id);
                 Ok(Json::obj(vec![
                     ("id", Json::Num(id as f64)),
@@ -272,7 +278,7 @@ impl<'rt> ServerCore<'rt> {
     pub fn serve_round(&mut self) -> Result<RoundStats> {
         if self.mgr.any_running() {
             let st = self.mgr.run_round()?;
-            if st.stepped == 0 && st.blocked > 0 {
+            if st.stepped == 0 && (st.blocked > 0 || st.throttled > 0) {
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
             Ok(st)
@@ -305,6 +311,14 @@ fn parse_jobs(root: &Json) -> Result<(ServerCfg, Option<String>, Vec<Job>)> {
             .get("staleness")
             .and_then(|v| v.as_usize())
             .unwrap_or(d.staleness),
+        workers_min: sj
+            .get("workers_min")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(d.workers_min),
+        workers_max: sj
+            .get("workers_max")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(d.workers_max),
     };
     let artifacts = root
         .get("artifacts")

@@ -56,6 +56,8 @@ pub struct FrontendCounters {
     pub connections: AtomicU64,
     pub requests: AtomicU64,
     pub rejected: AtomicU64,
+    /// connections dropped for sitting idle past `--idle-timeout`
+    pub idle_reaped: AtomicU64,
     by_kind: Mutex<BTreeMap<String, u64>>,
 }
 
@@ -83,6 +85,7 @@ impl FrontendCounters {
             connections: self.connections.load(Relaxed),
             requests: self.requests.load(Relaxed),
             rejected: self.rejected.load(Relaxed),
+            idle_reaped: self.idle_reaped.load(Relaxed),
             by_kind: self
                 .by_kind
                 .lock()
@@ -116,6 +119,14 @@ pub struct Frontend {
 /// Bind the listener and start accepting connections. Requests queue on
 /// the command channel until `run` starts draining them.
 pub fn bind(addr: &str) -> Result<Frontend> {
+    bind_cfg(addr, None)
+}
+
+/// [`bind`] with idle-connection reaping (ROADMAP frontend hardening):
+/// a connection that sends no complete request for `idle_timeout` is
+/// dropped and counted in `FrontendCounters::idle_reaped`, so abandoned
+/// peers cannot pin reader threads forever. `None` disables reaping.
+pub fn bind_cfg(addr: &str, idle_timeout: Option<Duration>) -> Result<Frontend> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding frontend on {addr}"))?;
     listener
@@ -136,6 +147,8 @@ pub fn bind(addr: &str) -> Result<Frontend> {
                         Ok((stream, _peer)) => {
                             counters.connections.fetch_add(1, Relaxed);
                             let _ = stream.set_nonblocking(false);
+                            // idle reaping rides the socket read timeout
+                            let _ = stream.set_read_timeout(idle_timeout);
                             let tx = tx.clone();
                             let counters = counters.clone();
                             let _ = std::thread::Builder::new()
@@ -274,6 +287,21 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, counters: Arc<FrontendCounter
     let mut out = stream;
     loop {
         let line = match proto::read_frame(&mut reader) {
+            // read timeout = the peer idled past --idle-timeout: reap.
+            // (A partial line lost to the timeout is unrecoverable
+            // framing state anyway, so the connection must close.)
+            Err(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+            {
+                counters.idle_reaped.fetch_add(1, Relaxed);
+                let _ = write_line(
+                    &mut out,
+                    &proto::err_line(proto::E_IDLE_TIMEOUT, "connection idle too long"),
+                );
+                break;
+            }
             Err(_) | Ok(Frame::Eof) => break,
             Ok(Frame::Oversized) => {
                 counters.note_undecodable();

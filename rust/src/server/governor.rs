@@ -1,0 +1,571 @@
+//! Adaptive resource governor (DESIGN.md §13): per-tenant quota
+//! enforcement and elastic scaling of the shared decomposition
+//! [`WorkerPool`](crate::util::threadpool::WorkerPool).
+//!
+//! Closes the two scaling gaps PR 2 left open: the fair-share scheduler
+//! bounds *relative* share only (no absolute per-tenant ceilings), and
+//! the worker pool was fixed-size regardless of queue depth.
+//!
+//! **Quotas** (declared at `create` time, [`proto::QuotaSpec`]): an
+//! op-rate ceiling — decomposition-op *demand* per stepped round — and a
+//! resident-memory ceiling. Enforcement is evaluated between serving
+//! rounds, once per [`WINDOW_ROUNDS`]-round window, and escalates on a
+//! strike ladder:
+//!
+//! | strikes | level      | effect                                  |
+//! |---------|------------|-----------------------------------------|
+//! | 0       | Normal     | step every round                        |
+//! | 1       | Throttled  | step every other round (50% duty cycle) |
+//! | 2       | Paused     | no steps this window                    |
+//! | 3       | *Evicted*  | terminal; queued ops cancelled          |
+//!
+//! A breaching window adds a strike, a clean window removes one, so a
+//! transient burst is throttled and recovers while a persistent violator
+//! walks the ladder to eviction within three windows. The op-rate
+//! metric is **demand** (ops per round the tenant actually stepped), so
+//! gating a tenant cannot mask its breach — while a tenant is paused and
+//! produces no evidence, its last measured demand carries forward.
+//! Eviction reasons are a closed set ([`EvictReason`]) surfaced in
+//! `metrics::SessionRecord::evict_reason`.
+//!
+//! **Elasticity**: the governor watches the shared pool's queue depth,
+//! the scheduler's ready backlog, and the per-round staleness-pause
+//! count (`RoundStats::blocked`) — the telemetry `ServerRecord` already
+//! reports — and grows/shrinks the pool within
+//! `[workers_min, workers_max]`. Hysteresis is asymmetric patience:
+//! growth after [`GROW_PATIENCE`] consecutive overloaded rounds, shrink
+//! only after [`SHRINK_PATIENCE`] consecutive idle rounds, one worker at
+//! a time. With `workers_min == workers_max` the governor never touches
+//! the pool (the determinism-contract configuration); pool size is
+//! trajectory-neutral regardless, because resizes never drop or reorder
+//! the shard queues.
+//!
+//! Everything here is deterministic given the round/step/submission
+//! counters: no wall-clock input, so quota decisions are reproducible
+//! run-to-run (the bit-match tests rely on this).
+
+use std::collections::BTreeMap;
+
+use super::proto::QuotaSpec;
+
+/// Quota-evaluation window, in serving rounds.
+pub const WINDOW_ROUNDS: u64 = 8;
+/// Strikes at which a tenant is evicted.
+pub const EVICT_STRIKES: u32 = 3;
+/// Consecutive overloaded rounds before the pool grows by one worker.
+pub const GROW_PATIENCE: u32 = 3;
+/// Consecutive idle rounds before the pool shrinks by one worker
+/// (deliberately ≫ GROW_PATIENCE: scaling up is cheap, thrashing isn't).
+pub const SHRINK_PATIENCE: u32 = 64;
+/// Backlog-per-worker factor that counts a round as overloaded.
+pub const GROW_QUEUE_FACTOR: usize = 2;
+
+/// Why a session was evicted — a closed set, stable strings on the wire
+/// and in `metrics::SessionRecord`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictReason {
+    /// sustained decomposition-op demand above `quota.max_op_rate`
+    OpRate,
+    /// resident memory above `quota.max_mem_mb`
+    Memory,
+}
+
+impl EvictReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EvictReason::OpRate => "op_rate",
+            EvictReason::Memory => "memory",
+        }
+    }
+}
+
+/// Escalation level derived from the strike count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GovLevel {
+    Normal,
+    Throttled,
+    Paused,
+}
+
+impl GovLevel {
+    fn from_strikes(strikes: u32) -> GovLevel {
+        match strikes {
+            0 => GovLevel::Normal,
+            1 => GovLevel::Throttled,
+            _ => GovLevel::Paused,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GovLevel::Normal => "normal",
+            GovLevel::Throttled => "throttled",
+            GovLevel::Paused => "paused",
+        }
+    }
+}
+
+/// Telemetry snapshot for one tenant at a window boundary.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantUsage {
+    /// optimizer steps completed so far (monotonic)
+    pub steps: u64,
+    /// decomposition ops submitted so far (monotonic)
+    pub submitted: u64,
+    /// current resident bytes (params + Gram + low-rank reps)
+    pub resident_bytes: u64,
+}
+
+struct TenantState {
+    quota: Option<QuotaSpec>,
+    strikes: u32,
+    level: GovLevel,
+    /// ops per stepped round, carried across windows with no steps (a
+    /// paused tenant must not look compliant by producing no evidence)
+    demand_rate: f64,
+    last_steps: u64,
+    last_submitted: u64,
+    throttled_rounds: u64,
+    evicted: Option<EvictReason>,
+    /// footprint at the moment of eviction — the buffers themselves are
+    /// released afterwards, so metrics must remember what breached
+    resident_mb_at_evict: f64,
+}
+
+/// Per-session summary for `metrics::SessionRecord`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantReport {
+    pub throttled_rounds: u64,
+    /// `""` while resident; `"op_rate"` / `"memory"` once evicted
+    pub evict_reason: &'static str,
+    pub level: &'static str,
+    /// `Some(footprint at eviction)` once evicted (live estimate
+    /// otherwise comes from the session itself)
+    pub evicted_resident_mb: Option<f64>,
+}
+
+/// Elasticity bounds; `workers_min == workers_max` disables resizing.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorCfg {
+    pub workers_min: usize,
+    pub workers_max: usize,
+}
+
+pub struct Governor {
+    cfg: GovernorCfg,
+    tenants: BTreeMap<u64, TenantState>,
+    grow_streak: u32,
+    shrink_streak: u32,
+    pub grow_events: u64,
+    pub shrink_events: u64,
+    pub evictions: u64,
+}
+
+impl Governor {
+    pub fn new(cfg: GovernorCfg) -> Governor {
+        Governor {
+            cfg,
+            tenants: BTreeMap::new(),
+            grow_streak: 0,
+            shrink_streak: 0,
+            grow_events: 0,
+            shrink_events: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &GovernorCfg {
+        &self.cfg
+    }
+
+    pub fn elastic(&self) -> bool {
+        self.cfg.workers_min < self.cfg.workers_max
+    }
+
+    /// Add a tenant. An unlimited quota is normalized to `None`.
+    pub fn register(&mut self, key: u64, quota: Option<QuotaSpec>) {
+        let quota = quota.filter(|q| !q.is_unlimited());
+        self.tenants.insert(
+            key,
+            TenantState {
+                quota,
+                strikes: 0,
+                level: GovLevel::Normal,
+                demand_rate: 0.0,
+                last_steps: 0,
+                last_submitted: 0,
+                throttled_rounds: 0,
+                evicted: None,
+                resident_mb_at_evict: 0.0,
+            },
+        );
+    }
+
+    pub fn unregister(&mut self, key: u64) {
+        self.tenants.remove(&key);
+    }
+
+    /// Seed a freshly-registered tenant's counter baselines. Used on
+    /// checkpoint restore, where `steps_done` resumes at the checkpoint
+    /// step while the new service's `submitted` counter restarts at 0 —
+    /// without this, the first window's demand would be diluted by the
+    /// pre-restore step count and mask a breach for a full window.
+    pub fn seed_usage(&mut self, key: u64, steps: u64, submitted: u64) {
+        if let Some(t) = self.tenants.get_mut(&key) {
+            t.last_steps = steps;
+            t.last_submitted = submitted;
+        }
+    }
+
+    /// The quota a tenant was created with (checkpoints persist it).
+    pub fn quota_of(&self, key: u64) -> Option<QuotaSpec> {
+        self.tenants.get(&key).and_then(|t| t.quota)
+    }
+
+    pub fn report(&self, key: u64) -> TenantReport {
+        match self.tenants.get(&key) {
+            None => TenantReport {
+                throttled_rounds: 0,
+                evict_reason: "",
+                level: GovLevel::Normal.as_str(),
+                evicted_resident_mb: None,
+            },
+            Some(t) => TenantReport {
+                throttled_rounds: t.throttled_rounds,
+                evict_reason: t.evicted.map(|r| r.as_str()).unwrap_or(""),
+                level: t.level.as_str(),
+                evicted_resident_mb: t.evicted.map(|_| t.resident_mb_at_evict),
+            },
+        }
+    }
+
+    /// May this tenant step in `round`? Throttled tenants run a 50% duty
+    /// cycle (even rounds), paused tenants sit the window out. Counts
+    /// denied rounds toward `throttled_rounds`.
+    pub fn gate(&mut self, key: u64, round: u64) -> bool {
+        let Some(t) = self.tenants.get_mut(&key) else {
+            return true;
+        };
+        let allow = match t.level {
+            GovLevel::Normal => true,
+            GovLevel::Throttled => round % 2 == 0,
+            GovLevel::Paused => false,
+        };
+        if !allow {
+            t.throttled_rounds += 1;
+        }
+        allow
+    }
+
+    /// Window-boundary evaluation for one tenant. Returns the eviction
+    /// reason when the strike ladder tops out; the caller (the session
+    /// manager) applies the eviction.
+    pub fn observe(&mut self, key: u64, usage: TenantUsage) -> Option<EvictReason> {
+        let t = self.tenants.get_mut(&key)?;
+        if t.evicted.is_some() {
+            return None;
+        }
+        let steps_d = usage.steps.saturating_sub(t.last_steps);
+        let subs_d = usage.submitted.saturating_sub(t.last_submitted);
+        t.last_steps = usage.steps;
+        t.last_submitted = usage.submitted;
+        if steps_d > 0 {
+            t.demand_rate = subs_d as f64 / steps_d as f64;
+        }
+        let q = t.quota?;
+        let op_breach = q.max_op_rate > 0.0 && t.demand_rate > q.max_op_rate;
+        let mem_breach = q.max_mem_mb > 0.0
+            && usage.resident_bytes as f64 / (1024.0 * 1024.0) > q.max_mem_mb;
+        if op_breach || mem_breach {
+            t.strikes += 1;
+        } else {
+            t.strikes = t.strikes.saturating_sub(1);
+        }
+        if t.strikes >= EVICT_STRIKES {
+            let reason = if mem_breach {
+                EvictReason::Memory
+            } else {
+                EvictReason::OpRate
+            };
+            t.evicted = Some(reason);
+            t.resident_mb_at_evict = usage.resident_bytes as f64 / (1024.0 * 1024.0);
+            self.evictions += 1;
+            return Some(reason);
+        }
+        t.level = GovLevel::from_strikes(t.strikes);
+        None
+    }
+
+    /// Per-round elasticity decision from pool/scheduler telemetry.
+    /// Returns the new worker count when the pool should resize; always
+    /// within `[workers_min, workers_max]`, `None` when bounds collapse.
+    pub fn decide_workers(
+        &mut self,
+        queue_depth: usize,
+        ready_cells: usize,
+        blocked_sessions: usize,
+        current: usize,
+    ) -> Option<usize> {
+        if !self.elastic() {
+            return None;
+        }
+        let backlog = queue_depth.max(ready_cells);
+        if backlog > GROW_QUEUE_FACTOR * current
+            || (blocked_sessions > 0 && backlog >= current)
+        {
+            self.grow_streak += 1;
+            self.shrink_streak = 0;
+        } else if backlog == 0 && blocked_sessions == 0 {
+            self.shrink_streak += 1;
+            self.grow_streak = 0;
+        } else {
+            self.grow_streak = 0;
+            self.shrink_streak = 0;
+        }
+        if self.grow_streak >= GROW_PATIENCE && current < self.cfg.workers_max {
+            self.grow_streak = 0;
+            self.shrink_streak = 0;
+            self.grow_events += 1;
+            return Some((current + 1).min(self.cfg.workers_max));
+        }
+        if self.shrink_streak >= SHRINK_PATIENCE && current > self.cfg.workers_min {
+            self.grow_streak = 0;
+            self.shrink_streak = 0;
+            self.shrink_events += 1;
+            return Some((current - 1).max(self.cfg.workers_min));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn quota(rate: f64, mem: f64) -> Option<QuotaSpec> {
+        Some(QuotaSpec {
+            max_op_rate: rate,
+            max_mem_mb: mem,
+        })
+    }
+
+    #[test]
+    fn unlimited_quota_never_escalates() {
+        let mut g = Governor::new(GovernorCfg {
+            workers_min: 2,
+            workers_max: 2,
+        });
+        g.register(1, None);
+        g.register(2, quota(0.0, 0.0)); // normalized to None
+        for w in 1..50u64 {
+            for key in [1, 2] {
+                let ev = g.observe(
+                    key,
+                    TenantUsage {
+                        steps: w * 8,
+                        submitted: w * 800, // huge demand, but no ceiling
+                        resident_bytes: 1 << 30,
+                    },
+                );
+                assert!(ev.is_none());
+                assert!(g.gate(key, w));
+            }
+        }
+        assert_eq!(g.evictions, 0);
+    }
+
+    #[test]
+    fn persistent_op_rate_breach_walks_the_ladder() {
+        let mut g = Governor::new(GovernorCfg {
+            workers_min: 2,
+            workers_max: 2,
+        });
+        g.register(7, quota(0.1, 0.0));
+        // window 1: demand 1 op/step → strike 1 (Throttled)
+        assert!(g
+            .observe(7, TenantUsage { steps: 8, submitted: 8, resident_bytes: 0 })
+            .is_none());
+        assert_eq!(g.report(7).level, "throttled");
+        assert!(g.gate(7, 10) && !g.gate(7, 11), "50% duty cycle");
+        // window 2: still over → strike 2 (Paused)
+        assert!(g
+            .observe(7, TenantUsage { steps: 12, submitted: 12, resident_bytes: 0 })
+            .is_none());
+        assert_eq!(g.report(7).level, "paused");
+        assert!(!g.gate(7, 16));
+        // window 3: paused ⇒ no new steps; carried demand still breaches
+        let ev = g.observe(7, TenantUsage { steps: 12, submitted: 12, resident_bytes: 0 });
+        assert_eq!(ev, Some(EvictReason::OpRate));
+        assert_eq!(g.evictions, 1);
+        assert_eq!(g.report(7).evict_reason, "op_rate");
+        // further windows are inert
+        assert!(g
+            .observe(7, TenantUsage { steps: 12, submitted: 99, resident_bytes: 0 })
+            .is_none());
+        assert_eq!(g.evictions, 1);
+    }
+
+    #[test]
+    fn memory_breach_evicts_with_memory_reason() {
+        let mut g = Governor::new(GovernorCfg {
+            workers_min: 1,
+            workers_max: 1,
+        });
+        g.register(3, quota(0.0, 1.0)); // 1 MiB ceiling
+        let over = TenantUsage {
+            steps: 8,
+            submitted: 0,
+            resident_bytes: 4 << 20,
+        };
+        assert!(g.observe(3, over).is_none());
+        assert!(g.observe(3, over).is_none());
+        assert_eq!(g.observe(3, over), Some(EvictReason::Memory));
+    }
+
+    #[test]
+    fn transient_burst_recovers_instead_of_evicting() {
+        let mut g = Governor::new(GovernorCfg {
+            workers_min: 1,
+            workers_max: 1,
+        });
+        g.register(5, quota(1.0, 0.0));
+        // one hot window…
+        g.observe(5, TenantUsage { steps: 8, submitted: 40, resident_bytes: 0 });
+        assert_eq!(g.report(5).level, "throttled");
+        // …then compliant ones: the strike decays and the gate reopens
+        g.observe(5, TenantUsage { steps: 16, submitted: 44, resident_bytes: 0 });
+        assert_eq!(g.report(5).level, "normal");
+        assert!(g.gate(5, 9));
+        assert_eq!(g.evictions, 0);
+    }
+
+    /// Property: a tenant whose demand and memory stay under quota is
+    /// never throttled, paused, or evicted — whatever the usage pattern.
+    #[test]
+    fn prop_no_escalation_under_quota() {
+        proptest::check(
+            "governor: no escalation under quota",
+            |rng: &mut Rng| {
+                let windows = 4 + rng.next_below(24);
+                let usages: Vec<(u64, u64)> = (0..windows)
+                    .map(|_| {
+                        let steps = 1 + rng.next_below(32) as u64;
+                        // demand strictly under the 2.0 ops/step ceiling
+                        let subs = rng.next_below(2 * steps as usize) as u64;
+                        (steps, subs)
+                    })
+                    .collect();
+                usages
+            },
+            |usages| {
+                let mut g = Governor::new(GovernorCfg {
+                    workers_min: 1,
+                    workers_max: 4,
+                });
+                g.register(1, quota(2.0, 8.0));
+                let (mut steps, mut subs) = (0u64, 0u64);
+                for (i, (sd, bd)) in usages.iter().enumerate() {
+                    steps += sd;
+                    subs += bd;
+                    if let Some(r) = g.observe(
+                        1,
+                        TenantUsage {
+                            steps,
+                            submitted: subs,
+                            resident_bytes: 1 << 20, // 1 MiB < 8 MiB
+                        },
+                    ) {
+                        return Err(format!("evicted ({:?}) at window {i}", r));
+                    }
+                    if g.report(1).level != "normal" {
+                        return Err(format!(
+                            "escalated to {} at window {i}",
+                            g.report(1).level
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: whatever telemetry the elastic controller sees, the
+    /// worker count it commands stays within `[workers_min, workers_max]`.
+    #[test]
+    fn prop_pool_size_stays_within_bounds() {
+        proptest::check(
+            "governor: pool size within bounds",
+            |rng: &mut Rng| {
+                let min = 1 + rng.next_below(3);
+                let max = min + rng.next_below(5);
+                let rounds: Vec<(usize, usize, usize)> = (0..200)
+                    .map(|_| {
+                        (
+                            rng.next_below(12),
+                            rng.next_below(12),
+                            rng.next_below(3),
+                        )
+                    })
+                    .collect();
+                (min, max, rounds)
+            },
+            |(min, max, rounds)| {
+                let mut g = Governor::new(GovernorCfg {
+                    workers_min: *min,
+                    workers_max: *max,
+                });
+                let mut cur = *min;
+                for (i, (qd, ready, blocked)) in rounds.iter().enumerate() {
+                    if let Some(n) = g.decide_workers(*qd, *ready, *blocked, cur) {
+                        if n < *min || n > *max {
+                            return Err(format!(
+                                "round {i}: commanded {n} outside [{min},{max}]"
+                            ));
+                        }
+                        cur = n;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn elasticity_grows_under_backlog_and_shrinks_when_idle() {
+        let mut g = Governor::new(GovernorCfg {
+            workers_min: 1,
+            workers_max: 4,
+        });
+        let mut cur = 1usize;
+        // sustained backlog → grow after GROW_PATIENCE rounds
+        for _ in 0..GROW_PATIENCE {
+            if let Some(n) = g.decide_workers(10, 10, 1, cur) {
+                cur = n;
+            }
+        }
+        assert_eq!(cur, 2);
+        assert_eq!(g.grow_events, 1);
+        // long idle stretch → shrink back, with much more patience
+        let mut shrunk_at = None;
+        for i in 0..(2 * SHRINK_PATIENCE) {
+            if let Some(n) = g.decide_workers(0, 0, 0, cur) {
+                cur = n;
+                shrunk_at.get_or_insert(i);
+                break;
+            }
+        }
+        assert_eq!(cur, 1);
+        assert_eq!(g.shrink_events, 1);
+        assert!(shrunk_at.unwrap() + 1 >= SHRINK_PATIENCE, "shrank too eagerly");
+        // disabled when the bounds collapse
+        let mut fixed = Governor::new(GovernorCfg {
+            workers_min: 2,
+            workers_max: 2,
+        });
+        for _ in 0..100 {
+            assert!(fixed.decide_workers(50, 50, 3, 2).is_none());
+        }
+    }
+}

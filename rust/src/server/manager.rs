@@ -29,19 +29,28 @@ use crate::util::threadpool::WorkerPool;
 use crate::util::timer::PhaseTimers;
 
 use super::ckpt;
+use super::governor::{self, Governor, GovernorCfg, TenantUsage};
+use super::proto::QuotaSpec;
 use super::sched::FairScheduler;
 use super::session::{HostSession, HostSessionCfg, ModelSession, Workload};
 
 /// Server-level configuration.
 #[derive(Clone, Debug)]
 pub struct ServerCfg {
-    /// decomposition workers in the shared pool
+    /// decomposition workers in the shared pool (the initial size when
+    /// elasticity is on)
     pub workers: usize,
     /// admission-control capacity (active sessions)
     pub max_sessions: usize,
     /// staleness bound in stat-periods: a session pauses when ops older
     /// than this lag are still unfinished (1 = deterministic pipeline)
     pub staleness: usize,
+    /// elastic pool lower bound; 0 = "same as `workers`" (with
+    /// `workers_min == workers_max` the pool is fixed-size — the
+    /// determinism-contract configuration)
+    pub workers_min: usize,
+    /// elastic pool upper bound; 0 = "same as `workers`"
+    pub workers_max: usize,
 }
 
 impl Default for ServerCfg {
@@ -50,7 +59,30 @@ impl Default for ServerCfg {
             workers: 2,
             max_sessions: 4,
             staleness: 1,
+            workers_min: 0,
+            workers_max: 0,
         }
+    }
+}
+
+impl ServerCfg {
+    /// Resolve the `0 = same as workers` elasticity defaults and clamp
+    /// the initial size into the bounds. An explicitly-set ceiling is
+    /// never raised: inconsistent bounds (`min > max`) lower the floor
+    /// to the cap rather than silently over-provisioning past what the
+    /// operator asked for.
+    fn normalized(mut self) -> ServerCfg {
+        self.workers = self.workers.max(1);
+        if self.workers_min == 0 {
+            self.workers_min = self.workers;
+        }
+        if self.workers_max == 0 {
+            self.workers_max = self.workers;
+        }
+        self.workers_max = self.workers_max.max(1);
+        self.workers_min = self.workers_min.clamp(1, self.workers_max);
+        self.workers = self.workers.clamp(self.workers_min, self.workers_max);
+        self
     }
 }
 
@@ -64,6 +96,9 @@ pub enum SessionStatus {
     /// the session's own step or decomposition chain errored; the error
     /// is recorded on the session and every other tenant keeps serving
     Failed,
+    /// the resource governor evicted the session for a sustained quota
+    /// breach; the reason lands in `metrics::SessionRecord::evict_reason`
+    Evicted,
 }
 
 /// One tenant: workload + its shared-mode preconditioner service +
@@ -117,6 +152,16 @@ impl<'rt> Session<'rt> {
         }
     }
 
+    /// Deterministic resident-memory estimate (quota enforcement and
+    /// `SessionRecord::resident_mb`): parameters plus per-factor Gram
+    /// and low-rank representation buffers.
+    pub fn resident_bytes(&self) -> u64 {
+        match &self.work {
+            Workload::Host(h) => h.resident_bytes(),
+            Workload::Model(m) => m.tr.resident_bytes(),
+        }
+    }
+
     /// Backpressure pause time, including a still-open pause interval
     /// (so sessions that end their run blocked are not underreported).
     pub fn pause_s(&self) -> f64 {
@@ -155,12 +200,15 @@ pub struct RoundStats {
     pub stepped: usize,
     /// sessions skipped this round because their staleness bound is hit
     pub blocked: usize,
+    /// sessions denied the round by the governor's escalation ladder
+    pub throttled: usize,
 }
 
 pub struct SessionManager<'rt> {
     pub cfg: ServerCfg,
     pool: Arc<WorkerPool>,
     sched: Arc<FairScheduler>,
+    governor: Governor,
     sessions: BTreeMap<u64, Session<'rt>>,
     rt: Option<&'rt Runtime>,
     next_id: u64,
@@ -170,11 +218,17 @@ pub struct SessionManager<'rt> {
 
 impl<'rt> SessionManager<'rt> {
     pub fn new(cfg: ServerCfg) -> SessionManager<'rt> {
-        let pool = Arc::new(WorkerPool::new(cfg.workers.max(1)));
+        let cfg = cfg.normalized();
+        let pool = Arc::new(WorkerPool::new(cfg.workers));
+        let governor = Governor::new(GovernorCfg {
+            workers_min: cfg.workers_min,
+            workers_max: cfg.workers_max,
+        });
         SessionManager {
             cfg,
             pool,
             sched: Arc::new(FairScheduler::new()),
+            governor,
             sessions: BTreeMap::new(),
             rt: None,
             next_id: 1,
@@ -191,10 +245,15 @@ impl<'rt> SessionManager<'rt> {
     }
 
     fn admit(&self) -> Result<()> {
+        // Done and Evicted sessions no longer consume serving capacity:
+        // eviction must actually free the slot it was protecting, or a
+        // flood tenant could deny admission forever from beyond the grave
         let active = self
             .sessions
             .values()
-            .filter(|s| s.status != SessionStatus::Done)
+            .filter(|s| {
+                s.status != SessionStatus::Done && s.status != SessionStatus::Evicted
+            })
             .count();
         ensure!(
             active < self.cfg.max_sessions,
@@ -209,17 +268,21 @@ impl<'rt> SessionManager<'rt> {
         (self.cfg.staleness.max(1) * t_updt).max(1)
     }
 
-    /// Create a host-substrate session. Fails when at capacity.
+    /// Create a host-substrate session. Fails when at capacity. `quota`
+    /// attaches optional per-session resource ceilings the governor
+    /// enforces between rounds (DESIGN.md §13).
     pub fn create_host(
         &mut self,
         name: &str,
         weight: u32,
         scfg: HostSessionCfg,
+        quota: Option<QuotaSpec>,
     ) -> Result<u64> {
         self.admit()?;
         let hs = HostSession::new(scfg);
         let id = self.alloc_id();
         self.sched.register(id, weight.max(1));
+        self.governor.register(id, quota);
         let svc = PrecondService::shared(
             PrecondCfg {
                 workers: self.cfg.workers,
@@ -244,6 +307,7 @@ impl<'rt> SessionManager<'rt> {
         tcfg: TrainerCfg,
         ds: Dataset,
         target_steps: u64,
+        quota: Option<QuotaSpec>,
     ) -> Result<u64> {
         let rt = self
             .rt
@@ -251,6 +315,7 @@ impl<'rt> SessionManager<'rt> {
         self.admit()?;
         let id = self.alloc_id();
         self.sched.register(id, weight.max(1));
+        self.governor.register(id, quota);
         let pc = tcfg.precond.clone().unwrap_or(PrecondCfg {
             workers: self.cfg.workers,
             max_staleness: self.staleness_steps(tcfg.hyper.t_updt),
@@ -266,6 +331,7 @@ impl<'rt> SessionManager<'rt> {
             Ok(tr) => tr,
             Err(e) => {
                 self.sched.unregister(id);
+                self.governor.unregister(id);
                 return Err(e);
             }
         };
@@ -345,26 +411,32 @@ impl<'rt> SessionManager<'rt> {
     /// `PrecondService::drop`); the shared pool and all other sessions
     /// are unaffected.
     pub fn drop_session(&mut self, id: u64) -> Result<()> {
-        self.sessions
+        let out = self
+            .sessions
             .remove(&id)
             .map(|_| ())
-            .ok_or_else(|| anyhow!("no session {id}"))
+            .ok_or_else(|| anyhow!("no session {id}"));
+        if out.is_ok() {
+            self.governor.unregister(id);
+        }
+        out
     }
 
     /// Serialize a session's full state. Drains the session's in-flight
     /// decomposition chain first (the checkpoint captures the chain
     /// position, so resume is bit-identical).
     pub fn checkpoint(&mut self, id: u64) -> Result<Json> {
+        let quota = self.governor.quota_of(id);
         let s = self.get_mut(id)?;
         match &mut s.work {
             Workload::Host(hs) => {
                 let svc = s.svc.as_ref().expect("host session service");
                 svc.drain()?;
-                ckpt::encode_host(&s.name, s.weight, hs, svc)
+                ckpt::encode_host(&s.name, s.weight, quota.as_ref(), hs, svc)
             }
             Workload::Model(m) => {
                 m.tr.drain_service()?;
-                ckpt::encode_model(&s.name, s.weight, &**m)
+                ckpt::encode_model(&s.name, s.weight, quota.as_ref(), &**m)
             }
         }
     }
@@ -383,6 +455,10 @@ impl<'rt> SessionManager<'rt> {
         self.admit()?;
         let id = self.alloc_id();
         self.sched.register(id, r.weight);
+        self.governor.register(id, r.quota);
+        // baseline the quota window at the resume point (the fresh
+        // service's submitted counter restarts at 0)
+        self.governor.seed_usage(id, r.session.step, 0);
         let svc = PrecondService::shared(
             PrecondCfg {
                 workers: self.cfg.workers,
@@ -410,6 +486,8 @@ impl<'rt> SessionManager<'rt> {
         self.admit()?;
         let id = self.alloc_id();
         self.sched.register(id, r.weight);
+        self.governor.register(id, r.quota);
+        self.governor.seed_usage(id, r.state.step as u64, 0);
         let svc = PrecondService::shared(
             r.precond.clone(),
             Trainer::factor_ids(&rt.manifest),
@@ -424,6 +502,7 @@ impl<'rt> SessionManager<'rt> {
             Ok(tr) => tr,
             Err(e) => {
                 self.sched.unregister(id);
+                self.governor.unregister(id);
                 return Err(e);
             }
         };
@@ -447,9 +526,16 @@ impl<'rt> SessionManager<'rt> {
             .any(|s| s.status == SessionStatus::Running)
     }
 
-    /// One cooperative round: step every runnable session once.
+    /// One cooperative round: step every runnable session once. The
+    /// resource governor runs between rounds — quota escalation at
+    /// window boundaries, the per-round gate for throttled/paused
+    /// tenants, and the elastic pool decision from this round's
+    /// backlog telemetry.
     pub fn run_round(&mut self) -> Result<RoundStats> {
         self.round += 1;
+        if self.round % governor::WINDOW_ROUNDS == 0 {
+            self.enforce_quotas();
+        }
         let staleness = self.cfg.staleness;
         let mut stats = RoundStats::default();
         let ids: Vec<u64> = self.sessions.keys().copied().collect();
@@ -461,6 +547,12 @@ impl<'rt> SessionManager<'rt> {
             if s.done() {
                 s.settle_pause();
                 s.status = SessionStatus::Done;
+                continue;
+            }
+            // governor gate first: an escalated tenant sits the round
+            // out (not backpressure — no pause-time accounting)
+            if !self.governor.gate(id, self.round) {
+                stats.throttled += 1;
                 continue;
             }
             if !s.ready(staleness) {
@@ -487,7 +579,73 @@ impl<'rt> SessionManager<'rt> {
                 s.status = SessionStatus::Done;
             }
         }
+        // elastic pool sizing from this round's backlog telemetry; the
+        // elastic() pre-check keeps the default fixed-size config from
+        // paying two cross-thread lock acquisitions per round for a
+        // decision that is always None
+        if self.governor.elastic() {
+            if let Some(n) = self.governor.decide_workers(
+                self.pool.queue_depth(),
+                self.sched.ready_total(),
+                stats.blocked,
+                self.pool.threads(),
+            ) {
+                log::info!(
+                    "governor: resizing worker pool {} -> {n} (round {})",
+                    self.pool.threads(),
+                    self.round
+                );
+                self.pool.resize(n);
+            }
+        }
         Ok(stats)
+    }
+
+    /// Window-boundary quota evaluation: feed each running tenant's
+    /// deterministic usage counters to the governor and apply any
+    /// eviction it orders (cancel queued decomposition work, mark the
+    /// session Evicted; the in-flight op, if any, completes and is
+    /// settled by the next drain).
+    fn enforce_quotas(&mut self) {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            let s = self.sessions.get_mut(&id).unwrap();
+            if s.status != SessionStatus::Running {
+                continue;
+            }
+            let (submitted, _) = s.counters_snapshot();
+            let usage = TenantUsage {
+                steps: s.steps_done(),
+                submitted,
+                resident_bytes: s.resident_bytes(),
+            };
+            if let Some(reason) = self.governor.observe(id, usage) {
+                log::warn!(
+                    "governor: evicting session '{}' (id {id}): {} quota breached",
+                    s.name,
+                    reason.as_str()
+                );
+                s.settle_pause();
+                s.status = SessionStatus::Evicted;
+                // cancel queued work, then actually reclaim the memory
+                // the quota was protecting (the governor remembers the
+                // at-eviction footprint for metrics)
+                match (&mut s.work, &s.svc) {
+                    (Workload::Model(m), _) => {
+                        if let Some(svc) = &m.tr.service {
+                            svc.cancel_pending();
+                        }
+                        m.tr.release_resident();
+                    }
+                    (Workload::Host(h), svc) => {
+                        if let Some(svc) = svc {
+                            svc.cancel_pending();
+                        }
+                        h.release_resident();
+                    }
+                }
+            }
+        }
     }
 
     /// Serve until every session is Done, Failed, or user-Paused. Sleeps
@@ -503,9 +661,12 @@ impl<'rt> SessionManager<'rt> {
             }
             let st = self.run_round()?;
             if st.stepped == 0 {
-                if st.blocked == 0 {
+                if st.blocked == 0 && st.throttled == 0 {
                     break; // only user-paused sessions remain runnable
                 }
+                // blocked: workers need the CPU; throttled: the governor
+                // resolves the stall within a window (de-escalation or
+                // eviction), so keep the round clock moving
                 std::thread::sleep(std::time::Duration::from_micros(200));
             }
         }
@@ -530,7 +691,10 @@ impl<'rt> SessionManager<'rt> {
                 if s.error.is_none() {
                     s.error = Some(format!("{e:#}"));
                 }
-                s.status = SessionStatus::Failed;
+                // an eviction verdict outranks a drain error
+                if s.status != SessionStatus::Evicted {
+                    s.status = SessionStatus::Failed;
+                }
             }
         }
     }
@@ -550,6 +714,7 @@ impl<'rt> SessionManager<'rt> {
             let (submitted, completed) = s.counters_snapshot();
             let ops = served.get(&s.id).map(|(v, _)| *v).unwrap_or(0);
             total_steps += s.steps_done();
+            let gov = self.governor.report(s.id);
             sessions.push(SessionRecord {
                 id: s.id,
                 name: s.name.clone(),
@@ -560,6 +725,13 @@ impl<'rt> SessionManager<'rt> {
                 ops_share: ops as f64 / total_served as f64,
                 pause_s: s.pause_s(),
                 paused_rounds: s.paused_rounds,
+                throttled_rounds: gov.throttled_rounds,
+                evict_reason: gov.evict_reason.to_string(),
+                // evicted tenants report their at-eviction footprint
+                // (the live buffers were released on eviction)
+                resident_mb: gov.evicted_resident_mb.unwrap_or_else(|| {
+                    s.resident_bytes() as f64 / (1024.0 * 1024.0)
+                }),
                 status: format!("{:?}", s.status),
                 error: s.error.clone().unwrap_or_default(),
             });
@@ -586,6 +758,12 @@ impl<'rt> SessionManager<'rt> {
         let wall_s = self.wall0.elapsed().as_secs_f64();
         ServerRecord {
             workers: self.cfg.workers,
+            workers_now: self.pool.threads(),
+            workers_min: self.cfg.workers_min,
+            workers_max: self.cfg.workers_max,
+            grow_events: self.governor.grow_events,
+            shrink_events: self.governor.shrink_events,
+            evictions: self.governor.evictions,
             max_sessions: self.cfg.max_sessions,
             rounds: self.round,
             wall_s,

@@ -25,18 +25,24 @@
 //! * [`proto`] + [`frontend`] are the network face (DESIGN.md §12): a
 //!   line-delimited JSON protocol over `TcpListener` whose requests
 //!   decode into the same [`proto::Command`]s the job driver applies,
-//!   served by `bnkfac serve --listen` and spoken by `bnkfac client`.
+//!   served by `bnkfac serve --listen` and spoken by `bnkfac client`;
+//! * [`governor`] is the adaptive resource governor (DESIGN.md §13):
+//!   per-session op-rate/memory quotas with throttle → pause → evict
+//!   escalation, plus elastic grow/shrink of the shared worker pool
+//!   within `--workers-min/--workers-max` hysteresis bounds.
 
 pub mod ckpt;
 pub mod driver;
 pub mod frontend;
+pub mod governor;
 pub mod manager;
 pub mod proto;
 pub mod sched;
 pub mod session;
 
 pub use driver::ServerCore;
+pub use governor::{EvictReason, Governor, GovernorCfg};
 pub use manager::{RoundStats, ServerCfg, Session, SessionManager, SessionStatus};
-pub use proto::Command;
+pub use proto::{Command, QuotaSpec};
 pub use sched::FairScheduler;
 pub use session::{HostSession, HostSessionCfg, ModelSession, Workload};

@@ -13,8 +13,8 @@
 //! alias so job-file entries are valid wire requests verbatim):
 //!
 //! ```json
-//! {"op": "create",     "name": "a", "weight": 2, "session": {…}}
-//! {"op": "create-model","name": "m", "weight": 1, "model": {…}, "dataset": {…}}
+//! {"op": "create",     "name": "a", "weight": 2, "session": {…}, "quota": {…}?}
+//! {"op": "create-model","name": "m", "weight": 1, "model": {…}, "dataset": {…}, "quota": {…}?}
 //! {"op": "pause",      "name": "a"}
 //! {"op": "resume",     "name": "a"}
 //! {"op": "checkpoint", "name": "a", "path": "results/a.json"}
@@ -66,6 +66,9 @@ pub const E_AT_CAPACITY: &str = "at_capacity";
 /// The command needs a capability this server lacks (e.g. a model
 /// session without an artifacts runtime).
 pub const E_UNSUPPORTED: &str = "unsupported";
+/// The connection sat idle past the server's `--idle-timeout` and was
+/// reaped; sent as a courtesy before the close.
+pub const E_IDLE_TIMEOUT: &str = "idle_timeout";
 /// Anything else (I/O, serialization, session failure).
 pub const E_INTERNAL: &str = "internal";
 
@@ -128,6 +131,66 @@ pub struct ModelSpec {
     pub steps: u64,
 }
 
+/// Per-session resource quota, declared at `create` time and enforced
+/// between serving rounds by the resource governor (DESIGN.md §13).
+/// `0` disables either ceiling; a spec with both at 0 parses to "no
+/// quota". Enforcement escalates throttle → pause → evict.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuotaSpec {
+    /// ceiling on the session's decomposition-op DEMAND rate, in ops per
+    /// stepped round (throttling a tenant does not hide a breach)
+    pub max_op_rate: f64,
+    /// resident-memory ceiling in MiB (params + Gram + low-rank reps)
+    pub max_mem_mb: f64,
+}
+
+impl QuotaSpec {
+    pub fn is_unlimited(&self) -> bool {
+        self.max_op_rate <= 0.0 && self.max_mem_mb <= 0.0
+    }
+}
+
+/// Numeric keys of the wire quota spec. Shared with the `bnkfac client`
+/// flag builder (flag names are these with `-` for `_`) so the CLI
+/// cannot drift from the parser.
+pub const QUOTA_NUM_KEYS: &[&str] = &["max_op_rate", "max_mem_mb"];
+
+/// Lenient quota spec: both fields optional (default 0 = unlimited),
+/// unknown keys rejected. A fully-unlimited spec decodes to `None`.
+pub fn quota_from(j: &Json) -> Result<Option<QuotaSpec>> {
+    ensure!(matches!(j, Json::Obj(_)), "quota spec must be an object");
+    reject_unknown(j, QUOTA_NUM_KEYS, "quota spec")?;
+    let q = QuotaSpec {
+        max_op_rate: j.get("max_op_rate").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        max_mem_mb: j.get("max_mem_mb").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    };
+    // a non-finite ceiling (1e999 parses to +inf) would enforce nothing
+    // yet serialize into checkpoints as an unparseable literal — refuse
+    // it here, which covers the wire, job files, the client, and the
+    // checkpoint decoder in one place
+    ensure!(
+        q.max_op_rate.is_finite() && q.max_mem_mb.is_finite(),
+        "quota values must be finite numbers"
+    );
+    Ok(if q.is_unlimited() { None } else { Some(q) })
+}
+
+pub fn quota_json(q: &QuotaSpec) -> Json {
+    Json::obj(vec![
+        ("max_op_rate", Json::Num(q.max_op_rate)),
+        ("max_mem_mb", Json::Num(q.max_mem_mb)),
+    ])
+}
+
+/// Decode an optional quota attachment (`quota` key of `create` /
+/// `create-model` requests and of checkpoints). Absent or null = none.
+pub fn opt_quota_from(j: Option<&Json>) -> Result<Option<QuotaSpec>> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(q) => quota_from(q),
+    }
+}
+
 /// One lifecycle command against the session server. Shared by the
 /// scripted job driver (a timeline of commands) and the socket frontend
 /// (a stream of them) — both are applied between serving rounds by
@@ -139,6 +202,8 @@ pub enum Command {
         name: String,
         weight: u32,
         session: HostSessionCfg,
+        /// optional per-session resource ceiling (governor-enforced)
+        quota: Option<QuotaSpec>,
     },
     /// Artifact-backed trainer session; requires the server to have been
     /// started with an artifacts runtime.
@@ -147,6 +212,7 @@ pub enum Command {
         weight: u32,
         model: ModelSpec,
         dataset: DataSpec,
+        quota: Option<QuotaSpec>,
     },
     Pause {
         name: String,
@@ -349,6 +415,7 @@ pub fn command_from_json(j: &Json) -> Result<Command> {
                 j.get("session")
                     .ok_or_else(|| anyhow!("'create' needs a 'session' spec"))?,
             )?,
+            quota: opt_quota_from(j.get("quota"))?,
         },
         "create-model" | "create_model" => Command::CreateModel {
             name: name()?,
@@ -361,6 +428,7 @@ pub fn command_from_json(j: &Json) -> Result<Command> {
                 None | Some(Json::Null) => DataSpec::default(),
                 Some(d) => dataspec_from(d)?,
             },
+            quota: opt_quota_from(j.get("quota"))?,
         },
         "pause" => Command::Pause { name: name()? },
         "resume" => Command::Resume { name: name()? },
@@ -404,16 +472,21 @@ pub fn command_to_json(c: &Command) -> Json {
             name,
             weight,
             session,
+            quota,
         } => {
             pairs.push(("name", Json::str(name)));
             pairs.push(("weight", Json::Num(*weight as f64)));
             pairs.push(("session", ckpt::host_cfg_json(session)));
+            if let Some(q) = quota {
+                pairs.push(("quota", quota_json(q)));
+            }
         }
         Command::CreateModel {
             name,
             weight,
             model,
             dataset,
+            quota,
         } => {
             pairs.push(("name", Json::str(name)));
             pairs.push(("weight", Json::Num(*weight as f64)));
@@ -426,6 +499,9 @@ pub fn command_to_json(c: &Command) -> Json {
                 ]),
             ));
             pairs.push(("dataset", dataspec_json(dataset)));
+            if let Some(q) = quota {
+                pairs.push(("quota", quota_json(q)));
+            }
         }
         Command::Pause { name } | Command::Resume { name } | Command::Drop { name } => {
             pairs.push(("name", Json::str(name)));
@@ -564,6 +640,36 @@ mod tests {
         let typo = Json::parse(r#"{"ranks": 8}"#).unwrap();
         let err = host_cfg_lenient(&typo).unwrap_err().to_string();
         assert!(err.contains("unknown field 'ranks'"), "{err}");
+    }
+
+    #[test]
+    fn quota_spec_lenient_and_closed() {
+        // defaults: absent fields are unlimited; fully-unlimited → None
+        let j = Json::parse(r#"{"max_op_rate": 0.5}"#).unwrap();
+        let q = quota_from(&j).unwrap().unwrap();
+        assert_eq!(q.max_op_rate, 0.5);
+        assert_eq!(q.max_mem_mb, 0.0);
+        let j = Json::parse(r#"{}"#).unwrap();
+        assert!(quota_from(&j).unwrap().is_none());
+        let j = Json::parse(r#"{"max_op_rate": 0, "max_mem_mb": 0}"#).unwrap();
+        assert!(quota_from(&j).unwrap().is_none());
+        // typo'd keys fail loudly
+        let j = Json::parse(r#"{"max_ops": 3}"#).unwrap();
+        let err = quota_from(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown field 'max_ops'"), "{err}");
+        // create request carries the quota through the parser
+        let cmd = parse_request(
+            r#"{"op": "create", "name": "a", "session": {},
+                "quota": {"max_op_rate": 2, "max_mem_mb": 64}}"#,
+        )
+        .unwrap();
+        match cmd {
+            Command::Create { quota: Some(q), .. } => {
+                assert_eq!(q.max_op_rate, 2.0);
+                assert_eq!(q.max_mem_mb, 64.0);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -115,6 +115,14 @@ impl FairScheduler {
         self.inner.lock().unwrap().total_served
     }
 
+    /// Cells currently waiting in a ready-queue across all tenants —
+    /// the scheduler-side backlog signal the elastic governor combines
+    /// with the pool's job-queue depth (DESIGN.md §13.3).
+    pub fn ready_total(&self) -> usize {
+        let inn = self.inner.lock().unwrap();
+        inn.sessions.values().map(|e| e.ready.len()).sum()
+    }
+
     /// Mark a cell ready for this tenant (called by the owning service at
     /// submit time, under the cell lock — lock order is cell → sched).
     pub(crate) fn enqueue(&self, key: u64, rc: ReadyCell) {

@@ -253,6 +253,29 @@ impl HostSession {
         Ok(())
     }
 
+    /// Deterministic resident-memory estimate for quota enforcement
+    /// (DESIGN.md §13.2): parameter blocks plus each factor's resident
+    /// state ([`FactorState::resident_f32s`]). A pure function of the
+    /// trajectory, so governor decisions derived from it are
+    /// reproducible run-to-run.
+    pub fn resident_bytes(&self) -> u64 {
+        let params: usize = self.params.iter().map(|p| p.data.len()).sum();
+        let factors: usize = self.factors.iter().map(|f| f.resident_f32s()).sum();
+        ((params + factors) * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Release the dominant resident buffers (dense EA Grams + low-rank
+    /// reps) after the governor evicts this session — eviction must
+    /// actually reclaim the memory that breached the quota, not just
+    /// stop the stepping. Parameter blocks (small) are kept so the
+    /// session remains checkpointable for post-mortems.
+    pub fn release_resident(&mut self) {
+        for f in &mut self.factors {
+            f.gram = None;
+            f.rep = None;
+        }
+    }
+
     /// Flat fingerprint of all trajectory-determined state (tests compare
     /// this across interleavings / checkpoint-resume boundaries).
     pub fn state_vector(&self) -> Vec<f32> {

@@ -9,7 +9,12 @@
 //! Also provides [`WorkerPool`], the persistent job-queue pool backing
 //! the async preconditioner service (`precond`, DESIGN.md §9): N
 //! long-lived threads draining a shared FIFO of boxed jobs, with busy-
-//! time accounting for the worker-utilization metric.
+//! time accounting for the worker-utilization metric. The pool is
+//! **elastic** (DESIGN.md §13): [`WorkerPool::resize`] grows it by
+//! spawning threads and shrinks it by letting surplus workers exit
+//! *between* jobs — the shared job queue is never dropped or reordered
+//! by a resize, so per-cell op chains (Brand-chain state) survive any
+//! grow/shrink sequence untouched.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -94,15 +99,43 @@ struct PoolShared {
     shutdown: AtomicBool,
     busy_ns: AtomicU64,
     jobs_run: AtomicU64,
+    /// desired worker count; surplus workers exit between jobs
+    target: AtomicUsize,
+    /// live worker threads (decremented by an exiting surplus worker)
+    alive: AtomicUsize,
+    /// monotonic spawn counter (thread naming across resizes)
+    spawned: AtomicUsize,
 }
 
-/// Persistent worker pool: `threads` long-lived threads draining a shared
-/// FIFO job queue. Unlike `parallel_items` (scoped, blocking), submitted
-/// jobs run in the background; the pool joins its threads on drop.
+/// Should this worker exit because the pool shrank? Claims one surplus
+/// slot atomically so exactly `alive - target` workers leave. Callers
+/// must hold the queue lock (worker_loop does): `resize` updates
+/// `target` under the same lock, so the decision can never race a
+/// concurrent retarget.
+fn surplus_exit(sh: &PoolShared) -> bool {
+    loop {
+        let a = sh.alive.load(Ordering::Acquire);
+        if a <= sh.target.load(Ordering::Acquire) {
+            return false;
+        }
+        if sh
+            .alive
+            .compare_exchange(a, a - 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return true;
+        }
+    }
+}
+
+/// Persistent worker pool: long-lived threads draining a shared FIFO job
+/// queue. Unlike `parallel_items` (scoped, blocking), submitted jobs run
+/// in the background; the pool joins its threads on drop. The thread
+/// count is elastic: [`resize`](WorkerPool::resize) changes the target
+/// and the pool converges between jobs.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    threads: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl WorkerPool {
@@ -114,22 +147,29 @@ impl WorkerPool {
             shutdown: AtomicBool::new(false),
             busy_ns: AtomicU64::new(0),
             jobs_run: AtomicU64::new(0),
+            target: AtomicUsize::new(threads),
+            alive: AtomicUsize::new(0),
+            spawned: AtomicUsize::new(0),
         });
-        let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let sh = shared.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("bnkfac-worker-{t}"))
-                    .spawn(move || worker_loop(&sh))
-                    .expect("spawn worker thread"),
-            );
-        }
-        WorkerPool {
+        let pool = WorkerPool {
             shared,
-            handles,
-            threads,
+            handles: Mutex::new(Vec::with_capacity(threads)),
+        };
+        for _ in 0..threads {
+            pool.spawn_one();
         }
+        pool
+    }
+
+    fn spawn_one(&self) {
+        self.shared.alive.fetch_add(1, Ordering::AcqRel);
+        let i = self.shared.spawned.fetch_add(1, Ordering::Relaxed);
+        let sh = self.shared.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("bnkfac-worker-{i}"))
+            .spawn(move || worker_loop(&sh))
+            .expect("spawn worker thread");
+        self.handles.lock().unwrap().push(h);
     }
 
     /// Enqueue a job; a free worker picks it up in FIFO order.
@@ -140,8 +180,41 @@ impl WorkerPool {
         self.shared.cv.notify_one();
     }
 
+    /// COMMANDED worker-count target (what `resize` last asked for).
+    /// The live thread count converges on this between jobs — after a
+    /// shrink, surplus workers may still be finishing their in-flight
+    /// job when this is read.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.shared.target.load(Ordering::Acquire)
+    }
+
+    /// Elastically grow/shrink the pool to `target` (min 1) threads.
+    /// Growth spawns threads immediately; shrink lets surplus workers
+    /// exit at their next between-jobs check. The job queue — and hence
+    /// every factor cell's op chain — is untouched either way, so a
+    /// resize can never drop, reorder, or restart decomposition work.
+    ///
+    /// The target store and the top-up run under the queue lock, which
+    /// `surplus_exit` callers also hold — so a worker can never commit
+    /// to exiting against a stale target while a concurrent grow
+    /// decides no spawn is needed (which would strand the pool below
+    /// target until the next resize).
+    pub fn resize(&self, target: usize) {
+        let target = target.max(1);
+        let q = self.shared.queue.lock().unwrap();
+        self.shared.target.store(target, Ordering::Release);
+        // drop handles of workers that already exited from earlier
+        // shrinks — an oscillating elastic server must not accrete one
+        // dead JoinHandle per grow event forever
+        self.handles.lock().unwrap().retain(|h| !h.is_finished());
+        // top up only past the still-live count: workers that have not
+        // yet exited from an earlier shrink simply keep serving
+        while self.shared.alive.load(Ordering::Acquire) < target {
+            self.spawn_one();
+        }
+        drop(q);
+        // wake idle workers so surplus ones can exit promptly
+        self.shared.cv.notify_all();
     }
 
     /// Jobs currently waiting (not including jobs being executed).
@@ -173,7 +246,7 @@ impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.cv.notify_all();
-        for h in self.handles.drain(..) {
+        for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
     }
@@ -184,6 +257,11 @@ fn worker_loop(sh: &PoolShared) {
         let job = {
             let mut q = sh.queue.lock().unwrap();
             loop {
+                // surplus check BEFORE popping: a shrink takes effect
+                // even under backlog (the remaining workers drain it)
+                if surplus_exit(sh) {
+                    return;
+                }
                 if let Some(job) = q.pop_front() {
                     break job;
                 }
@@ -274,6 +352,40 @@ mod tests {
         // shutdown drains queued jobs that already started; the flag only
         // stops workers once the queue is empty, so the job completed
         assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    /// A resize mid-backlog must lose no job and leave the target where
+    /// it was set; a later grow resumes parallel draining.
+    #[test]
+    fn resize_preserves_queued_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50u64 {
+            let c = counter.clone();
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.resize(1);
+        assert_eq!(pool.threads(), 1);
+        for _ in 0..50u64 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.resize(3);
+        assert_eq!(pool.threads(), 3);
+        let t0 = std::time::Instant::now();
+        while counter.load(Ordering::Relaxed) != 100 {
+            assert!(t0.elapsed().as_secs() < 30, "resize lost jobs");
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.jobs_run(), 100);
+        // floor: resize(0) clamps to one worker
+        pool.resize(0);
+        assert_eq!(pool.threads(), 1);
     }
 
     #[test]

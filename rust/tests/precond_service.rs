@@ -175,6 +175,67 @@ fn staleness_bound_is_enforced_and_final_state_matches() {
     }
 }
 
+/// Elastic-pool regression (DESIGN.md §13.3): shrinking the worker pool
+/// in the middle of a live Brand chain — and growing it back later —
+/// must not drop, reorder, or restart any queued op. The drained final
+/// representation bit-matches both the fixed-pool async run and the
+/// sequential fold of the same request stream.
+#[test]
+fn pool_shrink_mid_brand_chain_bitmatches_fixed_pool() {
+    let p = plan("fc0", "A", 24, 6, 3, true);
+    let seed = 4242u64;
+    let build_reqs = || {
+        let mut rng = Rng::new(seed);
+        let mut data_rng = Rng::new(seed + 1);
+        (0..18u64)
+            .map(|k| {
+                let stat = Mat::gauss(24, 3, 1.0, &mut data_rng);
+                let op = if k == 0 { UpdateOp::Rsvd } else { UpdateOp::Brand };
+                OpRequest::prepare(op, &p, None, Some(&stat), 0.9, &mut rng).unwrap()
+            })
+            .collect::<Vec<_>>()
+    };
+    let run = |resizes: &[(u64, usize)]| -> (Vec<f32>, Vec<f32>) {
+        let svc = PrecondService::new(
+            PrecondCfg {
+                workers: 4,
+                max_staleness: 6,
+            },
+            vec![p.id.clone()],
+        );
+        let mut t = PhaseTimers::new();
+        for (k, req) in build_reqs().into_iter().enumerate() {
+            let k = k as u64;
+            for &(at, n) in resizes {
+                if at == k {
+                    svc.resize_workers(n);
+                    assert_eq!(svc.workers(), n);
+                }
+            }
+            svc.enforce_staleness(k);
+            svc.submit(0, req, k, None, &mut t).unwrap();
+        }
+        svc.drain().unwrap();
+        let snap = svc.cell(0).load_published().unwrap();
+        assert_eq!(snap.step, 17);
+        (snap.rep.u.data.clone(), snap.rep.d.clone())
+    };
+    let fixed = run(&[]);
+    let elastic = run(&[(5, 1), (11, 3)]); // shrink mid-chain, grow back
+    assert_eq!(fixed.0, elastic.0, "U diverged across a mid-chain resize");
+    assert_eq!(fixed.1, elastic.1, "spectrum diverged across a mid-chain resize");
+
+    // sequential reference: the same stream folded in order
+    let mut rep = None;
+    let mut t = PhaseTimers::new();
+    for r in build_reqs() {
+        rep = r.execute(rep, None, &mut t).unwrap();
+    }
+    let want = rep.unwrap();
+    assert_eq!(want.u.data, fixed.0);
+    assert_eq!(want.d, fixed.1);
+}
+
 /// The counters the run log reports must account for every submission.
 #[test]
 fn service_counters_track_activity() {

@@ -14,7 +14,7 @@ use bnkfac::data::{Dataset, DatasetCfg};
 use bnkfac::optim::seng::SengState;
 use bnkfac::optim::Algo;
 use bnkfac::runtime::Runtime;
-use bnkfac::server::proto::{self, Command, DataSpec, ModelSpec};
+use bnkfac::server::proto::{self, Command, DataSpec, ModelSpec, QuotaSpec};
 use bnkfac::server::{ckpt, driver, frontend, HostSessionCfg, ServerCfg, SessionManager, Workload};
 use bnkfac::util::rng::Rng;
 use bnkfac::util::ser::Json;
@@ -53,6 +53,16 @@ fn proto_roundtrip_every_command() {
             steps: 17,
             ..HostSessionCfg::default()
         },
+        quota: None,
+    });
+    roundtrip(Command::Create {
+        name: "q".into(),
+        weight: 1,
+        session: HostSessionCfg::default(),
+        quota: Some(QuotaSpec {
+            max_op_rate: 2.5,
+            max_mem_mb: 64.0,
+        }),
     });
     roundtrip(Command::CreateModel {
         name: "m".into(),
@@ -69,6 +79,10 @@ fn proto_roundtrip_every_command() {
             label_noise: 0.1,
             seed: 7,
         },
+        quota: Some(QuotaSpec {
+            max_op_rate: 8.0,
+            max_mem_mb: 0.0,
+        }),
     });
     roundtrip(Command::Pause { name: "a".into() });
     roundtrip(Command::Resume { name: "a".into() });
@@ -140,10 +154,11 @@ impl Client {
     }
 }
 
+// NB: ONE physical line — this spec is spliced into wire requests, and
+// the protocol is line-delimited; an embedded newline would shear the
+// request into malformed frames.
 fn session_spec_json() -> &'static str {
-    r#"{"factors": 2, "dim": 36, "rank": 5, "n_stat": 3, "grad_cols": 4,
-        "t_updt": 2, "algo": "b-kfac", "seed": "0x2a", "steps": 24,
-        "rho": 0.95, "lambda": 0.1}"#
+    r#"{"factors": 2, "dim": 36, "rank": 5, "n_stat": 3, "grad_cols": 4, "t_updt": 2, "algo": "b-kfac", "seed": "0x2a", "steps": 24, "rho": 0.95, "lambda": 0.1}"#
 }
 
 /// Bind a frontend with wire checkpoint paths rooted in the test tmp
@@ -188,6 +203,7 @@ fn socket_client_drives_full_lifecycle() {
         workers: 2,
         max_sessions: 4,
         staleness: 1,
+        ..ServerCfg::default()
     });
     let mut c = Client::connect(addr);
 
@@ -301,6 +317,7 @@ fn socket_run_bitmatches_job_file_run() {
         workers: 2,
         max_sessions: 4,
         staleness: 1,
+        ..ServerCfg::default()
     });
     let mut c = Client::connect(addr);
     c.ok(&format!(
@@ -326,6 +343,93 @@ fn socket_run_bitmatches_job_file_run() {
     for p in [job_ck, job_file, sock_ck] {
         let _ = std::fs::remove_file(p);
     }
+}
+
+/// Idle-connection reaping (ROADMAP frontend hardening): a connection
+/// that sends nothing for `--idle-timeout` is answered `idle_timeout`,
+/// closed, and counted; active connections and the server itself are
+/// unaffected.
+#[test]
+fn idle_connections_are_reaped_and_counted() {
+    let mut fe = frontend::bind_cfg(
+        "127.0.0.1:0",
+        Some(std::time::Duration::from_millis(60)),
+    )
+    .expect("bind");
+    fe.set_ckpt_root(Some(tmp_dir()));
+    let addr = fe.local_addr();
+    let server =
+        std::thread::spawn(move || fe.run(ServerCfg::default(), None, 100_000_000));
+
+    // a promptly-busy connection is fine
+    let mut live = Client::connect(addr);
+    live.ok(r#"{"op": "stats"}"#);
+
+    // an idle one gets reaped: courtesy error line, then EOF
+    let mut idle = Client::connect(addr);
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let mut line = String::new();
+    let n = idle.reader.read_line(&mut line).unwrap_or(0);
+    if n > 0 {
+        let r = proto::parse_reply(line.trim_end()).expect("reply parses");
+        assert!(!r.ok);
+        assert_eq!(r.code, proto::E_IDLE_TIMEOUT);
+    }
+    assert!(
+        idle.send_raw(r#"{"op": "stats"}"#).is_none(),
+        "reaped connection still serviced"
+    );
+
+    // fresh connections keep working; the final record counts the reap
+    let mut c2 = Client::connect(addr);
+    c2.ok(r#"{"op": "stats"}"#);
+    c2.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().expect("server run");
+    let f = rec.frontend.expect("frontend counters");
+    assert!(f.idle_reaped >= 1, "idle_reaped={}", f.idle_reaped);
+}
+
+/// Quota ceilings ride the wire: an over-quota session created through
+/// the socket is evicted by the governor, the record carries the
+/// eviction counter and the elastic worker-count fields, and a
+/// compliant session is untouched — the CI governor smoke in
+/// `.github/workflows/ci.yml` drives this same path via `bnkfac client`.
+#[test]
+fn socket_created_over_quota_session_is_evicted() {
+    let (addr, server) = start_server(ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    });
+    let mut c = Client::connect(addr);
+    c.ok(&format!(
+        r#"{{"op": "create", "name": "ok", "session": {}}}"#,
+        session_spec_json()
+    ));
+    // NB: one physical line — the protocol is line-delimited
+    c.ok(
+        r#"{"op": "create", "name": "flood", "session": {"steps": 4000, "t_updt": 2}, "quota": {"max_op_rate": 0.05}}"#,
+    );
+    wait_status(&mut c, "flood", "Evicted");
+    wait_status(&mut c, "ok", "Done");
+    let data = c.ok(r#"{"op": "stats"}"#);
+    assert_eq!(data.get("evictions").and_then(|v| v.as_usize()), Some(1));
+    assert!(data.get("workers_now").and_then(|v| v.as_usize()).unwrap() >= 1);
+    let flood = data
+        .get("sessions")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .find(|s| s.get("name").and_then(|v| v.as_str()) == Some("flood"))
+        .unwrap()
+        .clone();
+    assert_eq!(
+        flood.get("evict_reason").and_then(|v| v.as_str()),
+        Some("op_rate")
+    );
+    c.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
 }
 
 /// An oversized request line is answered with `oversized` and the
@@ -438,6 +542,7 @@ fn seng_model_session_resumes_bit_identically() {
         workers: 2,
         max_sessions: 2,
         staleness: 1,
+        ..ServerCfg::default()
     };
     let tcfg = TrainerCfg {
         algo: Algo::Seng,
@@ -449,7 +554,7 @@ fn seng_model_session_resumes_bit_identically() {
     // uninterrupted reference
     let mut reference = SessionManager::with_runtime(cfg.clone(), rt);
     let rid = reference
-        .create_model("ref", 1, tcfg.clone(), tiny_dataset(rt), 12)
+        .create_model("ref", 1, tcfg.clone(), tiny_dataset(rt), 12, None)
         .unwrap();
     reference.run_to_completion(1_000_000).unwrap();
     let want = model_state(&reference, rid);
@@ -461,7 +566,7 @@ fn seng_model_session_resumes_bit_identically() {
     // interrupted: checkpoint at step 5, restore in a fresh server
     let mut mgr = SessionManager::with_runtime(cfg.clone(), rt);
     let id = mgr
-        .create_model("x", 1, tcfg, tiny_dataset(rt), 12)
+        .create_model("x", 1, tcfg, tiny_dataset(rt), 12, None)
         .unwrap();
     while mgr.session(id).unwrap().steps_done() < 5 {
         let st = mgr.run_round().unwrap();

@@ -12,7 +12,8 @@ use bnkfac::optim::{Algo, OpRequest, UpdateOp};
 use bnkfac::precond::{PrecondCfg, PrecondService};
 use bnkfac::runtime::FactorPlan;
 use bnkfac::server::{
-    FairScheduler, HostSessionCfg, ServerCfg, SessionManager, SessionStatus, Workload,
+    FairScheduler, HostSessionCfg, QuotaSpec, ServerCfg, SessionManager, SessionStatus,
+    Workload,
 };
 use bnkfac::util::rng::Rng;
 use bnkfac::util::threadpool::WorkerPool;
@@ -50,17 +51,18 @@ fn interleaved_sessions_bitmatch_solo_runs() {
         workers: 2,
         max_sessions: 4,
         staleness: 1,
+        ..ServerCfg::default()
     };
     let mut mgr = SessionManager::new(cfg.clone());
-    let a = mgr.create_host("a", 2, scfg(11, Algo::BKfac, 20)).unwrap();
-    let b = mgr.create_host("b", 1, scfg(22, Algo::BKfacC, 20)).unwrap();
+    let a = mgr.create_host("a", 2, scfg(11, Algo::BKfac, 20), None).unwrap();
+    let b = mgr.create_host("b", 1, scfg(22, Algo::BKfacC, 20), None).unwrap();
     mgr.run_to_completion(100_000).unwrap();
     let fa = host_fingerprint(&mgr, a);
     let fb = host_fingerprint(&mgr, b);
 
     for (seed, algo, want) in [(11, Algo::BKfac, &fa), (22, Algo::BKfacC, &fb)] {
         let mut solo = SessionManager::new(cfg.clone());
-        let id = solo.create_host("solo", 1, scfg(seed, algo, 20)).unwrap();
+        let id = solo.create_host("solo", 1, scfg(seed, algo, 20), None).unwrap();
         solo.run_to_completion(100_000).unwrap();
         let f = host_fingerprint(&solo, id);
         assert_eq!(f.0, want.0, "state diverged for seed {seed}");
@@ -85,18 +87,19 @@ fn checkpoint_restore_resumes_bit_identically() {
         workers: 2,
         max_sessions: 2,
         staleness: 1,
+        ..ServerCfg::default()
     };
     // uninterrupted reference
     let mut reference = SessionManager::new(cfg.clone());
     let rid = reference
-        .create_host("ref", 1, scfg(7, Algo::BKfac, 40))
+        .create_host("ref", 1, scfg(7, Algo::BKfac, 40), None)
         .unwrap();
     reference.run_to_completion(100_000).unwrap();
     let want = host_fingerprint(&reference, rid);
 
     // interrupted run: checkpoint mid-flight, then continue
     let mut mgr = SessionManager::new(cfg.clone());
-    let id = mgr.create_host("x", 1, scfg(7, Algo::BKfac, 40)).unwrap();
+    let id = mgr.create_host("x", 1, scfg(7, Algo::BKfac, 40), None).unwrap();
     while mgr.session(id).unwrap().steps_done() < 21 {
         let st = mgr.run_round().unwrap();
         if st.stepped == 0 {
@@ -134,14 +137,15 @@ fn admission_control_rejects_past_capacity() {
         workers: 1,
         max_sessions: 2,
         staleness: 1,
+        ..ServerCfg::default()
     });
-    let a = mgr.create_host("a", 1, scfg(1, Algo::BKfac, 8)).unwrap();
-    let _b = mgr.create_host("b", 1, scfg(2, Algo::BKfac, 8)).unwrap();
-    let err = mgr.create_host("c", 1, scfg(3, Algo::BKfac, 8));
+    let a = mgr.create_host("a", 1, scfg(1, Algo::BKfac, 8), None).unwrap();
+    let _b = mgr.create_host("b", 1, scfg(2, Algo::BKfac, 8), None).unwrap();
+    let err = mgr.create_host("c", 1, scfg(3, Algo::BKfac, 8), None);
     assert!(err.is_err(), "third session admitted past capacity 2");
     // dropping one frees the slot
     mgr.drop_session(a).unwrap();
-    mgr.create_host("c", 1, scfg(3, Algo::BKfac, 8)).unwrap();
+    mgr.create_host("c", 1, scfg(3, Algo::BKfac, 8), None).unwrap();
     mgr.run_to_completion(100_000).unwrap();
 }
 
@@ -151,8 +155,9 @@ fn pause_resume_lifecycle() {
         workers: 1,
         max_sessions: 2,
         staleness: 1,
+        ..ServerCfg::default()
     });
-    let id = mgr.create_host("p", 1, scfg(5, Algo::BKfac, 10)).unwrap();
+    let id = mgr.create_host("p", 1, scfg(5, Algo::BKfac, 10), None).unwrap();
     mgr.run_round().unwrap();
     mgr.pause(id).unwrap();
     let before = mgr.session(id).unwrap().steps_done();
@@ -179,9 +184,10 @@ fn session_failure_is_contained() {
         workers: 1,
         max_sessions: 2,
         staleness: 1,
+        ..ServerCfg::default()
     });
-    let bad = mgr.create_host("bad", 1, scfg(41, Algo::BKfac, 12)).unwrap();
-    let good = mgr.create_host("good", 1, scfg(42, Algo::BKfac, 12)).unwrap();
+    let bad = mgr.create_host("bad", 1, scfg(41, Algo::BKfac, 12), None).unwrap();
+    let good = mgr.create_host("good", 1, scfg(42, Algo::BKfac, 12), None).unwrap();
     // poison the bad session's first cell: a Brand op with no predecessor
     // representation errors on the worker and fails the chain
     {
@@ -319,6 +325,7 @@ fn dropping_manager_mid_run_is_clean() {
         workers: 2,
         max_sessions: 4,
         staleness: 1,
+        ..ServerCfg::default()
     });
     let big = HostSessionCfg {
         dim: 180,
@@ -326,12 +333,234 @@ fn dropping_manager_mid_run_is_clean() {
         steps: 50,
         ..scfg(31, Algo::BKfac, 50)
     };
-    mgr.create_host("m1", 1, big.clone()).unwrap();
-    mgr.create_host("m2", 1, HostSessionCfg { seed: 32, ..big }).unwrap();
+    mgr.create_host("m1", 1, big.clone(), None).unwrap();
+    mgr.create_host("m2", 1, HostSessionCfg { seed: 32, ..big }, None)
+        .unwrap();
     for _ in 0..6 {
         mgr.run_round().unwrap();
     }
     drop(mgr); // must not hang or leak threads
+}
+
+// ------------------------------------------------ resource governor e2e
+
+/// The PR's acceptance scenario: an over-quota flood session walks the
+/// governor's throttle → pause → evict ladder while a compliant tenant
+/// on the same pool completes with its solo-run bit-identical result.
+#[test]
+fn over_quota_flood_is_evicted_compliant_session_bitmatches_solo() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    };
+    let mut mgr = SessionManager::new(cfg.clone());
+    // flood: ~1 decomposition op per stepped round against a 0.05 ceiling
+    let flood = mgr
+        .create_host(
+            "flood",
+            1,
+            scfg(50, Algo::BKfac, 4000),
+            Some(QuotaSpec {
+                max_op_rate: 0.05,
+                max_mem_mb: 0.0,
+            }),
+        )
+        .unwrap();
+    let good = mgr.create_host("good", 1, scfg(11, Algo::BKfac, 20), None).unwrap();
+    mgr.run_to_completion(1_000_000).unwrap();
+
+    let f = mgr.session(flood).unwrap();
+    assert_eq!(f.status, SessionStatus::Evicted, "flood not evicted");
+    assert!(f.steps_done() < 4000, "flood ran to completion anyway");
+    assert_eq!(mgr.session(good).unwrap().status, SessionStatus::Done);
+    let got = host_fingerprint(&mgr, good);
+
+    let rec = mgr.record();
+    assert_eq!(rec.evictions, 1);
+    let fr = rec.sessions.iter().find(|s| s.name == "flood").unwrap();
+    assert_eq!(fr.evict_reason, "op_rate");
+    assert!(fr.throttled_rounds > 0, "ladder skipped the throttle stage");
+    let gr = rec.sessions.iter().find(|s| s.name == "good").unwrap();
+    assert_eq!(gr.evict_reason, "");
+    assert_eq!(gr.throttled_rounds, 0, "compliant tenant was throttled");
+
+    // compliant tenant is bit-identical to its solo run
+    let mut solo = SessionManager::new(cfg);
+    let id = solo.create_host("solo", 1, scfg(11, Algo::BKfac, 20), None).unwrap();
+    solo.run_to_completion(1_000_000).unwrap();
+    let want = host_fingerprint(&solo, id);
+    assert_eq!(got.0, want.0, "flood eviction perturbed the compliant tenant");
+    assert_eq!(got.1, want.1, "rng diverged next to an evicted tenant");
+}
+
+/// Memory-ceiling breach evicts with the `memory` reason (pausing a
+/// tenant cannot shrink its resident state, so the ladder tops out).
+#[test]
+fn memory_quota_evicts_with_memory_reason() {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 1,
+        max_sessions: 1,
+        staleness: 1,
+        ..ServerCfg::default()
+    });
+    let id = mgr
+        .create_host(
+            "hog",
+            1,
+            scfg(77, Algo::BKfac, 4000),
+            Some(QuotaSpec {
+                max_op_rate: 0.0,
+                // far below the session's params+rep footprint
+                max_mem_mb: 1e-4,
+            }),
+        )
+        .unwrap();
+    mgr.run_to_completion(1_000_000).unwrap();
+    assert_eq!(mgr.session(id).unwrap().status, SessionStatus::Evicted);
+    let rec = mgr.record();
+    assert_eq!(rec.sessions[0].evict_reason, "memory");
+    // metrics keep the at-eviction footprint even though the buffers
+    // themselves were released
+    assert!(rec.sessions[0].resident_mb > 1e-4);
+    assert!(mgr.session(id).unwrap().resident_bytes() < 4096, "buffers not released");
+    // eviction freed the admission slot (capacity is 1)
+    mgr.create_host("next", 1, scfg(78, Algo::BKfac, 4), None)
+        .expect("evicted tenant still holds the admission slot");
+    mgr.run_to_completion(1_000_000).unwrap();
+}
+
+/// With no quotas set and elasticity disabled, the governor must be
+/// invisible: identical fairness, shares, and per-session state as the
+/// pre-governor configuration (here: the same run twice, one with the
+/// bounds spelled out explicitly).
+#[test]
+fn governor_is_inert_without_quotas() {
+    let run = |cfg: ServerCfg| {
+        let mut mgr = SessionManager::new(cfg);
+        let a = mgr.create_host("a", 2, scfg(31, Algo::BKfac, 16), None).unwrap();
+        let b = mgr.create_host("b", 1, scfg(32, Algo::BKfacC, 16), None).unwrap();
+        mgr.run_to_completion(1_000_000).unwrap();
+        let fa = host_fingerprint(&mgr, a);
+        let fb = host_fingerprint(&mgr, b);
+        let rec = mgr.record();
+        (fa, fb, rec)
+    };
+    let implicit = run(ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    });
+    let explicit = run(ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        workers_min: 2,
+        workers_max: 2,
+    });
+    assert_eq!(implicit.0, explicit.0, "session a diverged");
+    assert_eq!(implicit.1, explicit.1, "session b diverged");
+    assert_eq!(
+        implicit.2.fairness_jain, explicit.2.fairness_jain,
+        "scheduler fairness changed under an inert governor"
+    );
+    for rec in [&implicit.2, &explicit.2] {
+        assert_eq!(rec.evictions, 0);
+        assert_eq!(rec.grow_events + rec.shrink_events, 0);
+        assert_eq!(rec.workers_now, 2);
+        for s in &rec.sessions {
+            assert_eq!(s.throttled_rounds, 0);
+            assert_eq!(s.evict_reason, "");
+        }
+    }
+}
+
+/// Elastic mode: a bursty multi-tenant run completes with the pool
+/// always inside `[workers_min, workers_max]`, and the trajectories
+/// still bit-match their fixed-pool references (pool size is
+/// trajectory-neutral).
+#[test]
+fn elastic_pool_stays_in_bounds_and_preserves_trajectories() {
+    let elastic = ServerCfg {
+        workers: 1,
+        max_sessions: 4,
+        staleness: 1,
+        workers_min: 1,
+        workers_max: 3,
+    };
+    let mut mgr = SessionManager::new(elastic);
+    let a = mgr.create_host("a", 1, scfg(61, Algo::BKfac, 24), None).unwrap();
+    let b = mgr.create_host("b", 1, scfg(62, Algo::BKfacC, 24), None).unwrap();
+    mgr.run_to_completion(1_000_000).unwrap();
+    let rec = mgr.record();
+    assert!(
+        (rec.workers_min..=rec.workers_max).contains(&rec.workers_now),
+        "pool {} escaped [{},{}]",
+        rec.workers_now,
+        rec.workers_min,
+        rec.workers_max
+    );
+    for (id, seed, algo) in [(a, 61, Algo::BKfac), (b, 62, Algo::BKfacC)] {
+        let got = host_fingerprint(&mgr, id);
+        let mut solo = SessionManager::new(ServerCfg {
+            workers: 2,
+            max_sessions: 1,
+            staleness: 1,
+            ..ServerCfg::default()
+        });
+        let sid = solo.create_host("solo", 1, scfg(seed, algo, 24), None).unwrap();
+        solo.run_to_completion(1_000_000).unwrap();
+        assert_eq!(
+            got,
+            host_fingerprint(&solo, sid),
+            "elastic resize perturbed seed {seed}"
+        );
+    }
+}
+
+/// Quotas survive checkpoint/restore: a restored flood session is still
+/// governed (and eventually evicted) in the new server.
+#[test]
+fn quota_survives_checkpoint_restore() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 2,
+        staleness: 1,
+        ..ServerCfg::default()
+    };
+    let mut mgr = SessionManager::new(cfg.clone());
+    let id = mgr
+        .create_host(
+            "q",
+            1,
+            scfg(91, Algo::BKfac, 4000),
+            Some(QuotaSpec {
+                max_op_rate: 0.05,
+                max_mem_mb: 0.0,
+            }),
+        )
+        .unwrap();
+    // checkpoint before the ladder can evict (first window is round 8)
+    while mgr.session(id).unwrap().steps_done() < 3 {
+        mgr.run_round().unwrap();
+        assert!(mgr.round < 1_000_000, "stalled");
+    }
+    let ck = mgr.checkpoint(id).unwrap();
+    assert!(
+        ck.to_string_pretty().contains("\"max_op_rate\""),
+        "checkpoint lost the quota"
+    );
+    let mut resumed = SessionManager::new(cfg);
+    let rid = resumed.restore(&ck, "q2").unwrap();
+    resumed.run_to_completion(1_000_000).unwrap();
+    assert_eq!(
+        resumed.session(rid).unwrap().status,
+        SessionStatus::Evicted,
+        "restored session escaped its quota"
+    );
+    assert_eq!(resumed.record().sessions[0].evict_reason, "op_rate");
 }
 
 /// The scripted job driver end-to-end on the shipped smoke file
