@@ -29,6 +29,9 @@ Usage:
     python3 ci/check_bench.py            # gate (exit 1 on regression)
     python3 ci/check_bench.py --update   # rewrite baseline values from
                                          # the current BENCH files
+    python3 ci/check_bench.py --root D   # gate against BENCH files and
+                                         # ci/bench_baselines.json under
+                                         # another root (unit tests)
 """
 
 import json
@@ -36,7 +39,6 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINES = os.path.join(ROOT, "ci", "bench_baselines.json")
 DEFAULT_TOL = 0.25
 
 
@@ -49,15 +51,14 @@ def lookup(doc, dotted):
     return cur
 
 
-def main():
-    update = "--update" in sys.argv[1:]
-    with open(BASELINES) as f:
-        baselines = json.load(f)
-
+def check(baselines, root, update=False):
+    """Evaluate every baseline metric against the BENCH artifacts under
+    `root`. Returns (failures, checked); with update=True, mutates
+    `baselines` in place instead of gating."""
     failures = []
     checked = 0
     for bench_file, metrics in baselines.items():
-        path = os.path.join(ROOT, bench_file)
+        path = os.path.join(root, bench_file)
         if not os.path.exists(path):
             failures.append(f"{bench_file}: artifact missing (bench did not run?)")
             continue
@@ -93,12 +94,38 @@ def main():
                     f"{bench_file}:{dotted}: {value:.4g} regressed past {bound:.4g} "
                     f"(baseline {ref:.4g} ±{tol:.0%})"
                 )
+    return failures, checked
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    update = "--update" in argv
+    root = ROOT
+    if "--root" in argv:
+        i = argv.index("--root")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            print("usage: check_bench.py [--update] [--root DIR]", file=sys.stderr)
+            return 2
+        root = argv[i + 1]
+    baselines_path = os.path.join(root, "ci", "bench_baselines.json")
+    with open(baselines_path) as f:
+        baselines = json.load(f)
+
+    failures, checked = check(baselines, root, update=update)
 
     if update:
-        with open(BASELINES, "w") as f:
+        # artifacts must ALL exist before anything is written — a
+        # refresh from a partial run must not persist a baseline set
+        # silently mixing observed and stale values
+        if failures:
+            for msg in failures:
+                print(f"  - {msg}", file=sys.stderr)
+            print("update aborted; baselines left untouched", file=sys.stderr)
+            return 1
+        with open(baselines_path, "w") as f:
             json.dump(baselines, f, indent=2)
             f.write("\n")
-        print(f"updated {checked} baseline value(s) in {BASELINES}")
+        print(f"updated {checked} baseline value(s) in {baselines_path}")
         return 0
 
     if failures:

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench-regression gate (ci/check_bench.py).
+
+Run in the CI lint job (and locally) with:
+
+    python3 ci/test_check_bench.py
+
+Covers the gate's decision paths — pass, higher-is-better regression,
+lower-is-better regression, missing metric key, missing bench artifact —
+and the --update rewrite, all against a synthetic repo root in a temp
+directory so the real baselines are never touched.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import check_bench  # noqa: E402
+
+
+def write_json(path, doc):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f)
+
+
+class CheckBenchTest(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.root = self.tmp.name
+
+    def tearDown(self):
+        self.tmp.cleanup()
+
+    def baselines(self, value=2.0, direction="higher", tol=0.25):
+        return {
+            "BENCH_x.json": {
+                "group.metric": {"value": value, "dir": direction, "tol": tol}
+            }
+        }
+
+    def install(self, baselines, bench=None):
+        write_json(os.path.join(self.root, "ci", "bench_baselines.json"), baselines)
+        if bench is not None:
+            write_json(os.path.join(self.root, "BENCH_x.json"), bench)
+
+    def run_main(self, *extra):
+        return check_bench.main(["--root", self.root, *extra])
+
+    # ------------------------------------------------------ gate paths
+
+    def test_pass_within_tolerance(self):
+        self.install(self.baselines(), {"group": {"metric": 1.8}})  # >= 1.5
+        self.assertEqual(self.run_main(), 0)
+
+    def test_fail_higher_metric_below_bound(self):
+        self.install(self.baselines(), {"group": {"metric": 1.2}})  # < 1.5
+        self.assertEqual(self.run_main(), 1)
+
+    def test_lower_metric_pass_and_fail(self):
+        base = self.baselines(value=1.0, direction="lower", tol=0.5)
+        self.install(base, {"group": {"metric": 1.4}})  # <= 1.5
+        self.assertEqual(self.run_main(), 0)
+        self.install(base, {"group": {"metric": 1.6}})  # > 1.5
+        self.assertEqual(self.run_main(), 1)
+
+    def test_boundary_is_inclusive(self):
+        self.install(self.baselines(), {"group": {"metric": 1.5}})  # == bound
+        self.assertEqual(self.run_main(), 0)
+
+    def test_missing_metric_key_fails_loudly(self):
+        self.install(self.baselines(), {"group": {"other": 9.0}})
+        self.assertEqual(self.run_main(), 1)
+
+    def test_non_numeric_metric_fails(self):
+        self.install(self.baselines(), {"group": {"metric": "fast"}})
+        self.assertEqual(self.run_main(), 1)
+
+    def test_missing_bench_file_fails(self):
+        self.install(self.baselines())  # no BENCH_x.json at all
+        self.assertEqual(self.run_main(), 1)
+
+    def test_default_tolerance_applies(self):
+        base = self.baselines()
+        del base["BENCH_x.json"]["group.metric"]["tol"]  # falls back to 25%
+        self.install(base, {"group": {"metric": 1.49}})  # < 2.0 * 0.75
+        self.assertEqual(self.run_main(), 1)
+
+    # ---------------------------------------------------------- update
+
+    def test_update_rewrites_values_from_artifacts(self):
+        self.install(self.baselines(value=2.0), {"group": {"metric": 3.14159}})
+        self.assertEqual(self.run_main("--update"), 0)
+        with open(os.path.join(self.root, "ci", "bench_baselines.json")) as f:
+            rewritten = json.load(f)
+        spec = rewritten["BENCH_x.json"]["group.metric"]
+        self.assertAlmostEqual(spec["value"], 3.1416, places=4)
+        # direction and tolerance survive the rewrite
+        self.assertEqual(spec["dir"], "higher")
+        self.assertEqual(spec["tol"], 0.25)
+        # the updated baseline now gates against the observed value
+        self.assertEqual(self.run_main(), 0)
+
+    def test_update_with_missing_artifact_fails_without_writing(self):
+        self.install(self.baselines(value=2.0))  # nothing to update from
+        self.assertEqual(self.run_main("--update"), 1)
+        with open(os.path.join(self.root, "ci", "bench_baselines.json")) as f:
+            untouched = json.load(f)
+        # a partial/failed refresh must leave the committed set intact
+        self.assertEqual(untouched["BENCH_x.json"]["group.metric"]["value"], 2.0)
+
+    # ------------------------------------------------------------ usage
+
+    def test_root_without_value_is_a_usage_error(self):
+        self.assertEqual(check_bench.main(["--root"]), 2)
+        self.assertEqual(check_bench.main(["--root", "--update"]), 2)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -39,6 +39,18 @@ fn main() -> Result<()> {
     }
 }
 
+/// Read a shared auth token from a file (DESIGN.md §12.6): surrounding
+/// whitespace/newline stripped, empty tokens refused. One helper for
+/// both `serve` and `client` so their token parsing cannot drift.
+fn read_token_file(path: &str) -> Result<String> {
+    let tok = std::fs::read_to_string(path)
+        .with_context(|| format!("reading auth token file {path}"))?
+        .trim()
+        .to_string();
+    ensure!(!tok.is_empty(), "auth token file {path} is empty");
+    Ok(tok)
+}
+
 fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
     println!("--- session server ---\n{}", rec.summary());
     if let Some(path) = out {
@@ -62,6 +74,12 @@ fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
 ///   confines wire-supplied checkpoint paths, `--idle-timeout <secs>`
 ///   reaps idle connections, and `--workers-min/--workers-max` bound
 ///   the governor's elastic worker-pool scaling (DESIGN.md §13).
+///   Connection security (DESIGN.md §12.6): `--auth-token-file <path>`
+///   makes a challenge–response handshake over the file's shared token
+///   the mandatory first exchange on every connection;
+///   `--conn-rate <req/s>` + `--conn-burst <n>` enforce a
+///   per-connection token bucket (repeat offenders are disconnected);
+///   `--conn-limit <n>` caps concurrent connections.
 ///
 /// Host sessions run entirely on the host substrate — no artifacts or
 /// PJRT needed.
@@ -106,10 +124,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let ckpt_dir = args.get_or("ckpt-dir", "results").to_string();
             // idle-connection reaping (seconds; 0 disables)
             let idle_s = args.get_f64("idle-timeout", 0.0);
+            // connection security (DESIGN.md §12.6): shared-token
+            // handshake + per-connection rate limits; all off by default
+            // so localhost workflows run unchanged
+            let auth_token = args.get("auth-token-file").map(read_token_file).transpose()?;
+            let conn_rate = args.get_f64("conn-rate", 0.0);
+            let conn_burst = args.get_f64("conn-burst", 16.0);
+            let conn_limit = args.get_usize("conn-limit", 0);
             args.finish().map_err(|e| anyhow!(e))?;
             let idle = (idle_s > 0.0)
                 .then(|| std::time::Duration::from_secs_f64(idle_s));
-            let mut fe = frontend::bind_cfg(&addr, idle)?;
+            let mut fe = frontend::bind_with(
+                &addr,
+                bnkfac::server::FrontendCfg {
+                    idle_timeout: idle,
+                    auth_token,
+                    conn_rate,
+                    conn_burst,
+                    conn_limit,
+                },
+            )?;
             fe.set_ckpt_root(Some(ckpt_dir.into()));
             let local = fe.local_addr();
             println!("listening on {local}");
@@ -130,6 +164,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// reply line, and exits non-zero on an error reply.
 ///
 /// `bnkfac client --addr 127.0.0.1:4815 --op create --name a --steps 24`
+///
+/// Against an auth-enabled server (DESIGN.md §12.6), pass
+/// `--auth-token-file <path>`: the client answers the server's
+/// challenge with the keyed MAC before sending the request.
+/// `--repeat <n>` sends the same request n times on ONE connection
+/// (handshake once) and prints a summary instead of failing on error
+/// replies — the smoke tests use it to exercise the rate limiter.
 fn cmd_client(args: &Args) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
 
@@ -218,23 +259,111 @@ fn cmd_client(args: &Args) -> Result<()> {
             j.to_string_compact()
         }
     };
+    let token = args.get("auth-token-file").map(read_token_file).transpose()?;
+    let repeat = args.get_usize("repeat", 1).max(1);
     args.finish().map_err(|e| anyhow!(e))?;
 
     let stream = std::net::TcpStream::connect(&addr)
         .with_context(|| format!("connecting to {addr}"))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    out.write_all(line.as_bytes())?;
-    out.write_all(b"\n")?;
-    out.flush()?;
-    let mut reply = String::new();
-    ensure!(
-        reader.read_line(&mut reply)? > 0,
-        "server closed the connection without replying"
-    );
-    let reply = reply.trim_end();
-    println!("{reply}");
-    let r = proto::parse_reply(reply)?;
+
+    let read_reply = |reader: &mut BufReader<std::net::TcpStream>| -> Result<Option<String>> {
+        let mut reply = String::new();
+        if reader.read_line(&mut reply)? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(reply.trim_end().to_string()))
+    };
+
+    if let Some(token) = &token {
+        // handshake first: the server's first line is the challenge. A
+        // no-auth server sends nothing until a request arrives, so bound
+        // the wait instead of hanging.
+        reader
+            .get_ref()
+            .set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+        let ch = read_reply(&mut reader)
+            .context("waiting for the auth challenge (does this server require auth?)")?
+            .ok_or_else(|| anyhow!("server closed before issuing an auth challenge"))?;
+        let r = proto::parse_reply(&ch)?;
+        let nonce = proto::challenge_nonce(&r)
+            .ok_or_else(|| anyhow!("expected an auth challenge, got: {ch}"))?;
+        out.write_all(proto::auth_request_line(&proto::auth_mac(token, nonce)).as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
+        let ack = read_reply(&mut reader)?
+            .ok_or_else(|| anyhow!("server closed during the auth handshake"))?;
+        let r = proto::parse_reply(&ack)?;
+        ensure!(r.ok, "authentication failed [{}]: {}", r.code, r.error);
+        reader.get_ref().set_read_timeout(None)?;
+    }
+
+    let mut sent = 0u64;
+    let mut ok_count = 0u64;
+    let mut err_by_code: std::collections::BTreeMap<String, u64> = Default::default();
+    let mut disconnected = false;
+    let mut last: Option<proto::Reply> = None;
+    for _ in 0..repeat {
+        if out.write_all(line.as_bytes()).is_err()
+            || out.write_all(b"\n").is_err()
+            || out.flush().is_err()
+        {
+            disconnected = true;
+            break;
+        }
+        sent += 1;
+        let reply = match read_reply(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => {
+                disconnected = true;
+                break;
+            }
+            // a reset mid-flood is a disconnect datum, not a failure
+            Err(_) if repeat > 1 => {
+                disconnected = true;
+                break;
+            }
+            Err(e) => return Err(e),
+        };
+        if repeat == 1 {
+            println!("{reply}");
+        }
+        let r = proto::parse_reply(&reply)?;
+        if r.ok {
+            // an unexpected challenge here means the server wanted auth
+            // and never saw it — surface the real refusal, not "ok"
+            if proto::challenge_nonce(&r).is_some() {
+                let refusal = read_reply(&mut reader)?
+                    .ok_or_else(|| anyhow!("server requires auth (--auth-token-file)"))?;
+                println!("{refusal}");
+                let e = proto::parse_reply(&refusal)?;
+                bail!(
+                    "server requires auth (--auth-token-file) [{}]: {}",
+                    e.code,
+                    e.error
+                );
+            }
+            ok_count += 1;
+        } else {
+            *err_by_code.entry(r.code.clone()).or_insert(0) += 1;
+        }
+        last = Some(r);
+    }
+    if repeat > 1 {
+        let codes: Vec<String> = err_by_code
+            .iter()
+            .map(|(c, n)| format!("{c}={n}"))
+            .collect();
+        println!(
+            "repeat: sent={sent} ok={ok_count} errors=[{}] disconnected={disconnected}",
+            codes.join(" ")
+        );
+        // flood/testing mode: error replies and disconnects are data,
+        // not failures
+        return Ok(());
+    }
+    let r = last.ok_or_else(|| anyhow!("server closed the connection without replying"))?;
     ensure!(r.ok, "server error [{}]: {}", r.code, r.error);
     Ok(())
 }

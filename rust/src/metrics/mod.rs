@@ -160,8 +160,10 @@ impl SessionRecord {
     }
 }
 
-/// Network-frontend counters (DESIGN.md §12.5): connection and request
-/// volume, requests by kind, and rejects (protocol-level + apply-level).
+/// Network-frontend counters (DESIGN.md §12.5/§12.6): connection and
+/// request volume, requests by kind, rejects (protocol-level +
+/// apply-level), connection-security counters (handshake failures,
+/// rate-limit refusals), and per-connection drop attribution.
 /// Attached to [`ServerRecord`] when `serve --listen` was used.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FrontendRecord {
@@ -170,10 +172,28 @@ pub struct FrontendRecord {
     pub rejected: u64,
     /// connections dropped by idle-timeout reaping (`--idle-timeout`)
     pub idle_reaped: u64,
+    /// handshake failures on auth-enabled servers: non-`auth` first
+    /// lines (`auth_required`) plus wrong MACs (`auth_failed`)
+    pub auth_failures: u64,
+    /// requests refused by a connection's token bucket (`--conn-rate`)
+    pub rate_limited: u64,
+    /// connections the server force-closed (idle reap, oversized line,
+    /// auth failure, rate-limit strike-out, connection cap)
+    pub conn_dropped: u64,
     /// decoded requests per command kind, sorted by kind (includes
     /// requests later rejected at apply time; `requests` additionally
     /// counts undecodable lines, so `rejected <= requests` always)
     pub by_kind: Vec<(String, u64)>,
+    /// force-closes attributed to their monotonically-assigned
+    /// connection ids: `(conn_id, reason)` with reasons from the closed
+    /// set `idle_timeout` / `oversized` / `auth_required` /
+    /// `auth_failed` / `rate_limited` / `conn_limit` — so smoke
+    /// assertions can name the offending connection instead of racing
+    /// on counter ordering. Bounded at the first
+    /// `frontend::MAX_DROP_EVENTS` events (an attacker must not grow
+    /// server memory or reply size without limit); `conn_dropped`
+    /// keeps the true total
+    pub drop_events: Vec<(u64, String)>,
 }
 
 impl FrontendRecord {
@@ -183,12 +203,29 @@ impl FrontendRecord {
             ("requests", Json::Num(self.requests as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
             ("idle_reaped", Json::Num(self.idle_reaped as f64)),
+            ("auth_failures", Json::Num(self.auth_failures as f64)),
+            ("rate_limited", Json::Num(self.rate_limited as f64)),
+            ("conn_dropped", Json::Num(self.conn_dropped as f64)),
             (
                 "by_kind",
                 Json::Obj(
                     self.by_kind
                         .iter()
                         .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "drop_events",
+                Json::Arr(
+                    self.drop_events
+                        .iter()
+                        .map(|(conn, reason)| {
+                            Json::obj(vec![
+                                ("conn", Json::Num(*conn as f64)),
+                                ("reason", Json::str(reason)),
+                            ])
+                        })
                         .collect(),
                 ),
             ),
@@ -316,13 +353,19 @@ impl ServerRecord {
                 .collect();
             out.push_str(&format!(
                 "  frontend: {} connections, {} requests ({}), {} rejected, \
-                 {} idle-reaped\n",
+                 {} idle-reaped, {} auth-failed, {} rate-limited, {} dropped\n",
                 f.connections,
                 f.requests,
                 kinds.join(" "),
                 f.rejected,
-                f.idle_reaped
+                f.idle_reaped,
+                f.auth_failures,
+                f.rate_limited,
+                f.conn_dropped
             ));
+            for (conn, reason) in &f.drop_events {
+                out.push_str(&format!("    drop: conn {conn} ({reason})\n"));
+            }
         }
         out
     }
@@ -519,25 +562,41 @@ mod tests {
     fn frontend_record_serializes() {
         let rec = ServerRecord {
             frontend: Some(FrontendRecord {
-                connections: 2,
-                requests: 5,
-                rejected: 1,
+                connections: 3,
+                requests: 9,
+                rejected: 4,
                 idle_reaped: 1,
+                auth_failures: 1,
+                rate_limited: 2,
+                conn_dropped: 2,
                 by_kind: vec![("create".into(), 1), ("stats".into(), 4)],
+                drop_events: vec![(2, "auth_failed".into()), (3, "rate_limited".into())],
             }),
             ..Default::default()
         };
         let j = rec.to_json();
         let f = j.get("frontend").unwrap();
-        assert_eq!(f.get("connections").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(f.get("connections").and_then(|v| v.as_usize()), Some(3));
         assert_eq!(f.get("idle_reaped").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(f.get("auth_failures").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(f.get("rate_limited").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(f.get("conn_dropped").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(
             f.get("by_kind").and_then(|b| b.get("stats")).and_then(|v| v.as_usize()),
             Some(4)
         );
+        let drops = f.get("drop_events").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(drops.len(), 2);
+        assert_eq!(drops[1].get("conn").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(
+            drops[1].get("reason").and_then(|v| v.as_str()),
+            Some("rate_limited")
+        );
         let s = rec.summary();
-        assert!(s.contains("2 connections"), "{s}");
+        assert!(s.contains("3 connections"), "{s}");
         assert!(s.contains("create=1"), "{s}");
+        assert!(s.contains("2 rate-limited"), "{s}");
+        assert!(s.contains("drop: conn 3 (rate_limited)"), "{s}");
     }
 
     #[test]

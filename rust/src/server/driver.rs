@@ -297,6 +297,13 @@ struct Job {
 fn parse_jobs(root: &Json) -> Result<(ServerCfg, Option<String>, Vec<Job>)> {
     let null = Json::Null;
     let sj = root.get("server").unwrap_or(&null);
+    // loud-typo policy (same as the wire spec parsers): a misspelled
+    // `workers_mni` silently running defaults would corrupt experiments
+    super::proto::reject_unknown(
+        sj,
+        &["workers", "max_sessions", "staleness", "workers_min", "workers_max"],
+        "job-file server spec",
+    )?;
     let d = ServerCfg::default();
     let cfg = ServerCfg {
         workers: sj

@@ -8,13 +8,17 @@
 //! Threading model (and why determinism survives the network):
 //!
 //! * an **accept thread** polls a nonblocking listener and spawns one
-//!   reader thread per connection;
-//! * each **connection thread** reads framed requests
-//!   ([`proto::read_frame`]), validates them ([`proto::parse_request`]),
-//!   and forwards decoded [`Command`]s over an mpsc channel, each paired
-//!   with a oneshot reply channel; protocol-level rejects (malformed,
-//!   oversized, bad request) are answered directly without ever touching
-//!   the serving thread;
+//!   reader thread per connection (refusing connections over
+//!   `FrontendCfg::conn_limit` with `at_capacity`);
+//! * each **connection thread** first runs the mandatory auth handshake
+//!   when the server holds a shared token (challenge → keyed-MAC
+//!   response, DESIGN.md §12.6), then reads framed requests
+//!   ([`proto::read_frame`]), charges the per-connection token bucket,
+//!   validates ([`proto::parse_request`]), and forwards decoded
+//!   [`Command`]s over an mpsc channel, each paired with a oneshot
+//!   reply channel; protocol-level rejects (malformed, oversized, bad
+//!   request, unauthenticated, rate-limited) are answered directly
+//!   without ever touching the serving thread;
 //! * the **serving thread** ([`Frontend::run`]) owns the
 //!   [`ServerCore`]: every loop iteration it drains all commands that
 //!   have arrived — applying them in arrival order, exactly like the job
@@ -22,6 +26,17 @@
 //!   round. Commands never interleave with a round, so the fair-share
 //!   scheduler, the staleness bounds, and the bit-identical
 //!   checkpoint/resume contract are untouched by the transport.
+//!
+//! Connection security (DESIGN.md §12.6) is enforced entirely on the
+//! connection threads, *before* command parsing: an unauthenticated
+//! peer is answered `auth_required`/`auth_failed` and closed without a
+//! single [`Command`] being decoded, and a flooding peer walks the same
+//! strike ladder the resource governor uses for quota breaches
+//! ([`StrikeLadder`]) — `rate_limited` replies first, disconnection
+//! after [`CONN_RATE_STRIKES`] net strikes. Every server-initiated
+//! close is attributed to its monotonically-assigned connection id in
+//! [`FrontendCounters`] drop events, so smoke assertions do not race on
+//! reply ordering.
 //!
 //! Shutdown: a `shutdown` request latches the core; the serving loop
 //! breaks after replying, stops the accept thread, drains every
@@ -35,17 +50,42 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::{FrontendRecord, ServerRecord};
 use crate::runtime::Runtime;
+use crate::util::rng::SplitMix64;
 use crate::util::ser::Json;
 
 use super::driver::ServerCore;
+use super::governor::{StrikeLadder, CONN_RATE_STRIKES};
 use super::manager::ServerCfg;
 use super::proto::{self, Command, Frame};
+
+/// Connection-security and hygiene knobs of the socket frontend
+/// (DESIGN.md §12.6). `Default` is the fully-open localhost
+/// configuration every pre-existing workflow runs under unchanged: no
+/// auth, no rate limit, no idle reaping, unlimited connections.
+#[derive(Clone, Debug, Default)]
+pub struct FrontendCfg {
+    /// reap connections that send no complete request for this long
+    /// (`None` disables reaping)
+    pub idle_timeout: Option<Duration>,
+    /// shared secret; `Some` makes the challenge–response handshake the
+    /// mandatory first exchange on every connection
+    pub auth_token: Option<String>,
+    /// per-connection sustained request rate in requests/second;
+    /// `0` disables rate limiting
+    pub conn_rate: f64,
+    /// token-bucket burst capacity in requests (floored at 1 when rate
+    /// limiting is enabled)
+    pub conn_burst: f64,
+    /// max concurrent connections (`0` = unlimited); excess connections
+    /// are refused with `at_capacity` before a reader thread is spawned
+    pub conn_limit: usize,
+}
 
 /// Request/connection counters, shared between the connection threads
 /// (protocol rejects) and the serving thread (kind counts, apply
@@ -58,8 +98,28 @@ pub struct FrontendCounters {
     pub rejected: AtomicU64,
     /// connections dropped for sitting idle past `--idle-timeout`
     pub idle_reaped: AtomicU64,
+    /// handshake failures: a non-`auth` first line (`auth_required`) or
+    /// a wrong MAC (`auth_failed`)
+    pub auth_failures: AtomicU64,
+    /// requests refused by a connection's token bucket
+    pub rate_limited: AtomicU64,
+    /// connections the SERVER force-closed (idle reap, oversized line,
+    /// auth failure, rate-limit strike-out, connection cap) — client
+    /// hangups and clean shutdowns are not counted
+    pub conn_dropped: AtomicU64,
     by_kind: Mutex<BTreeMap<String, u64>>,
+    /// per-connection attribution of force-closes: `(conn_id, reason)`,
+    /// reasons from the closed set in DESIGN.md §12.6. Bounded at
+    /// [`MAX_DROP_EVENTS`] — an attacker hammering an auth-enabled
+    /// server must not be able to grow server memory (or `stats` reply
+    /// size) without limit; `conn_dropped` keeps the true total
+    drops: Mutex<Vec<(u64, &'static str)>>,
 }
+
+/// Retained drop-event cap: the FIRST this-many force-closes keep their
+/// per-connection attribution (deterministic for smoke assertions); the
+/// counters keep counting past it.
+pub const MAX_DROP_EVENTS: usize = 256;
 
 impl FrontendCounters {
     fn note(&self, kind: &str) {
@@ -73,11 +133,23 @@ impl FrontendCounters {
     }
 
     /// A request line that never decoded into a command (malformed,
-    /// oversized, bad UTF-8): counts as both a request and a reject, so
-    /// `rejected <= requests` always holds.
+    /// oversized, bad UTF-8, unauthenticated, rate-limited): counts as
+    /// both a request and a reject, so `rejected <= requests` always
+    /// holds.
     fn note_undecodable(&self) {
         self.requests.fetch_add(1, Relaxed);
         self.rejected.fetch_add(1, Relaxed);
+    }
+
+    /// Record a server-initiated close with its connection attribution.
+    fn note_drop(&self, conn_id: u64, reason: &'static str) {
+        self.conn_dropped.fetch_add(1, Relaxed);
+        let mut drops = self.drops.lock().unwrap();
+        if drops.len() < MAX_DROP_EVENTS {
+            drops.push((conn_id, reason));
+        }
+        drop(drops);
+        log::info!("frontend: conn {conn_id} dropped ({reason})");
     }
 
     pub fn snapshot(&self) -> FrontendRecord {
@@ -86,6 +158,9 @@ impl FrontendCounters {
             requests: self.requests.load(Relaxed),
             rejected: self.rejected.load(Relaxed),
             idle_reaped: self.idle_reaped.load(Relaxed),
+            auth_failures: self.auth_failures.load(Relaxed),
+            rate_limited: self.rate_limited.load(Relaxed),
+            conn_dropped: self.conn_dropped.load(Relaxed),
             by_kind: self
                 .by_kind
                 .lock()
@@ -93,7 +168,74 @@ impl FrontendCounters {
                 .iter()
                 .map(|(k, v)| (k.clone(), *v))
                 .collect(),
+            drop_events: self
+                .drops
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(c, r)| (*c, r.to_string()))
+                .collect(),
         }
+    }
+}
+
+/// Per-connection token bucket: `rate` tokens/second refill up to
+/// `burst`, each accepted frame costs one. Wall-clock based — this is
+/// transport hygiene on the connection threads, not part of the
+/// deterministic serving loop.
+struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `None` when rate limiting is disabled (`rate <= 0`).
+    fn new(rate: f64, burst: f64) -> Option<TokenBucket> {
+        if rate <= 0.0 || !rate.is_finite() {
+            return None;
+        }
+        let burst = if burst.is_finite() { burst.max(1.0) } else { 1.0 };
+        Some(TokenBucket {
+            rate,
+            burst,
+            tokens: burst,
+            last: Instant::now(),
+        })
+    }
+
+    fn try_take(&mut self) -> bool {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + self.rate * dt).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// State shared by the accept thread and every connection thread.
+struct ConnShared {
+    cfg: FrontendCfg,
+    counters: Arc<FrontendCounters>,
+    /// process-entropy base all per-connection nonces derive from
+    nonce_base: u64,
+    /// live connection-thread count (the `conn_limit` admission gauge)
+    active: AtomicU64,
+}
+
+/// Decrements the live-connection gauge when a connection thread exits,
+/// whatever the exit path.
+struct ActiveGuard(Arc<ConnShared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Relaxed);
     }
 }
 
@@ -116,17 +258,27 @@ pub struct Frontend {
     ckpt_root: Option<std::path::PathBuf>,
 }
 
-/// Bind the listener and start accepting connections. Requests queue on
-/// the command channel until `run` starts draining them.
+/// Bind the listener with the fully-open default [`FrontendCfg`].
 pub fn bind(addr: &str) -> Result<Frontend> {
-    bind_cfg(addr, None)
+    bind_with(addr, FrontendCfg::default())
 }
 
-/// [`bind`] with idle-connection reaping (ROADMAP frontend hardening):
-/// a connection that sends no complete request for `idle_timeout` is
-/// dropped and counted in `FrontendCounters::idle_reaped`, so abandoned
-/// peers cannot pin reader threads forever. `None` disables reaping.
+/// [`bind`] with idle-connection reaping only (kept for the pre-§12.6
+/// call sites); see [`bind_with`] for the full configuration.
 pub fn bind_cfg(addr: &str, idle_timeout: Option<Duration>) -> Result<Frontend> {
+    bind_with(
+        addr,
+        FrontendCfg {
+            idle_timeout,
+            ..FrontendCfg::default()
+        },
+    )
+}
+
+/// Bind the listener and start accepting connections under the given
+/// connection-security policy. Requests queue on the command channel
+/// until `run` starts draining them.
+pub fn bind_with(addr: &str, fcfg: FrontendCfg) -> Result<Frontend> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding frontend on {addr}"))?;
     listener
@@ -136,6 +288,21 @@ pub fn bind_cfg(addr: &str, idle_timeout: Option<Duration>) -> Result<Frontend> 
     let (tx, rx) = channel::<Msg>();
     let stop = Arc::new(AtomicBool::new(false));
     let counters = Arc::new(FrontendCounters::default());
+    // Nonce base: process entropy, NOT determinism-relevant — nonces
+    // only need to differ across connections and runs so a captured
+    // handshake response cannot be replayed.
+    let nonce_base = {
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        SplitMix64::new(t.as_nanos() as u64 ^ ((std::process::id() as u64) << 32)).next_u64()
+    };
+    let shared = Arc::new(ConnShared {
+        cfg: fcfg,
+        counters: counters.clone(),
+        nonce_base,
+        active: AtomicU64::new(0),
+    });
     let accept = {
         let stop = stop.clone();
         let counters = counters.clone();
@@ -145,15 +312,37 @@ pub fn bind_cfg(addr: &str, idle_timeout: Option<Duration>) -> Result<Frontend> 
                 while !stop.load(Relaxed) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            counters.connections.fetch_add(1, Relaxed);
+                            let conn_id = counters.connections.fetch_add(1, Relaxed) + 1;
                             let _ = stream.set_nonblocking(false);
                             // idle reaping rides the socket read timeout
-                            let _ = stream.set_read_timeout(idle_timeout);
+                            let _ = stream.set_read_timeout(shared.cfg.idle_timeout);
+                            let limit = shared.cfg.conn_limit;
+                            if limit > 0 && shared.active.load(Relaxed) >= limit as u64 {
+                                let mut out = stream;
+                                let _ = write_line(
+                                    &mut out,
+                                    &proto::err_line(
+                                        proto::E_AT_CAPACITY,
+                                        &format!("server at its {limit}-connection limit"),
+                                    ),
+                                );
+                                // no note_undecodable: the peer never
+                                // sent a request, only connected
+                                counters.note_drop(conn_id, "conn_limit");
+                                continue;
+                            }
+                            shared.active.fetch_add(1, Relaxed);
+                            let guard = ActiveGuard(shared.clone());
                             let tx = tx.clone();
-                            let counters = counters.clone();
+                            let sh = shared.clone();
+                            // a failed spawn drops the closure — and with
+                            // it the guard, which re-decrements `active`
                             let _ = std::thread::Builder::new()
                                 .name("bnkfac-conn".into())
-                                .spawn(move || handle_conn(stream, tx, counters));
+                                .spawn(move || {
+                                    let _guard = guard;
+                                    handle_conn(stream, conn_id, tx, sh)
+                                });
                         }
                         // WouldBlock: nothing to accept; anything else is
                         // transient (per-connection) — poll again either way
@@ -274,47 +463,148 @@ fn write_line(out: &mut TcpStream, line: &str) -> std::io::Result<()> {
     out.flush()
 }
 
-/// Per-connection reader loop: frame → validate → forward → reply.
-/// Framing-level failures that leave the stream resynchronizable
-/// (malformed JSON, bad request, bad UTF-8 — the terminator was still
-/// found) answer an error and keep the connection; an oversized line
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Terminal frame-failure policy for an idled connection, shared by the
+/// handshake and the main loop so pre- and post-auth reaping cannot
+/// drift: count the reap, send the courtesy reply, attribute the drop.
+fn reap_idle(counters: &FrontendCounters, conn_id: u64, out: &mut TcpStream) {
+    counters.idle_reaped.fetch_add(1, Relaxed);
+    let _ = write_line(
+        out,
+        &proto::err_line(proto::E_IDLE_TIMEOUT, "connection idle too long"),
+    );
+    counters.note_drop(conn_id, "idle_timeout");
+}
+
+/// Terminal frame-failure policy for an oversized frame (the stream can
+/// no longer be resynchronized), shared by the handshake and the main
+/// loop.
+fn reject_oversized(counters: &FrontendCounters, conn_id: u64, out: &mut TcpStream) {
+    counters.note_undecodable();
+    let _ = write_line(
+        out,
+        &proto::err_line(
+            proto::E_OVERSIZED,
+            &format!("request over {} bytes", proto::MAX_LINE),
+        ),
+    );
+    counters.note_drop(conn_id, "oversized");
+}
+
+/// Run the mandatory handshake on an auth-enabled connection: send the
+/// challenge, demand a correct keyed MAC as the FIRST line. Returns
+/// `true` when the peer authenticated; on any other outcome the
+/// connection has been answered (closed-set code) and must be dropped —
+/// no [`Command`] was or will be parsed from it.
+fn handshake(
+    reader: &mut BufReader<TcpStream>,
+    out: &mut TcpStream,
+    token: &str,
+    conn_id: u64,
+    sh: &ConnShared,
+) -> bool {
+    let counters = &sh.counters;
+    let nonce =
+        SplitMix64::new(sh.nonce_base ^ conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64();
+    if write_line(out, &proto::challenge_line(nonce)).is_err() {
+        return false;
+    }
+    let first = match proto::read_frame(reader) {
+        Err(e) if is_timeout(&e) => {
+            reap_idle(counters, conn_id, out);
+            return false;
+        }
+        // connect-and-leave is not an auth failure, just a goodbye
+        Err(_) | Ok(Frame::Eof) => return false,
+        Ok(Frame::Oversized) => {
+            reject_oversized(counters, conn_id, out);
+            return false;
+        }
+        Ok(Frame::BadUtf8) => None,
+        Ok(Frame::Line(l)) => Some(l),
+    };
+    match first.as_deref().and_then(proto::auth_request_mac) {
+        None => {
+            counters.note_undecodable();
+            counters.auth_failures.fetch_add(1, Relaxed);
+            let _ = write_line(
+                out,
+                &proto::err_line(
+                    proto::E_AUTH_REQUIRED,
+                    "this server requires the auth handshake as the first request",
+                ),
+            );
+            counters.note_drop(conn_id, "auth_required");
+            false
+        }
+        Some(mac) => {
+            // constant-time comparison: timing leaks nothing about how
+            // much of a guessed MAC matched
+            if proto::ct_eq(&mac, &proto::auth_mac(token, nonce)) {
+                write_line(out, &proto::auth_ok_line()).is_ok()
+            } else {
+                counters.note_undecodable();
+                counters.auth_failures.fetch_add(1, Relaxed);
+                let _ = write_line(
+                    out,
+                    &proto::err_line(
+                        proto::E_AUTH_FAILED,
+                        "auth response does not match this connection's challenge",
+                    ),
+                );
+                counters.note_drop(conn_id, "auth_failed");
+                false
+            }
+        }
+    }
+}
+
+/// Per-connection reader loop: (handshake) → frame → rate-limit →
+/// validate → forward → reply. Framing-level failures that leave the
+/// stream resynchronizable (malformed JSON, bad request, bad UTF-8 —
+/// the terminator was still found) answer an error and keep the
+/// connection; an oversized line closes it; rate-limit strike-out
 /// closes it.
-fn handle_conn(stream: TcpStream, tx: Sender<Msg>, counters: Arc<FrontendCounters>) {
+fn handle_conn(stream: TcpStream, conn_id: u64, tx: Sender<Msg>, sh: Arc<ConnShared>) {
+    let counters = sh.counters.clone();
     let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
     };
     let mut out = stream;
+    if let Some(token) = sh.cfg.auth_token.clone() {
+        if !handshake(&mut reader, &mut out, &token, conn_id, &sh) {
+            return;
+        }
+    }
+    let mut bucket = TokenBucket::new(sh.cfg.conn_rate, sh.cfg.conn_burst);
+    let mut ladder = StrikeLadder::new(CONN_RATE_STRIKES);
     loop {
         let line = match proto::read_frame(&mut reader) {
             // read timeout = the peer idled past --idle-timeout: reap.
             // (A partial line lost to the timeout is unrecoverable
             // framing state anyway, so the connection must close.)
-            Err(e) if matches!(
-                e.kind(),
-                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-            ) =>
-            {
-                counters.idle_reaped.fetch_add(1, Relaxed);
-                let _ = write_line(
-                    &mut out,
-                    &proto::err_line(proto::E_IDLE_TIMEOUT, "connection idle too long"),
-                );
+            Err(e) if is_timeout(&e) => {
+                reap_idle(&counters, conn_id, &mut out);
                 break;
             }
             Err(_) | Ok(Frame::Eof) => break,
             Ok(Frame::Oversized) => {
-                counters.note_undecodable();
-                let _ = write_line(
-                    &mut out,
-                    &proto::err_line(
-                        proto::E_OVERSIZED,
-                        &format!("request over {} bytes", proto::MAX_LINE),
-                    ),
-                );
+                reject_oversized(&counters, conn_id, &mut out);
                 break;
             }
             Ok(Frame::BadUtf8) => {
+                match charge(&mut bucket, &mut ladder, &counters, conn_id, &mut out) {
+                    Charge::Proceed => {}
+                    Charge::Refused => continue,
+                    Charge::Disconnect => break,
+                }
                 counters.note_undecodable();
                 if write_line(
                     &mut out,
@@ -328,6 +618,13 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, counters: Arc<FrontendCounter
             }
             Ok(Frame::Line(l)) => l,
         };
+        // the bucket is charged BEFORE the blank-frame skip: a newline
+        // flood must walk the strike ladder like any other flood
+        match charge(&mut bucket, &mut ladder, &counters, conn_id, &mut out) {
+            Charge::Proceed => {}
+            Charge::Refused => continue,
+            Charge::Disconnect => break,
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -368,4 +665,54 @@ fn handle_conn(stream: TcpStream, tx: Sender<Msg>, counters: Arc<FrontendCounter
             break;
         }
     }
+}
+
+/// Outcome of charging one frame against the connection's token bucket.
+enum Charge {
+    /// within rate: process the frame normally
+    Proceed,
+    /// over rate: the `rate_limited` refusal is already written and the
+    /// frame must be DISCARDED (never parsed, never applied) — the
+    /// connection survives
+    Refused,
+    /// the strike ladder topped out (or the peer is gone): drop the
+    /// connection; the final reply and drop event are already recorded
+    Disconnect,
+}
+
+/// Charge one frame against the connection's token bucket. A
+/// within-rate frame pays a strike back down, mirroring the governor's
+/// clean-window decay.
+fn charge(
+    bucket: &mut Option<TokenBucket>,
+    ladder: &mut StrikeLadder,
+    counters: &FrontendCounters,
+    conn_id: u64,
+    out: &mut TcpStream,
+) -> Charge {
+    let Some(b) = bucket.as_mut() else {
+        return Charge::Proceed; // rate limiting disabled
+    };
+    if b.try_take() {
+        ladder.clean();
+        return Charge::Proceed;
+    }
+    counters.note_undecodable();
+    counters.rate_limited.fetch_add(1, Relaxed);
+    let topped = ladder.breach();
+    let msg = if topped {
+        "rate limit exceeded repeatedly; disconnecting"
+    } else {
+        "rate limit exceeded; request not applied"
+    };
+    let write_ok = write_line(out, &proto::err_line(proto::E_RATE_LIMITED, msg)).is_ok();
+    if topped {
+        counters.note_drop(conn_id, "rate_limited");
+        return Charge::Disconnect;
+    }
+    if !write_ok {
+        // peer is gone; continuing would spin on a dead socket
+        return Charge::Disconnect;
+    }
+    Charge::Refused
 }

@@ -52,6 +52,10 @@ use super::proto::QuotaSpec;
 pub const WINDOW_ROUNDS: u64 = 8;
 /// Strikes at which a tenant is evicted.
 pub const EVICT_STRIKES: u32 = 3;
+/// Net rate-limit strikes a CONNECTION survives before the socket
+/// frontend disconnects it (DESIGN.md §12.6) — the per-connection
+/// counterpart of [`EVICT_STRIKES`], walked on the same ladder type.
+pub const CONN_RATE_STRIKES: u32 = 3;
 /// Consecutive overloaded rounds before the pool grows by one worker.
 pub const GROW_PATIENCE: u32 = 3;
 /// Consecutive idle rounds before the pool shrinks by one worker
@@ -76,6 +80,41 @@ impl EvictReason {
             EvictReason::OpRate => "op_rate",
             EvictReason::Memory => "memory",
         }
+    }
+}
+
+/// The shared strike-ladder discipline: a breaching observation adds a
+/// strike, a clean one removes one, and the ladder "tops out" at
+/// `limit` — so a transient burst recovers while a persistent violator
+/// is expelled within `limit` observations. Tenant quota enforcement
+/// ([`Governor::observe`], limit [`EVICT_STRIKES`]) and the frontend's
+/// per-connection rate-limit discipline (`frontend::charge`, limit
+/// [`CONN_RATE_STRIKES`]) walk the same ladder.
+#[derive(Clone, Copy, Debug)]
+pub struct StrikeLadder {
+    strikes: u32,
+    limit: u32,
+}
+
+impl StrikeLadder {
+    pub fn new(limit: u32) -> StrikeLadder {
+        StrikeLadder { strikes: 0, limit }
+    }
+
+    /// Record a breach; returns `true` when the ladder tops out (the
+    /// caller applies the terminal penalty — eviction / disconnect).
+    pub fn breach(&mut self) -> bool {
+        self.strikes = (self.strikes + 1).min(self.limit);
+        self.strikes >= self.limit
+    }
+
+    /// Record a clean observation: one strike decays.
+    pub fn clean(&mut self) {
+        self.strikes = self.strikes.saturating_sub(1);
+    }
+
+    pub fn strikes(&self) -> u32 {
+        self.strikes
     }
 }
 
@@ -118,7 +157,7 @@ pub struct TenantUsage {
 
 struct TenantState {
     quota: Option<QuotaSpec>,
-    strikes: u32,
+    ladder: StrikeLadder,
     level: GovLevel,
     /// ops per stepped round, carried across windows with no steps (a
     /// paused tenant must not look compliant by producing no evidence)
@@ -189,7 +228,7 @@ impl Governor {
             key,
             TenantState {
                 quota,
-                strikes: 0,
+                ladder: StrikeLadder::new(EVICT_STRIKES),
                 level: GovLevel::Normal,
                 demand_rate: 0.0,
                 last_steps: 0,
@@ -276,12 +315,13 @@ impl Governor {
         let op_breach = q.max_op_rate > 0.0 && t.demand_rate > q.max_op_rate;
         let mem_breach = q.max_mem_mb > 0.0
             && usage.resident_bytes as f64 / (1024.0 * 1024.0) > q.max_mem_mb;
-        if op_breach || mem_breach {
-            t.strikes += 1;
+        let topped = if op_breach || mem_breach {
+            t.ladder.breach()
         } else {
-            t.strikes = t.strikes.saturating_sub(1);
-        }
-        if t.strikes >= EVICT_STRIKES {
+            t.ladder.clean();
+            false
+        };
+        if topped {
             let reason = if mem_breach {
                 EvictReason::Memory
             } else {
@@ -292,7 +332,7 @@ impl Governor {
             self.evictions += 1;
             return Some(reason);
         }
-        t.level = GovLevel::from_strikes(t.strikes);
+        t.level = GovLevel::from_strikes(t.ladder.strikes());
         None
     }
 
@@ -349,6 +389,26 @@ mod tests {
             max_op_rate: rate,
             max_mem_mb: mem,
         })
+    }
+
+    #[test]
+    fn strike_ladder_decays_and_tops_out() {
+        let mut l = StrikeLadder::new(3);
+        assert!(!l.breach());
+        assert!(!l.breach());
+        assert_eq!(l.strikes(), 2);
+        // one clean observation buys one more breach before topping out
+        l.clean();
+        assert!(!l.breach());
+        assert!(l.breach(), "third net strike must top out");
+        // topped is absorbing under further breaches, and strikes clamp
+        assert!(l.breach());
+        assert_eq!(l.strikes(), 3);
+        // decay all the way back down saturates at zero
+        for _ in 0..5 {
+            l.clean();
+        }
+        assert_eq!(l.strikes(), 0);
     }
 
     #[test]

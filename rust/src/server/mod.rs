@@ -25,7 +25,11 @@
 //! * [`proto`] + [`frontend`] are the network face (DESIGN.md §12): a
 //!   line-delimited JSON protocol over `TcpListener` whose requests
 //!   decode into the same [`proto::Command`]s the job driver applies,
-//!   served by `bnkfac serve --listen` and spoken by `bnkfac client`;
+//!   served by `bnkfac serve --listen` and spoken by `bnkfac client`,
+//!   hardened (DESIGN.md §12.6) with a mandatory challenge–response
+//!   token handshake (`--auth-token-file`) and per-connection
+//!   token-bucket rate limits (`--conn-rate`/`--conn-burst`) enforced
+//!   on the connection threads before any command is parsed;
 //! * [`governor`] is the adaptive resource governor (DESIGN.md §13):
 //!   per-session op-rate/memory quotas with throttle → pause → evict
 //!   escalation, plus elastic grow/shrink of the shared worker pool
@@ -41,7 +45,8 @@ pub mod sched;
 pub mod session;
 
 pub use driver::ServerCore;
-pub use governor::{EvictReason, Governor, GovernorCfg};
+pub use frontend::FrontendCfg;
+pub use governor::{EvictReason, Governor, GovernorCfg, StrikeLadder};
 pub use manager::{RoundStats, ServerCfg, Session, SessionManager, SessionStatus};
 pub use proto::{Command, QuotaSpec};
 pub use sched::FairScheduler;

@@ -33,12 +33,23 @@
 //!
 //! Error codes are a small closed set (constants below); the transport
 //! layer produces `malformed` / `oversized`, request validation produces
-//! `bad_request`, and command application maps session-manager errors
-//! onto `not_found` / `at_capacity` / `unsupported` / `internal`.
+//! `bad_request`, command application maps session-manager errors
+//! onto `not_found` / `at_capacity` / `unsupported` / `internal`, and
+//! the connection-security layer (DESIGN.md §12.6) produces
+//! `auth_required` / `auth_failed` / `rate_limited`.
+//!
+//! When the server is started with `--auth-token-file`, a mandatory
+//! challenge–response handshake precedes everything above: the server's
+//! first line is a challenge carrying a fresh nonce, the client's first
+//! line must be `{"op": "auth", "mac": auth_mac(token, nonce)}`, and
+//! any other first line — or a wrong MAC — is answered with
+//! `auth_required` / `auth_failed` and the connection is closed before
+//! a single [`Command`] is parsed.
 
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::optim::Algo;
+use crate::util::rng::SplitMix64;
 use crate::util::ser::Json;
 
 use super::ckpt;
@@ -69,8 +80,35 @@ pub const E_UNSUPPORTED: &str = "unsupported";
 /// The connection sat idle past the server's `--idle-timeout` and was
 /// reaped; sent as a courtesy before the close.
 pub const E_IDLE_TIMEOUT: &str = "idle_timeout";
+/// The server requires the auth handshake and the connection's first
+/// line was not an `auth` request; sent before the close.
+pub const E_AUTH_REQUIRED: &str = "auth_required";
+/// The `auth` request carried a MAC that does not prove knowledge of
+/// the shared token (or no MAC at all); sent before the close.
+pub const E_AUTH_FAILED: &str = "auth_failed";
+/// The connection exceeded its `--conn-rate`/`--conn-burst` token
+/// bucket; the request was NOT applied. Repeat offenders are
+/// disconnected on the `governor::CONN_RATE_STRIKES` strike ladder.
+pub const E_RATE_LIMITED: &str = "rate_limited";
 /// Anything else (I/O, serialization, session failure).
 pub const E_INTERNAL: &str = "internal";
+
+/// The full closed set of wire error codes. Every error reply the
+/// server can emit carries one of these — the adversarial suite pins
+/// this down against arbitrary hostile input.
+pub const ERROR_CODES: &[&str] = &[
+    E_MALFORMED,
+    E_OVERSIZED,
+    E_BAD_REQUEST,
+    E_NOT_FOUND,
+    E_AT_CAPACITY,
+    E_UNSUPPORTED,
+    E_IDLE_TIMEOUT,
+    E_AUTH_REQUIRED,
+    E_AUTH_FAILED,
+    E_RATE_LIMITED,
+    E_INTERNAL,
+];
 
 /// Map a command-application error onto a wire error code. Coarse
 /// substring matching over the rendered chain — the session manager
@@ -94,6 +132,84 @@ pub fn code_for(e: &anyhow::Error) -> &'static str {
     } else {
         E_INTERNAL
     }
+}
+
+// ------------------------------------------------------------- handshake
+
+/// Keyed MAC over `nonce ‖ token`, built from the repo's own
+/// [`SplitMix64`] primitive (no crypto deps offline): a chained
+/// absorb of the token's 8-byte words, a length/nonce finalizer so
+/// prefix splices change the digest, and a two-word squeeze.
+///
+/// THREAT MODEL (DESIGN.md §12.6): this authenticates *knowledge of a
+/// shared secret on a trusted network segment*. SplitMix64 is a
+/// statistical mixer, not a cryptographic hash — deploy behind TLS or
+/// a tunnel when the network itself is hostile.
+pub fn auth_mac(token: &str, nonce: u64) -> String {
+    let mut acc = nonce ^ 0xB4B3_FAC0_5EC0_7EAA;
+    for chunk in token.as_bytes().chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        acc = SplitMix64::new(acc ^ u64::from_le_bytes(w)).next_u64();
+    }
+    // bind the digest to the token length and the nonce once more, so
+    // neither zero-padding nor a replayed-nonce transcript collides
+    acc = SplitMix64::new(acc ^ token.len() as u64).next_u64();
+    let mut sq = SplitMix64::new(acc ^ nonce.rotate_left(32));
+    format!("0x{:016x}{:016x}", sq.next_u64(), sq.next_u64())
+}
+
+/// Constant-time string equality: the comparison touches every byte
+/// regardless of where the first mismatch sits, so response timing
+/// leaks nothing about how much of a guessed MAC was correct.
+pub fn ct_eq(a: &str, b: &str) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.bytes().zip(b.bytes()).fold(0u8, |acc, (x, y)| acc | (x ^ y)) == 0
+}
+
+/// The server's first line on an auth-enabled connection: a reply-shaped
+/// challenge carrying the connection's fresh nonce.
+pub fn challenge_line(nonce: u64) -> String {
+    ok_line(Json::obj(vec![
+        ("auth", Json::str("challenge")),
+        ("nonce", Json::Str(format!("{nonce:#x}"))),
+    ]))
+}
+
+/// Extract the nonce from a challenge reply (client side); `None` when
+/// the reply is not a challenge.
+pub fn challenge_nonce(r: &Reply) -> Option<u64> {
+    if !r.ok || r.data.get("auth").and_then(|v| v.as_str()) != Some("challenge") {
+        return None;
+    }
+    let s = r.data.get("nonce").and_then(|v| v.as_str())?;
+    u64::from_str_radix(s.strip_prefix("0x")?, 16).ok()
+}
+
+/// The client's handshake line: `{"op": "auth", "mac": "0x…"}`.
+pub fn auth_request_line(mac: &str) -> String {
+    Json::obj(vec![("op", Json::str("auth")), ("mac", Json::str(mac))]).to_string_compact()
+}
+
+/// The server's handshake-accepted reply line.
+pub fn auth_ok_line() -> String {
+    ok_line(Json::obj(vec![("auth", Json::str("ok"))]))
+}
+
+/// Frontend-side decode of a connection's first line under auth:
+/// `Some(mac)` when the line is a well-formed `auth` request, `None`
+/// for anything else (which the frontend answers with `auth_required`).
+/// Deliberately NOT a [`Command`]: the handshake is consumed entirely
+/// by the connection thread, before any command parsing.
+pub fn auth_request_mac(line: &str) -> Option<String> {
+    let j = Json::parse(line).ok()?;
+    let op = j.get("op").or_else(|| j.get("action"))?.as_str()?;
+    if op != "auth" {
+        return None;
+    }
+    j.get("mac").and_then(|v| v.as_str()).map(|s| s.to_string())
 }
 
 // --------------------------------------------------------------- commands
@@ -306,8 +422,9 @@ fn seed_from(j: &Json, key: &str, d: u64) -> Result<u64> {
 
 /// Leniency means optional fields, NOT arbitrary ones: a typo'd key
 /// silently running a session with defaults would corrupt experiments
-/// without a diagnostic.
-fn reject_unknown(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
+/// without a diagnostic. (Also used by the job driver on its `server`
+/// spec.)
+pub(crate) fn reject_unknown(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
     if let Json::Obj(m) = j {
         for k in m.keys() {
             ensure!(
@@ -319,11 +436,65 @@ fn reject_unknown(j: &Json, allowed: &[&str], what: &str) -> Result<()> {
     Ok(())
 }
 
+// Hard sanity ceilings on wire-supplied specs. The lenient parsers
+// enforce these so a hostile `create` cannot panic or exhaust the
+// serving thread after parsing cleanly: `t_updt: 0` is a
+// modulo-by-zero in the stepping loop, `dim: 1e30` is a
+// capacity-overflow allocation. Generous for every legitimate
+// workload — the benches top out around dim 4096.
+
+/// Max independent K-factor shards per session.
+pub const MAX_FACTORS: usize = 1024;
+/// Max factor dimension (also bounds rank / n_stat / grad_cols).
+pub const MAX_DIM: usize = 65_536;
+/// Max stat-update period.
+pub const MAX_T_UPDT: usize = 1_000_000;
+/// Max optimizer steps a session may request.
+pub const MAX_STEPS: u64 = 1_000_000_000_000;
+/// Max synthetic-dataset rows (train or test) per model session.
+pub const MAX_DATA_N: usize = 1 << 24;
+/// Max scheduler weight a request may claim.
+pub const MAX_WEIGHT: usize = 1_000_000;
+
+fn ensure_range(what: &str, v: usize, lo: usize, hi: usize) -> Result<()> {
+    ensure!(v >= lo && v <= hi, "{what} must be in [{lo}, {hi}], got {v}");
+    Ok(())
+}
+
+/// Reject session geometry the serving thread could not survive. Runs
+/// inside [`host_cfg_lenient`], i.e. on every wire / job-file / client
+/// spec; the strict checkpoint decoder (`ckpt::host_cfg_from`) is
+/// exempt — checkpoints are server-written or operator-supplied.
+pub fn validate_host_cfg(c: &HostSessionCfg) -> Result<()> {
+    ensure_range("session 'factors'", c.factors, 1, MAX_FACTORS)?;
+    ensure_range("session 'dim'", c.dim, 1, MAX_DIM)?;
+    ensure_range("session 'rank'", c.rank, 1, c.dim)?;
+    ensure_range("session 'n_stat'", c.n_stat, 1, MAX_DIM)?;
+    ensure_range("session 'grad_cols'", c.grad_cols, 1, MAX_DIM)?;
+    ensure_range("session 't_updt'", c.t_updt, 1, MAX_T_UPDT)?;
+    ensure!(
+        c.steps <= MAX_STEPS,
+        "session 'steps' must be at most {MAX_STEPS}, got {}",
+        c.steps
+    );
+    ensure!(
+        c.rho.is_finite() && c.rho > 0.0 && c.rho <= 1.0,
+        "session 'rho' must be in (0, 1], got {}",
+        c.rho
+    );
+    ensure!(
+        c.lambda.is_finite() && c.lambda >= 0.0,
+        "session 'lambda' must be finite and non-negative, got {}",
+        c.lambda
+    );
+    Ok(())
+}
+
 /// Lenient host-session spec: every field optional with
 /// [`HostSessionCfg::default`] fallbacks, numeric or hex seeds, unknown
-/// keys rejected. The strict all-fields parser (`ckpt::host_cfg_from`)
-/// stays the checkpoint decoder; hand-written job files and client
-/// flags use this one.
+/// keys rejected, geometry bounded by [`validate_host_cfg`]. The strict
+/// all-fields parser (`ckpt::host_cfg_from`) stays the checkpoint
+/// decoder; hand-written job files and client flags use this one.
 pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
     ensure!(matches!(j, Json::Obj(_)), "session spec must be an object");
     reject_unknown(
@@ -336,7 +507,7 @@ pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
         None => d.algo,
         Some(s) => Algo::parse(s).ok_or_else(|| anyhow!("unknown algo '{s}'"))?,
     };
-    Ok(HostSessionCfg {
+    let cfg = HostSessionCfg {
         factors: opt_usize(j, "factors", d.factors),
         dim: opt_usize(j, "dim", d.dim),
         rank: opt_usize(j, "rank", d.rank),
@@ -348,7 +519,9 @@ pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
         steps: j.get("steps").and_then(|v| v.as_f64()).unwrap_or(d.steps as f64) as u64,
         rho: opt_f32(j, "rho", d.rho),
         lambda: opt_f32(j, "lambda", d.lambda),
-    })
+    };
+    validate_host_cfg(&cfg)?;
+    Ok(cfg)
 }
 
 pub fn dataspec_from(j: &Json) -> Result<DataSpec> {
@@ -359,13 +532,24 @@ pub fn dataspec_from(j: &Json) -> Result<DataSpec> {
         "dataset spec",
     )?;
     let d = DataSpec::default();
-    Ok(DataSpec {
+    let spec = DataSpec {
         n_train: opt_usize(j, "n_train", d.n_train),
         n_test: opt_usize(j, "n_test", d.n_test),
         noise: opt_f32(j, "noise", d.noise),
         label_noise: opt_f32(j, "label_noise", d.label_noise),
         seed: seed_from(j, "seed", d.seed)?,
-    })
+    };
+    ensure_range("dataset 'n_train'", spec.n_train, 1, MAX_DATA_N)?;
+    ensure_range("dataset 'n_test'", spec.n_test, 1, MAX_DATA_N)?;
+    ensure!(
+        spec.noise.is_finite() && spec.noise >= 0.0,
+        "dataset 'noise' must be finite and non-negative"
+    );
+    ensure!(
+        spec.label_noise.is_finite() && (0.0..=1.0).contains(&spec.label_noise),
+        "dataset 'label_noise' must be in [0, 1]"
+    );
+    Ok(spec)
 }
 
 fn modelspec_from(j: &Json) -> Result<ModelSpec> {
@@ -375,14 +559,20 @@ fn modelspec_from(j: &Json) -> Result<ModelSpec> {
         .get("algo")
         .and_then(|v| v.as_str())
         .ok_or_else(|| anyhow!("model spec missing 'algo'"))?;
-    Ok(ModelSpec {
+    let spec = ModelSpec {
         algo: Algo::parse(algo_s).ok_or_else(|| anyhow!("unknown algo '{algo_s}'"))?,
         seed: seed_from(j, "seed", 42)?,
         steps: j
             .get("steps")
             .and_then(|v| v.as_f64())
             .ok_or_else(|| anyhow!("model spec missing 'steps'"))? as u64,
-    })
+    };
+    ensure!(
+        spec.steps >= 1 && spec.steps <= MAX_STEPS,
+        "model 'steps' must be in [1, {MAX_STEPS}], got {}",
+        spec.steps
+    );
+    Ok(spec)
 }
 
 /// Decode a request object into a [`Command`]. `op` selects the command;
@@ -406,7 +596,12 @@ pub fn command_from_json(j: &Json) -> Result<Command> {
             .map(|p| p.to_string())
             .ok_or_else(|| anyhow!("'{op}' needs a 'path'"))
     };
-    let weight = j.get("weight").and_then(|v| v.as_usize()).unwrap_or(1).max(1) as u32;
+    // weights are clamped, not rejected: a fair-share knob, not geometry
+    let weight = j
+        .get("weight")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(1)
+        .clamp(1, MAX_WEIGHT) as u32;
     Ok(match op {
         "create" => Command::Create {
             name: name()?,
@@ -701,6 +896,239 @@ mod tests {
         assert!(!r.ok);
         assert_eq!(r.code, E_NOT_FOUND);
         assert!(r.error.contains("'x'"));
+    }
+
+    #[test]
+    fn auth_mac_is_deterministic_and_keyed() {
+        let m1 = auth_mac("hunter2", 0xABCD);
+        assert_eq!(m1, auth_mac("hunter2", 0xABCD), "MAC must be deterministic");
+        assert_eq!(m1.len(), 2 + 32, "0x + 128 bits of hex");
+        // keyed on both inputs
+        assert_ne!(m1, auth_mac("hunter2", 0xABCE));
+        assert_ne!(m1, auth_mac("hunter3", 0xABCD));
+        // zero-padding of the last word must not collide with an
+        // explicit-NUL token, and length is bound into the digest
+        assert_ne!(auth_mac("ab", 7), auth_mac("ab\0", 7));
+        assert_ne!(auth_mac("", 7), auth_mac("\0", 7));
+        // constant-time compare agrees with ==
+        assert!(ct_eq(&m1, &m1.clone()));
+        assert!(!ct_eq(&m1, &auth_mac("hunter2", 1)));
+        assert!(!ct_eq("short", "longer"));
+    }
+
+    #[test]
+    fn handshake_lines_roundtrip() {
+        let nonce = 0xDEAD_BEEF_0042_1337u64;
+        let ch = challenge_line(nonce);
+        let r = parse_reply(&ch).unwrap();
+        assert!(r.ok);
+        assert_eq!(challenge_nonce(&r), Some(nonce));
+        // a normal ok reply is not a challenge
+        let r = parse_reply(&ok_line(Json::obj(vec![("id", Json::Num(1.0))]))).unwrap();
+        assert_eq!(challenge_nonce(&r), None);
+
+        let mac = auth_mac("tok", nonce);
+        let line = auth_request_line(&mac);
+        assert_eq!(auth_request_mac(&line).as_deref(), Some(mac.as_str()));
+        // anything else is not an auth request
+        assert_eq!(auth_request_mac(r#"{"op": "stats"}"#), None);
+        assert_eq!(auth_request_mac("not json"), None);
+        assert_eq!(auth_request_mac(r#"{"op": "auth"}"#), None);
+    }
+
+    #[test]
+    fn hostile_session_geometry_is_rejected() {
+        // each of these parsed cleanly before validation and would have
+        // panicked or OOMed the serving thread at apply/step time
+        for bad in [
+            r#"{"t_updt": 0}"#,               // modulo-by-zero in step()
+            r#"{"dim": 1e30}"#,               // capacity-overflow alloc
+            r#"{"dim": 4, "rank": 9}"#,       // rank above dim
+            r#"{"factors": 0}"#,              // empty session
+            r#"{"rho": 0}"#,                  // EA update degenerates
+            r#"{"rho": 1e999}"#,              // non-finite
+            r#"{"lambda": -1}"#,              // negative damping
+            r#"{"steps": 1e18}"#,             // unbounded run request
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(host_cfg_lenient(&j).is_err(), "accepted hostile spec {bad}");
+        }
+        // defaults and ordinary specs still pass
+        assert!(host_cfg_lenient(&Json::parse("{}").unwrap()).is_ok());
+        let (code, _) = parse_request(r#"{"op": "create", "name": "x", "session": {"t_updt": 0}}"#)
+            .unwrap_err();
+        assert_eq!(code, E_BAD_REQUEST);
+        // dataset/model ceilings
+        assert!(dataspec_from(&Json::parse(r#"{"n_train": 0}"#).unwrap()).is_err());
+        assert!(dataspec_from(&Json::parse(r#"{"n_train": 1e12}"#).unwrap()).is_err());
+        assert!(dataspec_from(&Json::parse(r#"{"label_noise": 2}"#).unwrap()).is_err());
+        assert!(
+            modelspec_from(&Json::parse(r#"{"algo": "seng", "steps": 0}"#).unwrap()).is_err()
+        );
+    }
+
+    const ALGOS: &[Algo] = &[
+        Algo::Sgd,
+        Algo::Seng,
+        Algo::KfacExact,
+        Algo::RKfac,
+        Algo::BKfac,
+        Algo::BRKfac,
+        Algo::BKfacC,
+    ];
+
+    fn rand_name(rng: &mut crate::util::rng::Rng) -> String {
+        let n = 1 + rng.next_below(12);
+        (0..n)
+            .map(|_| (b'a' + rng.next_below(26) as u8) as char)
+            .collect()
+    }
+
+    fn rand_session(rng: &mut crate::util::rng::Rng) -> HostSessionCfg {
+        let dim = 1 + rng.next_below(96);
+        HostSessionCfg {
+            factors: 1 + rng.next_below(4),
+            dim,
+            rank: 1 + rng.next_below(dim),
+            n_stat: 1 + rng.next_below(16),
+            grad_cols: 1 + rng.next_below(16),
+            t_updt: 1 + rng.next_below(8),
+            algo: ALGOS[rng.next_below(ALGOS.len())],
+            seed: rng.next_u64(),
+            steps: 1 + rng.next_below(100_000) as u64,
+            rho: (1 + rng.next_below(1000)) as f32 / 1000.0,
+            lambda: rng.next_f32(),
+        }
+    }
+
+    fn rand_quota(rng: &mut crate::util::rng::Rng) -> Option<QuotaSpec> {
+        match rng.next_below(3) {
+            0 => None,
+            // at least one ceiling strictly positive, or the parser
+            // correctly normalizes the spec back to None
+            1 => Some(QuotaSpec {
+                max_op_rate: rng.next_f64() * 16.0 + 0.001,
+                max_mem_mb: 0.0,
+            }),
+            _ => Some(QuotaSpec {
+                max_op_rate: rng.next_f64() * 16.0 + 0.001,
+                max_mem_mb: rng.next_f64() * 512.0 + 0.001,
+            }),
+        }
+    }
+
+    fn rand_command(rng: &mut crate::util::rng::Rng) -> Command {
+        match rng.next_below(10) {
+            0 => Command::Create {
+                name: rand_name(rng),
+                weight: (1 + rng.next_below(1000)) as u32,
+                session: rand_session(rng),
+                quota: rand_quota(rng),
+            },
+            1 => Command::CreateModel {
+                name: rand_name(rng),
+                weight: (1 + rng.next_below(1000)) as u32,
+                model: ModelSpec {
+                    algo: ALGOS[rng.next_below(ALGOS.len())],
+                    seed: rng.next_u64(),
+                    steps: 1 + rng.next_below(10_000) as u64,
+                },
+                dataset: DataSpec {
+                    n_train: 1 + rng.next_below(4096),
+                    n_test: 1 + rng.next_below(1024),
+                    noise: rng.next_f32(),
+                    label_noise: rng.next_f32(),
+                    seed: rng.next_u64(),
+                },
+                quota: rand_quota(rng),
+            },
+            2 => Command::Pause { name: rand_name(rng) },
+            3 => Command::Resume { name: rand_name(rng) },
+            4 => Command::Checkpoint {
+                name: rand_name(rng),
+                path: format!("results/{}.json", rand_name(rng)),
+            },
+            5 => Command::Restore {
+                name: rand_name(rng),
+                path: format!("results/{}.json", rand_name(rng)),
+                dataset: None,
+            },
+            6 => Command::Restore {
+                name: rand_name(rng),
+                path: format!("results/{}.json", rand_name(rng)),
+                dataset: Some(DataSpec {
+                    n_train: 1 + rng.next_below(4096),
+                    n_test: 1 + rng.next_below(1024),
+                    noise: rng.next_f32(),
+                    label_noise: rng.next_f32(),
+                    seed: rng.next_u64(),
+                }),
+            },
+            7 => Command::Drop { name: rand_name(rng) },
+            8 => Command::Stats,
+            _ => Command::Shutdown,
+        }
+    }
+
+    /// Property (ISSUE 5 satellite): `Command → json → Command` is the
+    /// identity over the FULL enum, for arbitrary in-range field values
+    /// — the client-side encoder and the server-side parser cannot
+    /// drift apart.
+    #[test]
+    fn prop_command_roundtrip_full_enum() {
+        crate::util::proptest::run(
+            "proto: command json round-trip",
+            crate::util::proptest::PropConfig {
+                cases: 128,
+                ..Default::default()
+            },
+            rand_command,
+            |cmd| {
+                let j = command_to_json(cmd);
+                let line = j.to_string_compact();
+                let back = parse_request(&line)
+                    .map_err(|(code, msg)| format!("rejected own encoding [{code}]: {msg}"))?;
+                if command_to_json(&back) != j {
+                    return Err(format!("lossy round-trip for kind {}", cmd.kind()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: arbitrary garbage lines never panic the request parser
+    /// and always map onto the closed error-code set.
+    #[test]
+    fn prop_garbage_never_panics_parser() {
+        // byte soup biased toward JSON structure so the parser gets past
+        // the first character often enough to stress the deep paths
+        const ALPHABET: &[u8] = br#"{}[]",:0123456789.eE+-truefalsn\u"op "#;
+        crate::util::proptest::run(
+            "proto: garbage lines are rejected cleanly",
+            crate::util::proptest::PropConfig {
+                cases: 256,
+                ..Default::default()
+            },
+            |rng| {
+                let n = rng.next_below(240);
+                let bytes: Vec<u8> = (0..n)
+                    .map(|_| ALPHABET[rng.next_below(ALPHABET.len())])
+                    .collect();
+                String::from_utf8_lossy(&bytes).into_owned()
+            },
+            |line| {
+                match parse_request(line) {
+                    Ok(_) => Ok(()), // garbage that happens to be valid
+                    Err((code, _)) => {
+                        if ERROR_CODES.contains(&code) {
+                            Ok(())
+                        } else {
+                            Err(format!("error code '{code}' outside the closed set"))
+                        }
+                    }
+                }
+            },
+        );
     }
 
     #[test]

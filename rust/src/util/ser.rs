@@ -163,6 +163,7 @@ impl Json {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.ws();
         let v = p.value()?;
@@ -174,9 +175,17 @@ impl Json {
     }
 }
 
+/// Max container-nesting depth the parser accepts. The parser is
+/// recursive-descent, so unbounded nesting (`[[[[…`) is a stack
+/// overflow — an *abort*, not a catchable error — from hostile input;
+/// 128 is far beyond any legitimate document here (checkpoints nest
+/// ~5 deep).
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -222,7 +231,22 @@ impl<'a> Parser<'a> {
             other => Err(format!("unexpected {:?} at offset {}", other, self.i)),
         }
     }
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at offset {}", self.i));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, String> {
+        self.enter()?;
+        let r = self.object_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_inner(&mut self) -> Result<Json, String> {
         self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.ws();
@@ -251,6 +275,13 @@ impl<'a> Parser<'a> {
         }
     }
     fn array(&mut self) -> Result<Json, String> {
+        self.enter()?;
+        let r = self.array_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn array_inner(&mut self) -> Result<Json, String> {
         self.eat(b'[')?;
         let mut items = Vec::new();
         self.ws();
@@ -293,6 +324,11 @@ impl<'a> Parser<'a> {
                         Some(b'\\') => s.push('\\'),
                         Some(b'/') => s.push('/'),
                         Some(b'u') => {
+                            // bounds-check: a line ending in `"\u12` must
+                            // be a parse error, not a slice panic
+                            if self.i + 5 > self.b.len() {
+                                return Err("truncated \\u escape".into());
+                            }
                             let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
                                 .map_err(|e| e.to_string())?;
                             let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
@@ -404,6 +440,29 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{\"a\":1} x").is_err());
+        // hostile-input hardening: truncated \u escapes error instead of
+        // panicking on the slice, in every truncation position
+        for t in ["\"\\u", "\"\\u1", "\"\\u12", "\"\\u123"] {
+            assert!(Json::parse(t).is_err(), "{t:?}");
+        }
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
+    }
+
+    #[test]
+    fn json_nesting_depth_is_bounded() {
+        // hostile depth: 1 MiB of "[" would overflow the parser stack
+        // (an abort) without the MAX_DEPTH guard
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        let balanced = format!("{}{}", "[".repeat(4096), "]".repeat(4096));
+        assert!(Json::parse(&balanced).is_err());
+        // legitimate nesting is untouched, and depth resets per sibling
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+        let inner1 = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        let inner2 = format!("{}2{}", "[".repeat(100), "]".repeat(100));
+        let siblings = format!("[{inner1},{inner2}]");
+        assert!(Json::parse(&siblings).is_ok(), "depth must reset per sibling");
     }
 
     #[test]

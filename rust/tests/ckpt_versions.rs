@@ -1,0 +1,260 @@
+//! Checkpoint version-ladder coverage (ISSUE 5 satellite).
+//!
+//! The checkpoint format has walked v1.0 → v1.1 (`state.seng`, SENG
+//! buffers) → v1.2 (top-level `quota`, governor ceilings); both added
+//! sections are OPTIONAL to the decoder, so older checkpoints must keep
+//! decoding under the v1.2 reader forever. Two angles pin that down:
+//!
+//! * **committed fixtures** (`tests/fixtures/ckpt_v1_{0,1}_host.json`):
+//!   hand-written pre-quota checkpoints that must decode, restore, and
+//!   run to completion — if a future format change adds a *required*
+//!   key, these fail loudly instead of silently breaking every deployed
+//!   checkpoint;
+//! * **downgraded live checkpoints**: a mid-run v1.2 checkpoint with the
+//!   `quota` (and, for models, `seng`) sections stripped and the version
+//!   stamp rewritten must resume BIT-IDENTICALLY to the untouched one —
+//!   the quota-absent / seng-absent decode paths feed the exact same
+//!   trajectory.
+
+use std::sync::OnceLock;
+
+use bnkfac::coordinator::TrainerCfg;
+use bnkfac::data::{Dataset, DatasetCfg};
+use bnkfac::optim::Algo;
+use bnkfac::runtime::Runtime;
+use bnkfac::server::{ckpt, HostSessionCfg, QuotaSpec, ServerCfg, SessionManager};
+use bnkfac::util::ser::Json;
+
+fn server_cfg() -> ServerCfg {
+    ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    }
+}
+
+/// Clone a checkpoint with a rewritten version stamp and (optionally)
+/// the v1.2 `quota` section removed — i.e. the bytes a pre-1.2 writer
+/// would have produced for the same state.
+fn downgrade(j: &Json, version: f64, strip_quota: bool) -> Json {
+    match j.clone() {
+        Json::Obj(mut m) => {
+            m.insert("version".into(), Json::Num(version));
+            if strip_quota {
+                m.remove("quota");
+            }
+            Json::Obj(m)
+        }
+        _ => panic!("checkpoint is not an object"),
+    }
+}
+
+/// Restore a host checkpoint into a fresh server, run to completion,
+/// and return the final checkpoint.
+fn finish_host(j: &Json) -> Json {
+    let mut mgr = SessionManager::new(server_cfg());
+    let id = mgr.restore(j, "resumed").expect("restore");
+    mgr.run_to_completion(1_000_000).expect("run");
+    mgr.checkpoint(id).expect("final checkpoint")
+}
+
+// ------------------------------------------------------------- fixtures
+
+#[test]
+fn committed_v10_and_v11_fixtures_decode_restore_and_complete() {
+    let dir = format!("{}/tests/fixtures", env!("CARGO_MANIFEST_DIR"));
+    for (file, name, start_step) in [
+        ("ckpt_v1_0_host.json", "legacy10", 4u64),
+        ("ckpt_v1_1_host.json", "legacy11", 2u64),
+    ] {
+        let text = std::fs::read_to_string(format!("{dir}/{file}"))
+            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        let j = Json::parse(&text).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let r = ckpt::decode_host(&j).unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        // the quota-absent path: pre-1.2 checkpoints decode to no quota
+        assert!(r.quota.is_none(), "{file}: pre-1.2 checkpoint grew a quota");
+        assert_eq!(r.name, name, "{file}");
+        assert_eq!(r.session.step, start_step, "{file}");
+        assert_eq!(r.session.cfg.seed, 0x2a, "{file}");
+
+        // restore under the current reader and run to completion
+        let mut mgr = SessionManager::new(server_cfg());
+        let id = mgr.restore(&j, "").unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        mgr.run_to_completion(1_000_000).unwrap();
+        assert_eq!(mgr.session(id).unwrap().steps_done(), 4, "{file}");
+
+        // re-encoding stamps the CURRENT version and an explicit null
+        // quota — the ladder only ever climbs
+        let ck = mgr.checkpoint(id).unwrap();
+        assert_eq!(
+            ck.get("version").and_then(|v| v.as_f64()),
+            Some(ckpt::VERSION),
+            "{file}"
+        );
+        assert_eq!(ck.get("quota"), Some(&Json::Null), "{file}");
+    }
+}
+
+// ------------------------------------------------- downgraded live ckpts
+
+/// A mid-run v1.2 host checkpoint downgraded to v1.0/v1.1 (quota
+/// stripped) must decode with no quota and resume bit-identically to
+/// the untouched v1.2 checkpoint.
+#[test]
+fn downgraded_host_checkpoint_resumes_bit_identically() {
+    let quota = Some(QuotaSpec {
+        // loose ceilings: present in the checkpoint, never enforced
+        max_op_rate: 1000.0,
+        max_mem_mb: 4096.0,
+    });
+    let mut mgr = SessionManager::new(server_cfg());
+    let id = mgr
+        .create_host(
+            "a",
+            2,
+            HostSessionCfg {
+                seed: 0x77,
+                steps: 24,
+                ..HostSessionCfg::default()
+            },
+            quota,
+        )
+        .unwrap();
+    while mgr.session(id).unwrap().steps_done() < 10 {
+        let st = mgr.run_round().unwrap();
+        if st.stepped == 0 {
+            std::thread::yield_now();
+        }
+        assert!(mgr.round < 1_000_000, "stalled before mid-run checkpoint");
+    }
+    let ck12 = mgr.checkpoint(id).unwrap();
+    assert_ne!(
+        ck12.get("quota"),
+        Some(&Json::Null),
+        "v1.2 checkpoint must persist the quota"
+    );
+
+    let ck10 = downgrade(&ck12, 1.0, true);
+    let ck11 = downgrade(&ck12, 1.1, true);
+    assert!(ckpt::decode_host(&ck10).unwrap().quota.is_none());
+    assert!(ckpt::decode_host(&ck11).unwrap().quota.is_none());
+    let q = ckpt::decode_host(&ck12).unwrap().quota.unwrap();
+    assert_eq!(q.max_op_rate, 1000.0);
+
+    let f12 = finish_host(&ck12);
+    let f10 = finish_host(&ck10);
+    let f11 = finish_host(&ck11);
+    assert_eq!(f10.get("cfg"), f12.get("cfg"), "v1.0 resume changed the cfg");
+    assert_eq!(
+        f10.get("state"),
+        f12.get("state"),
+        "v1.0 resume diverged bit-wise from the v1.2 resume"
+    );
+    assert_eq!(
+        f11.get("state"),
+        f12.get("state"),
+        "v1.1 resume diverged bit-wise from the v1.2 resume"
+    );
+    // quota re-registration on restore: only the v1.2 lineage keeps it
+    assert_eq!(f10.get("quota"), Some(&Json::Null));
+    assert_eq!(f11.get("quota"), Some(&Json::Null));
+    assert_ne!(f12.get("quota"), Some(&Json::Null));
+}
+
+// ------------------------------------- model ladder (artifact-gated)
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"));
+        match Runtime::open(dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping model ckpt-ladder tests ({e:#})");
+                None
+            }
+        }
+    })
+    .as_ref()
+}
+
+fn tiny_dataset(rt: &Runtime) -> Dataset {
+    Dataset::generate(DatasetCfg {
+        image: rt.manifest.config.image,
+        channels: rt.manifest.config.channels,
+        n_classes: rt.manifest.config.n_classes,
+        n_train: 64,
+        n_test: 32,
+        seed: 77,
+        ..DatasetCfg::default()
+    })
+}
+
+/// Strip the sections a v1.0 model writer did not emit: `state.seng`
+/// and `cfg.seng` (SENG hyperparameters arrived with v1.1).
+fn strip_seng(j: &Json) -> Json {
+    let Json::Obj(mut m) = j.clone() else {
+        panic!("checkpoint is not an object")
+    };
+    m.insert("version".into(), Json::Num(1.0));
+    m.remove("quota");
+    if let Some(Json::Obj(st)) = m.get_mut("state") {
+        st.remove("seng");
+    }
+    if let Some(Json::Obj(cfg)) = m.get_mut("cfg") {
+        cfg.remove("seng");
+    }
+    Json::Obj(m)
+}
+
+/// The seng-absent path: a v1.0-shaped model checkpoint (no `seng`
+/// sections, no `quota`) decodes to empty SENG buffers and default SENG
+/// hyperparameters, and — for a non-SENG trainer, whose buffers are
+/// empty anyway — resumes bit-identically to the untouched v1.2 one.
+#[test]
+fn seng_absent_model_checkpoint_decodes_and_resumes() {
+    let Some(rt) = runtime() else { return };
+    let cfg = server_cfg();
+    let tcfg = TrainerCfg {
+        algo: Algo::BKfac,
+        seed: 13,
+        eval_every: 0,
+        ..TrainerCfg::default()
+    };
+    let mut mgr = SessionManager::with_runtime(cfg.clone(), rt);
+    let id = mgr
+        .create_model("m", 1, tcfg, tiny_dataset(rt), 12, None)
+        .unwrap();
+    while mgr.session(id).unwrap().steps_done() < 5 {
+        let st = mgr.run_round().unwrap();
+        if st.stepped == 0 {
+            std::thread::yield_now();
+        }
+        assert!(mgr.round < 1_000_000, "stalled before checkpoint");
+    }
+    let ck12 = mgr.checkpoint(id).unwrap();
+    let ck10 = strip_seng(&ck12);
+
+    let r = ckpt::decode_model(&ck10).expect("seng-absent model checkpoint decodes");
+    assert!(r.quota.is_none());
+    assert!(r.state.seng_diag.is_empty() && r.state.seng_velocity.is_empty());
+    let dflt = TrainerCfg::default();
+    assert_eq!(r.cfg.seng_damping, dflt.seng_damping);
+    assert_eq!(r.cfg.seng_momentum, dflt.seng_momentum);
+
+    let finish_model = |j: &Json| -> Json {
+        let mut m = SessionManager::with_runtime(cfg.clone(), rt);
+        let rid = m.restore_model(j, "r", tiny_dataset(rt)).expect("restore");
+        m.run_to_completion(1_000_000).unwrap();
+        m.checkpoint(rid).unwrap()
+    };
+    let f12 = finish_model(&ck12);
+    let f10 = finish_model(&ck10);
+    assert_eq!(
+        f10.get("state"),
+        f12.get("state"),
+        "seng-absent resume diverged bit-wise"
+    );
+    assert_eq!(f10.get("pipeline"), f12.get("pipeline"));
+}

@@ -1,0 +1,578 @@
+//! Adversarial wire-protocol suite (DESIGN.md §12.6).
+//!
+//! Drives raw localhost sockets with hostile input — random byte soup,
+//! truncated and oversized frames, unauthenticated first commands,
+//! replayed handshake transcripts, and request floods — and pins down
+//! the frontend's survival claims:
+//!
+//! * the serving thread never panics and the server keeps serving
+//!   compliant connections afterwards;
+//! * every reply to hostile input carries a code from the CLOSED error
+//!   set (`proto::ERROR_CODES`);
+//! * a replayed challenge response is rejected (nonces are
+//!   per-connection);
+//! * a flooding connection walks the rate-limit strike ladder to
+//!   disconnection while a concurrent compliant session's trajectory
+//!   bit-matches a solo run.
+//!
+//! These are exactly the claims that die without hostile tests — the
+//! handshake and rate limiter were co-designed with this suite.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use bnkfac::metrics::ServerRecord;
+use bnkfac::server::{frontend, proto, FrontendCfg, ServerCfg};
+use bnkfac::util::rng::Rng;
+use bnkfac::util::ser::Json;
+
+const TOKEN: &str = "adversarial-suite-shared-token";
+
+fn tmp_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bnkfac_adv_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn server_cfg() -> ServerCfg {
+    ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    }
+}
+
+fn start_server(
+    fcfg: FrontendCfg,
+) -> (SocketAddr, std::thread::JoinHandle<anyhow::Result<ServerRecord>>) {
+    let mut fe = frontend::bind_with("127.0.0.1:0", fcfg).expect("bind");
+    fe.set_ckpt_root(Some(tmp_dir()));
+    let addr = fe.local_addr();
+    let h = std::thread::spawn(move || fe.run(server_cfg(), None, 100_000_000));
+    (addr, h)
+}
+
+/// Raw test connection: unlike `bnkfac client` it sends whatever bytes
+/// it is told to and survives server-initiated closes.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        // bound every read so a silent server fails the test instead of
+        // hanging it
+        stream
+            .set_read_timeout(Some(Duration::from_secs(20)))
+            .unwrap();
+        Conn {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            out: stream,
+        }
+    }
+
+    /// Send raw bytes followed by `\n`; false when the peer is gone.
+    fn send(&mut self, payload: &[u8]) -> bool {
+        self.out.write_all(payload).is_ok()
+            && self.out.write_all(b"\n").is_ok()
+            && self.out.flush().is_ok()
+    }
+
+    /// Read one reply line; `None` on EOF / reset / timeout.
+    fn read_line(&mut self) -> Option<String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(line.trim_end().to_string()),
+        }
+    }
+
+    fn read_reply(&mut self) -> Option<proto::Reply> {
+        let line = self.read_line()?;
+        Some(proto::parse_reply(&line).expect("server replies parse as wire replies"))
+    }
+
+    /// Send a request line and expect a reply.
+    fn req(&mut self, line: &str) -> Option<proto::Reply> {
+        if !self.send(line.as_bytes()) {
+            return None;
+        }
+        self.read_reply()
+    }
+
+    fn ok(&mut self, line: &str) -> Json {
+        let r = self.req(line).expect("server replied");
+        assert!(r.ok, "request {line} failed: [{}] {}", r.code, r.error);
+        r.data
+    }
+
+    /// Complete the §12.6 handshake (challenge must be the first line).
+    fn authenticate(&mut self, token: &str) -> u64 {
+        let ch = self.read_reply().expect("challenge");
+        let nonce = proto::challenge_nonce(&ch).expect("first line is a challenge");
+        let r = self
+            .req(&proto::auth_request_line(&proto::auth_mac(token, nonce)))
+            .expect("auth reply");
+        assert!(r.ok, "handshake failed: [{}] {}", r.code, r.error);
+        assert_eq!(r.data.get("auth").and_then(|v| v.as_str()), Some("ok"));
+        nonce
+    }
+}
+
+fn wait_status(c: &mut Conn, name: &str, want: &str, pace: Duration) {
+    for _ in 0..4000 {
+        let data = c.ok(r#"{"op": "stats"}"#);
+        let done = data
+            .get("sessions")
+            .and_then(|v| v.as_arr())
+            .map(|ss| {
+                ss.iter().any(|s| {
+                    s.get("name").and_then(|v| v.as_str()) == Some(name)
+                        && s.get("status").and_then(|v| v.as_str()) == Some(want)
+                })
+            })
+            .unwrap_or(false);
+        if done {
+            return;
+        }
+        std::thread::sleep(pace);
+    }
+    panic!("session '{name}' never reached status {want}");
+}
+
+// NB: one physical line — the protocol is line-delimited.
+fn session_spec_json() -> &'static str {
+    r#"{"factors": 2, "dim": 36, "rank": 5, "n_stat": 3, "grad_cols": 4, "t_updt": 2, "algo": "b-kfac", "seed": "0x5eed", "steps": 24, "rho": 0.95, "lambda": 0.1}"#
+}
+
+// ------------------------------------------------------- hostile bytes
+
+/// Arbitrary single-frame payloads — byte soup, JSON-ish soup, and
+/// truncations of a valid request — never panic the server, always get
+/// a closed-set error code (or a legitimate ok), and never poison the
+/// connection state for subsequent well-formed requests.
+#[test]
+fn garbage_frames_get_closed_set_replies_and_server_survives() {
+    let (addr, server) = start_server(FrontendCfg::default());
+    let mut rng = Rng::new(0xADBE);
+    const JSONISH: &[u8] = br#"{}[]",:0123456789.eE+-truefalsn\u"opnamecreate "#;
+    let valid = format!(
+        r#"{{"op": "create", "name": "x", "session": {}}}"#,
+        session_spec_json()
+    );
+
+    let mut replies = 0u64;
+    for case in 0..48 {
+        let payload: Vec<u8> = match case % 3 {
+            // raw bytes (newlines stripped so one send = one frame;
+            // NULs allowed — the frame reader must cope)
+            0 => {
+                let n = 1 + rng.next_below(200);
+                (0..n)
+                    .map(|_| rng.next_u64() as u8)
+                    .filter(|&b| b != b'\n' && b != b'\r')
+                    .collect()
+            }
+            // JSON-shaped soup that gets deep into the parser
+            1 => {
+                let n = 1 + rng.next_below(200);
+                (0..n).map(|_| JSONISH[rng.next_below(JSONISH.len())]).collect()
+            }
+            // a valid request truncated at a random byte
+            _ => {
+                let cut = 1 + rng.next_below(valid.len() - 1);
+                valid.as_bytes()[..cut].to_vec()
+            }
+        };
+        // blank frames (valid UTF-8, all whitespace) are ignored by
+        // design and draw no reply — match the server's trim semantics
+        if std::str::from_utf8(&payload)
+            .map(|s| s.trim().is_empty())
+            .unwrap_or(false)
+        {
+            continue;
+        }
+        // fresh connection per case: a hostile frame may legally close it
+        let mut c = Conn::open(addr);
+        assert!(c.send(&payload), "case {case}: send failed");
+        let reply = c
+            .read_reply()
+            .unwrap_or_else(|| panic!("case {case}: no reply to {payload:?}"));
+        replies += 1;
+        if !reply.ok {
+            assert!(
+                proto::ERROR_CODES.contains(&reply.code.as_str()),
+                "case {case}: code '{}' outside the closed set",
+                reply.code
+            );
+        }
+    }
+    assert!(replies > 30, "suite degenerated: only {replies} replies");
+
+    // the serving thread survived all of it
+    let mut c = Conn::open(addr);
+    c.ok(r#"{"op": "stats"}"#);
+    c.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().expect("server run");
+    let f = rec.frontend.expect("frontend counters");
+    assert!(f.rejected > 0 && f.rejected <= f.requests);
+}
+
+/// A peer that sends a partial line and vanishes (truncated frame, no
+/// terminator) must not wedge the server or leak its reader thread into
+/// the command path.
+#[test]
+fn truncated_frame_then_hangup_is_harmless() {
+    let (addr, server) = start_server(FrontendCfg::default());
+    for _ in 0..8 {
+        let mut c = Conn::open(addr);
+        // no trailing newline, then an abrupt close
+        c.out.write_all(br#"{"op": "create", "name": "#).unwrap();
+        c.out.flush().unwrap();
+        drop(c);
+    }
+    let mut c = Conn::open(addr);
+    c.ok(r#"{"op": "stats"}"#);
+    c.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+}
+
+/// An oversized frame is refused with `oversized`, the connection is
+/// closed, and the force-close is attributed to the connection id in
+/// the final record's drop events.
+#[test]
+fn oversized_frame_drop_is_attributed_to_its_conn_id() {
+    let (addr, server) = start_server(FrontendCfg::default());
+    let mut c = Conn::open(addr);
+    let huge = vec![b'z'; proto::MAX_LINE + 64];
+    assert!(c.send(&huge));
+    let r = c.read_reply().expect("oversized reply");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_OVERSIZED);
+    assert!(c.req(r#"{"op": "stats"}"#).is_none(), "connection survived");
+
+    let mut c2 = Conn::open(addr);
+    c2.ok(r#"{"op": "stats"}"#);
+    c2.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().unwrap();
+    let f = rec.frontend.expect("frontend counters");
+    assert!(f.conn_dropped >= 1);
+    assert!(
+        f.drop_events
+            .iter()
+            .any(|(conn, reason)| *conn == 1 && reason == "oversized"),
+        "drop not attributed: {:?}",
+        f.drop_events
+    );
+}
+
+// --------------------------------------------------------- handshake
+
+/// The §12.6 handshake: a correct MAC authenticates; skipping the
+/// handshake is `auth_required`; a wrong MAC — including a REPLAYED
+/// response captured from another connection — is `auth_failed`; all
+/// three close the connection before any command is parsed.
+#[test]
+fn handshake_rejects_unauthenticated_wrong_mac_and_replay() {
+    let (addr, server) = start_server(FrontendCfg {
+        auth_token: Some(TOKEN.into()),
+        ..FrontendCfg::default()
+    });
+
+    // compliant connection: challenge → MAC → serve normally
+    let mut a = Conn::open(addr);
+    let nonce_a = a.authenticate(TOKEN);
+    a.ok(r#"{"op": "stats"}"#);
+
+    // replay: a fresh connection gets a fresh nonce, so connection A's
+    // captured response proves nothing
+    let mut b = Conn::open(addr);
+    let ch = b.read_reply().expect("challenge");
+    let nonce_b = proto::challenge_nonce(&ch).expect("challenge");
+    assert_ne!(nonce_a, nonce_b, "nonces must be per-connection");
+    let replayed = proto::auth_mac(TOKEN, nonce_a);
+    let r = b.req(&proto::auth_request_line(&replayed)).expect("reply");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_AUTH_FAILED);
+    assert!(b.req(r#"{"op": "stats"}"#).is_none(), "replayed conn lived");
+
+    // skipping the handshake: the first line is a command, not auth
+    let mut c = Conn::open(addr);
+    let ch = c.read_reply().expect("challenge");
+    assert!(proto::challenge_nonce(&ch).is_some());
+    let r = c.req(r#"{"op": "shutdown"}"#).expect("refusal");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_AUTH_REQUIRED);
+    assert!(c.req(r#"{"op": "stats"}"#).is_none(), "unauth conn lived");
+
+    // wrong MAC outright
+    let mut d = Conn::open(addr);
+    let _ = d.read_reply().expect("challenge");
+    let r = d
+        .req(&proto::auth_request_line("0xdeadbeefdeadbeefdeadbeefdeadbeef"))
+        .expect("reply");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_AUTH_FAILED);
+
+    // the authenticated connection is still fully functional — and the
+    // unauthenticated `shutdown` above was NOT applied
+    a.ok(r#"{"op": "stats"}"#);
+    a.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().unwrap();
+    let f = rec.frontend.expect("frontend counters");
+    assert!(f.auth_failures >= 3, "auth_failures={}", f.auth_failures);
+    assert!(
+        f.drop_events.iter().any(|(_, r)| r == "auth_required"),
+        "{:?}",
+        f.drop_events
+    );
+    assert!(
+        f.drop_events.iter().any(|(_, r)| r == "auth_failed"),
+        "{:?}",
+        f.drop_events
+    );
+}
+
+/// With no token configured the handshake machinery must be completely
+/// inert: no challenge line, first reply is the command's own.
+#[test]
+fn no_token_means_no_challenge() {
+    let (addr, server) = start_server(FrontendCfg::default());
+    let mut c = Conn::open(addr);
+    let r = c.req(r#"{"op": "stats"}"#).expect("reply");
+    assert!(r.ok, "[{}] {}", r.code, r.error);
+    assert!(
+        proto::challenge_nonce(&r).is_none(),
+        "no-auth server issued a challenge"
+    );
+    c.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+}
+
+// ------------------------------------------------------- rate limiting
+
+/// Acceptance criterion: a flooding connection trips `rate_limited` and
+/// is disconnected on the strike ladder, while a concurrent compliant
+/// connection's session finishes with a checkpoint that bit-matches a
+/// solo (flood-free, rate-limit-free) run.
+#[test]
+fn flood_is_limited_and_compliant_session_bitmatches_solo() {
+    let spec = format!(
+        r#"{{"op": "create", "name": "a", "weight": 2, "session": {}}}"#,
+        session_spec_json()
+    );
+
+    // solo reference: default (unlimited) frontend
+    let solo_ck = tmp_dir().join("adv_solo.json");
+    {
+        let (addr, server) = start_server(FrontendCfg::default());
+        let mut c = Conn::open(addr);
+        c.ok(&spec);
+        wait_status(&mut c, "a", "Done", Duration::from_millis(5));
+        c.ok(r#"{"op": "checkpoint", "name": "a", "path": "adv_solo.json"}"#);
+        c.ok(r#"{"op": "shutdown"}"#);
+        server.join().unwrap().unwrap();
+    }
+
+    // contended run: rate-limited frontend, one flooder + one compliant
+    let conc_ck = tmp_dir().join("adv_conc.json");
+    let (addr, server) = start_server(FrontendCfg {
+        conn_rate: 20.0,
+        conn_burst: 50.0,
+        ..FrontendCfg::default()
+    });
+    let mut c = Conn::open(addr);
+    c.ok(&spec);
+
+    // flood from a second connection: full-speed stats requests
+    let flood = std::thread::spawn(move || {
+        let mut f = Conn::open(addr);
+        let mut limited = 0u64;
+        let mut disconnected = false;
+        for _ in 0..100_000 {
+            let Some(r) = f.req(r#"{"op": "stats"}"#) else {
+                disconnected = true;
+                break;
+            };
+            if !r.ok {
+                assert_eq!(r.code, proto::E_RATE_LIMITED, "unexpected: {}", r.code);
+                limited += 1;
+            }
+        }
+        (limited, disconnected)
+    });
+    let (limited, disconnected) = flood.join().unwrap();
+    assert!(limited >= 1, "flood never tripped the rate limiter");
+    assert!(disconnected, "flooder was never disconnected");
+
+    // the compliant connection paces itself under 20 req/s and finishes
+    wait_status(&mut c, "a", "Done", Duration::from_millis(100));
+    c.ok(r#"{"op": "checkpoint", "name": "a", "path": "adv_conc.json"}"#);
+    let stats = c.ok(r#"{"op": "stats"}"#);
+    let f = stats.get("frontend").expect("frontend in stats");
+    assert!(
+        f.get("rate_limited").and_then(|v| v.as_usize()).unwrap() >= 1,
+        "rate_limited counter missing from stats"
+    );
+    c.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().unwrap();
+    let fr = rec.frontend.expect("frontend counters");
+    assert!(fr.rate_limited >= 1);
+    assert!(fr.conn_dropped >= 1);
+    // the drop is attributed to the flooder (conn 2; the compliant
+    // connection was conn 1), so assertions do not race on ordering
+    assert!(
+        fr.drop_events
+            .iter()
+            .any(|(conn, reason)| *conn == 2 && reason == "rate_limited"),
+        "{:?}",
+        fr.drop_events
+    );
+
+    // determinism: the flood must not have perturbed the trajectory
+    let solo = Json::parse(&std::fs::read_to_string(&solo_ck).unwrap()).unwrap();
+    let conc = Json::parse(&std::fs::read_to_string(&conc_ck).unwrap()).unwrap();
+    assert_eq!(solo.get("cfg"), conc.get("cfg"), "session cfg diverged");
+    assert_eq!(
+        solo.get("state"),
+        conc.get("state"),
+        "flooded run diverged bit-wise from the solo run"
+    );
+    let _ = std::fs::remove_file(solo_ck);
+    let _ = std::fs::remove_file(conc_ck);
+}
+
+/// A rate-limited request is refused AND discarded: exactly one reply
+/// per request (no desync) and the over-rate command is never applied.
+#[test]
+fn rate_limited_request_is_not_applied() {
+    // refill is 1 token per 20s: even a badly stalled CI runner cannot
+    // re-admit the second request
+    let (addr, server) = start_server(FrontendCfg {
+        conn_rate: 0.05,
+        conn_burst: 1.0,
+        ..FrontendCfg::default()
+    });
+    let mut c = Conn::open(addr);
+    // burst of 1: the first create is admitted…
+    let r = c
+        .req(&format!(
+            r#"{{"op": "create", "name": "kept", "session": {}}}"#,
+            session_spec_json()
+        ))
+        .expect("reply 1");
+    assert!(r.ok, "[{}] {}", r.code, r.error);
+    // …the immediate second one is refused with rate_limited — and must
+    // NOT create the session
+    let r = c
+        .req(&format!(
+            r#"{{"op": "create", "name": "refused", "session": {}}}"#,
+            session_spec_json()
+        ))
+        .expect("reply 2");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_RATE_LIMITED);
+
+    // fresh connections get fresh buckets: one request each
+    let mut c2 = Conn::open(addr);
+    let data = c2.ok(r#"{"op": "stats"}"#);
+    let names: Vec<String> = data
+        .get("sessions")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|s| s.get("name").and_then(|v| v.as_str()).unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["kept".to_string()], "refused create was applied");
+    let mut c3 = Conn::open(addr);
+    c3.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+}
+
+/// The connection cap refuses excess connections with `at_capacity`
+/// before a reader thread exists, and frees the slot when a connection
+/// closes.
+#[test]
+fn conn_limit_refuses_then_recovers() {
+    let (addr, server) = start_server(FrontendCfg {
+        conn_limit: 1,
+        ..FrontendCfg::default()
+    });
+    let mut a = Conn::open(addr);
+    a.ok(r#"{"op": "stats"}"#);
+
+    let mut b = Conn::open(addr);
+    let r = b.read_reply().expect("refusal line");
+    assert!(!r.ok);
+    assert_eq!(r.code, proto::E_AT_CAPACITY);
+    assert!(b.req(r#"{"op": "stats"}"#).is_none(), "refused conn lived");
+
+    drop(a); // frees the slot once the reader thread sees EOF
+    let mut c = None;
+    for _ in 0..200 {
+        let mut probe = Conn::open(addr);
+        if let Some(r) = probe.req(r#"{"op": "stats"}"#) {
+            if r.ok {
+                c = Some(probe);
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut c = c.expect("slot never freed after close");
+    c.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().unwrap();
+    let f = rec.frontend.expect("frontend counters");
+    assert!(
+        f.drop_events.iter().any(|(_, r)| r == "conn_limit"),
+        "{:?}",
+        f.drop_events
+    );
+}
+
+/// Hostile input against an AUTH-ENABLED server: garbage, oversized and
+/// truncated first lines must all die in the handshake with a closed
+/// set code — never reaching command parsing — and the server survives.
+#[test]
+fn garbage_against_auth_server_dies_in_handshake() {
+    let (addr, server) = start_server(FrontendCfg {
+        auth_token: Some(TOKEN.into()),
+        ..FrontendCfg::default()
+    });
+    let mut rng = Rng::new(0xFACE);
+    for case in 0..24 {
+        let mut c = Conn::open(addr);
+        let ch = c.read_reply().expect("challenge");
+        assert!(proto::challenge_nonce(&ch).is_some());
+        let payload: Vec<u8> = if case % 4 == 0 {
+            vec![b'q'; proto::MAX_LINE + 8] // oversized first frame
+        } else {
+            let n = 1 + rng.next_below(120);
+            (0..n)
+                .map(|_| rng.next_u64() as u8)
+                .filter(|&b| b != b'\n' && b != b'\r')
+                .collect()
+        };
+        // no blank-line skip here: the handshake answers EVERY first
+        // frame, including empty ones, with a refusal
+        assert!(c.send(&payload));
+        let r = c.read_reply().expect("handshake refusal");
+        assert!(!r.ok);
+        assert!(
+            [proto::E_AUTH_REQUIRED, proto::E_AUTH_FAILED, proto::E_OVERSIZED]
+                .contains(&r.code.as_str()),
+            "case {case}: code '{}' not a handshake refusal",
+            r.code
+        );
+        assert!(c.req(r#"{"op": "stats"}"#).is_none(), "case {case}: conn lived");
+    }
+    let mut c = Conn::open(addr);
+    c.authenticate(TOKEN);
+    c.ok(r#"{"op": "shutdown"}"#);
+    server.join().unwrap().unwrap();
+}
