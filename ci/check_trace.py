@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Trace-smoke gate (CI, DESIGN.md §14.5).
+
+Validates the artifacts of
+
+    bnkfac serve --jobs examples/jobs_trace_smoke.json \
+        --trace-out results/trace_smoke.jsonl \
+        --out results/trace_smoke_record.json
+
+The jobs file runs a compliant tenant next to one that breaches its
+op-rate quota, so a healthy trace must show the full observability
+surface: round lifecycle events, precond op events, the governor's
+strike -> throttle -> evict escalation, and a loss-accounting
+journal_summary tail. The record must carry the §14 additions
+(round-duration histogram, uptime/round correlation stamps, per-layer
+inversion-error probe samples, per-kind op latency histograms).
+
+Usage: python3 ci/check_trace.py <trace.jsonl> <record.json>
+Exits 1 listing every violated invariant — never just the first.
+"""
+
+import json
+import sys
+
+REQUIRED_EVENTS = [
+    "session_create",
+    "round_start",
+    "round_stop",
+    "op_submit",
+    "op_drain",
+    "op_publish",
+    "governor_strike",
+    "governor_throttle",
+    "governor_evict",
+    "request_apply",
+]
+
+
+def check_trace(path, errs):
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        errs.append(f"{path}: empty trace")
+        return
+    events = []
+    for i, ln in enumerate(lines):
+        try:
+            events.append(json.loads(ln))
+        except json.JSONDecodeError as e:
+            errs.append(f"{path}:{i + 1}: not valid JSON ({e})")
+    if errs:
+        return
+    kinds = {e.get("event") for e in events}
+    for want in REQUIRED_EVENTS:
+        if want not in kinds:
+            errs.append(f"{path}: no '{want}' event (saw {sorted(k for k in kinds if k)})")
+    for e in events:
+        if not isinstance(e.get("t_ms"), (int, float)):
+            errs.append(f"{path}: event missing numeric t_ms: {e}")
+            break
+    tail = events[-1]
+    if tail.get("event") != "journal_summary":
+        errs.append(f"{path}: last line is {tail.get('event')!r}, not journal_summary")
+    else:
+        if not tail.get("recorded", 0) > 0:
+            errs.append(f"{path}: journal_summary.recorded not > 0: {tail}")
+        if "dropped" not in tail:
+            errs.append(f"{path}: journal_summary missing 'dropped': {tail}")
+
+
+def check_record(path, errs):
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("evictions") != 1:
+        errs.append(f"{path}: expected exactly 1 eviction, got {rec.get('evictions')}")
+    if not rec.get("rounds", 0) >= 24:
+        errs.append(f"{path}: rounds {rec.get('rounds')} < 24 — governor never reached strike 3")
+    for stamp in ("uptime_ms", "round"):
+        if not isinstance(rec.get(stamp), (int, float)):
+            errs.append(f"{path}: missing correlation stamp '{stamp}'")
+    hist = rec.get("round_ms", {})
+    if not hist.get("count", 0) > 0:
+        errs.append(f"{path}: round_ms histogram empty: {hist}")
+    sessions = rec.get("sessions", [])
+    if not any(s.get("evict_reason") == "op_rate" for s in sessions):
+        errs.append(f"{path}: no session evicted for op_rate")
+    if not any(s.get("probes") for s in sessions):
+        errs.append(f"{path}: no session recorded inversion-error probe samples")
+    for s in sessions:
+        for p in s.get("probes", []):
+            if not (isinstance(p.get("rel_err"), (int, float)) and p["rel_err"] >= 0):
+                errs.append(f"{path}: bad probe sample in '{s.get('name')}': {p}")
+    op_counts = [
+        h.get("count", 0)
+        for s in sessions
+        for h in (s.get("service") or {}).get("op_ms", {}).values()
+    ]
+    if not any(c > 0 for c in op_counts):
+        errs.append(f"{path}: all per-kind op_ms histograms empty")
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    errs = []
+    check_trace(argv[0], errs)
+    check_record(argv[1], errs)
+    if errs:
+        print("trace-smoke gate FAILED:", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print("trace-smoke gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -20,6 +20,7 @@ mod common;
 
 use std::time::Instant;
 
+use bnkfac::obs::Journal;
 use bnkfac::optim::Algo;
 use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager};
 use bnkfac::util::ser::Json;
@@ -45,13 +46,18 @@ fn session_cfg(seed: u64, dim: usize, steps: u64) -> HostSessionCfg {
 }
 
 /// Wall seconds to run `n` sessions concurrently on one server.
-fn run_concurrent(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
+/// With `traced`, a full-size event journal is attached first — the
+/// configuration whose cost the `trace_ratio` gate bounds.
+fn run_concurrent_opt(n: usize, workers: usize, dim: usize, steps: u64, traced: bool) -> f64 {
     let mut mgr = SessionManager::new(ServerCfg {
         workers,
         max_sessions: n.max(1),
         staleness: 1,
         ..ServerCfg::default()
     });
+    if traced {
+        mgr.set_journal(Journal::new(bnkfac::obs::DEFAULT_CAP));
+    }
     for i in 0..n {
         mgr.create_host(&format!("s{i}"), 1, session_cfg(100 + i as u64, dim, steps), None)
             .unwrap();
@@ -59,6 +65,10 @@ fn run_concurrent(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
     let t0 = Instant::now();
     mgr.run_to_completion(10_000_000).unwrap();
     t0.elapsed().as_secs_f64()
+}
+
+fn run_concurrent(n: usize, workers: usize, dim: usize, steps: u64) -> f64 {
+    run_concurrent_opt(n, workers, dim, steps, false)
 }
 
 /// Wall seconds to run the same `n` sessions one after another.
@@ -126,12 +136,25 @@ fn main() {
     let speedup = concurrent4 / seq_sps;
     println!("4-session concurrent vs sequential speedup: {speedup:.2}x (target ≥ 2x)");
 
+    // tracing cost: the same 4-session mix with the event journal
+    // attached; the gate bounds traced/untraced throughput (≈1.0 when
+    // observation is as free as DESIGN.md §14 claims)
+    let traced_wall = run_concurrent_opt(4, workers, dim, steps, true);
+    let traced_sps = (4 * steps) as f64 / traced_wall;
+    let trace_ratio = traced_sps / concurrent4;
+    println!(
+        "4 traced: wall {traced_wall:.3}s, {traced_sps:.1} steps/s; \
+         trace-on vs trace-off ratio {trace_ratio:.3} (target ≈ 1.0)"
+    );
+
     let mut obj = vec![
         ("dim", Json::Num(dim as f64)),
         ("steps_per_session", Json::Num(steps as f64)),
         ("workers", Json::Num(workers as f64)),
         ("sequential_4", Json::Num(seq_sps)),
         ("speedup_4", Json::Num(speedup)),
+        ("traced_4", Json::Num(traced_sps)),
+        ("trace_ratio", Json::Num(trace_ratio)),
     ];
     let owned: Vec<(String, Json)> = sections;
     for (k, v) in &owned {

@@ -26,6 +26,7 @@ use crate::data::{Batch, Dataset};
 use crate::linalg::Mat;
 use crate::metrics::{EvalRecord, RunLog, ServiceRecord, TrainRecord};
 use crate::model::{BnState, ParamStore};
+use crate::obs::{ProbeRecorder, ProbeSample};
 use crate::optim::factor::{FactorSnapshot, FactorState, OpRequest, Stat};
 use crate::optim::{Algo, Hyper, LayerState, Policy};
 use crate::optim::seng::SengState;
@@ -97,6 +98,9 @@ pub struct Trainer<'rt> {
     /// async preconditioner service (cfg.precond); factor shard i maps
     /// to layer i/2, side A (even) / G (odd)
     pub service: Option<PrecondService>,
+    /// sampled inversion-error probes on installed decompositions
+    /// (observation only — never touches the trainer RNG or trajectory)
+    pub probe: ProbeRecorder,
     /// last published version installed per factor shard
     installed_versions: Vec<u64>,
     /// output index map for the train_step artifact
@@ -230,6 +234,7 @@ impl<'rt> Trainer<'rt> {
             step: 0,
             last_capture: None,
             service,
+            probe: ProbeRecorder::default(),
             installed_versions,
             out_idx,
             out_idx_light,
@@ -620,6 +625,9 @@ impl<'rt> Trainer<'rt> {
         let Some(svc) = self.service.as_ref() else {
             return;
         };
+        // probe damping: the base of the paper's φ_λ schedule — the
+        // probe needs a fixed regularizer, not the epoch-scheduled one
+        let lambda = self.policy.hyper.phi_lambda(0);
         for li in 0..self.layers.len() {
             for fi in 0..2 {
                 let idx = 2 * li + fi;
@@ -629,32 +637,37 @@ impl<'rt> Trainer<'rt> {
                 }
                 if let Some(snap) = cell.load_published() {
                     self.installed_versions[idx] = snap.version;
-                    svc.note_install(step.saturating_sub(snap.step));
+                    let staleness = step.saturating_sub(snap.step);
+                    svc.note_install(staleness);
                     let layer = &mut self.layers[li];
                     let fs = if fi == 0 { &mut layer.a } else { &mut layer.g };
                     fs.rep = Some(snap.rep.clone());
+                    // the op scheduled at the snapshot's production step
+                    // is the op that produced it
+                    let kind = self.policy.op_at(snap.step as usize, &fs.plan).kind_label();
+                    self.probe.on_install(
+                        idx,
+                        &fs.plan.id,
+                        kind,
+                        staleness,
+                        step,
+                        fs.gram.as_ref(),
+                        &snap.rep,
+                        lambda,
+                    );
                 }
             }
         }
     }
 
+    /// Recorded inversion-error probe samples (bounded window).
+    pub fn probe_samples(&self) -> &[ProbeSample] {
+        self.probe.samples()
+    }
+
     /// Snapshot of the service counters for the run log (None inline).
     pub fn service_record(&self) -> Option<ServiceRecord> {
-        use std::sync::atomic::Ordering::Relaxed;
-        let svc = self.service.as_ref()?;
-        let c = svc.counters();
-        Some(ServiceRecord {
-            workers: svc.workers(),
-            max_staleness_cfg: svc.cfg().max_staleness,
-            submitted: c.submitted.load(Relaxed),
-            completed: c.completed.load(Relaxed),
-            max_queue_depth: c.max_queue_depth.load(Relaxed),
-            max_staleness_steps: c.max_staleness_steps.load(Relaxed),
-            blocked_drains: c.blocked_drains.load(Relaxed),
-            blocked_wait_s: c.blocked_wait_ns.load(Relaxed) as f64 * 1e-9,
-            worker_busy_s: svc.worker_busy_seconds(),
-            installs: c.installs.load(Relaxed),
-        })
+        self.service.as_ref().map(|svc| svc.record())
     }
 
     /// Block until every pending decomposition has been applied and

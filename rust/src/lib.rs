@@ -19,6 +19,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod precond;
 pub mod runtime;

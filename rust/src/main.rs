@@ -18,6 +18,7 @@ use bnkfac::coordinator::probe::ErrorProbe;
 use bnkfac::coordinator::{Trainer, TrainerCfg};
 use bnkfac::data::{Dataset, DatasetCfg};
 use bnkfac::metrics::ServerRecord;
+use bnkfac::obs::Journal;
 use bnkfac::optim::{Algo, Hyper};
 use bnkfac::precond::PrecondCfg;
 use bnkfac::runtime::Runtime;
@@ -51,6 +52,16 @@ fn read_token_file(path: &str) -> Result<String> {
     Ok(tok)
 }
 
+/// Export a run's event journal as JSONL (`serve --trace-out`).
+fn write_trace(path: &str, journal: &Journal) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, journal.export_jsonl())?;
+    println!("wrote trace {path}");
+    Ok(())
+}
+
 fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
     println!("--- session server ---\n{}", rec.summary());
     if let Some(path) = out {
@@ -81,6 +92,10 @@ fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
 ///   per-connection token bucket (repeat offenders are disconnected);
 ///   `--conn-limit <n>` caps concurrent connections.
 ///
+/// Both frontends take `--trace-out <path>`: the run records structured
+/// events into the bounded journal (DESIGN.md §14.1) and exports them
+/// as JSONL when serving ends.
+///
 /// Host sessions run entirely on the host substrate — no artifacts or
 /// PJRT needed.
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -88,6 +103,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listen = args.get("listen").map(|s| s.to_string());
     let workers = args.get_usize("workers", 0);
     let out = args.get("out").map(|s| s.to_string());
+    // --trace-out <path>: attach the structured event journal
+    // (DESIGN.md §14.1) for the whole run and export it as JSONL
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    let journal = trace_out
+        .as_ref()
+        .map(|_| Journal::new(bnkfac::obs::DEFAULT_CAP));
     match (jobs, listen) {
         (Some(_), Some(_)) => bail!("serve takes --jobs OR --listen, not both"),
         (None, None) => bail!("serve requires --jobs <file> or --listen <addr>"),
@@ -96,7 +117,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let max_rounds = args.get_u64("max-rounds", 1_000_000);
             args.finish().map_err(|e| anyhow!(e))?;
             let workers = (workers > 0).then_some(workers);
-            let rec = bnkfac::server::driver::run_jobs(&jobs, workers, max_rounds)?;
+            let rec =
+                bnkfac::server::driver::run_jobs_with(&jobs, workers, max_rounds, journal.clone())?;
+            if let (Some(path), Some(j)) = (&trace_out, &journal) {
+                write_trace(path, j)?;
+            }
             write_record(&rec, out)
         }
         (None, Some(addr)) => {
@@ -145,6 +170,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 },
             )?;
             fe.set_ckpt_root(Some(ckpt_dir.into()));
+            if let Some(j) = &journal {
+                fe.set_journal(j.clone());
+            }
             let local = fe.local_addr();
             println!("listening on {local}");
             if let Some(pf) = port_file {
@@ -154,6 +182,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 std::fs::write(&pf, local.to_string())?;
             }
             let rec = fe.run(cfg, rt.as_ref(), max_rounds)?;
+            if let (Some(path), Some(j)) = (&trace_out, &journal) {
+                write_trace(path, j)?;
+            }
             write_record(&rec, out)
         }
     }
@@ -171,6 +202,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `--repeat <n>` sends the same request n times on ONE connection
 /// (handshake once) and prints a summary instead of failing on error
 /// replies — the smoke tests use it to exercise the rate limiter.
+/// `--stats-watch [--interval-ms <ms>] [--frames <n>]` subscribes to
+/// the server's `stats-stream` and prints one line per frame.
 fn cmd_client(args: &Args) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
 
@@ -178,7 +211,23 @@ fn cmd_client(args: &Args) -> Result<()> {
         .get("addr")
         .map(|s| s.to_string())
         .ok_or_else(|| anyhow!("client requires --addr <host:port>"))?;
-    let line = match args.get("req") {
+    // --stats-watch: subscribe to the server's stats-stream and print
+    // each frame; --interval-ms paces it, --frames bounds it (0 = until
+    // interrupted). Mutually exclusive with building a one-shot request.
+    let stats_watch = args.flag("stats-watch");
+    let watch_frames = args.get_u64("frames", 0);
+    let watch_interval = args.get_u64("interval-ms", 500);
+    let line = if stats_watch {
+        let j = Json::obj(vec![
+            ("op", Json::str("stats-stream")),
+            ("interval_ms", Json::Num(watch_interval as f64)),
+            ("frames", Json::Num(watch_frames as f64)),
+        ]);
+        proto::parse_request(&j.to_string_compact())
+            .map_err(|(code, msg)| anyhow!("bad stats-watch request ({code}): {msg}"))?;
+        j.to_string_compact()
+    } else {
+        match args.get("req") {
         Some(raw) => {
             let raw = raw.to_string();
             // validate locally so typos fail before they hit the wire
@@ -258,6 +307,7 @@ fn cmd_client(args: &Args) -> Result<()> {
                 .map_err(|(code, msg)| anyhow!("bad request ({code}): {msg}"))?;
             j.to_string_compact()
         }
+        }
     };
     let token = args.get("auth-token-file").map(read_token_file).transpose()?;
     let repeat = args.get_usize("repeat", 1).max(1);
@@ -297,6 +347,29 @@ fn cmd_client(args: &Args) -> Result<()> {
         let r = proto::parse_reply(&ack)?;
         ensure!(r.ok, "authentication failed [{}]: {}", r.code, r.error);
         reader.get_ref().set_read_timeout(None)?;
+    }
+
+    if stats_watch {
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
+        let mut n = 0u64;
+        loop {
+            let Some(reply) = read_reply(&mut reader)? else {
+                break;
+            };
+            println!("{reply}");
+            let r = proto::parse_reply(&reply)?;
+            ensure!(r.ok, "server error [{}]: {}", r.code, r.error);
+            n += 1;
+            // a bounded stream ends after its last frame but the server
+            // keeps the connection open; stop reading ourselves
+            if watch_frames > 0 && n >= watch_frames {
+                break;
+            }
+        }
+        ensure!(n > 0, "server closed before the first stats frame");
+        return Ok(());
     }
 
     let mut sent = 0u64;

@@ -4,6 +4,7 @@
 //! utilization) attached to the run log when the async service is on.
 
 use crate::linalg::{LowRank, Mat};
+use crate::obs::{Hist, ProbeSample};
 use crate::util::ser::{CsvWriter, Json};
 
 /// §4.2 error metrics between an approximate K-factor representation and
@@ -88,6 +89,11 @@ pub struct ServiceRecord {
     pub worker_busy_s: f64,
     /// published-decomposition installs into the trainer's factor states
     pub installs: u64,
+    /// inverse-update latency histograms per decomposition kind
+    /// (`brand` / `rsvd` / `eigh`), DESIGN.md §14.2
+    pub op_ms: Vec<(String, Hist)>,
+    /// inverse-application latency histogram (the per-step apply half)
+    pub apply_ms: Hist,
 }
 
 impl ServiceRecord {
@@ -106,6 +112,16 @@ impl ServiceRecord {
             ("blocked_wait_s", Json::Num(self.blocked_wait_s)),
             ("worker_busy_s", Json::Num(self.worker_busy_s)),
             ("installs", Json::Num(self.installs as f64)),
+            (
+                "op_ms",
+                Json::Obj(
+                    self.op_ms
+                        .iter()
+                        .map(|(k, h)| (k.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+            ("apply_ms", self.apply_ms.to_json()),
         ])
     }
 }
@@ -137,6 +153,12 @@ pub struct SessionRecord {
     pub status: String,
     /// first error the session hit (empty when healthy)
     pub error: String,
+    /// sampled online inversion-error probes (DESIGN.md §14.3):
+    /// per-layer residuals with rank and staleness context
+    pub probes: Vec<ProbeSample>,
+    /// this session's preconditioner-service slice (op/apply latency
+    /// histograms ride in here), when the session owns a service
+    pub service: Option<ServiceRecord>,
 }
 
 impl SessionRecord {
@@ -156,6 +178,17 @@ impl SessionRecord {
             ("resident_mb", Json::Num(self.resident_mb)),
             ("status", Json::str(&self.status)),
             ("error", Json::str(&self.error)),
+            (
+                "probes",
+                Json::Arr(self.probes.iter().map(|p| p.to_json()).collect()),
+            ),
+            (
+                "service",
+                self.service
+                    .as_ref()
+                    .map(|s| s.to_json())
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -194,6 +227,9 @@ pub struct FrontendRecord {
     /// server memory or reply size without limit); `conn_dropped`
     /// keeps the true total
     pub drop_events: Vec<(u64, String)>,
+    /// per-request wire latency (queueing + apply + reply write),
+    /// measured on the connection threads (DESIGN.md §14.2)
+    pub wire_ms: Hist,
 }
 
 impl FrontendRecord {
@@ -229,6 +265,7 @@ impl FrontendRecord {
                         .collect(),
                 ),
             ),
+            ("wire_ms", self.wire_ms.to_json()),
         ])
     }
 }
@@ -265,6 +302,14 @@ pub struct ServerRecord {
     pub sessions: Vec<SessionRecord>,
     /// present when the run was driven over the network frontend
     pub frontend: Option<FrontendRecord>,
+    /// monotonic milliseconds since the manager started — the stamp
+    /// that correlates snapshots with journal events (same clock)
+    pub uptime_ms: u64,
+    /// serving round at record time (same value `rounds` counts toward;
+    /// duplicated for symmetry with event stamps)
+    pub round: u64,
+    /// serving-round duration histogram (DESIGN.md §14.2)
+    pub round_ms: Hist,
 }
 
 impl ServerRecord {
@@ -295,6 +340,9 @@ impl ServerRecord {
                     .map(|f| f.to_json())
                     .unwrap_or(Json::Null),
             ),
+            ("uptime_ms", Json::Num(self.uptime_ms as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("round_ms", self.round_ms.to_json()),
         ])
     }
 
@@ -490,10 +538,23 @@ mod tests {
             blocked_wait_s: 0.25,
             worker_busy_s: 1.5,
             installs: 48,
+            op_ms: vec![("brand".into(), {
+                let mut h = Hist::new();
+                h.record_secs(2e-3);
+                h
+            })],
+            apply_ms: Hist::default(),
         };
         let j = rec.to_json();
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(j.get("max_queue_depth").and_then(|v| v.as_usize()), Some(7));
+        let brand = j.get("op_ms").and_then(|o| o.get("brand")).unwrap();
+        assert_eq!(brand.get("count").and_then(|v| v.as_usize()), Some(1));
+        assert!(brand.get("p99_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert_eq!(
+            j.get("apply_ms").and_then(|h| h.get("count")).and_then(|v| v.as_usize()),
+            Some(0)
+        );
         let mut log = RunLog::new("x");
         assert_eq!(log.service_summary(), "");
         log.service = Some(rec);
@@ -532,8 +593,20 @@ mod tests {
                 resident_mb: 0.25,
                 status: "Evicted".into(),
                 error: String::new(),
+                probes: vec![ProbeSample {
+                    layer: "f0/A".into(),
+                    kind: "brand".into(),
+                    rank: 6,
+                    staleness: 2,
+                    step: 16,
+                    rel_err: 0.031,
+                }],
+                service: None,
             }],
             frontend: None,
+            uptime_ms: 2000,
+            round: 100,
+            round_ms: Hist::default(),
         };
         let j = rec.to_json();
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
@@ -551,6 +624,13 @@ mod tests {
             sessions[0].get("throttled_rounds").and_then(|v| v.as_usize()),
             Some(5)
         );
+        // satellite: monotonic correlation stamps on every record
+        assert_eq!(j.get("uptime_ms").and_then(|v| v.as_usize()), Some(2000));
+        assert_eq!(j.get("round").and_then(|v| v.as_usize()), Some(100));
+        let probes = sessions[0].get("probes").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(probes[0].get("layer").and_then(|v| v.as_str()), Some("f0/A"));
+        assert_eq!(probes[0].get("rank").and_then(|v| v.as_usize()), Some(6));
+        assert!(probes[0].get("rel_err").and_then(|v| v.as_f64()).unwrap() > 0.0);
         let s = rec.summary();
         assert!(s.contains("fairness=0.980"), "{s}");
         assert!(s.contains("1 evictions"), "{s}");
@@ -571,6 +651,12 @@ mod tests {
                 conn_dropped: 2,
                 by_kind: vec![("create".into(), 1), ("stats".into(), 4)],
                 drop_events: vec![(2, "auth_failed".into()), (3, "rate_limited".into())],
+                wire_ms: {
+                    let mut h = Hist::new();
+                    h.record_secs(0.5e-3);
+                    h.record_secs(8e-3);
+                    h
+                },
             }),
             ..Default::default()
         };
@@ -592,6 +678,9 @@ mod tests {
             drops[1].get("reason").and_then(|v| v.as_str()),
             Some("rate_limited")
         );
+        let wire = f.get("wire_ms").unwrap();
+        assert_eq!(wire.get("count").and_then(|v| v.as_usize()), Some(2));
+        assert!(wire.get("p99_ms").and_then(|v| v.as_f64()).unwrap() >= 8.0);
         let s = rec.summary();
         assert!(s.contains("3 connections"), "{s}");
         assert!(s.contains("create=1"), "{s}");

@@ -1,0 +1,379 @@
+//! Fixed-bucket log2 latency histograms (DESIGN.md §14.2).
+//!
+//! One histogram is `BUCKETS` power-of-two microsecond bins: bucket `i`
+//! counts samples in `[2^i, 2^{i+1})` µs (bucket 0 also absorbs
+//! sub-microsecond samples, the last bucket absorbs everything above
+//! its lower edge). Fixed buckets make two things trivially true that
+//! percentile-sketch structures have to work for:
+//!
+//! * **mergeability** — merging is element-wise addition, so per-thread
+//!   and per-connection histograms can be summed into a server-wide one
+//!   with no loss (merge is associative and commutative by
+//!   construction, which the proptests pin down);
+//! * **bounded cost** — recording is one index computation and one
+//!   counter increment, cheap enough for every request / round / op.
+//!
+//! NaN safety is a first-class requirement here (same bug class as the
+//! six PR-3 comparator fixes): a NaN, negative or infinite duration —
+//! e.g. produced by an instant-math bug upstream — must neither panic
+//! nor poison the percentiles. Classification goes through
+//! [`f64::total_cmp`] so every input, NaN included, takes a defined
+//! path: invalid samples land in a separate `invalid` counter that is
+//! reported but excluded from percentile extraction.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::ser::Json;
+
+/// Number of log2 buckets: `[1µs, 2µs) … [2^39µs, ∞)` ≈ 1µs to ~6.4
+/// days, far past any latency this server can produce either side.
+pub const BUCKETS: usize = 40;
+
+/// Classify one duration (seconds) into a bucket index, or `None` for
+/// invalid samples (NaN, negative, ±inf). Uses `total_cmp` so NaN takes
+/// the explicit-rejection path instead of failing every comparison
+/// silently.
+pub fn bucket_of(secs: f64) -> Option<usize> {
+    if !secs.is_finite() || secs.total_cmp(&0.0) == std::cmp::Ordering::Less {
+        return None;
+    }
+    let micros = secs * 1e6;
+    if micros.total_cmp(&1.0) == std::cmp::Ordering::Less {
+        return Some(0);
+    }
+    // log2 of a finite value ≥ 1 is finite and ≥ 0
+    Some((micros.log2().floor() as usize).min(BUCKETS - 1))
+}
+
+/// Upper edge of bucket `i`, in seconds (the conservative value
+/// percentile extraction reports).
+pub fn bucket_upper_secs(i: usize) -> f64 {
+    2f64.powi(i as i32 + 1) * 1e-6
+}
+
+/// A mergeable log2 latency histogram. `Default` is the empty
+/// histogram (no allocations until the first sample), so the metric
+/// records that embed one stay cheaply constructible in tests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Hist {
+    /// bucket counts; empty until the first sample, then `BUCKETS` long
+    pub counts: Vec<u64>,
+    /// samples rejected by NaN-safe classification (NaN / negative / ±inf)
+    pub invalid: u64,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    fn ensure(&mut self) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+    }
+
+    /// Record one duration in seconds. Never panics; invalid samples
+    /// are counted separately.
+    pub fn record_secs(&mut self, secs: f64) {
+        match bucket_of(secs) {
+            Some(i) => {
+                self.ensure();
+                self.counts[i] += 1;
+            }
+            None => self.invalid += 1,
+        }
+    }
+
+    /// Total valid samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Element-wise sum; associative and commutative, and tolerant of
+    /// the empty-`Default` representation on either side.
+    pub fn merge(&mut self, other: &Hist) {
+        if !other.counts.is_empty() {
+            self.ensure();
+            for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += b;
+            }
+        }
+        self.invalid += other.invalid;
+    }
+
+    /// q-th percentile (q in [0,1]) as the upper edge of the bucket
+    /// holding the ceil(q·n)-th sample — a conservative bound, never an
+    /// interpolation. Returns 0.0 on an empty histogram. `q` outside
+    /// [0,1] (NaN included) is clamped via `total_cmp`.
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let q = if q.total_cmp(&0.0) == std::cmp::Ordering::Less || q.is_nan() {
+            0.0
+        } else if q.total_cmp(&1.0) == std::cmp::Ordering::Greater {
+            1.0
+        } else {
+            q
+        };
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_upper_secs(i);
+            }
+        }
+        bucket_upper_secs(BUCKETS - 1)
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_secs(0.50) * 1e3
+    }
+
+    pub fn p90_ms(&self) -> f64 {
+        self.percentile_secs(0.90) * 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_secs(0.99) * 1e3
+    }
+
+    /// `{count, invalid, p50_ms, p90_ms, p99_ms, buckets: [[i, n], …]}`
+    /// — buckets serialized sparsely (only non-zero bins) so an idle
+    /// histogram costs a few bytes in a stats reply.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| Json::arr(vec![Json::Num(i as f64), Json::Num(*c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("invalid", Json::Num(self.invalid as f64)),
+            ("p50_ms", Json::Num(self.p50_ms())),
+            ("p90_ms", Json::Num(self.p90_ms())),
+            ("p99_ms", Json::Num(self.p99_ms())),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Lock-free shared histogram for recording from worker / connection
+/// threads: one relaxed `fetch_add` per sample, snapshot on demand.
+/// Relaxed ordering is correct here — each counter is independent and
+/// snapshots are advisory (metrics, not synchronization).
+pub struct AtomicHist {
+    counts: [AtomicU64; BUCKETS],
+    invalid: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        AtomicHist {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            invalid: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> AtomicHist {
+        AtomicHist::default()
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        match bucket_of(secs) {
+            Some(i) => self.counts[i].fetch_add(1, Ordering::Relaxed),
+            None => self.invalid.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
+    pub fn snapshot(&self) -> Hist {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let invalid = self.invalid.load(Ordering::Relaxed);
+        if invalid == 0 && counts.iter().all(|&c| c == 0) {
+            return Hist::default();
+        }
+        Hist { counts, invalid }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_extracts_percentiles() {
+        let mut h = Hist::new();
+        // 100 samples at ~1ms, 10 at ~100ms
+        for _ in 0..100 {
+            h.record_secs(1.5e-3);
+        }
+        for _ in 0..10 {
+            h.record_secs(0.12);
+        }
+        assert_eq!(h.count(), 110);
+        assert!(h.p50_ms() >= 1.0 && h.p50_ms() <= 4.1, "{}", h.p50_ms());
+        assert!(h.p99_ms() >= 100.0, "{}", h.p99_ms());
+        // percentiles are non-decreasing
+        assert!(h.p50_ms() <= h.p90_ms() && h.p90_ms() <= h.p99_ms());
+    }
+
+    #[test]
+    fn empty_histogram_is_inert() {
+        let h = Hist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_secs(0.99), 0.0);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    /// Regression (ISSUE 6 satellite): NaN / ±inf / negative durations
+    /// must neither panic nor perturb percentiles — the same comparator
+    /// bug class the six PR-3 `total_cmp` fixes closed.
+    #[test]
+    fn nan_inf_durations_are_quarantined() {
+        let mut h = Hist::new();
+        for _ in 0..50 {
+            h.record_secs(2e-3);
+        }
+        let p99_before = h.p99_ms();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -f64::MIN_POSITIVE] {
+            h.record_secs(bad);
+        }
+        assert_eq!(h.count(), 50, "invalid samples must not enter buckets");
+        assert_eq!(h.invalid, 5);
+        assert_eq!(h.p99_ms(), p99_before, "percentiles must be NaN-immune");
+        // NaN quantile request is clamped, not propagated
+        assert!(h.percentile_secs(f64::NAN).is_finite());
+        // the atomic variant shares the classifier
+        let a = AtomicHist::new();
+        a.record_secs(f64::NAN);
+        a.record_secs(1e-3);
+        let s = a.snapshot();
+        assert_eq!((s.count(), s.invalid), (1, 1));
+    }
+
+    #[test]
+    fn merge_sums_including_empty() {
+        let mut a = Hist::new();
+        a.record_secs(1e-3);
+        let mut b = Hist::new();
+        b.record_secs(1e-3);
+        b.record_secs(f64::NAN);
+        let empty = Hist::default();
+        a.merge(&b);
+        a.merge(&empty);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.invalid, 1);
+        let mut e = Hist::default();
+        e.merge(&a);
+        assert_eq!(e.count(), 2);
+    }
+
+    /// Property: merge is associative — (a ∪ b) ∪ c == a ∪ (b ∪ c).
+    #[test]
+    fn prop_merge_associative() {
+        crate::util::proptest::check(
+            "hist: merge associativity",
+            |rng| {
+                let mut hs = Vec::new();
+                for _ in 0..3 {
+                    let mut h = Hist::new();
+                    for _ in 0..rng.next_below(50) {
+                        // spread over ~9 decades incl. occasional garbage
+                        let v = match rng.next_below(12) {
+                            0 => f64::NAN,
+                            1 => -rng.next_f64(),
+                            _ => 10f64.powi(rng.next_below(9) as i32 - 6) * rng.next_f64(),
+                        };
+                        h.record_secs(v);
+                    }
+                    hs.push(h);
+                }
+                hs
+            },
+            |hs| {
+                let (a, b, c) = (&hs[0], &hs[1], &hs[2]);
+                let mut left = a.clone();
+                left.merge(b);
+                left.merge(c);
+                let mut bc = b.clone();
+                bc.merge(c);
+                let mut right = a.clone();
+                right.merge(&bc);
+                if left == right {
+                    Ok(())
+                } else {
+                    Err("merge not associative".into())
+                }
+            },
+        );
+    }
+
+    /// Property: bucket index is monotone over increasing finite
+    /// positive durations, and invalid inputs classify to None.
+    #[test]
+    fn prop_bucket_monotone() {
+        crate::util::proptest::check(
+            "hist: bucket monotonicity",
+            |rng| {
+                let a = 10f64.powi(rng.next_below(11) as i32 - 7) * (1.0 + rng.next_f64());
+                let b = a * (1.0 + rng.next_f64() * 100.0);
+                (a, b)
+            },
+            |(a, b)| {
+                let (ba, bb) = (bucket_of(*a), bucket_of(*b));
+                match (ba, bb) {
+                    (Some(x), Some(y)) if x <= y => Ok(()),
+                    other => Err(format!("non-monotone: {a} -> {other:?} <- {b}")),
+                }
+            },
+        );
+    }
+
+    /// Property: percentiles are monotone in q, bounded by the last
+    /// non-empty bucket's upper edge, and never 0 on non-empty data.
+    #[test]
+    fn prop_percentile_bounds() {
+        crate::util::proptest::check(
+            "hist: percentile bounds",
+            |rng| {
+                let mut h = Hist::new();
+                for _ in 0..(1 + rng.next_below(100)) {
+                    h.record_secs(10f64.powi(rng.next_below(8) as i32 - 5) * rng.next_f64());
+                }
+                let q1 = rng.next_f64();
+                let q2 = rng.next_f64();
+                (h, q1.min(q2), q1.max(q2))
+            },
+            |(h, qlo, qhi)| {
+                let (plo, phi) = (h.percentile_secs(*qlo), h.percentile_secs(*qhi));
+                if plo.total_cmp(&phi) == std::cmp::Ordering::Greater {
+                    return Err(format!("p({qlo})={plo} > p({qhi})={phi}"));
+                }
+                let max_edge = h
+                    .counts
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| **c > 0)
+                    .map(|(i, _)| bucket_upper_secs(i))
+                    .last()
+                    .unwrap_or(0.0);
+                if h.count() > 0 && (phi <= 0.0 || phi > max_edge) {
+                    return Err(format!("p({qhi})={phi} outside (0, {max_edge}]"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

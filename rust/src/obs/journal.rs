@@ -1,0 +1,219 @@
+//! Bounded, drop-counting structured event journal (DESIGN.md §14.1).
+//!
+//! A fixed-capacity ring of timestamped events shared (via `Arc`) by
+//! every layer of the server: the accept loop, the connection threads,
+//! the serving loop, the governor and the precond service all `emit`
+//! into the same journal. Two properties are load-bearing:
+//!
+//! * **never blocks the hot path** — `emit` uses `try_lock`; if the
+//!   ring is contended the event is *dropped and counted*, not waited
+//!   for. A stats reader holding the lock can therefore never stall a
+//!   serving round or a connection thread.
+//! * **bounded, loss-visible** — when the ring is full the oldest event
+//!   is evicted and the drop counter incremented, so the exported
+//!   JSONL always says how much it is missing.
+//!
+//! Timestamps are monotonic milliseconds since journal creation
+//! (`Instant`-based — wall-clock jumps cannot reorder the timeline),
+//! the same `uptime_ms` domain the stats records are stamped with, so
+//! events and snapshots correlate directly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::ser::Json;
+
+/// Default ring capacity: enough for the CI smoke runs and short soak
+/// windows; long-lived servers see a sliding window plus drop counts.
+pub const DEFAULT_CAP: usize = 4096;
+
+/// One structured event: monotonic timestamp, serving round at emission
+/// (0 when emitted off the serving loop), a stable kind label, and a
+/// flat JSON detail object.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub t_ms: u64,
+    pub round: u64,
+    pub kind: &'static str,
+    pub detail: Json,
+}
+
+impl Event {
+    /// One JSONL line: `t_ms`/`round`/`event` plus the detail fields
+    /// flattened in (detail keys never collide with the three stamps —
+    /// emitters own their field names).
+    pub fn to_json(&self) -> Json {
+        let mut m = match &self.detail {
+            Json::Obj(m) => m.clone(),
+            Json::Null => Default::default(),
+            other => [("detail".to_string(), other.clone())].into_iter().collect(),
+        };
+        m.insert("t_ms".into(), Json::Num(self.t_ms as f64));
+        m.insert("round".into(), Json::Num(self.round as f64));
+        m.insert("event".into(), Json::str(self.kind));
+        Json::Obj(m)
+    }
+}
+
+/// The shared journal. Construct once (per server run) and clone the
+/// `Arc` into every layer that emits.
+pub struct Journal {
+    t0: Instant,
+    cap: usize,
+    ring: Mutex<VecDeque<Event>>,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Arc<Journal> {
+        Arc::new(Journal {
+            t0: Instant::now(),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::with_capacity(cap.max(1).min(DEFAULT_CAP))),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Monotonic milliseconds since the journal was created — the
+    /// shared clock domain for events and record stamps.
+    pub fn uptime_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
+    /// Emit one event. Non-blocking: contention or overflow drops
+    /// (counted), never waits.
+    pub fn emit(&self, round: u64, kind: &'static str, detail: Json) {
+        let ev = Event {
+            t_ms: self.uptime_ms(),
+            round,
+            kind,
+            detail,
+        };
+        match self.ring.try_lock() {
+            Ok(mut q) => {
+                if q.len() >= self.cap {
+                    q.pop_front();
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                q.push_back(ev);
+                self.recorded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Emit with a field list (the common emitter shape).
+    pub fn emit_kv(&self, round: u64, kind: &'static str, fields: Vec<(&str, Json)>) {
+        self.emit(round, kind, Json::obj(fields));
+    }
+
+    /// Events ever dropped (ring overflow + lock contention).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events ever successfully recorded (including ones since evicted).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Events currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock().map(|q| q.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of the current window (oldest first).
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.ring
+            .lock()
+            .map(|q| q.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Export the window as JSONL: one event object per line, then a
+    /// trailing `journal_summary` line carrying the loss accounting —
+    /// a consumer can always tell a complete trace from a clipped one.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.snapshot() {
+            out.push_str(&ev.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out.push_str(
+            &Json::obj(vec![
+                ("event", Json::str("journal_summary")),
+                ("t_ms", Json::Num(self.uptime_ms() as f64)),
+                ("recorded", Json::Num(self.recorded() as f64)),
+                ("dropped", Json::Num(self.dropped() as f64)),
+            ])
+            .to_string_compact(),
+        );
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_and_exports_jsonl() {
+        let j = Journal::new(16);
+        j.emit_kv(3, "round_stop", vec![("stepped", Json::Num(2.0))]);
+        j.emit(4, "governor_evict", Json::Null);
+        let out = j.export_jsonl();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3, "{out}");
+        for l in &lines {
+            let v = Json::parse(l).expect("every exported line parses");
+            assert!(v.get("event").is_some());
+        }
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").and_then(|v| v.as_str()), Some("round_stop"));
+        assert_eq!(first.get("round").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(first.get("stepped").and_then(|v| v.as_usize()), Some(2));
+        let tail = Json::parse(lines[2]).unwrap();
+        assert_eq!(tail.get("event").and_then(|v| v.as_str()), Some("journal_summary"));
+        assert_eq!(tail.get("dropped").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    /// Satellite: ring overflow evicts oldest-first and every loss is
+    /// counted — the journal is bounded AND loss-visible.
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let j = Journal::new(8);
+        for i in 0..20u64 {
+            j.emit_kv(i, "round_start", vec![("i", Json::Num(i as f64))]);
+        }
+        assert_eq!(j.len(), 8);
+        assert_eq!(j.recorded(), 20);
+        assert_eq!(j.dropped(), 12);
+        let snap = j.snapshot();
+        // the window is the 12..20 suffix, in order
+        let rounds: Vec<u64> = snap.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, (12..20).collect::<Vec<_>>());
+        let out = j.export_jsonl();
+        assert!(out.contains("\"dropped\": 12") || out.contains("\"dropped\":12"), "{out}");
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let j = Journal::new(8);
+        j.emit(0, "a", Json::Null);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        j.emit(0, "b", Json::Null);
+        let s = j.snapshot();
+        assert!(s[0].t_ms <= s[1].t_ms);
+    }
+}

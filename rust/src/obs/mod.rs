@@ -1,0 +1,30 @@
+//! Observability subsystem (DESIGN.md §14): structured event journal,
+//! log2 latency histograms, and sampled online inversion-error probes.
+//!
+//! Three pieces, one budget rule — *nothing here may block or perturb
+//! the hot path*:
+//!
+//! * [`journal`] — a bounded, drop-counting ring of structured events
+//!   (request accept/parse/apply, round start/stop, precond op
+//!   submit/drain/publish, governor throttle/evict, worker
+//!   grow/shrink) with monotonic timestamps, exported as JSONL via
+//!   `bnkfac serve --trace-out`;
+//! * [`hist`] — fixed-bucket log2 latency histograms (mergeable,
+//!   p50/p90/p99) embedded in the metric records: per-request wire
+//!   latency in `FrontendRecord`, round duration in `ServerRecord`,
+//!   per-decomposition-kind inverse-update and apply durations in
+//!   `ServiceRecord`;
+//! * [`probe`] — sampled `‖(A+λI)(Â+λI)⁻¹v − v‖/‖v‖` residual checks
+//!   on deterministic probe vectors, surfacing the Brand / rsvd / eigh
+//!   accuracy tradeoff live, per layer, with rank and staleness.
+//!
+//! Everything is snapshot-polled through the ordinary stats path, plus
+//! the `stats-stream` wire command for continuous tailing.
+
+pub mod hist;
+pub mod journal;
+pub mod probe;
+
+pub use hist::{bucket_of, bucket_upper_secs, AtomicHist, Hist, BUCKETS};
+pub use journal::{Event, Journal, DEFAULT_CAP};
+pub use probe::{inversion_error, label_seed, ProbeRecorder, ProbeSample, DEFAULT_EVERY};

@@ -1,0 +1,242 @@
+//! Sampled online inversion-error probes (DESIGN.md §14.3).
+//!
+//! The paper's whole pitch is a cost/accuracy dial — Brand online
+//! updates are linear-time but approximate, RS-KFAC's randomized
+//! estimates sit in the middle, exact eigendecompositions anchor the
+//! accurate end — yet the only way the repo could *see* that accuracy
+//! was the offline `error-study` harness. The probe makes it visible
+//! live and cheaply: every K-th installed decomposition per factor,
+//! compute the relative residual
+//!
+//! ```text
+//!   ‖(A + λI)·(Â + λI)⁻¹ v − v‖ / ‖v‖
+//! ```
+//!
+//! on ONE deterministically drawn Gaussian vector `v`. If `Â` (the
+//! installed low-rank approximation) were exact, the residual would be
+//! 0; the measured value tracks the inversion error of whatever
+//! decomposition kind produced `Â` at ~one matvec of cost (O(d²), vs
+//! O(d³) for a full-spectrum check).
+//!
+//! DETERMINISM: the probe vector comes from its own RNG stream, seeded
+//! from the factor label and step — it never touches the session /
+//! trainer RNG, so enabling probes cannot move a trajectory. The
+//! residual is only *recorded*, never fed back. That is what keeps the
+//! interleaved-vs-solo and checkpoint/resume bit-match suites passing
+//! with probes enabled (acceptance criterion).
+
+use crate::linalg::{LowRank, Mat};
+use crate::util::rng::{Rng, SplitMix64};
+use crate::util::ser::Json;
+
+/// Default sampling period: probe every 8th install per factor.
+pub const DEFAULT_EVERY: u64 = 8;
+
+/// Bounded sample buffer per recorder (oldest evicted first).
+pub const MAX_SAMPLES: usize = 256;
+
+/// Deterministic 64-bit label hash (SplitMix64 chain over the bytes,
+/// length-finalized) — the probe's RNG stream identity.
+pub fn label_seed(label: &str) -> u64 {
+    let mut acc = 0x0B5E_00B5_0E27_A11Eu64;
+    for chunk in label.as_bytes().chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        acc = SplitMix64::new(acc ^ u64::from_le_bytes(w)).next_u64();
+    }
+    SplitMix64::new(acc ^ label.len() as u64).next_u64()
+}
+
+/// Relative inversion-error residual on one deterministic probe vector.
+/// `gram` is the EA statistic authority `A` (d×d), `rep` the installed
+/// low-rank `Â`, `lambda` the damping both sides are regularized with.
+pub fn inversion_error(gram: &Mat, rep: &LowRank, lambda: f32, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let v = Mat::gauss(gram.rows, 1, 1.0, &mut rng);
+    // w = (Â + λI)⁻¹ v  (spectrum continuation on: the production apply path)
+    let w = rep.apply_inv_left(&v, lambda, true);
+    // u = (A + λI)·w − v
+    let mut u = gram.matmul(&w);
+    u.axpy_inplace(lambda, &w);
+    u.axpy_inplace(-1.0, &v);
+    let denom = v.fro_norm().max(f32::MIN_POSITIVE);
+    (u.fro_norm() / denom) as f64
+}
+
+/// One recorded probe: which factor, what produced the installed rep,
+/// how stale it was, and the measured residual.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ProbeSample {
+    /// factor / layer label (e.g. `f0/A`, `fc0/Γ`)
+    pub layer: String,
+    /// decomposition-kind label of the op family that maintains this
+    /// factor (`brand` / `rsvd` / `eigh`)
+    pub kind: String,
+    pub rank: usize,
+    /// steps the installed rep trailed the install point by
+    pub staleness: u64,
+    /// session / trainer step at which the probe ran
+    pub step: u64,
+    pub rel_err: f64,
+}
+
+impl ProbeSample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layer", Json::str(&self.layer)),
+            ("kind", Json::str(&self.kind)),
+            ("rank", Json::Num(self.rank as f64)),
+            ("staleness", Json::Num(self.staleness as f64)),
+            ("step", Json::Num(self.step as f64)),
+            ("rel_err", Json::Num(self.rel_err)),
+        ])
+    }
+}
+
+/// Per-session probe state: an install counter per factor plus a
+/// bounded sample ring. Deliberately NOT part of any checkpoint —
+/// probes observe a trajectory, they are not state of it.
+#[derive(Clone, Debug)]
+pub struct ProbeRecorder {
+    /// probe every K-th install per factor; 0 disables
+    pub every: u64,
+    installs: Vec<u64>,
+    samples: Vec<ProbeSample>,
+}
+
+impl Default for ProbeRecorder {
+    fn default() -> Self {
+        ProbeRecorder::new(DEFAULT_EVERY)
+    }
+}
+
+impl ProbeRecorder {
+    pub fn new(every: u64) -> ProbeRecorder {
+        ProbeRecorder {
+            every,
+            installs: Vec::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn disabled() -> ProbeRecorder {
+        ProbeRecorder::new(0)
+    }
+
+    /// Call on every decomposition install for factor `idx`. Runs the
+    /// residual check on the sampling cadence when the dense statistic
+    /// is resident (factors whose policy never keeps a Gram are simply
+    /// not probed — the check needs `A`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_install(
+        &mut self,
+        idx: usize,
+        layer: &str,
+        kind: &str,
+        staleness: u64,
+        step: u64,
+        gram: Option<&Mat>,
+        rep: &LowRank,
+        lambda: f32,
+    ) {
+        if self.every == 0 {
+            return;
+        }
+        if self.installs.len() <= idx {
+            self.installs.resize(idx + 1, 0);
+        }
+        let n = self.installs[idx];
+        self.installs[idx] += 1;
+        if n % self.every != 0 {
+            return;
+        }
+        let gram = match gram {
+            Some(g) if g.rows == rep.dim() => g,
+            _ => return,
+        };
+        let rel_err = inversion_error(gram, rep, lambda, label_seed(layer) ^ step);
+        if self.samples.len() >= MAX_SAMPLES {
+            self.samples.remove(0);
+        }
+        self.samples.push(ProbeSample {
+            layer: layer.to_string(),
+            kind: kind.to_string(),
+            rank: rep.rank(),
+            staleness,
+            step,
+            rel_err,
+        });
+    }
+
+    pub fn samples(&self) -> &[ProbeSample] {
+        &self.samples
+    }
+
+    pub fn take_samples(&mut self) -> Vec<ProbeSample> {
+        std::mem::take(&mut self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An exact decomposition of a PSD matrix must probe ~0 residual;
+    /// a rank-starved one must probe a visibly larger residual — the
+    /// probe actually measures the accuracy dial.
+    #[test]
+    fn residual_tracks_decomposition_quality() {
+        let mut rng = Rng::new(7);
+        let d = 24;
+        let a = Mat::psd_with_decay(d, 0.5, &mut rng);
+        let exact = LowRank::from_eigh(&a.eigh(), d);
+        let e_full = inversion_error(&a, &exact, 0.1, 123);
+        assert!(e_full < 1e-3, "exact rep residual {e_full}");
+        let crude = exact.truncate(2);
+        let e_crude = inversion_error(&a, &crude, 0.1, 123);
+        assert!(
+            e_crude > (e_full * 5.0).max(1e-4),
+            "rank-2 residual {e_crude} not separable from exact {e_full}"
+        );
+    }
+
+    /// Determinism: same inputs → bit-identical residual (own RNG
+    /// stream, not the session's).
+    #[test]
+    fn probe_is_deterministic() {
+        let mut rng = Rng::new(9);
+        let d = 16;
+        let a = Mat::psd_with_decay(d, 0.7, &mut rng);
+        let rep = LowRank::from_eigh(&a.eigh(), 8);
+        let s = label_seed("f0/A") ^ 42;
+        assert_eq!(
+            inversion_error(&a, &rep, 0.1, s).to_bits(),
+            inversion_error(&a, &rep, 0.1, s).to_bits()
+        );
+        assert_ne!(label_seed("f0/A"), label_seed("f1/A"));
+        assert_ne!(label_seed("a"), label_seed("a\0"));
+    }
+
+    #[test]
+    fn recorder_samples_on_cadence_and_bounds() {
+        let mut rng = Rng::new(11);
+        let d = 12;
+        let a = Mat::psd_with_decay(d, 0.6, &mut rng);
+        let rep = LowRank::from_eigh(&a.eigh(), 6);
+        let mut rec = ProbeRecorder::new(4);
+        for step in 0..16u64 {
+            rec.on_install(0, "f0/A", "brand", 1, step, Some(&a), &rep, 0.1);
+        }
+        // installs 0, 4, 8, 12 probed
+        assert_eq!(rec.samples().len(), 4);
+        assert_eq!(rec.samples()[1].step, 4);
+        assert_eq!(rec.samples()[0].kind, "brand");
+        // disabled recorder never samples; gram-less factors skipped
+        let mut off = ProbeRecorder::disabled();
+        off.on_install(0, "f0/A", "brand", 0, 0, Some(&a), &rep, 0.1);
+        assert!(off.samples().is_empty());
+        let mut rec2 = ProbeRecorder::new(1);
+        rec2.on_install(0, "f0/A", "brand", 0, 0, None, &rep, 0.1);
+        assert!(rec2.samples().is_empty());
+    }
+}

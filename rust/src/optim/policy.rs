@@ -81,6 +81,18 @@ impl UpdateOp {
     pub fn is_overwrite(&self) -> bool {
         matches!(self, UpdateOp::Rsvd | UpdateOp::ExactEvd)
     }
+
+    /// Decomposition-kind label used to group observability data
+    /// (latency histograms, probe samples): the Brand variants share a
+    /// bucket, randomized SVD and exact EVD get their own.
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            UpdateOp::None => "none",
+            UpdateOp::Rsvd => "rsvd",
+            UpdateOp::ExactEvd => "eigh",
+            UpdateOp::Brand | UpdateOp::BrandCorrect => "brand",
+        }
+    }
 }
 
 #[derive(Clone, Debug)]

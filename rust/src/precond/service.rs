@@ -20,14 +20,18 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::linalg::LowRank;
+use crate::obs::{AtomicHist, Hist, Journal};
+use crate::optim::policy::UpdateOp;
 use crate::optim::OpRequest;
 use crate::runtime::Runtime;
 use crate::server::sched::{FairScheduler, ReadyCell};
+use crate::util::ser::Json;
 use crate::util::threadpool::WorkerPool;
 use crate::util::timer::PhaseTimers;
 
@@ -185,15 +189,38 @@ impl FactorCell {
             // poison the cell mutex and leave pending_steps non-empty,
             // hanging enforce_staleness/drain forever.
             let fallback = prev.clone();
+            let op = task.req.op;
             let mut timers = PhaseTimers::new();
+            let t0 = Instant::now();
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 task.req.execute(prev, None, &mut timers)
             }));
+            let op_secs = t0.elapsed().as_secs_f64();
+            if let Some(h) = counters.op_hist(op) {
+                h.record_secs(op_secs);
+            }
+            counters.emit(
+                "op_drain",
+                vec![
+                    ("factor", Json::str(&cell.id)),
+                    ("step", Json::Num(task.step as f64)),
+                    ("ms", Json::Num(op_secs * 1e3)),
+                    ("ok", Json::Bool(matches!(&result, Ok(Ok(_))))),
+                ],
+            );
             w = cell.work.lock().unwrap();
             match result {
                 Ok(Ok(Some(rep))) => {
                     w.rep = Some(rep.clone());
                     cell.published.publish(rep, task.step);
+                    counters.emit(
+                        "op_publish",
+                        vec![
+                            ("factor", Json::str(&cell.id)),
+                            ("step", Json::Num(task.step as f64)),
+                            ("version", Json::Num(cell.published.version() as f64)),
+                        ],
+                    );
                 }
                 Ok(Ok(None)) => w.rep = fallback,
                 Ok(Err(e)) => {
@@ -296,11 +323,34 @@ pub struct ServiceCounters {
     pub blocked_drains: AtomicU64,
     pub blocked_wait_ns: AtomicU64,
     pub installs: AtomicU64,
+    /// inverse-update latency per decomposition kind (DESIGN.md §14.2)
+    pub op_brand: AtomicHist,
+    pub op_rsvd: AtomicHist,
+    pub op_eigh: AtomicHist,
+    /// preconditioned-gradient apply latency
+    pub apply: AtomicHist,
+    /// optional trace journal (serve --trace-out); lock-free to read
+    journal: OnceLock<Arc<Journal>>,
 }
 
 impl ServiceCounters {
     fn note_max(slot: &AtomicU64, value: u64) {
         slot.fetch_max(value, Ordering::Relaxed);
+    }
+
+    fn op_hist(&self, op: UpdateOp) -> Option<&AtomicHist> {
+        match op {
+            UpdateOp::Brand | UpdateOp::BrandCorrect => Some(&self.op_brand),
+            UpdateOp::Rsvd => Some(&self.op_rsvd),
+            UpdateOp::ExactEvd => Some(&self.op_eigh),
+            UpdateOp::None => None,
+        }
+    }
+
+    fn emit(&self, kind: &'static str, fields: Vec<(&str, Json)>) {
+        if let Some(j) = self.journal.get() {
+            j.emit_kv(0, kind, fields);
+        }
     }
 }
 
@@ -415,9 +465,22 @@ impl PrecondService {
     ) -> Result<()> {
         let counters = &self.counters;
         let cell = &self.cells[idx];
+        counters.emit(
+            "op_submit",
+            vec![
+                ("factor", Json::str(&cell.id)),
+                ("step", Json::Num(step as f64)),
+                ("op", Json::str(req.op.kind_label())),
+            ],
+        );
         if self.is_sync() {
             counters.submitted.fetch_add(1, Ordering::Relaxed);
+            let op = req.op;
+            let t0 = Instant::now();
             let out = cell.execute_now(req, step, rt, timers);
+            if let Some(h) = counters.op_hist(op) {
+                h.record_secs(t0.elapsed().as_secs_f64());
+            }
             if out.is_ok() {
                 counters.completed.fetch_add(1, Ordering::Relaxed);
             }
@@ -495,6 +558,57 @@ impl PrecondService {
     pub fn note_install(&self, staleness_steps: u64) {
         self.counters.installs.fetch_add(1, Ordering::Relaxed);
         ServiceCounters::note_max(&self.counters.max_staleness_steps, staleness_steps);
+    }
+
+    /// Attach the shared trace journal (`serve --trace-out`). Idempotent;
+    /// the first journal wins. Lock-free once set.
+    pub fn set_journal(&self, journal: Arc<Journal>) {
+        let _ = self.counters.journal.set(journal);
+    }
+
+    /// Record the duration of one preconditioned-gradient apply.
+    pub fn note_apply(&self, secs: f64) {
+        self.counters.apply.record_secs(secs);
+    }
+
+    /// Latency snapshots for `metrics::ServiceRecord::op_ms`: one
+    /// histogram per decomposition kind the service has executed.
+    pub fn op_hists(&self) -> Vec<(String, Hist)> {
+        [
+            ("brand", &self.counters.op_brand),
+            ("rsvd", &self.counters.op_rsvd),
+            ("eigh", &self.counters.op_eigh),
+        ]
+        .into_iter()
+        .filter_map(|(k, h)| {
+            let snap = h.snapshot();
+            (snap.count() > 0).then(|| (k.to_string(), snap))
+        })
+        .collect()
+    }
+
+    /// Latency snapshot for `metrics::ServiceRecord::apply_ms`.
+    pub fn apply_hist(&self) -> Hist {
+        self.counters.apply.snapshot()
+    }
+
+    /// Full counters snapshot as a run-log record.
+    pub fn record(&self) -> crate::metrics::ServiceRecord {
+        let c = &self.counters;
+        crate::metrics::ServiceRecord {
+            workers: self.workers(),
+            max_staleness_cfg: self.cfg.max_staleness,
+            submitted: c.submitted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed),
+            max_staleness_steps: c.max_staleness_steps.load(Ordering::Relaxed),
+            blocked_drains: c.blocked_drains.load(Ordering::Relaxed),
+            blocked_wait_s: c.blocked_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            worker_busy_s: self.worker_busy_seconds(),
+            installs: c.installs.load(Ordering::Relaxed),
+            op_ms: self.op_hists(),
+            apply_ms: self.apply_hist(),
+        }
     }
 
     /// Block until every shard queue is empty; surfaces the first worker

@@ -264,6 +264,10 @@ impl<'rt> ServerCore<'rt> {
                 Ok(Json::obj(vec![("name", Json::str(name))]))
             }
             Command::Stats => Ok(self.mgr.record().to_json()),
+            // The streaming form only differs on the connection thread
+            // (frontend.rs repeats a Stats round-trip per frame); applied
+            // directly — e.g. from a job file — it is a single snapshot.
+            Command::StatsStream { .. } => Ok(self.mgr.record().to_json()),
             Command::Shutdown => {
                 self.shutdown = true;
                 Ok(Json::obj(vec![("stopping", Json::Bool(true))]))
@@ -352,6 +356,18 @@ pub fn run_jobs(
     workers_override: Option<usize>,
     max_rounds: u64,
 ) -> Result<ServerRecord> {
+    run_jobs_with(path, workers_override, max_rounds, None)
+}
+
+/// [`run_jobs`] with an optional event journal attached to the session
+/// manager (`serve --trace-out`). The journal records lifecycle events
+/// during the run; the caller exports it after this returns.
+pub fn run_jobs_with(
+    path: &str,
+    workers_override: Option<usize>,
+    max_rounds: u64,
+    journal: Option<std::sync::Arc<crate::obs::Journal>>,
+) -> Result<ServerRecord> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
     let root = Json::parse(&text).map_err(|e| anyhow!("job file json: {e}"))?;
@@ -364,11 +380,23 @@ pub fn run_jobs(
         None => None,
     };
     let mut core = ServerCore::new(cfg, rt.as_ref());
+    if let Some(j) = &journal {
+        core.mgr.set_journal(j.clone());
+    }
     let mut ji = 0usize;
     loop {
         while ji < jobs.len() && jobs[ji].at <= core.mgr.round {
             let cmd = &jobs[ji].cmd;
             let data = core.apply(cmd)?;
+            // same request lifecycle the TCP frontend journals; the job
+            // driver bails on the first apply error, so ok is always true
+            if let Some(j) = &journal {
+                j.emit_kv(
+                    core.mgr.round,
+                    "request_apply",
+                    vec![("op", Json::str(cmd.kind())), ("ok", Json::Bool(true))],
+                );
+            }
             println!(
                 "[round {}] {} {}",
                 core.mgr.round,

@@ -49,12 +49,13 @@ use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::{FrontendRecord, ServerRecord};
+use crate::obs::{AtomicHist, Journal};
 use crate::runtime::Runtime;
 use crate::util::rng::SplitMix64;
 use crate::util::ser::Json;
@@ -107,6 +108,10 @@ pub struct FrontendCounters {
     /// auth failure, rate-limit strike-out, connection cap) — client
     /// hangups and clean shutdowns are not counted
     pub conn_dropped: AtomicU64,
+    /// wire latency per request: parse-complete → reply written, timed
+    /// on the connection thread (includes the serving-thread round-trip,
+    /// which is exactly what a client experiences)
+    pub wire: AtomicHist,
     by_kind: Mutex<BTreeMap<String, u64>>,
     /// per-connection attribution of force-closes: `(conn_id, reason)`,
     /// reasons from the closed set in DESIGN.md §12.6. Bounded at
@@ -161,6 +166,7 @@ impl FrontendCounters {
             auth_failures: self.auth_failures.load(Relaxed),
             rate_limited: self.rate_limited.load(Relaxed),
             conn_dropped: self.conn_dropped.load(Relaxed),
+            wire_ms: self.wire.snapshot(),
             by_kind: self
                 .by_kind
                 .lock()
@@ -227,6 +233,9 @@ struct ConnShared {
     nonce_base: u64,
     /// live connection-thread count (the `conn_limit` admission gauge)
     active: AtomicU64,
+    /// event journal, set once before `run` when tracing is enabled;
+    /// `OnceLock` so connection threads read it lock-free
+    journal: OnceLock<Arc<Journal>>,
 }
 
 /// Decrements the live-connection gauge when a connection thread exits,
@@ -252,6 +261,8 @@ pub struct Frontend {
     stop: Arc<AtomicBool>,
     counters: Arc<FrontendCounters>,
     accept: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<ConnShared>,
+    journal: Option<Arc<Journal>>,
     /// Checkpoint/restore paths from the wire are confined under this
     /// root (relative, no `..`); defaults to `results/`. `None` lifts
     /// the restriction (trusted/loopback deployments only).
@@ -302,7 +313,9 @@ pub fn bind_with(addr: &str, fcfg: FrontendCfg) -> Result<Frontend> {
         counters: counters.clone(),
         nonce_base,
         active: AtomicU64::new(0),
+        journal: OnceLock::new(),
     });
+    let shared_keep = shared.clone();
     let accept = {
         let stop = stop.clone();
         let counters = counters.clone();
@@ -313,6 +326,13 @@ pub fn bind_with(addr: &str, fcfg: FrontendCfg) -> Result<Frontend> {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let conn_id = counters.connections.fetch_add(1, Relaxed) + 1;
+                            if let Some(j) = shared.journal.get() {
+                                j.emit_kv(
+                                    0,
+                                    "conn_accept",
+                                    vec![("conn", Json::Num(conn_id as f64))],
+                                );
+                            }
                             let _ = stream.set_nonblocking(false);
                             // idle reaping rides the socket read timeout
                             let _ = stream.set_read_timeout(shared.cfg.idle_timeout);
@@ -360,6 +380,8 @@ pub fn bind_with(addr: &str, fcfg: FrontendCfg) -> Result<Frontend> {
         stop,
         counters,
         accept: Some(accept),
+        shared: shared_keep,
+        journal: None,
         ckpt_root: Some(std::path::PathBuf::from("results")),
     })
 }
@@ -375,6 +397,15 @@ impl Frontend {
         self.ckpt_root = root;
     }
 
+    /// Attach the event journal (`serve --trace-out`). Call before
+    /// [`run`](Frontend::run): the serving loop forwards it to the
+    /// session manager, and the accept/connection threads pick it up
+    /// through the shared `OnceLock`.
+    pub fn set_journal(&mut self, journal: Arc<Journal>) {
+        let _ = self.shared.journal.set(journal.clone());
+        self.journal = Some(journal);
+    }
+
     /// Serve until a `shutdown` request (or `max_rounds`). Owns the
     /// sessions for the whole run; commands are applied between rounds
     /// in arrival order. Returns the final record with frontend
@@ -387,6 +418,9 @@ impl Frontend {
     ) -> Result<ServerRecord> {
         let mut core = ServerCore::new(cfg, rt);
         core.set_ckpt_root(self.ckpt_root.clone());
+        if let Some(j) = &self.journal {
+            core.mgr.set_journal(j.clone());
+        }
         let mut inbox: VecDeque<Msg> = VecDeque::new();
         loop {
             while let Ok(m) = self.rx.try_recv() {
@@ -401,7 +435,18 @@ impl Frontend {
             }
             for (cmd, reply) in inbox.drain(..) {
                 self.counters.note(cmd.kind());
-                let line = match core.apply(&cmd) {
+                let applied = core.apply(&cmd);
+                if let Some(j) = &self.journal {
+                    j.emit_kv(
+                        core.mgr.round,
+                        "request_apply",
+                        vec![
+                            ("op", Json::str(cmd.kind())),
+                            ("ok", Json::Bool(applied.is_ok())),
+                        ],
+                    );
+                }
+                let line = match applied {
                     Ok(data) => proto::ok_line(match (&cmd, data) {
                         // stats replies additionally carry the live
                         // frontend counters
@@ -638,6 +683,38 @@ fn handle_conn(stream: TcpStream, conn_id: u64, tx: Sender<Msg>, sh: Arc<ConnSha
                 continue;
             }
         };
+        // wire latency: parse-complete → reply written, the full
+        // serving-thread round-trip a client observes
+        let t0 = Instant::now();
+        if let Some(j) = sh.journal.get() {
+            j.emit_kv(
+                0,
+                "request_parse",
+                vec![
+                    ("conn", Json::Num(conn_id as f64)),
+                    ("op", Json::str(cmd.kind())),
+                ],
+            );
+        }
+        // stats-stream is served entirely from this connection thread:
+        // each frame is one ordinary Stats round-trip over the command
+        // channel, so a stalled or hostile subscriber back-pressures
+        // nothing but its own socket (the per-frame applies are counted
+        // under "stats" by the serving loop; the subscription itself
+        // under "stats-stream" here).
+        if let Command::StatsStream {
+            interval_ms,
+            frames,
+        } = &cmd
+        {
+            counters.note(cmd.kind());
+            let ok = stream_stats(&tx, &mut out, *interval_ms, *frames);
+            counters.wire.record_secs(t0.elapsed().as_secs_f64());
+            if ok {
+                continue;
+            }
+            break;
+        }
         let is_shutdown = matches!(cmd, Command::Shutdown);
         let (rtx, rrx) = channel::<String>();
         if tx.send((cmd, rtx)).is_err() {
@@ -652,6 +729,7 @@ fn handle_conn(stream: TcpStream, conn_id: u64, tx: Sender<Msg>, sh: Arc<ConnSha
                 if write_line(&mut out, &reply).is_err() {
                     break;
                 }
+                counters.wire.record_secs(t0.elapsed().as_secs_f64());
             }
             Err(_) => {
                 let _ = write_line(
@@ -664,6 +742,58 @@ fn handle_conn(stream: TcpStream, conn_id: u64, tx: Sender<Msg>, sh: Arc<ConnSha
         if is_shutdown {
             break;
         }
+    }
+}
+
+/// Drive one `stats-stream` subscription on its connection thread: up
+/// to `frames` Stats round-trips (`0` = unbounded) paced at
+/// `interval_ms`, each reply stamped with a top-level `seq`. The
+/// serving thread only ever sees ordinary `stats` commands. Returns
+/// `false` when the connection must close (peer gone or server
+/// stopping).
+fn stream_stats(tx: &Sender<Msg>, out: &mut TcpStream, interval_ms: u64, frames: u64) -> bool {
+    let total = if frames == 0 { u64::MAX } else { frames };
+    let mut seq = 0u64;
+    while seq < total {
+        let (rtx, rrx) = channel::<String>();
+        if tx.send((Command::Stats, rtx)).is_err() {
+            let _ = write_line(
+                out,
+                &proto::err_line(proto::E_INTERNAL, "server is shutting down"),
+            );
+            return false;
+        }
+        let reply = match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                let _ = write_line(
+                    out,
+                    &proto::err_line(proto::E_INTERNAL, "server stopped before replying"),
+                );
+                return false;
+            }
+        };
+        if write_line(out, &stamp_seq(&reply, seq)).is_err() {
+            return false;
+        }
+        seq += 1;
+        if seq < total {
+            std::thread::sleep(Duration::from_millis(interval_ms));
+        }
+    }
+    true
+}
+
+/// Insert a top-level `seq` field into a serialized reply line (frames
+/// of one stream are numbered so a consumer can detect loss); the line
+/// passes through untouched when it is not a JSON object.
+fn stamp_seq(reply: &str, seq: u64) -> String {
+    match Json::parse(reply) {
+        Ok(Json::Obj(mut m)) => {
+            m.insert("seq".into(), Json::Num(seq as f64));
+            Json::Obj(m).to_string_compact()
+        }
+        _ => reply.to_string(),
     }
 }
 

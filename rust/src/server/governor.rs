@@ -261,6 +261,15 @@ impl Governor {
         self.tenants.get(&key).and_then(|t| t.quota)
     }
 
+    /// Current strike count for a tenant (trace events report ladder
+    /// position so escalations are attributable after the fact).
+    pub fn strikes(&self, key: u64) -> u32 {
+        self.tenants
+            .get(&key)
+            .map(|t| t.ladder.strikes())
+            .unwrap_or(0)
+    }
+
     pub fn report(&self, key: u64) -> TenantReport {
         match self.tenants.get(&key) {
             None => TenantReport {

@@ -22,6 +22,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::coordinator::{Trainer, TrainerCfg};
 use crate::data::Dataset;
 use crate::metrics::{ServerRecord, SessionRecord};
+use crate::obs::{Hist, Journal};
 use crate::precond::{PrecondCfg, PrecondService};
 use crate::runtime::Runtime;
 use crate::util::ser::Json;
@@ -214,6 +215,11 @@ pub struct SessionManager<'rt> {
     next_id: u64,
     pub round: u64,
     wall0: Instant,
+    /// optional trace journal (`serve --trace-out`); shared with every
+    /// session's preconditioner service and the socket frontend
+    journal: Option<Arc<Journal>>,
+    /// serving-round duration histogram (serving thread only)
+    round_ms: Hist,
 }
 
 impl<'rt> SessionManager<'rt> {
@@ -234,6 +240,39 @@ impl<'rt> SessionManager<'rt> {
             next_id: 1,
             round: 0,
             wall0: Instant::now(),
+            journal: None,
+            round_ms: Hist::new(),
+        }
+    }
+
+    /// Attach the shared trace journal. Propagated to every existing and
+    /// future session's preconditioner service; record stamps switch to
+    /// the journal's clock domain so events and snapshots correlate.
+    pub fn set_journal(&mut self, journal: Arc<Journal>) {
+        for s in self.sessions.values() {
+            if let Some(svc) = &s.svc {
+                svc.set_journal(journal.clone());
+            }
+            if let Workload::Model(m) = &s.work {
+                if let Some(svc) = &m.tr.service {
+                    svc.set_journal(journal.clone());
+                }
+            }
+        }
+        self.journal = Some(journal);
+    }
+
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.journal.as_ref()
+    }
+
+    /// Monotonic milliseconds since the journal (trace mode) or the
+    /// manager (otherwise) was created — the correlation clock stamped
+    /// onto `ServerRecord` and stats replies.
+    pub fn uptime_ms(&self) -> u64 {
+        match &self.journal {
+            Some(j) => j.uptime_ms(),
+            None => self.wall0.elapsed().as_millis() as u64,
         }
     }
 
@@ -354,6 +393,21 @@ impl<'rt> SessionManager<'rt> {
         work: Workload<'rt>,
         svc: Option<PrecondService>,
     ) {
+        if let Some(j) = &self.journal {
+            if let Some(svc) = &svc {
+                svc.set_journal(j.clone());
+            }
+            if let Workload::Model(m) = &work {
+                if let Some(svc) = &m.tr.service {
+                    svc.set_journal(j.clone());
+                }
+            }
+            j.emit_kv(
+                self.round,
+                "session_create",
+                vec![("sid", Json::Num(id as f64)), ("name", Json::str(name))],
+            );
+        }
         self.sessions.insert(
             id,
             Session {
@@ -533,6 +587,14 @@ impl<'rt> SessionManager<'rt> {
     /// backlog telemetry.
     pub fn run_round(&mut self) -> Result<RoundStats> {
         self.round += 1;
+        let round_t0 = Instant::now();
+        if let Some(j) = &self.journal {
+            j.emit_kv(
+                self.round,
+                "round_start",
+                vec![("sessions", Json::Num(self.sessions.len() as f64))],
+            );
+        }
         if self.round % governor::WINDOW_ROUNDS == 0 {
             self.enforce_quotas();
         }
@@ -553,6 +615,16 @@ impl<'rt> SessionManager<'rt> {
             // out (not backpressure — no pause-time accounting)
             if !self.governor.gate(id, self.round) {
                 stats.throttled += 1;
+                if let Some(j) = &self.journal {
+                    j.emit_kv(
+                        self.round,
+                        "governor_throttle",
+                        vec![
+                            ("sid", Json::Num(id as f64)),
+                            ("strikes", Json::Num(self.governor.strikes(id) as f64)),
+                        ],
+                    );
+                }
                 continue;
             }
             if !s.ready(staleness) {
@@ -584,19 +656,44 @@ impl<'rt> SessionManager<'rt> {
         // paying two cross-thread lock acquisitions per round for a
         // decision that is always None
         if self.governor.elastic() {
+            let current = self.pool.threads();
             if let Some(n) = self.governor.decide_workers(
                 self.pool.queue_depth(),
                 self.sched.ready_total(),
                 stats.blocked,
-                self.pool.threads(),
+                current,
             ) {
                 log::info!(
-                    "governor: resizing worker pool {} -> {n} (round {})",
-                    self.pool.threads(),
+                    "governor: resizing worker pool {current} -> {n} (round {})",
                     self.round
                 );
+                if let Some(j) = &self.journal {
+                    let kind = if n > current { "worker_grow" } else { "worker_shrink" };
+                    j.emit_kv(
+                        self.round,
+                        kind,
+                        vec![
+                            ("from", Json::Num(current as f64)),
+                            ("to", Json::Num(n as f64)),
+                        ],
+                    );
+                }
                 self.pool.resize(n);
             }
+        }
+        let round_secs = round_t0.elapsed().as_secs_f64();
+        self.round_ms.record_secs(round_secs);
+        if let Some(j) = &self.journal {
+            j.emit_kv(
+                self.round,
+                "round_stop",
+                vec![
+                    ("stepped", Json::Num(stats.stepped as f64)),
+                    ("blocked", Json::Num(stats.blocked as f64)),
+                    ("throttled", Json::Num(stats.throttled as f64)),
+                    ("ms", Json::Num(round_secs * 1e3)),
+                ],
+            );
         }
         Ok(stats)
     }
@@ -619,12 +716,24 @@ impl<'rt> SessionManager<'rt> {
                 submitted,
                 resident_bytes: s.resident_bytes(),
             };
+            let strikes_before = self.governor.strikes(id);
             if let Some(reason) = self.governor.observe(id, usage) {
                 log::warn!(
                     "governor: evicting session '{}' (id {id}): {} quota breached",
                     s.name,
                     reason.as_str()
                 );
+                if let Some(j) = &self.journal {
+                    j.emit_kv(
+                        self.round,
+                        "governor_evict",
+                        vec![
+                            ("sid", Json::Num(id as f64)),
+                            ("name", Json::str(&s.name)),
+                            ("reason", Json::str(reason.as_str())),
+                        ],
+                    );
+                }
                 s.settle_pause();
                 s.status = SessionStatus::Evicted;
                 // cancel queued work, then actually reclaim the memory
@@ -643,6 +752,18 @@ impl<'rt> SessionManager<'rt> {
                         }
                         h.release_resident();
                     }
+                }
+            } else if let Some(j) = &self.journal {
+                let strikes = self.governor.strikes(id);
+                if strikes > strikes_before {
+                    j.emit_kv(
+                        self.round,
+                        "governor_strike",
+                        vec![
+                            ("sid", Json::Num(id as f64)),
+                            ("strikes", Json::Num(strikes as f64)),
+                        ],
+                    );
                 }
             }
         }
@@ -715,6 +836,15 @@ impl<'rt> SessionManager<'rt> {
             let ops = served.get(&s.id).map(|(v, _)| *v).unwrap_or(0);
             total_steps += s.steps_done();
             let gov = self.governor.report(s.id);
+            let probes = match &s.work {
+                Workload::Host(h) => h.probe.samples().to_vec(),
+                Workload::Model(m) => m.tr.probe_samples().to_vec(),
+            };
+            let service = match (&s.work, &s.svc) {
+                (Workload::Model(m), _) => m.tr.service_record(),
+                (_, Some(svc)) => Some(svc.record()),
+                _ => None,
+            };
             sessions.push(SessionRecord {
                 id: s.id,
                 name: s.name.clone(),
@@ -734,6 +864,8 @@ impl<'rt> SessionManager<'rt> {
                 }),
                 status: format!("{:?}", s.status),
                 error: s.error.clone().unwrap_or_default(),
+                probes,
+                service,
             });
         }
         // Jain fairness over weight-normalized service rates. Tenants
@@ -773,6 +905,9 @@ impl<'rt> SessionManager<'rt> {
             worker_busy_s: self.pool.busy_seconds(),
             sessions,
             frontend: None,
+            uptime_ms: self.uptime_ms(),
+            round: self.round,
+            round_ms: self.round_ms.clone(),
         }
     }
 }

@@ -354,6 +354,13 @@ pub enum Command {
     },
     /// Reply with the server's current `ServerRecord`.
     Stats,
+    /// Periodic `stats` snapshot frames over the same connection:
+    /// `interval_ms` apart, `frames` of them (0 = until disconnect).
+    /// Handled on the CONNECTION thread — every frame is one ordinary
+    /// `Stats` round-trip to the serving loop, so a slow or hostile
+    /// subscriber can never wedge serving (DESIGN.md §14.4). The
+    /// scripted job driver treats it as a single `stats`.
+    StatsStream { interval_ms: u64, frames: u64 },
     /// Stop serving after the current round; sessions are drained.
     Shutdown,
 }
@@ -370,6 +377,7 @@ impl Command {
             Command::Restore { .. } => "restore",
             Command::Drop { .. } => "drop",
             Command::Stats => "stats",
+            Command::StatsStream { .. } => "stats-stream",
             Command::Shutdown => "shutdown",
         }
     }
@@ -455,6 +463,15 @@ pub const MAX_STEPS: u64 = 1_000_000_000_000;
 pub const MAX_DATA_N: usize = 1 << 24;
 /// Max scheduler weight a request may claim.
 pub const MAX_WEIGHT: usize = 1_000_000;
+/// `stats-stream` pacing floor — a subscriber cannot demand frames
+/// faster than this (the stream shares the serving thread's command
+/// channel, so pacing is a denial-of-service knob).
+pub const MIN_STREAM_INTERVAL_MS: u64 = 10;
+/// `stats-stream` pacing ceiling (a frame at least once a minute).
+pub const MAX_STREAM_INTERVAL_MS: u64 = 60_000;
+/// Max frames one `stats-stream` request may ask for (0 = unbounded,
+/// which survives until the subscriber disconnects).
+pub const MAX_STREAM_FRAMES: u64 = 1_000_000_000;
 
 fn ensure_range(what: &str, v: usize, lo: usize, hi: usize) -> Result<()> {
     ensure!(v >= lo && v <= hi, "{what} must be in [{lo}, {hi}], got {v}");
@@ -641,6 +658,17 @@ pub fn command_from_json(j: &Json) -> Result<Command> {
         },
         "drop" => Command::Drop { name: name()? },
         "stats" => Command::Stats,
+        // NaN / negative interval collapse to 0 under the cast and are
+        // clamped up to the pacing floor; frames cap at the ceiling
+        "stats-stream" | "stats_stream" => Command::StatsStream {
+            interval_ms: (j
+                .get("interval_ms")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(500.0) as u64)
+                .clamp(MIN_STREAM_INTERVAL_MS, MAX_STREAM_INTERVAL_MS),
+            frames: (j.get("frames").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64)
+                .min(MAX_STREAM_FRAMES),
+        },
         "shutdown" => Command::Shutdown,
         other => bail!("unknown op '{other}'"),
     })
@@ -715,6 +743,10 @@ pub fn command_to_json(c: &Command) -> Json {
             if let Some(d) = dataset {
                 pairs.push(("dataset", dataspec_json(d)));
             }
+        }
+        Command::StatsStream { interval_ms, frames } => {
+            pairs.push(("interval_ms", Json::Num(*interval_ms as f64)));
+            pairs.push(("frames", Json::Num(*frames as f64)));
         }
         Command::Stats | Command::Shutdown => {}
     }
@@ -1018,7 +1050,7 @@ mod tests {
     }
 
     fn rand_command(rng: &mut crate::util::rng::Rng) -> Command {
-        match rng.next_below(10) {
+        match rng.next_below(11) {
             0 => Command::Create {
                 name: rand_name(rng),
                 weight: (1 + rng.next_below(1000)) as u32,
@@ -1066,6 +1098,14 @@ mod tests {
             },
             7 => Command::Drop { name: rand_name(rng) },
             8 => Command::Stats,
+            9 => Command::StatsStream {
+                // in-range values: the parser's clamp is idempotent here
+                interval_ms: MIN_STREAM_INTERVAL_MS
+                    + rng.next_below(
+                        (MAX_STREAM_INTERVAL_MS - MIN_STREAM_INTERVAL_MS + 1) as usize,
+                    ) as u64,
+                frames: rng.next_below(1_000_000) as u64,
+            },
             _ => Command::Shutdown,
         }
     }

@@ -27,6 +27,7 @@ use anyhow::{ensure, Result};
 use crate::coordinator::Trainer;
 use crate::data::{Batch, Dataset};
 use crate::linalg::Mat;
+use crate::obs::ProbeRecorder;
 use crate::optim::factor::{OpRequest, Stat};
 use crate::optim::{Algo, FactorState, Hyper, Policy};
 use crate::precond::PrecondService;
@@ -126,6 +127,9 @@ pub struct HostSession {
     pub last_installed: Vec<i64>,
     /// ‖direction‖_F of the last applied step (a loss-like probe)
     pub loss_proxy: f32,
+    /// sampled inversion-error probes (DESIGN.md §14.3). Own RNG stream,
+    /// results only recorded — NOT part of the trajectory or checkpoint.
+    pub probe: ProbeRecorder,
 }
 
 impl HostSession {
@@ -152,6 +156,7 @@ impl HostSession {
             step: 0,
             last_installed: vec![-1; n],
             loss_proxy: 0.0,
+            probe: ProbeRecorder::default(),
         }
     }
 
@@ -198,8 +203,23 @@ impl HostSession {
             if let Some(snap) = cell.load_published() {
                 if snap.step as i64 > self.last_installed[i] {
                     self.last_installed[i] = snap.step as i64;
-                    svc.note_install(self.step.saturating_sub(snap.step));
+                    let staleness = self.step.saturating_sub(snap.step);
+                    svc.note_install(staleness);
                     self.factors[i].rep = Some(snap.rep.clone());
+                    let f = &self.factors[i];
+                    // the op scheduled at the snapshot's step is the op
+                    // that produced it (ops are submitted at stat steps)
+                    let kind = self.policy.op_at(snap.step as usize, &f.plan).kind_label();
+                    self.probe.on_install(
+                        i,
+                        &f.plan.id,
+                        kind,
+                        staleness,
+                        self.step,
+                        f.gram.as_ref(),
+                        &snap.rep,
+                        self.cfg.lambda,
+                    );
                 }
             }
         }
@@ -241,9 +261,14 @@ impl HostSession {
         for i in 0..self.factors.len() {
             let grad = Mat::gauss(self.cfg.dim, self.cfg.grad_cols, 1.0, &mut self.rng);
             let dir = match &self.factors[i].rep {
-                Some(rep) => timers.time("apply", || {
-                    rep.apply_inv_left(&grad, self.cfg.lambda, true)
-                }),
+                Some(rep) => {
+                    let t0 = std::time::Instant::now();
+                    let dir = timers.time("apply", || {
+                        rep.apply_inv_left(&grad, self.cfg.lambda, true)
+                    });
+                    svc.note_apply(t0.elapsed().as_secs_f64());
+                    dir
+                }
                 None => grad,
             };
             self.loss_proxy = dir.fro_norm();

@@ -535,6 +535,78 @@ fn conn_limit_refuses_then_recovers() {
     );
 }
 
+// ------------------------------------------------------- stats-stream
+
+/// `stats-stream` round-trip: a bounded subscription delivers exactly
+/// `frames` sequenced snapshot frames, each a well-formed stats reply
+/// (wire-latency histogram included), and the connection remains usable
+/// for ordinary requests afterwards.
+#[test]
+fn stats_stream_delivers_sequenced_frames_then_connection_survives() {
+    let (addr, server) = start_server(FrontendCfg::default());
+    let mut c = Conn::open(addr);
+    c.ok(&format!(
+        r#"{{"op": "create", "name": "a", "session": {}}}"#,
+        session_spec_json()
+    ));
+    assert!(c.send(br#"{"op": "stats-stream", "interval_ms": 10, "frames": 3}"#));
+    for want_seq in 0..3u64 {
+        let line = c.read_line().expect("stream frame");
+        let j = Json::parse(&line).expect("frame parses");
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{line}");
+        assert_eq!(
+            j.get("seq").and_then(|v| v.as_usize()),
+            Some(want_seq as usize),
+            "frames must be sequenced: {line}"
+        );
+        let data = j.get("data").expect("frame data");
+        assert!(data.get("sessions").is_some(), "{line}");
+        assert!(data.get("uptime_ms").is_some(), "{line}");
+        // the frontend counters ride every stats frame, wire histogram
+        // included
+        assert!(
+            data.get("frontend").and_then(|f| f.get("wire_ms")).is_some(),
+            "{line}"
+        );
+    }
+    // the stream ended; the same connection serves ordinary requests
+    c.ok(r#"{"op": "stats"}"#);
+    c.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().unwrap();
+    let f = rec.frontend.expect("frontend counters");
+    assert_eq!(
+        f.by_kind.iter().find(|(k, _)| k == "stats-stream").map(|(_, n)| *n),
+        Some(1),
+        "{:?}",
+        f.by_kind
+    );
+    assert!(f.wire_ms.count() > 0, "wire latency histogram empty");
+}
+
+/// A garbage subscriber — unbounded stream, never reads a byte — must
+/// not wedge the serving thread: concurrent connections keep being
+/// served and `shutdown` still brings the server down cleanly.
+#[test]
+fn unread_unbounded_stream_cannot_wedge_serving_thread() {
+    let (addr, server) = start_server(FrontendCfg::default());
+    // subscriber asks for an unbounded fast stream and then never reads:
+    // its socket buffer fills and its CONNECTION thread blocks, but the
+    // serving thread only ever posts replies to an unbounded channel
+    let mut zombie = Conn::open(addr);
+    assert!(zombie.send(br#"{"op": "stats-stream", "interval_ms": 10, "frames": 0}"#));
+
+    let mut c = Conn::open(addr);
+    c.ok(&format!(
+        r#"{{"op": "create", "name": "a", "session": {}}}"#,
+        session_spec_json()
+    ));
+    wait_status(&mut c, "a", "Done", Duration::from_millis(5));
+    c.ok(r#"{"op": "shutdown"}"#);
+    let rec = server.join().unwrap().unwrap();
+    assert!(rec.frontend.is_some());
+    drop(zombie);
+}
+
 /// Hostile input against an AUTH-ENABLED server: garbage, oversized and
 /// truncated first lines must all die in the handshake with a closed
 /// set code — never reaching command parsing — and the server survives.

@@ -1,0 +1,201 @@
+//! Observability integration suite (DESIGN.md §14): attaching the
+//! structured event journal — and the always-on inversion-error probes —
+//! must not perturb a single bit of any session trajectory, while the
+//! journal, the latency histograms and the probe samples all actually
+//! record the run. Host substrate only — no artifacts needed.
+
+use std::collections::BTreeSet;
+
+use bnkfac::obs::Journal;
+use bnkfac::optim::Algo;
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager, Workload};
+use bnkfac::util::ser::Json;
+
+fn scfg(seed: u64, algo: Algo, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 2,
+        dim: 36,
+        rank: 5,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+fn fingerprint(mgr: &SessionManager, id: u64) -> (Vec<f32>, [u64; 4]) {
+    let s = mgr.session(id).expect("session");
+    match &s.work {
+        Workload::Host(h) => (h.state_vector(), h.rng.state().s),
+        _ => panic!("expected host session"),
+    }
+}
+
+/// Acceptance criterion (ISSUE 6): trace-enabled and trace-disabled
+/// runs bit-match, and the trace-enabled run's journal / histograms /
+/// probe samples are populated and well-formed.
+#[test]
+fn tracing_and_probes_do_not_perturb_trajectories() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    };
+
+    // reference run: no journal attached
+    let mut plain = SessionManager::new(cfg.clone());
+    let pa = plain.create_host("a", 2, scfg(11, Algo::BKfacC, 24), None).unwrap();
+    let pb = plain.create_host("b", 1, scfg(22, Algo::BKfac, 24), None).unwrap();
+    plain.run_to_completion(100_000).unwrap();
+    let wa = fingerprint(&plain, pa);
+    let wb = fingerprint(&plain, pb);
+
+    // traced run: journal attached before any session exists
+    let mut traced = SessionManager::new(cfg);
+    let journal = Journal::new(4096);
+    traced.set_journal(journal.clone());
+    let ta = traced.create_host("a", 2, scfg(11, Algo::BKfacC, 24), None).unwrap();
+    let tb = traced.create_host("b", 1, scfg(22, Algo::BKfac, 24), None).unwrap();
+    traced.run_to_completion(100_000).unwrap();
+    assert_eq!(fingerprint(&traced, ta), wa, "tracing perturbed session a");
+    assert_eq!(fingerprint(&traced, tb), wb, "tracing perturbed session b");
+
+    // the journal saw every layer of the run
+    let kinds: BTreeSet<&'static str> = journal.snapshot().iter().map(|e| e.kind).collect();
+    for want in [
+        "session_create",
+        "round_start",
+        "round_stop",
+        "op_submit",
+        "op_drain",
+        "op_publish",
+    ] {
+        assert!(kinds.contains(want), "journal missing '{want}': {kinds:?}");
+    }
+
+    // the export is valid JSONL with a loss-accounting summary tail
+    let out = journal.export_jsonl();
+    let mut summary = None;
+    for line in out.lines() {
+        let j = Json::parse(line).expect("every exported line parses");
+        assert!(j.get("event").is_some(), "{line}");
+        if j.get("event").and_then(|v| v.as_str()) == Some("journal_summary") {
+            summary = Some(j);
+        }
+    }
+    let summary = summary.expect("trailing journal_summary line");
+    assert!(summary.get("recorded").and_then(|v| v.as_usize()).unwrap() > 0);
+    assert!(summary.get("dropped").is_some());
+
+    // histograms + correlation stamps + probe samples in the record
+    let rec = traced.record();
+    assert!(rec.round > 0, "round stamp missing");
+    assert!(rec.round_ms.count() > 0, "round-duration histogram empty");
+    let a = rec
+        .sessions
+        .iter()
+        .find(|s| s.name == "a")
+        .expect("session a in record");
+    assert!(!a.probes.is_empty(), "no inversion-error probe samples");
+    for p in &a.probes {
+        assert!(
+            p.rel_err.is_finite() && p.rel_err >= 0.0,
+            "bad probe residual {p:?}"
+        );
+        assert!(!p.layer.is_empty() && !p.kind.is_empty(), "{p:?}");
+        assert!(p.rank > 0, "{p:?}");
+    }
+    let svc = a.service.as_ref().expect("per-session service record");
+    assert!(svc.apply_ms.count() > 0, "apply-latency histogram empty");
+    assert!(
+        svc.op_ms.iter().any(|(_, h)| h.count() > 0),
+        "per-kind inverse-update histograms all empty: {:?}",
+        svc.op_ms.iter().map(|(k, h)| (k.clone(), h.count())).collect::<Vec<_>>()
+    );
+}
+
+/// Checkpoints taken under tracing are byte-identical to checkpoints
+/// of an untraced run (probe/journal state must never leak into the
+/// checkpoint format), and a traced restore resumes bit-identically.
+#[test]
+fn checkpoints_are_identical_with_and_without_tracing() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 2,
+        staleness: 1,
+        ..ServerCfg::default()
+    };
+    let run_to_ckpt = |traced: bool| {
+        let mut mgr = SessionManager::new(cfg.clone());
+        if traced {
+            mgr.set_journal(Journal::new(512));
+        }
+        let id = mgr.create_host("c", 1, scfg(9, Algo::BKfacC, 40), None).unwrap();
+        while mgr.session(id).unwrap().steps_done() < 21 {
+            let st = mgr.run_round().unwrap();
+            if st.stepped == 0 {
+                std::thread::yield_now();
+            }
+            assert!(mgr.round < 1_000_000, "stalled before checkpoint point");
+        }
+        let ck = mgr.checkpoint(id).unwrap();
+        mgr.run_to_completion(100_000).unwrap();
+        (ck, fingerprint(&mgr, id))
+    };
+    let (ck_plain, fp_plain) = run_to_ckpt(false);
+    let (ck_traced, fp_traced) = run_to_ckpt(true);
+    assert_eq!(fp_traced, fp_plain, "tracing perturbed the interrupted run");
+    assert_eq!(
+        ck_traced.to_string_compact(),
+        ck_plain.to_string_compact(),
+        "tracing/probe state leaked into the checkpoint"
+    );
+
+    // a traced restore of the traced checkpoint still lands on the
+    // untraced trajectory
+    let mut resumed = SessionManager::new(cfg.clone());
+    resumed.set_journal(Journal::new(512));
+    let rid = resumed.restore(&ck_traced, "c2").unwrap();
+    resumed.run_to_completion(100_000).unwrap();
+    assert_eq!(fingerprint(&resumed, rid), fp_plain, "traced resume diverged");
+}
+
+/// Probe samples are themselves deterministic: two identical traced
+/// runs record identical probe sequences (same layers, kinds, steps and
+/// bit-identical residuals).
+#[test]
+fn probe_samples_are_reproducible_run_to_run() {
+    let run = || {
+        let mut mgr = SessionManager::new(ServerCfg {
+            workers: 1,
+            max_sessions: 2,
+            staleness: 0,
+            ..ServerCfg::default()
+        });
+        let id = mgr.create_host("p", 1, scfg(77, Algo::BKfacC, 24), None).unwrap();
+        mgr.run_to_completion(100_000).unwrap();
+        let rec = mgr.record();
+        let _ = id;
+        rec.sessions[0].probes.clone()
+    };
+    let one = run();
+    let two = run();
+    assert!(!one.is_empty(), "no probe samples recorded");
+    assert_eq!(one.len(), two.len());
+    for (x, y) in one.iter().zip(&two) {
+        assert_eq!(x.layer, y.layer);
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.step, y.step);
+        assert_eq!(
+            x.rel_err.to_bits(),
+            y.rel_err.to_bits(),
+            "probe residual not bit-reproducible for {}",
+            x.layer
+        );
+    }
+}
