@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Soak-smoke gate (CI, DESIGN.md §15.4).
+
+Validates BENCH_soak.json as produced by
+
+    bnkfac loadgen --scenario examples/soak_smoke.json \
+        --addr <serve --listen addr> --out BENCH_soak.json --shutdown
+
+The smoke scenario mixes compliant hosts with one quota breacher plus
+stalled/subscriber/churner tenants, so a healthy report must grade
+`pass` overall, attribute every eviction to the breacher archetype
+(the governor must not collateral-evict a compliant tenant), carry a
+non-empty server time series, and show per-archetype latency
+percentiles for every archetype that sent requests.
+
+Usage: python3 ci/check_soak.py <BENCH_soak.json>
+Exits 1 listing every violated invariant — never just the first.
+"""
+
+import json
+import os
+import sys
+
+
+def check_report(path, errs):
+    if not os.path.exists(path):
+        errs.append(f"{path}: report artifact missing")
+        return
+    with open(path) as f:
+        try:
+            rep = json.load(f)
+        except json.JSONDecodeError as e:
+            errs.append(f"{path}: not valid JSON ({e})")
+            return
+
+    if rep.get("bench") != "soak":
+        errs.append(f"{path}: bench is {rep.get('bench')!r}, not 'soak'")
+    if rep.get("verdict") != "pass":
+        failed = [
+            f"{c.get('name')}({c.get('observed')} vs {c.get('limit')})"
+            for c in rep.get("checks", [])
+            if c.get("status") != "ok"
+        ]
+        errs.append(
+            f"{path}: verdict {rep.get('verdict')!r}, not 'pass' "
+            f"(breached: {', '.join(failed) or '?'})"
+        )
+
+    server = rep.get("server", {})
+    for name in server.get("evicted", []):
+        if not str(name).startswith("breacher"):
+            errs.append(f"{path}: eviction not attributed to a breacher: {name!r}")
+    if server.get("unexpected_evictions") != 0:
+        errs.append(
+            f"{path}: unexpected_evictions = {server.get('unexpected_evictions')!r}, not 0"
+        )
+    if not server.get("series_points", 0) > 0:
+        errs.append(f"{path}: server exported no time-series points")
+
+    archetypes = rep.get("archetypes", {})
+    if not archetypes:
+        errs.append(f"{path}: no per-archetype measurements")
+    for arch, st in archetypes.items():
+        if not st.get("sent", 0) > 0:
+            errs.append(f"{path}: archetype '{arch}' sent no requests")
+        for q in ("p50_ms", "p99_ms"):
+            v = st.get(q)
+            if not (isinstance(v, (int, float)) and v >= 0):
+                errs.append(f"{path}: archetype '{arch}' {q} missing or negative: {v!r}")
+
+
+def main(argv):
+    if len(argv) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    errs = []
+    check_report(argv[0], errs)
+    if errs:
+        print("soak-smoke gate FAILED:", file=sys.stderr)
+        for e in errs:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print("soak-smoke gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

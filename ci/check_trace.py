@@ -11,7 +11,8 @@ The jobs file runs a compliant tenant next to one that breaches its
 op-rate quota, so a healthy trace must show the full observability
 surface: round lifecycle events, precond op events, the governor's
 strike -> throttle -> evict escalation, and a loss-accounting
-journal_summary tail. The record must carry the §14 additions
+journal_summary tail carrying final p50/p90/p99 for each latency
+surface (wire_ms/round_ms/op_ms, §15). The record must carry the §14 additions
 (round-duration histogram, uptime/round correlation stamps, per-layer
 inversion-error probe samples, per-kind op latency histograms).
 
@@ -20,6 +21,7 @@ Exits 1 listing every violated invariant — never just the first.
 """
 
 import json
+import os
 import sys
 
 REQUIRED_EVENTS = [
@@ -37,6 +39,9 @@ REQUIRED_EVENTS = [
 
 
 def check_trace(path, errs):
+    if not os.path.exists(path):
+        errs.append(f"{path}: trace artifact missing")
+        return
     with open(path) as f:
         lines = [ln for ln in f.read().splitlines() if ln.strip()]
     if not lines:
@@ -66,9 +71,22 @@ def check_trace(path, errs):
             errs.append(f"{path}: journal_summary.recorded not > 0: {tail}")
         if "dropped" not in tail:
             errs.append(f"{path}: journal_summary missing 'dropped': {tail}")
+        # §15: the tail is self-contained for latency triage — final
+        # percentiles for every latency surface ride beside the loss
+        # accounting (0.0 is legal for an absent surface, e.g. wire_ms
+        # on a jobs-file run)
+        for name in ("wire_ms", "round_ms", "op_ms"):
+            for q in ("p50", "p90", "p99"):
+                key = f"{name}_{q}"
+                v = tail.get(key)
+                if not (isinstance(v, (int, float)) and v >= 0):
+                    errs.append(f"{path}: journal_summary.{key} missing or negative: {v!r}")
 
 
 def check_record(path, errs):
+    if not os.path.exists(path):
+        errs.append(f"{path}: record artifact missing")
+        return
     with open(path) as f:
         rec = json.load(f)
     if rec.get("evictions") != 1:

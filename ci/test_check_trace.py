@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Unit tests for the trace-smoke gate (ci/check_trace.py).
+
+Run in the CI lint job (and locally) with:
+
+    python3 ci/test_check_trace.py
+
+Covers the gate's decision paths — green path, missing artifacts,
+empty trace, malformed JSONL line, missing required event kind, a tail
+that is not journal_summary, and a tail missing the §15 percentile
+stamps — all against synthetic artifacts in a temp directory so the
+real CI outputs are never touched.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import check_trace  # noqa: E402
+
+PCT_KEYS = [
+    f"{name}_{q}"
+    for name in ("wire_ms", "round_ms", "op_ms")
+    for q in ("p50", "p90", "p99")
+]
+
+
+def good_events():
+    """A minimal trace satisfying every invariant the gate asserts."""
+    events = [{"event": k, "t_ms": i} for i, k in enumerate(check_trace.REQUIRED_EVENTS)]
+    tail = {"event": "journal_summary", "t_ms": 99, "recorded": len(events), "dropped": 0}
+    for key in PCT_KEYS:
+        tail[key] = 1.5
+    events.append(tail)
+    return events
+
+
+def good_record():
+    return {
+        "evictions": 1,
+        "rounds": 32,
+        "uptime_ms": 1234,
+        "round": 32,
+        "round_ms": {"count": 32},
+        "sessions": [
+            {
+                "name": "breacher",
+                "evict_reason": "op_rate",
+                "probes": [{"layer": "fc0", "rel_err": 0.01}],
+                "service": {"op_ms": {"update": {"count": 8}}},
+            }
+        ],
+    }
+
+
+class CheckTraceTest(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.root = self.tmp.name
+
+    def tearDown(self):
+        self.tmp.cleanup()
+
+    def write_trace(self, events):
+        path = os.path.join(self.root, "trace.jsonl")
+        with open(path, "w") as f:
+            for e in events:
+                f.write((e if isinstance(e, str) else json.dumps(e)) + "\n")
+        return path
+
+    def write_record(self, rec):
+        path = os.path.join(self.root, "record.json")
+        with open(path, "w") as f:
+            json.dump(rec, f)
+        return path
+
+    def run_main(self, trace, record):
+        return check_trace.main([trace, record])
+
+    # ------------------------------------------------------- green path
+
+    def test_green_path_passes(self):
+        self.assertEqual(
+            self.run_main(self.write_trace(good_events()), self.write_record(good_record())),
+            0,
+        )
+
+    # ------------------------------------------------- artifact shapes
+
+    def test_missing_trace_file_fails_not_raises(self):
+        path = os.path.join(self.root, "nope.jsonl")
+        self.assertEqual(self.run_main(path, self.write_record(good_record())), 1)
+
+    def test_missing_record_file_fails_not_raises(self):
+        trace = self.write_trace(good_events())
+        self.assertEqual(self.run_main(trace, os.path.join(self.root, "nope.json")), 1)
+
+    def test_empty_trace_fails(self):
+        self.assertEqual(
+            self.run_main(self.write_trace([]), self.write_record(good_record())), 1
+        )
+
+    def test_malformed_jsonl_line_fails(self):
+        events = good_events()
+        events.insert(3, "{not json")
+        self.assertEqual(
+            self.run_main(self.write_trace(events), self.write_record(good_record())), 1
+        )
+
+    # --------------------------------------------------- trace content
+
+    def test_missing_required_event_kind_fails(self):
+        events = [e for e in good_events() if e.get("event") != "governor_evict"]
+        self.assertEqual(
+            self.run_main(self.write_trace(events), self.write_record(good_record())), 1
+        )
+
+    def test_tail_must_be_journal_summary(self):
+        events = good_events()
+        events.append({"event": "round_stop", "t_ms": 100})
+        self.assertEqual(
+            self.run_main(self.write_trace(events), self.write_record(good_record())), 1
+        )
+
+    def test_tail_missing_percentile_stamp_fails(self):
+        events = good_events()
+        del events[-1]["op_ms_p99"]
+        self.assertEqual(
+            self.run_main(self.write_trace(events), self.write_record(good_record())), 1
+        )
+
+    def test_zero_percentile_is_legal(self):
+        # wire_ms is 0.0 on a jobs-file run (no socket): not a failure
+        events = good_events()
+        for q in ("p50", "p90", "p99"):
+            events[-1][f"wire_ms_{q}"] = 0.0
+        self.assertEqual(
+            self.run_main(self.write_trace(events), self.write_record(good_record())), 0
+        )
+
+    # -------------------------------------------------- record content
+
+    def test_record_without_eviction_fails(self):
+        rec = good_record()
+        rec["evictions"] = 0
+        self.assertEqual(
+            self.run_main(self.write_trace(good_events()), self.write_record(rec)), 1
+        )
+
+    # ------------------------------------------------------------ usage
+
+    def test_wrong_arity_is_a_usage_error(self):
+        self.assertEqual(check_trace.main([]), 2)
+        self.assertEqual(check_trace.main(["a", "b", "c"]), 2)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

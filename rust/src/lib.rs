@@ -17,6 +17,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod loadgen;
 pub mod metrics;
 pub mod model;
 pub mod obs;

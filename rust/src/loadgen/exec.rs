@@ -1,0 +1,321 @@
+//! Soak plan executor: walk a [`Plan`] against a live `serve --listen`
+//! endpoint, one OS thread per scripted client, and measure.
+//!
+//! The executor adds NOTHING to the command sequence — the plan is
+//! already final (see [`plan`](crate::loadgen::plan)) — it only
+//! performs the §12.6 auth handshake, paces requests by the planned
+//! think-times, and records client-side wire latency (request written →
+//! reply line read) into one mergeable [`Hist`] per archetype. Network
+//! failures are *data*, not errors: a refused connection, a mid-run
+//! reset or a read timeout increments the archetype's disconnect
+//! counter and the client moves on, because a soak harness that dies
+//! on the first hiccup cannot measure degradation.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::obs::Hist;
+use crate::server::proto;
+use crate::util::ser::Json;
+
+use super::plan::{ClientPlan, Plan, Step};
+
+/// Socket read ceiling: a reply slower than this counts as a
+/// disconnect rather than wedging the client thread forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Per-archetype client-side measurements (mergeable across clients).
+#[derive(Clone, Debug, Default)]
+pub struct ArchStats {
+    /// requests written (stream subscriptions count as one)
+    pub sent: u64,
+    /// ok replies (every stream frame read counts)
+    pub ok: u64,
+    /// error replies by protocol code
+    pub errors: BTreeMap<String, u64>,
+    /// stream frames read
+    pub frames: u64,
+    /// connects refused / connections lost / read timeouts
+    pub disconnects: u64,
+    /// wire latency: request written → reply line read
+    pub wire: Hist,
+}
+
+impl ArchStats {
+    fn merge(&mut self, other: &ArchStats) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.frames += other.frames;
+        self.disconnects += other.disconnects;
+        for (k, v) in &other.errors {
+            *self.errors.entry(k.clone()).or_insert(0) += v;
+        }
+        self.wire.merge(&other.wire);
+    }
+
+    pub fn err_total(&self) -> u64 {
+        self.errors.values().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            (
+                "errors",
+                Json::Obj(
+                    self.errors
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            ("frames", Json::Num(self.frames as f64)),
+            ("disconnects", Json::Num(self.disconnects as f64)),
+            ("p50_ms", Json::Num(self.wire.p50_ms())),
+            ("p99_ms", Json::Num(self.wire.p99_ms())),
+            ("wire_ms", self.wire.to_json()),
+        ])
+    }
+}
+
+/// What one run measured, before SLO grading.
+#[derive(Debug, Default)]
+pub struct Outcome {
+    pub by_arch: BTreeMap<&'static str, ArchStats>,
+    /// the last `stats` reply data (server-side truth: fairness,
+    /// evictions, sessions, frontend counters, series window)
+    pub final_stats: Option<Json>,
+    pub wall_s: f64,
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    out: TcpStream,
+}
+
+/// Connect and run the §12.6 handshake (same exchange as
+/// `bnkfac client`): challenge → keyed MAC → ok.
+fn connect(addr: &str, token: Option<&str>) -> Result<Conn> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    if let Some(token) = token {
+        let ch = read_line(&mut reader)?
+            .ok_or_else(|| anyhow!("server closed before the auth challenge"))?;
+        let r = proto::parse_reply(&ch)?;
+        let nonce = proto::challenge_nonce(&r)
+            .ok_or_else(|| anyhow!("expected an auth challenge, got: {ch}"))?;
+        write_line(
+            &mut out,
+            &proto::auth_request_line(&proto::auth_mac(token, nonce)),
+        )?;
+        let ack = read_line(&mut reader)?
+            .ok_or_else(|| anyhow!("server closed during the auth handshake"))?;
+        let r = proto::parse_reply(&ack)?;
+        if !r.ok {
+            bail!("authentication failed [{}]: {}", r.code, r.error);
+        }
+    }
+    Ok(Conn { reader, out })
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> Result<Option<String>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    Ok(Some(line.trim_end().to_string()))
+}
+
+fn write_line(out: &mut TcpStream, line: &str) -> Result<()> {
+    out.write_all(line.as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Send one request, read one reply, record the measurement.
+fn round_trip(conn: &mut Conn, line: &str, st: &mut ArchStats) -> bool {
+    let t0 = Instant::now();
+    if write_line(&mut conn.out, line).is_err() {
+        st.disconnects += 1;
+        return false;
+    }
+    st.sent += 1;
+    match read_line(&mut conn.reader) {
+        Ok(Some(reply)) => {
+            st.wire.record_secs(t0.elapsed().as_secs_f64());
+            match proto::parse_reply(&reply) {
+                Ok(r) if r.ok => st.ok += 1,
+                Ok(r) => *st.errors.entry(r.code).or_insert(0) += 1,
+                Err(_) => *st.errors.entry("unparseable".into()).or_insert(0) += 1,
+            }
+            true
+        }
+        _ => {
+            st.disconnects += 1;
+            false
+        }
+    }
+}
+
+/// Run one client's script on its own connection.
+fn run_client(cp: &ClientPlan, addr: &str, token: Option<&str>) -> ArchStats {
+    let mut st = ArchStats::default();
+    let mut conn = match connect(addr, token) {
+        Ok(c) => c,
+        Err(_) => {
+            st.disconnects += 1;
+            return st;
+        }
+    };
+    for step in &cp.steps {
+        match step {
+            Step::Request { think_ms, line } => {
+                std::thread::sleep(Duration::from_millis(*think_ms));
+                if !round_trip(&mut conn, line, &mut st) {
+                    return st; // connection gone; the script is over
+                }
+            }
+            Step::Stream {
+                think_ms,
+                line,
+                read_frames,
+                stall_ms,
+            } => {
+                std::thread::sleep(Duration::from_millis(*think_ms));
+                let t0 = Instant::now();
+                if write_line(&mut conn.out, line).is_err() {
+                    st.disconnects += 1;
+                    return st;
+                }
+                st.sent += 1;
+                for i in 0..*read_frames {
+                    match read_line(&mut conn.reader) {
+                        Ok(Some(frame)) => {
+                            if i == 0 {
+                                // time-to-first-frame is the stream's
+                                // wire-latency datum
+                                st.wire.record_secs(t0.elapsed().as_secs_f64());
+                            }
+                            match proto::parse_reply(&frame) {
+                                Ok(r) if r.ok => {
+                                    st.ok += 1;
+                                    st.frames += 1;
+                                }
+                                Ok(r) => {
+                                    *st.errors.entry(r.code).or_insert(0) += 1;
+                                }
+                                Err(_) => {
+                                    *st.errors.entry("unparseable".into()).or_insert(0) += 1;
+                                }
+                            }
+                        }
+                        _ => {
+                            st.disconnects += 1;
+                            return st;
+                        }
+                    }
+                }
+                // the stalled archetype: stay connected, stop reading —
+                // the server must keep serving everyone else (§14.4)
+                if *stall_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(*stall_ms));
+                }
+                // dropping the connection unwedges the server's writer
+                return st;
+            }
+        }
+    }
+    st
+}
+
+/// Execute the whole plan: one thread per client, measurements merged
+/// per archetype.
+pub fn execute(plan: &Plan, addr: &str, token: Option<&str>) -> Result<Outcome> {
+    let t0 = Instant::now();
+    let merged: Arc<Mutex<BTreeMap<&'static str, ArchStats>>> =
+        Arc::new(Mutex::new(BTreeMap::new()));
+    std::thread::scope(|scope| {
+        for cp in &plan.clients {
+            let merged = merged.clone();
+            let token = token.map(|t| t.to_string());
+            scope.spawn(move || {
+                let st = run_client(cp, addr, token.as_deref());
+                if let Ok(mut m) = merged.lock() {
+                    m.entry(cp.archetype.name()).or_default().merge(&st);
+                }
+            });
+        }
+    });
+    let by_arch = Arc::try_unwrap(merged)
+        .map_err(|_| anyhow!("client thread leaked its stats handle"))?
+        .into_inner()
+        .map_err(|_| anyhow!("archetype stats poisoned"))?;
+    Ok(Outcome {
+        by_arch,
+        final_stats: None,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Poll `stats` until every session has settled (nothing `Running`) or
+/// the budget runs out, then return the final stats reply data —
+/// server-side truth for the report. Optionally send `shutdown` after.
+pub fn settle_and_fetch_stats(
+    addr: &str,
+    token: Option<&str>,
+    budget: Duration,
+    shutdown: bool,
+) -> Result<Json> {
+    let deadline = Instant::now() + budget;
+    let mut conn = connect(addr, token)?;
+    let stats_line = Json::obj(vec![("op", Json::str("stats"))]).to_string_compact();
+    let mut last: Option<Json> = None;
+    loop {
+        write_line(&mut conn.out, &stats_line)?;
+        let reply = read_line(&mut conn.reader)?
+            .ok_or_else(|| anyhow!("server closed while settling"))?;
+        let r = proto::parse_reply(&reply)?;
+        if !r.ok {
+            bail!("stats failed while settling [{}]: {}", r.code, r.error);
+        }
+        let running = r
+            .data
+            .get("sessions")
+            .and_then(|s| s.as_arr())
+            .map(|ss| {
+                ss.iter()
+                    .filter(|s| {
+                        s.get("status").and_then(|v| v.as_str()) == Some("Running")
+                    })
+                    .count()
+            })
+            .unwrap_or(0);
+        let done = running == 0;
+        last = Some(r.data);
+        if done || Instant::now() >= deadline {
+            if !done {
+                log::warn!("soak settle budget exhausted with {running} sessions running");
+            }
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    if shutdown {
+        write_line(
+            &mut conn.out,
+            &Json::obj(vec![("op", Json::str("shutdown"))]).to_string_compact(),
+        )?;
+        let _ = read_line(&mut conn.reader);
+    }
+    last.ok_or_else(|| anyhow!("no stats reply collected"))
+}

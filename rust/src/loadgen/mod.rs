@@ -1,0 +1,63 @@
+//! `bnkfac loadgen` — the fleet-scale soak driver (DESIGN.md §15).
+//!
+//! Drives a live `serve --listen` endpoint with a deterministic,
+//! seeded mix of scripted tenant archetypes (compliant hosts, quota
+//! breachers, stalled readers, churners, stats-stream subscribers),
+//! measures client-side wire latency per archetype, merges the
+//! measurements with the server's own stats/series telemetry, and
+//! grades the result against the scenario's SLO block into
+//! `BENCH_soak.json` with a closed `pass`/`degraded`/`fail` verdict.
+//!
+//! Pipeline, one module per stage:
+//!
+//! * [`scenario`] — strict JSON scenario files: client mix + SLO block;
+//! * [`plan`] — scenario + seed → the exact per-client command
+//!   sequence (the determinism boundary: built before any socket
+//!   exists, identical across runs);
+//! * [`exec`] — walk the plan against the server, one thread per
+//!   client, §12.6 handshake included, failures counted as data;
+//! * [`report`] — merge, grade, emit.
+
+pub mod exec;
+pub mod plan;
+pub mod report;
+pub mod scenario;
+
+pub use exec::{ArchStats, Outcome};
+pub use plan::{build, ClientPlan, Plan, Step};
+pub use report::{grade, measure, report_json, Check, Measured};
+pub use scenario::{Archetype, Group, Scenario, Slo};
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::ser::Json;
+
+/// Run a parsed scenario end-to-end against `addr` and return the
+/// report (`BENCH_soak.json` shape) plus its verdict. `settle_budget`
+/// bounds the post-run wait for sessions to finish server-side;
+/// `shutdown` sends a final `shutdown` (the CI soak job uses it so
+/// `serve --series-out` flushes its JSONL).
+pub fn run_scenario(
+    sc: &Scenario,
+    addr: &str,
+    token: Option<&str>,
+    shutdown: bool,
+) -> Result<(Json, &'static str)> {
+    let plan = plan::build(sc)?;
+    log::info!(
+        "soak '{}': {} clients, {} planned requests against {addr}",
+        sc.name,
+        plan.clients.len(),
+        plan.requests()
+    );
+    let mut out = exec::execute(&plan, addr, token)?;
+    // allow the server at least the scenario budget to settle, plus
+    // headroom for the final drains
+    let budget = Duration::from_secs_f64(sc.duration_s.max(5.0) * 2.0);
+    out.final_stats = Some(exec::settle_and_fetch_stats(addr, token, budget, shutdown)?);
+    let m = report::measure(&out);
+    let (verdict, checks) = report::grade(&sc.slo, &m);
+    Ok((report::report_json(sc, &out, &m, verdict, &checks), verdict))
+}

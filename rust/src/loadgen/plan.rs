@@ -1,0 +1,267 @@
+//! Deterministic soak plans (DESIGN.md §15.2): scenario + seed → the
+//! exact per-client command sequence, built BEFORE any socket exists.
+//!
+//! The plan is the determinism boundary of `bnkfac loadgen`: every
+//! request line, session seed, and think-time delay is derived here as
+//! a pure function of the [`Scenario`] (which includes the run seed),
+//! with one forked RNG stream per client so group order and thread
+//! scheduling cannot leak into the sequence. The executor then just
+//! walks the plan; two runs with the same scenario issue an identical
+//! command sequence (acceptance criterion, pinned by
+//! `loadgen_plan.rs`). Wall-clock reply timing is the *measurement*,
+//! never an input.
+//!
+//! Every request line is validated through [`proto::parse_request`] at
+//! build time, so a plan that builds is wire-legal by construction.
+
+use anyhow::{anyhow, Result};
+
+use crate::server::proto;
+use crate::util::rng::Rng;
+use crate::util::ser::Json;
+
+use super::scenario::{Archetype, Group, Scenario};
+
+/// One scripted client action.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Step {
+    /// think for `think_ms`, send `line`, read one reply
+    Request { think_ms: u64, line: String },
+    /// think, send a `stats-stream` subscription, read `read_frames`
+    /// frames, then hold the connection open WITHOUT reading for
+    /// `stall_ms` (0 = close right after the last frame)
+    Stream {
+        think_ms: u64,
+        line: String,
+        read_frames: u64,
+        stall_ms: u64,
+    },
+}
+
+/// The full script of one client thread.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientPlan {
+    /// unique client name; also the prefix of every session it creates
+    /// (`ci/check_soak.py` attributes evictions by this prefix)
+    pub client: String,
+    pub archetype: Archetype,
+    pub steps: Vec<Step>,
+}
+
+/// The whole run's script.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Plan {
+    pub clients: Vec<ClientPlan>,
+}
+
+impl Plan {
+    /// Total requests the plan will send (streams count as one).
+    pub fn requests(&self) -> usize {
+        self.clients.iter().map(|c| c.steps.len()).sum()
+    }
+}
+
+fn think(rng: &mut Rng, g: &Group) -> u64 {
+    let (lo, hi) = g.think_ms;
+    lo + rng.next_below((hi - lo + 1) as usize) as u64
+}
+
+/// A validated request line (build-time wire-legality check).
+fn line(j: Json) -> Result<String> {
+    let s = j.to_string_compact();
+    proto::parse_request(&s)
+        .map_err(|(code, msg)| anyhow!("planned an illegal request ({code}): {msg} — {s}"))?;
+    Ok(s)
+}
+
+/// The session spec of a planned create: deliberately small (soak load
+/// is many tenants, not big tenants), seeded from the client's RNG
+/// stream so trajectories differ per session but reproduce per run.
+fn session_spec(rng: &mut Rng, steps: u64) -> Json {
+    Json::obj(vec![
+        ("factors", Json::Num(1.0)),
+        ("dim", Json::Num(24.0)),
+        ("rank", Json::Num(4.0)),
+        ("n_stat", Json::Num(2.0)),
+        ("grad_cols", Json::Num(3.0)),
+        ("t_updt", Json::Num(2.0)),
+        ("steps", Json::Num(steps as f64)),
+        ("seed", Json::Str(format!("{:#x}", rng.next_u64()))),
+    ])
+}
+
+fn create_line(rng: &mut Rng, g: &Group, name: &str) -> Result<String> {
+    let mut fields = vec![
+        ("op", Json::str("create")),
+        ("name", Json::str(name)),
+        ("weight", Json::Num(g.weight as f64)),
+        ("session", session_spec(rng, g.steps)),
+    ];
+    if let Some(q) = &g.quota {
+        fields.push(("quota", proto::quota_json(q)));
+    }
+    line(Json::obj(fields))
+}
+
+fn stats_line() -> Result<String> {
+    line(Json::obj(vec![("op", Json::str("stats"))]))
+}
+
+fn stream_line(g: &Group) -> Result<String> {
+    line(Json::obj(vec![
+        ("op", Json::str("stats-stream")),
+        ("interval_ms", Json::Num(g.interval_ms as f64)),
+        // 0 = unbounded: the CLIENT decides how many frames to read
+        ("frames", Json::Num(0.0)),
+    ]))
+}
+
+fn plan_client(rng: &mut Rng, g: &Group, client: &str, duration_ms: u64) -> Result<Vec<Step>> {
+    let mut steps = Vec::new();
+    match g.archetype {
+        Archetype::Compliant | Archetype::Breacher => {
+            steps.push(Step::Request {
+                think_ms: think(rng, g),
+                line: create_line(rng, g, client)?,
+            });
+            for _ in 0..g.polls {
+                steps.push(Step::Request {
+                    think_ms: think(rng, g),
+                    line: stats_line()?,
+                });
+            }
+        }
+        Archetype::Churner => {
+            for k in 0..g.iterations {
+                let name = format!("{client}-{k}");
+                steps.push(Step::Request {
+                    think_ms: think(rng, g),
+                    line: create_line(rng, g, &name)?,
+                });
+                if g.checkpoint {
+                    steps.push(Step::Request {
+                        think_ms: think(rng, g),
+                        line: line(Json::obj(vec![
+                            ("op", Json::str("checkpoint")),
+                            ("name", Json::str(&name)),
+                            ("path", Json::Str(format!("soak-{name}.ckpt.json"))),
+                        ]))?,
+                    });
+                }
+                steps.push(Step::Request {
+                    think_ms: think(rng, g),
+                    line: line(Json::obj(vec![
+                        ("op", Json::str("drop")),
+                        ("name", Json::str(&name)),
+                    ]))?,
+                });
+            }
+        }
+        Archetype::Stalled => {
+            steps.push(Step::Stream {
+                think_ms: think(rng, g),
+                line: stream_line(g)?,
+                read_frames: g.read_frames,
+                // a stalled reader holds its connection for the
+                // configured stall, clamped to the run budget
+                stall_ms: g.stall_ms.min(duration_ms),
+            });
+        }
+        Archetype::Subscriber => {
+            steps.push(Step::Stream {
+                think_ms: think(rng, g),
+                line: stream_line(g)?,
+                read_frames: g.read_frames,
+                stall_ms: 0,
+            });
+        }
+    }
+    Ok(steps)
+}
+
+/// Build the run's full plan. Pure over the scenario: no clock, no
+/// entropy, no I/O beyond the validation parser.
+pub fn build(sc: &Scenario) -> Result<Plan> {
+    let mut root = Rng::new(sc.seed);
+    let duration_ms = (sc.duration_s * 1e3) as u64;
+    let mut clients = Vec::new();
+    let mut idx = 0u64;
+    for (gi, g) in sc.groups.iter().enumerate() {
+        for ci in 0..g.count {
+            // one independent stream per client: a client's sequence
+            // depends only on (seed, client index), not on how many
+            // requests its neighbours planned
+            let mut rng = root.fork(idx);
+            let client = format!("{}-g{gi}c{ci}", g.archetype.name());
+            let steps = plan_client(&mut rng, g, &client, duration_ms)?;
+            clients.push(ClientPlan {
+                client,
+                archetype: g.archetype,
+                steps,
+            });
+            idx += 1;
+        }
+    }
+    Ok(Plan { clients })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::scenario::Scenario;
+
+    const SC: &str = r#"{
+        "seed": 42, "duration_s": 5,
+        "clients": [
+            {"archetype": "compliant", "count": 2, "steps": 16, "polls": 3},
+            {"archetype": "breacher", "count": 1, "steps": 400,
+             "quota": {"max_op_rate": 0.05}},
+            {"archetype": "churner", "count": 1, "iterations": 2,
+             "checkpoint": true},
+            {"archetype": "stalled", "count": 1, "stall_ms": 1500},
+            {"archetype": "subscriber", "count": 1, "read_frames": 5}
+        ]
+    }"#;
+
+    #[test]
+    fn covers_every_archetype_with_legal_lines() {
+        let plan = build(&Scenario::parse(SC).unwrap()).unwrap();
+        assert_eq!(plan.clients.len(), 6);
+        // create + 3 polls
+        assert_eq!(plan.clients[0].steps.len(), 4);
+        // churner: 2 × (create, checkpoint, drop)
+        assert_eq!(plan.clients[3].steps.len(), 6);
+        // stalled keeps its connection open after 4 read frames
+        match &plan.clients[4].steps[0] {
+            Step::Stream { read_frames, stall_ms, .. } => {
+                assert_eq!(*read_frames, 4);
+                assert_eq!(*stall_ms, 1500);
+            }
+            s => panic!("stalled client planned {s:?}"),
+        }
+        // client names are archetype-prefixed and unique
+        let names: std::collections::BTreeSet<&str> =
+            plan.clients.iter().map(|c| c.client.as_str()).collect();
+        assert_eq!(names.len(), plan.clients.len());
+        assert!(names.iter().all(|n| {
+            ["compliant", "breacher", "stalled", "churner", "subscriber"]
+                .iter()
+                .any(|a| n.starts_with(a))
+        }));
+    }
+
+    /// Acceptance criterion (ISSUE 7): two plans from the same scenario
+    /// + seed are identical — the command sequence is deterministic.
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let sc = Scenario::parse(SC).unwrap();
+        let a = build(&sc).unwrap();
+        let b = build(&sc).unwrap();
+        assert_eq!(a, b, "same scenario + seed must replan identically");
+
+        let mut other = sc.clone();
+        other.seed = 43;
+        let c = build(&other).unwrap();
+        assert_ne!(a, c, "a different seed must change the plan");
+    }
+}

@@ -1,0 +1,313 @@
+//! SLO verdicts and the `BENCH_soak.json` report (DESIGN.md §15.3).
+//!
+//! The report merges loadgen's client-side archetype histograms with
+//! the server's final stats reply (fairness, evictions, per-session
+//! records, journal/series loss accounting, the series window's
+//! memory high-water mark) and grades the merged measurements against
+//! the scenario's SLO block into the closed verdict set:
+//!
+//! * `pass` — every bound holds;
+//! * `degraded` — at least one bound breached, but every breach is
+//!   within the SLO's `degraded_factor` headroom;
+//! * `fail` — any breach beyond the headroom, or any *unexpected*
+//!   eviction (a session not created by a breacher client).
+//!
+//! Grading is a pure function of numbers ([`grade`]), so the
+//! fail-on-breach path is unit-testable without a server.
+
+use std::collections::BTreeMap;
+
+use crate::util::ser::Json;
+
+use super::exec::{ArchStats, Outcome};
+use super::scenario::{Scenario, Slo};
+
+/// Server-side + client-side numbers the SLO grades.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Measured {
+    /// worst per-archetype p99 wire latency (client-side)
+    pub p99_wire_ms: f64,
+    /// error replies / requests sent, across all archetypes
+    pub err_frac: f64,
+    pub fairness_jain: f64,
+    /// resident-memory high-water mark over the series window (falls
+    /// back to the final stats snapshot when no series was exported)
+    pub mem_hwm_mb: f64,
+    /// (journal + series) drops / recorded
+    pub drop_frac: f64,
+    /// evictions of sessions NOT owned by a breacher client
+    pub unexpected_evictions: u64,
+    pub evictions: u64,
+    /// names of evicted sessions (for attribution in the report)
+    pub evicted: Vec<String>,
+    pub series_points: u64,
+    pub series_dropped: u64,
+}
+
+/// One graded bound.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Check {
+    pub name: &'static str,
+    pub limit: f64,
+    pub observed: f64,
+    /// breach ratio: <= 1 holds; (1, degraded_factor] degrades; beyond
+    /// fails
+    pub ratio: f64,
+    pub status: &'static str,
+}
+
+impl Check {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("limit", Json::Num(self.limit)),
+            ("observed", Json::Num(self.observed)),
+            ("ratio", Json::Num(self.ratio)),
+            ("status", Json::str(self.status)),
+        ])
+    }
+}
+
+fn status_of(ratio: f64, degraded_factor: f64) -> &'static str {
+    if ratio <= 1.0 {
+        "ok"
+    } else if ratio <= degraded_factor {
+        "degraded"
+    } else {
+        "fail"
+    }
+}
+
+/// Grade measurements against the SLO. Pure; the acceptance-criterion
+/// "deliberately breached SLO yields `fail`" test drives this directly.
+pub fn grade(slo: &Slo, m: &Measured) -> (&'static str, Vec<Check>) {
+    let mut checks = Vec::new();
+    // ceilings: ratio = observed / limit
+    for (name, limit, observed) in [
+        ("p99_wire_ms", slo.max_p99_wire_ms, m.p99_wire_ms),
+        ("err_frac", slo.max_err_frac, m.err_frac),
+        ("mem_hwm_mb", slo.max_mem_hwm_mb, m.mem_hwm_mb),
+        ("drop_frac", slo.max_drop_frac, m.drop_frac),
+    ] {
+        let ratio = if observed <= 0.0 { 0.0 } else { observed / limit };
+        checks.push(Check {
+            name,
+            limit,
+            observed,
+            ratio,
+            status: status_of(ratio, slo.degraded_factor),
+        });
+    }
+    // floor: ratio = limit / observed (so > 1 is a breach, like above)
+    let ratio = if slo.min_fairness_jain <= 0.0 {
+        0.0
+    } else if m.fairness_jain <= 0.0 {
+        f64::INFINITY
+    } else {
+        slo.min_fairness_jain / m.fairness_jain
+    };
+    checks.push(Check {
+        name: "fairness_jain",
+        limit: slo.min_fairness_jain,
+        observed: m.fairness_jain,
+        ratio,
+        status: status_of(ratio, slo.degraded_factor),
+    });
+    // eviction attribution is binary: any unexpected eviction fails —
+    // there is no "slightly evicted a compliant tenant"
+    checks.push(Check {
+        name: "unexpected_evictions",
+        limit: 0.0,
+        observed: m.unexpected_evictions as f64,
+        ratio: if m.unexpected_evictions == 0 { 0.0 } else { f64::INFINITY },
+        status: if m.unexpected_evictions == 0 { "ok" } else { "fail" },
+    });
+    let verdict = if checks.iter().any(|c| c.status == "fail") {
+        "fail"
+    } else if checks.iter().any(|c| c.status == "degraded") {
+        "degraded"
+    } else {
+        "pass"
+    };
+    (verdict, checks)
+}
+
+/// Extract the graded measurements from an executed outcome.
+pub fn measure(out: &Outcome) -> Measured {
+    let mut m = Measured::default();
+    let mut sent = 0u64;
+    let mut errs = 0u64;
+    for st in out.by_arch.values() {
+        if st.wire.count() > 0 {
+            m.p99_wire_ms = m.p99_wire_ms.max(st.wire.p99_ms());
+        }
+        sent += st.sent;
+        errs += st.err_total();
+    }
+    m.err_frac = if sent == 0 { 0.0 } else { errs as f64 / sent as f64 };
+
+    let Some(stats) = &out.final_stats else {
+        return m;
+    };
+    m.fairness_jain = stats
+        .get("fairness_jain")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(1.0);
+    m.evictions = stats
+        .get("evictions")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0) as u64;
+    // eviction attribution: a session whose name carries the breacher
+    // client prefix was SUPPOSED to be evicted
+    let mut snapshot_mb = 0.0f64;
+    if let Some(sessions) = stats.get("sessions").and_then(|s| s.as_arr()) {
+        for s in sessions {
+            snapshot_mb += s.get("resident_mb").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let reason = s.get("evict_reason").and_then(|v| v.as_str()).unwrap_or("");
+            if reason.is_empty() || reason == "none" {
+                continue;
+            }
+            let name = s.get("name").and_then(|v| v.as_str()).unwrap_or("");
+            m.evicted.push(name.to_string());
+            if !name.starts_with("breacher") {
+                m.unexpected_evictions += 1;
+            }
+        }
+    }
+    // drop accounting + memory HWM from the series window
+    let mut recorded = 0.0f64;
+    let mut dropped = 0.0f64;
+    if let Some(series) = stats.get("series") {
+        recorded += series.get("recorded").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        dropped += series.get("dropped").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        m.series_points = series.get("recorded").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        m.series_dropped = series.get("dropped").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        if let Some(points) = series.get("points").and_then(|p| p.as_arr()) {
+            for p in points {
+                if let Some(mb) = p.get("resident_total_mb").and_then(|v| v.as_f64()) {
+                    m.mem_hwm_mb = m.mem_hwm_mb.max(mb);
+                }
+            }
+        }
+    }
+    if let Some(j) = stats.get("journal") {
+        recorded += j.get("recorded").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        dropped += j.get("dropped").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    }
+    m.drop_frac = if recorded > 0.0 { dropped / recorded } else { 0.0 };
+    m.mem_hwm_mb = m.mem_hwm_mb.max(snapshot_mb);
+    m
+}
+
+/// Assemble `BENCH_soak.json`.
+pub fn report_json(
+    sc: &Scenario,
+    out: &Outcome,
+    m: &Measured,
+    verdict: &str,
+    checks: &[Check],
+) -> Json {
+    let archetypes: BTreeMap<String, Json> = out
+        .by_arch
+        .iter()
+        .map(|(k, v): (&&'static str, &ArchStats)| (k.to_string(), v.to_json()))
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str("soak")),
+        ("scenario", Json::str(&sc.name)),
+        ("seed", Json::Num(sc.seed as f64)),
+        ("duration_s", Json::Num(out.wall_s)),
+        ("archetypes", Json::Obj(archetypes)),
+        (
+            "server",
+            Json::obj(vec![
+                ("fairness_jain", Json::Num(m.fairness_jain)),
+                ("evictions", Json::Num(m.evictions as f64)),
+                (
+                    "evicted",
+                    Json::Arr(m.evicted.iter().map(|n| Json::str(n)).collect()),
+                ),
+                (
+                    "unexpected_evictions",
+                    Json::Num(m.unexpected_evictions as f64),
+                ),
+                ("mem_hwm_mb", Json::Num(m.mem_hwm_mb)),
+                ("drop_frac", Json::Num(m.drop_frac)),
+                ("series_points", Json::Num(m.series_points as f64)),
+                ("series_dropped", Json::Num(m.series_dropped as f64)),
+            ]),
+        ),
+        ("slo", sc.slo_json()),
+        ("checks", Json::Arr(checks.iter().map(|c| c.to_json()).collect())),
+        ("verdict", Json::str(verdict)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn healthy() -> Measured {
+        Measured {
+            p99_wire_ms: 12.0,
+            err_frac: 0.0,
+            fairness_jain: 0.95,
+            mem_hwm_mb: 10.0,
+            drop_frac: 0.0,
+            unexpected_evictions: 0,
+            evictions: 1,
+            ..Measured::default()
+        }
+    }
+
+    #[test]
+    fn healthy_run_passes() {
+        let (verdict, checks) = grade(&Slo::default(), &healthy());
+        assert_eq!(verdict, "pass", "{checks:?}");
+        assert!(checks.iter().all(|c| c.status == "ok"));
+    }
+
+    /// Acceptance criterion (ISSUE 7): a deliberately breached SLO
+    /// yields `fail`.
+    #[test]
+    fn breached_slo_fails() {
+        let slo = Slo {
+            max_p99_wire_ms: 1.0, // the run measured 12 ms — 12x over
+            ..Slo::default()
+        };
+        let (verdict, checks) = grade(&slo, &healthy());
+        assert_eq!(verdict, "fail", "{checks:?}");
+        let c = checks.iter().find(|c| c.name == "p99_wire_ms").unwrap();
+        assert_eq!(c.status, "fail");
+        assert!(c.ratio > slo.degraded_factor);
+    }
+
+    #[test]
+    fn breach_within_headroom_degrades() {
+        let slo = Slo {
+            max_p99_wire_ms: 10.0, // measured 12 ms: 1.2x, inside 1.5x
+            ..Slo::default()
+        };
+        let (verdict, checks) = grade(&slo, &healthy());
+        assert_eq!(verdict, "degraded", "{checks:?}");
+    }
+
+    #[test]
+    fn unexpected_eviction_always_fails() {
+        let mut m = healthy();
+        m.unexpected_evictions = 1;
+        let (verdict, checks) = grade(&Slo::default(), &m);
+        assert_eq!(verdict, "fail", "{checks:?}");
+    }
+
+    #[test]
+    fn fairness_floor_is_graded_inverted() {
+        let mut m = healthy();
+        m.fairness_jain = 0.1; // floor default 0.25 → ratio 2.5 → fail
+        let (verdict, checks) = grade(&Slo::default(), &m);
+        assert_eq!(verdict, "fail", "{checks:?}");
+        m.fairness_jain = 0.2; // ratio 1.25, inside 1.5 headroom
+        let (verdict, _) = grade(&Slo::default(), &m);
+        assert_eq!(verdict, "degraded");
+    }
+}

@@ -1,0 +1,365 @@
+//! Soak scenario files (DESIGN.md §15.2): the declarative input of
+//! `bnkfac loadgen`.
+//!
+//! A scenario is a JSON object naming the client mix (groups of tenant
+//! archetypes with counts, weights, think-time ranges and quotas), the
+//! run seed, the wall budget, and the SLO block the resulting report
+//! is graded against. Parsing is strict — unknown keys are rejected at
+//! every level, same policy as the wire protocol's spec parsers — so a
+//! typo'd scenario fails loudly instead of silently running a
+//! different load shape.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::server::proto::{self, QuotaSpec};
+use crate::util::ser::Json;
+
+/// A tenant archetype: the scripted behavior one client thread runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Archetype {
+    /// create a modest host session, poll `stats` politely, let it run
+    /// to completion
+    Compliant,
+    /// create an oversized session under a tight op-rate quota — the
+    /// governor must walk it through throttle → pause → evict
+    Breacher,
+    /// subscribe to `stats-stream`, read a few frames, then stop
+    /// reading while keeping the connection open (zombie reader)
+    Stalled,
+    /// create / (checkpoint) / drop in a loop — session-table churn
+    Churner,
+    /// subscribe to `stats-stream` and dutifully read every frame
+    Subscriber,
+}
+
+impl Archetype {
+    pub fn parse(s: &str) -> Option<Archetype> {
+        match s {
+            "compliant" => Some(Archetype::Compliant),
+            "breacher" => Some(Archetype::Breacher),
+            "stalled" => Some(Archetype::Stalled),
+            "churner" => Some(Archetype::Churner),
+            "subscriber" => Some(Archetype::Subscriber),
+            _ => None,
+        }
+    }
+
+    /// Stable label: client names are prefixed with it, which is what
+    /// lets `ci/check_soak.py` attribute evictions to archetypes.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Archetype::Compliant => "compliant",
+            Archetype::Breacher => "breacher",
+            Archetype::Stalled => "stalled",
+            Archetype::Churner => "churner",
+            Archetype::Subscriber => "subscriber",
+        }
+    }
+}
+
+/// One group of identical clients in the mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Group {
+    pub archetype: Archetype,
+    pub count: usize,
+    /// fair-share weight of created sessions
+    pub weight: u32,
+    /// optimizer steps of created sessions
+    pub steps: u64,
+    /// uniform think-time range between requests, milliseconds
+    pub think_ms: (u64, u64),
+    /// stats polls per client (compliant/breacher)
+    pub polls: u64,
+    /// create→checkpoint→drop loops per client (churner)
+    pub iterations: u64,
+    /// take a checkpoint inside each churn loop (needs `--ckpt-dir`)
+    pub checkpoint: bool,
+    /// stats-stream frame interval (stalled/subscriber)
+    pub interval_ms: u64,
+    /// frames actually read off the stream (stalled/subscriber)
+    pub read_frames: u64,
+    /// how long a stalled reader stays connected without reading, ms
+    pub stall_ms: u64,
+    /// per-session quota ceilings (breacher scenarios set max_op_rate)
+    pub quota: Option<QuotaSpec>,
+}
+
+const GROUP_KEYS: &[&str] = &[
+    "archetype",
+    "count",
+    "weight",
+    "steps",
+    "think_ms",
+    "polls",
+    "iterations",
+    "checkpoint",
+    "interval_ms",
+    "read_frames",
+    "stall_ms",
+    "quota",
+];
+
+/// The SLO block (DESIGN.md §15.3): every bound optional, graded into
+/// the closed verdict set `pass`/`degraded`/`fail` by
+/// [`report::grade`](crate::loadgen::report::grade).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Slo {
+    /// ceiling on the worst per-archetype p99 wire latency
+    pub max_p99_wire_ms: f64,
+    /// ceiling on error replies / requests sent
+    pub max_err_frac: f64,
+    /// floor on the server's Jain fairness index
+    pub min_fairness_jain: f64,
+    /// ceiling on the resident-memory high-water mark
+    pub max_mem_hwm_mb: f64,
+    /// ceiling on (journal + series) drops / recorded
+    pub max_drop_frac: f64,
+    /// a bound breached by ≤ this factor grades `degraded`; beyond it,
+    /// `fail`
+    pub degraded_factor: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Slo {
+        Slo {
+            max_p99_wire_ms: 1000.0,
+            max_err_frac: 0.05,
+            min_fairness_jain: 0.25,
+            max_mem_hwm_mb: 4096.0,
+            max_drop_frac: 0.5,
+            degraded_factor: 1.5,
+        }
+    }
+}
+
+const SLO_KEYS: &[&str] = &[
+    "max_p99_wire_ms",
+    "max_err_frac",
+    "min_fairness_jain",
+    "max_mem_hwm_mb",
+    "max_drop_frac",
+    "degraded_factor",
+];
+
+/// A full soak scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    /// wall budget: stalled readers and deadline clamps derive from it
+    pub duration_s: f64,
+    pub groups: Vec<Group>,
+    pub slo: Slo,
+}
+
+// "description" is accepted and ignored, same as the jobs files: a
+// scenario should be able to say what it is for.
+const SCENARIO_KEYS: &[&str] = &["description", "name", "seed", "duration_s", "clients", "slo"];
+
+fn num(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(Json::Num(n)) if n.is_finite() => Ok(*n),
+        Some(other) => bail!("'{key}' must be a finite number, got {other:?}"),
+    }
+}
+
+fn unsigned(j: &Json, key: &str, default: u64) -> Result<u64> {
+    let v = num(j, key, default as f64)?;
+    ensure!(
+        v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64,
+        "'{key}' must be a non-negative integer"
+    );
+    Ok(v as u64)
+}
+
+fn parse_think(j: &Json) -> Result<(u64, u64)> {
+    match j.get("think_ms") {
+        None => Ok((1, 10)),
+        Some(Json::Arr(a)) if a.len() == 2 => {
+            let lo = a[0]
+                .as_usize()
+                .ok_or_else(|| anyhow!("think_ms[0] must be an integer"))?;
+            let hi = a[1]
+                .as_usize()
+                .ok_or_else(|| anyhow!("think_ms[1] must be an integer"))?;
+            ensure!(lo <= hi, "think_ms range must be [lo, hi] with lo <= hi");
+            Ok((lo as u64, hi as u64))
+        }
+        Some(other) => bail!("'think_ms' must be a [lo, hi] pair, got {other:?}"),
+    }
+}
+
+fn parse_group(j: &Json) -> Result<Group> {
+    proto::reject_unknown(j, GROUP_KEYS, "scenario client group")?;
+    let arch = j
+        .get("archetype")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("client group needs an 'archetype' string"))?;
+    let archetype = Archetype::parse(arch).ok_or_else(|| {
+        anyhow!("unknown archetype '{arch}' (compliant|breacher|stalled|churner|subscriber)")
+    })?;
+    let count = unsigned(j, "count", 1)? as usize;
+    ensure!(count > 0, "client group 'count' must be >= 1");
+    let quota = proto::opt_quota_from(j.get("quota"))?;
+    if archetype == Archetype::Breacher {
+        ensure!(
+            quota.is_some(),
+            "a breacher group needs a 'quota' block to breach"
+        );
+    }
+    Ok(Group {
+        archetype,
+        count,
+        weight: unsigned(j, "weight", 1)?.clamp(1, 1_000_000) as u32,
+        steps: unsigned(j, "steps", 32)?,
+        think_ms: parse_think(j)?,
+        polls: unsigned(j, "polls", 4)?,
+        iterations: unsigned(j, "iterations", 2)?.max(1),
+        checkpoint: matches!(j.get("checkpoint"), Some(Json::Bool(true))),
+        interval_ms: unsigned(j, "interval_ms", 50)?.clamp(10, 60_000),
+        read_frames: unsigned(j, "read_frames", 4)?.max(1),
+        stall_ms: unsigned(j, "stall_ms", 2_000)?,
+        quota,
+    })
+}
+
+fn parse_slo(j: &Json) -> Result<Slo> {
+    proto::reject_unknown(j, SLO_KEYS, "scenario slo block")?;
+    let d = Slo::default();
+    let slo = Slo {
+        max_p99_wire_ms: num(j, "max_p99_wire_ms", d.max_p99_wire_ms)?,
+        max_err_frac: num(j, "max_err_frac", d.max_err_frac)?,
+        min_fairness_jain: num(j, "min_fairness_jain", d.min_fairness_jain)?,
+        max_mem_hwm_mb: num(j, "max_mem_hwm_mb", d.max_mem_hwm_mb)?,
+        max_drop_frac: num(j, "max_drop_frac", d.max_drop_frac)?,
+        degraded_factor: num(j, "degraded_factor", d.degraded_factor)?,
+    };
+    ensure!(
+        slo.degraded_factor >= 1.0,
+        "slo 'degraded_factor' must be >= 1.0"
+    );
+    for (k, v) in [
+        ("max_p99_wire_ms", slo.max_p99_wire_ms),
+        ("max_err_frac", slo.max_err_frac),
+        ("max_mem_hwm_mb", slo.max_mem_hwm_mb),
+        ("max_drop_frac", slo.max_drop_frac),
+    ] {
+        ensure!(v > 0.0, "slo '{k}' must be > 0");
+    }
+    ensure!(
+        (0.0..=1.0).contains(&slo.min_fairness_jain),
+        "slo 'min_fairness_jain' must be in [0, 1]"
+    );
+    Ok(slo)
+}
+
+impl Scenario {
+    /// Parse a scenario from its JSON root. Strict: unknown keys at any
+    /// level are an error.
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        proto::reject_unknown(j, SCENARIO_KEYS, "scenario")?;
+        ensure!(matches!(j, Json::Obj(_)), "scenario root must be an object");
+        let groups = match j.get("clients") {
+            Some(Json::Arr(a)) if !a.is_empty() => {
+                a.iter().map(parse_group).collect::<Result<Vec<_>>>()?
+            }
+            _ => bail!("scenario needs a non-empty 'clients' array"),
+        };
+        let duration_s = num(j, "duration_s", 20.0)?;
+        ensure!(
+            duration_s > 0.0 && duration_s <= 3600.0,
+            "'duration_s' must be in (0, 3600]"
+        );
+        let slo = match j.get("slo") {
+            Some(s) => parse_slo(s)?,
+            None => Slo::default(),
+        };
+        Ok(Scenario {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("soak")
+                .to_string(),
+            seed: unsigned(j, "seed", 1)?,
+            duration_s,
+            groups,
+            slo,
+        })
+    }
+
+    /// Parse from file contents.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let root = Json::parse(text).map_err(|e| anyhow!("scenario json: {e}"))?;
+        Scenario::from_json(&root)
+    }
+
+    /// Echo of the SLO block for the report.
+    pub fn slo_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_p99_wire_ms", Json::Num(self.slo.max_p99_wire_ms)),
+            ("max_err_frac", Json::Num(self.slo.max_err_frac)),
+            ("min_fairness_jain", Json::Num(self.slo.min_fairness_jain)),
+            ("max_mem_hwm_mb", Json::Num(self.slo.max_mem_hwm_mb)),
+            ("max_drop_frac", Json::Num(self.slo.max_drop_frac)),
+            ("degraded_factor", Json::Num(self.slo.degraded_factor)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SMOKE: &str = r#"{
+        "name": "t", "seed": 9, "duration_s": 5,
+        "clients": [
+            {"archetype": "compliant", "count": 2, "steps": 16},
+            {"archetype": "breacher", "count": 1, "steps": 400,
+             "quota": {"max_op_rate": 0.05}}
+        ],
+        "slo": {"max_p99_wire_ms": 100}
+    }"#;
+
+    #[test]
+    fn parses_a_minimal_scenario() {
+        let sc = Scenario::parse(SMOKE).unwrap();
+        assert_eq!(sc.name, "t");
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.groups.len(), 2);
+        assert_eq!(sc.groups[0].archetype, Archetype::Compliant);
+        assert_eq!(sc.groups[1].quota.as_ref().unwrap().max_op_rate, 0.05);
+        assert_eq!(sc.slo.max_p99_wire_ms, 100.0);
+        // unset bounds take defaults
+        assert_eq!(sc.slo.degraded_factor, Slo::default().degraded_factor);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_at_every_level() {
+        for bad in [
+            r#"{"clients": [{"archetype": "compliant"}], "typo": 1}"#,
+            r#"{"clients": [{"archetype": "compliant", "typo": 1}]}"#,
+            r#"{"clients": [{"archetype": "compliant"}], "slo": {"typo": 1}}"#,
+        ] {
+            let e = Scenario::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("unknown field 'typo'"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_breacher_without_quota_and_bad_shapes() {
+        assert!(Scenario::parse(r#"{"clients": []}"#).is_err());
+        assert!(
+            Scenario::parse(r#"{"clients": [{"archetype": "breacher"}]}"#).is_err(),
+            "breacher without a quota cannot breach anything"
+        );
+        assert!(Scenario::parse(
+            r#"{"clients": [{"archetype": "compliant", "think_ms": [9, 2]}]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"clients": [{"archetype": "nope"}]}"#
+        )
+        .is_err());
+    }
+}

@@ -8,6 +8,10 @@
 //!                  scripted timeline, --listen <addr> serves the
 //!                  line-delimited JSON socket protocol (DESIGN.md §12)
 //!   client         speak the socket protocol to a live server
+//!   loadgen        deterministic soak driver: run a scenario file of
+//!                  scripted tenant archetypes against a live server
+//!                  and grade the run into BENCH_soak.json
+//!                  (DESIGN.md §15)
 //!
 //! All experiment harnesses (Fig 1/2, Tables 1/2, scaling) live in
 //! `cargo bench` targets; see README.
@@ -34,8 +38,9 @@ fn main() -> Result<()> {
         Some("error-study") => cmd_error_study(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some(other) => {
-            bail!("unknown subcommand '{other}' (info|train|error-study|serve|client)")
+            bail!("unknown subcommand '{other}' (info|train|error-study|serve|client|loadgen)")
         }
     }
 }
@@ -52,13 +57,51 @@ fn read_token_file(path: &str) -> Result<String> {
     Ok(tok)
 }
 
-/// Export a run's event journal as JSONL (`serve --trace-out`).
-fn write_trace(path: &str, journal: &Journal) -> Result<()> {
+/// Export a run's event journal as JSONL (`serve --trace-out`). The
+/// `journal_summary` tail carries the run's final latency percentiles
+/// (p50/p90/p99 for `wire_ms`/`round_ms`/`op_ms`) pulled from the
+/// final record, so a trace is self-contained for latency triage
+/// (`ci/check_trace.py` asserts their presence).
+fn write_trace(path: &str, journal: &Journal, rec: &ServerRecord) -> Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, journal.export_jsonl())?;
+    let wire = rec
+        .frontend
+        .as_ref()
+        .map(|f| f.wire_ms.clone())
+        .unwrap_or_default();
+    let mut op = bnkfac::obs::Hist::new();
+    for s in &rec.sessions {
+        if let Some(svc) = &s.service {
+            for (_, h) in &svc.op_ms {
+                op.merge(h);
+            }
+        }
+    }
+    let mut extra = Vec::new();
+    let mut fields: Vec<(String, f64)> = Vec::new();
+    for (name, h) in [("wire_ms", &wire), ("round_ms", &rec.round_ms), ("op_ms", &op)] {
+        fields.push((format!("{name}_p50"), h.p50_ms()));
+        fields.push((format!("{name}_p90"), h.p90_ms()));
+        fields.push((format!("{name}_p99"), h.p99_ms()));
+    }
+    for (k, v) in &fields {
+        extra.push((k.as_str(), Json::Num(*v)));
+    }
+    std::fs::write(path, journal.export_jsonl_with(extra))?;
     println!("wrote trace {path}");
+    Ok(())
+}
+
+/// Export a run's rolling time-series as JSONL (`serve --series-out`,
+/// DESIGN.md §15.1).
+fn write_series(path: &str, series: &bnkfac::obs::SeriesStore) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, series.export_jsonl())?;
+    println!("wrote series {path}");
     Ok(())
 }
 
@@ -94,7 +137,11 @@ fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
 ///
 /// Both frontends take `--trace-out <path>`: the run records structured
 /// events into the bounded journal (DESIGN.md §14.1) and exports them
-/// as JSONL when serving ends.
+/// as JSONL when serving ends. Both also take `--series-out <path>`
+/// (DESIGN.md §15.1): a rolling time-series of fleet signals sampled
+/// every `--series-every <k>` rounds (ring bounded by
+/// `--series-cap <n>`), exported in stats replies and dumped as JSONL
+/// at shutdown.
 ///
 /// Host sessions run entirely on the host substrate — no artifacts or
 /// PJRT needed.
@@ -109,6 +156,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let journal = trace_out
         .as_ref()
         .map(|_| Journal::new(bnkfac::obs::DEFAULT_CAP));
+    // --series-out <path>: attach the rolling time-series store
+    // (DESIGN.md §15.1), sampled every --series-every rounds, and
+    // export its window as JSONL at shutdown
+    let series_out = args.get("series-out").map(|s| s.to_string());
+    let series_every = args.get_u64("series-every", bnkfac::obs::DEFAULT_SAMPLE_EVERY);
+    let series_cap = args.get_usize("series-cap", bnkfac::obs::DEFAULT_SERIES_CAP);
+    let series = series_out
+        .as_ref()
+        .map(|_| bnkfac::obs::SeriesStore::new(series_cap, series_every));
     match (jobs, listen) {
         (Some(_), Some(_)) => bail!("serve takes --jobs OR --listen, not both"),
         (None, None) => bail!("serve requires --jobs <file> or --listen <addr>"),
@@ -117,10 +173,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let max_rounds = args.get_u64("max-rounds", 1_000_000);
             args.finish().map_err(|e| anyhow!(e))?;
             let workers = (workers > 0).then_some(workers);
-            let rec =
-                bnkfac::server::driver::run_jobs_with(&jobs, workers, max_rounds, journal.clone())?;
+            let rec = bnkfac::server::driver::run_jobs_opts(
+                &jobs,
+                workers,
+                max_rounds,
+                journal.clone(),
+                series.clone(),
+            )?;
             if let (Some(path), Some(j)) = (&trace_out, &journal) {
-                write_trace(path, j)?;
+                write_trace(path, j, &rec)?;
+            }
+            if let (Some(path), Some(s)) = (&series_out, &series) {
+                write_series(path, s)?;
             }
             write_record(&rec, out)
         }
@@ -173,6 +237,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if let Some(j) = &journal {
                 fe.set_journal(j.clone());
             }
+            if let Some(s) = &series {
+                fe.set_series(s.clone());
+            }
             let local = fe.local_addr();
             println!("listening on {local}");
             if let Some(pf) = port_file {
@@ -183,7 +250,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             let rec = fe.run(cfg, rt.as_ref(), max_rounds)?;
             if let (Some(path), Some(j)) = (&trace_out, &journal) {
-                write_trace(path, j)?;
+                write_trace(path, j, &rec)?;
+            }
+            if let (Some(path), Some(s)) = (&series_out, &series) {
+                write_series(path, s)?;
             }
             write_record(&rec, out)
         }
@@ -203,7 +273,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// (handshake once) and prints a summary instead of failing on error
 /// replies — the smoke tests use it to exercise the rate limiter.
 /// `--stats-watch [--interval-ms <ms>] [--frames <n>]` subscribes to
-/// the server's `stats-stream` and prints one line per frame.
+/// the server's `stats-stream` and prints one line per frame;
+/// `--stats-out <path>` additionally appends each sequenced frame as
+/// JSONL so soak debugging doesn't need terminal scraping.
 fn cmd_client(args: &Args) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
 
@@ -217,6 +289,12 @@ fn cmd_client(args: &Args) -> Result<()> {
     let stats_watch = args.flag("stats-watch");
     let watch_frames = args.get_u64("frames", 0);
     let watch_interval = args.get_u64("interval-ms", 500);
+    // --stats-out <path>: append each sequenced stats frame as JSONL
+    let stats_out = args.get("stats-out").map(|s| s.to_string());
+    ensure!(
+        stats_out.is_none() || stats_watch,
+        "--stats-out requires --stats-watch"
+    );
     let line = if stats_watch {
         let j = Json::obj(vec![
             ("op", Json::str("stats-stream")),
@@ -350,6 +428,23 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
 
     if stats_watch {
+        // open the sink before subscribing so a bad path fails fast,
+        // not after frames started flowing
+        let mut sink = match &stats_out {
+            Some(path) => {
+                if let Some(dir) = std::path::Path::new(path).parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                Some(
+                    std::fs::OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(path)
+                        .with_context(|| format!("opening --stats-out {path}"))?,
+                )
+            }
+            None => None,
+        };
         out.write_all(line.as_bytes())?;
         out.write_all(b"\n")?;
         out.flush()?;
@@ -361,6 +456,10 @@ fn cmd_client(args: &Args) -> Result<()> {
             println!("{reply}");
             let r = proto::parse_reply(&reply)?;
             ensure!(r.ok, "server error [{}]: {}", r.code, r.error);
+            if let Some(f) = &mut sink {
+                f.write_all(reply.as_bytes())?;
+                f.write_all(b"\n")?;
+            }
             n += 1;
             // a bounded stream ends after its last frame but the server
             // keeps the connection open; stop reading ourselves
@@ -438,6 +537,68 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     let r = last.ok_or_else(|| anyhow!("server closed the connection without replying"))?;
     ensure!(r.ok, "server error [{}]: {}", r.code, r.error);
+    Ok(())
+}
+
+/// Deterministic soak driver (DESIGN.md §15): run a scenario file of
+/// scripted tenant archetypes against a live `serve --listen`, merge
+/// client-side latency with the server's stats/series telemetry, and
+/// grade the run into `BENCH_soak.json`.
+///
+///   --scenario <file>        scenario JSON (examples/soak_*.json)
+///   --addr <host:port>       live server address
+///   --auth-token-file <f>    §12.6 shared token (if the server requires it)
+///   --seed <u64>             override the scenario's seed
+///   --out <file>             report path (default BENCH_soak.json)
+///   --shutdown               send a final `shutdown` so the server
+///                            flushes --trace-out/--series-out
+///
+/// Exit is nonzero on a `fail` verdict — but the report is written
+/// first, so CI always has the artifact to post-mortem.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let scenario_path = args
+        .get("scenario")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("loadgen requires --scenario <file>"))?;
+    let addr = args
+        .get("addr")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("loadgen requires --addr <host:port>"))?;
+    let token = args.get("auth-token-file").map(read_token_file).transpose()?;
+    let seed_override = args.get("seed").map(|s| s.to_string());
+    let out_path = args.get_or("out", "BENCH_soak.json").to_string();
+    let shutdown = args.flag("shutdown");
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let text = std::fs::read_to_string(&scenario_path)
+        .with_context(|| format!("reading scenario {scenario_path}"))?;
+    let mut sc = bnkfac::loadgen::Scenario::parse(&text)
+        .with_context(|| format!("parsing scenario {scenario_path}"))?;
+    if let Some(s) = seed_override {
+        sc.seed = match s.strip_prefix("0x") {
+            Some(hex) => u64::from_str_radix(hex, 16).map_err(|_| anyhow!("bad --seed"))?,
+            None => s.parse::<u64>().map_err(|_| anyhow!("bad --seed"))?,
+        };
+    }
+
+    let (report, verdict) =
+        bnkfac::loadgen::run_scenario(&sc, &addr, token.as_deref(), shutdown)?;
+    if let Some(dir) = std::path::Path::new(&out_path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out_path, report.to_string_pretty())?;
+    println!("wrote {out_path}");
+    if let Some(Json::Arr(checks)) = report.get("checks") {
+        for c in checks {
+            let name = c.get("name").and_then(|v| v.as_str()).unwrap_or("?");
+            let status = c.get("status").and_then(|v| v.as_str()).unwrap_or("?");
+            let observed = c.get("observed").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let limit = c.get("limit").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            println!("  {status:8} {name}: observed {observed:.4} vs limit {limit:.4}");
+        }
+    }
+    println!("soak '{}' verdict: {verdict}", sc.name);
+    ensure!(verdict != "fail", "soak scenario '{}' failed its SLO", sc.name);
     Ok(())
 }
 

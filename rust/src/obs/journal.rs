@@ -144,20 +144,29 @@ impl Journal {
     /// trailing `journal_summary` line carrying the loss accounting —
     /// a consumer can always tell a complete trace from a clipped one.
     pub fn export_jsonl(&self) -> String {
+        self.export_jsonl_with(Vec::new())
+    }
+
+    /// [`export_jsonl`](Self::export_jsonl) with extra fields spliced
+    /// into the `journal_summary` tail — `serve --trace-out` uses it to
+    /// close the trace with the run's final latency percentiles
+    /// (`wire_ms`/`round_ms`/`op_ms` p50/p90/p99) so a trace is
+    /// self-contained without the stats record beside it. Extra keys
+    /// must not collide with the four summary stamps.
+    pub fn export_jsonl_with(&self, extra: Vec<(&str, Json)>) -> String {
         let mut out = String::new();
         for ev in self.snapshot() {
             out.push_str(&ev.to_json().to_string_compact());
             out.push('\n');
         }
-        out.push_str(
-            &Json::obj(vec![
-                ("event", Json::str("journal_summary")),
-                ("t_ms", Json::Num(self.uptime_ms() as f64)),
-                ("recorded", Json::Num(self.recorded() as f64)),
-                ("dropped", Json::Num(self.dropped() as f64)),
-            ])
-            .to_string_compact(),
-        );
+        let mut fields = vec![
+            ("event", Json::str("journal_summary")),
+            ("t_ms", Json::Num(self.uptime_ms() as f64)),
+            ("recorded", Json::Num(self.recorded() as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
+        ];
+        fields.extend(extra);
+        out.push_str(&Json::obj(fields).to_string_compact());
         out.push('\n');
         out
     }
@@ -205,6 +214,23 @@ mod tests {
         assert_eq!(rounds, (12..20).collect::<Vec<_>>());
         let out = j.export_jsonl();
         assert!(out.contains("\"dropped\": 12") || out.contains("\"dropped\":12"), "{out}");
+    }
+
+    /// Satellite (ISSUE 7): extra fields ride the summary tail so the
+    /// final latency percentiles can close the trace.
+    #[test]
+    fn export_with_extra_summary_fields() {
+        let j = Journal::new(8);
+        j.emit(1, "round_start", Json::Null);
+        let out = j.export_jsonl_with(vec![
+            ("wire_ms_p99", Json::Num(1.5)),
+            ("round_ms_p50", Json::Num(0.25)),
+        ]);
+        let tail = Json::parse(out.lines().last().unwrap()).unwrap();
+        assert_eq!(tail.get("event").and_then(|v| v.as_str()), Some("journal_summary"));
+        assert_eq!(tail.get("wire_ms_p99").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(tail.get("round_ms_p50").and_then(|v| v.as_f64()), Some(0.25));
+        assert!(tail.get("recorded").is_some() && tail.get("dropped").is_some());
     }
 
     #[test]

@@ -20,11 +20,18 @@
 //!
 //! Everything is snapshot-polled through the ordinary stats path, plus
 //! the `stats-stream` wire command for continuous tailing.
+//!
+//! The soak-telemetry layer (DESIGN.md §15) adds [`timeseries`] — a
+//! bounded ring of per-round fleet-signal snapshots (queue depths,
+//! workers, resident memory, histogram deltas) sampled every K rounds
+//! and exported in stats replies and via `serve --series-out`.
 
 pub mod hist;
 pub mod journal;
 pub mod probe;
+pub mod timeseries;
 
 pub use hist::{bucket_of, bucket_upper_secs, AtomicHist, Hist, BUCKETS};
 pub use journal::{Event, Journal, DEFAULT_CAP};
 pub use probe::{inversion_error, label_seed, ProbeRecorder, ProbeSample, DEFAULT_EVERY};
+pub use timeseries::{SeriesStore, DEFAULT_SAMPLE_EVERY, DEFAULT_SERIES_CAP};

@@ -1,0 +1,282 @@
+//! Rolling time-series store (DESIGN.md §15.1): a bounded,
+//! drop-counting ring of per-round server snapshots.
+//!
+//! The journal (§14.1) answers *what happened*; the series answers *how
+//! the fleet-level signals moved* — queue depths, worker count,
+//! resident memory, throttle/evict counters and latency-histogram
+//! deltas, sampled every K serving rounds. Same budget rule as every
+//! §14 mechanism: `record` takes the ring lock with `try_lock` so a
+//! contended sample is *dropped and counted*, never awaited, and the
+//! sampler only reads counters — it must never touch an RNG or a
+//! trajectory (pinned by `series_invariance.rs`).
+//!
+//! Histogram columns are **deltas**: each sample carries the counts
+//! accrued since the previous sample (via [`SeriesStore::delta`]), so
+//! a consumer can read per-window rates straight off the points while
+//! the cumulative histograms stay in the stats record. The wire-side
+//! histogram lives on the frontend's connection threads; the frontend
+//! hands the store a snapshot closure ([`SeriesStore::set_wire_probe`])
+//! so the serving-loop sampler can fold it in without a dependency
+//! from `obs` onto `server`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::hist::Hist;
+use crate::util::ser::Json;
+
+/// Default ring capacity: at the default cadence this is hours of soak
+/// window; longer runs see a sliding window plus drop counts.
+pub const DEFAULT_SERIES_CAP: usize = 1024;
+
+/// Default sampling cadence (serving rounds between samples).
+pub const DEFAULT_SAMPLE_EVERY: u64 = 8;
+
+type WireProbe = Box<dyn Fn() -> Hist + Send + Sync>;
+
+/// The shared series store. Construct once per server run and clone
+/// the `Arc` into the manager (sampler) and the frontend (stats-reply
+/// export + wire-histogram probe).
+pub struct SeriesStore {
+    cap: usize,
+    every: u64,
+    ring: Mutex<VecDeque<Json>>,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    /// previous cumulative counts per histogram column, for deltas
+    prev: Mutex<BTreeMap<String, Hist>>,
+    /// frontend-installed snapshot of the wire-latency histogram
+    wire_probe: Mutex<Option<WireProbe>>,
+}
+
+impl SeriesStore {
+    pub fn new(cap: usize, every: u64) -> Arc<SeriesStore> {
+        Arc::new(SeriesStore {
+            cap: cap.max(1),
+            every: every.max(1),
+            ring: Mutex::new(VecDeque::with_capacity(cap.max(1).min(DEFAULT_SERIES_CAP))),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            prev: Mutex::new(BTreeMap::new()),
+            wire_probe: Mutex::new(None),
+        })
+    }
+
+    /// Sampling cadence in serving rounds.
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// Is `round` a sampling round?
+    pub fn due(&self, round: u64) -> bool {
+        round % self.every == 0
+    }
+
+    /// Install the frontend's wire-histogram snapshot closure. The
+    /// sampler calls it (at most once per sample) to fold per-request
+    /// wire latency into the point without `obs` knowing the frontend.
+    pub fn set_wire_probe(&self, probe: WireProbe) {
+        if let Ok(mut p) = self.wire_probe.lock() {
+            *p = Some(probe);
+        }
+    }
+
+    /// Counts accrued in `cur` since the last call under the same key
+    /// (saturating per bucket, so a reset histogram yields zeros rather
+    /// than wrapping). First call returns `cur` whole.
+    pub fn delta(&self, key: &str, cur: &Hist) -> Hist {
+        let mut prev = match self.prev.lock() {
+            Ok(p) => p,
+            Err(_) => return cur.clone(),
+        };
+        let d = match prev.get(key) {
+            Some(old) => {
+                // `Hist` keeps an empty bucket vec until its first
+                // sample — index `old` defensively on both sides
+                let mut d = Hist::new();
+                if !cur.counts.is_empty() {
+                    d.counts = cur
+                        .counts
+                        .iter()
+                        .enumerate()
+                        .map(|(i, c)| {
+                            c.saturating_sub(old.counts.get(i).copied().unwrap_or(0))
+                        })
+                        .collect();
+                }
+                d.invalid = cur.invalid.saturating_sub(old.invalid);
+                d
+            }
+            None => cur.clone(),
+        };
+        prev.insert(key.to_string(), cur.clone());
+        d
+    }
+
+    /// Wire-latency delta since the last sample, if the frontend
+    /// installed a probe (job-file runs have no wire side).
+    pub fn wire_delta(&self) -> Option<Hist> {
+        let cur = match self.wire_probe.lock() {
+            Ok(p) => p.as_ref().map(|f| f()),
+            Err(_) => None,
+        }?;
+        Some(self.delta("wire_ms", &cur))
+    }
+
+    /// Record one sample point. Non-blocking: contention or overflow
+    /// drops (counted), never waits. `round`/`t_ms` stamps ride beside
+    /// the caller's fields like the journal's event stamps.
+    pub fn record(&self, round: u64, t_ms: u64, fields: Vec<(&str, Json)>) {
+        let mut m: BTreeMap<String, Json> = fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+        m.insert("round".into(), Json::Num(round as f64));
+        m.insert("t_ms".into(), Json::Num(t_ms as f64));
+        let point = Json::Obj(m);
+        match self.ring.try_lock() {
+            Ok(mut q) => {
+                if q.len() >= self.cap {
+                    q.pop_front();
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                q.push_back(point);
+                self.recorded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Points ever dropped (ring overflow + lock contention).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Points ever successfully recorded (including since-evicted ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Points currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock().map(|q| q.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of the current window (oldest first).
+    pub fn snapshot(&self) -> Vec<Json> {
+        self.ring
+            .lock()
+            .map(|q| q.iter().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The stats-reply / report shape: loss accounting beside the
+    /// current window so a consumer can tell a clipped series apart.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("every", Json::Num(self.every as f64)),
+            ("cap", Json::Num(self.cap as f64)),
+            ("recorded", Json::Num(self.recorded() as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
+            ("points", Json::Arr(self.snapshot())),
+        ])
+    }
+
+    /// Export the window as JSONL (`serve --series-out`): one point per
+    /// line, then a trailing `series_summary` line with the loss
+    /// accounting — the same contract as the journal export.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for p in self.snapshot() {
+            out.push_str(&p.to_string_compact());
+            out.push('\n');
+        }
+        out.push_str(
+            &Json::obj(vec![
+                ("event", Json::str("series_summary")),
+                ("every", Json::Num(self.every as f64)),
+                ("recorded", Json::Num(self.recorded() as f64)),
+                ("dropped", Json::Num(self.dropped() as f64)),
+            ])
+            .to_string_compact(),
+        );
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_exports_jsonl() {
+        let s = SeriesStore::new(16, 4);
+        assert!(s.due(4) && s.due(8) && !s.due(5));
+        s.record(4, 10, vec![("queue_depth", Json::Num(3.0))]);
+        s.record(8, 20, vec![("queue_depth", Json::Num(1.0))]);
+        assert_eq!(s.len(), 2);
+        let out = s.export_jsonl();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3, "{out}");
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("round").and_then(|v| v.as_usize()), Some(4));
+        assert_eq!(first.get("queue_depth").and_then(|v| v.as_usize()), Some(3));
+        let tail = Json::parse(lines[2]).unwrap();
+        assert_eq!(tail.get("event").and_then(|v| v.as_str()), Some("series_summary"));
+        assert_eq!(tail.get("recorded").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(tail.get("dropped").and_then(|v| v.as_usize()), Some(0));
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let s = SeriesStore::new(4, 1);
+        for i in 0..10u64 {
+            s.record(i, i, vec![]);
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.recorded(), 10);
+        assert_eq!(s.dropped(), 6);
+        let rounds: Vec<usize> = s
+            .snapshot()
+            .iter()
+            .map(|p| p.get("round").and_then(|v| v.as_usize()).unwrap())
+            .collect();
+        assert_eq!(rounds, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn hist_deltas_are_per_window() {
+        let s = SeriesStore::new(8, 1);
+        let mut h = Hist::new();
+        h.record_secs(1e-3);
+        h.record_secs(1e-3);
+        let d1 = s.delta("round_ms", &h);
+        assert_eq!(d1.count(), 2, "first delta is the whole histogram");
+        h.record_secs(2e-3);
+        let d2 = s.delta("round_ms", &h);
+        assert_eq!(d2.count(), 1, "second delta is the new sample only");
+        // a reset histogram saturates to zero instead of wrapping
+        let d3 = s.delta("round_ms", &Hist::new());
+        assert_eq!(d3.count(), 0);
+    }
+
+    #[test]
+    fn wire_probe_feeds_deltas() {
+        let s = SeriesStore::new(8, 1);
+        assert!(s.wire_delta().is_none(), "no probe installed yet");
+        let src = Arc::new(Mutex::new(Hist::new()));
+        let src2 = src.clone();
+        s.set_wire_probe(Box::new(move || src2.lock().unwrap().clone()));
+        src.lock().unwrap().record_secs(5e-4);
+        assert_eq!(s.wire_delta().unwrap().count(), 1);
+        assert_eq!(s.wire_delta().unwrap().count(), 0, "no new samples");
+    }
+}

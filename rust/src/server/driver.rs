@@ -356,7 +356,7 @@ pub fn run_jobs(
     workers_override: Option<usize>,
     max_rounds: u64,
 ) -> Result<ServerRecord> {
-    run_jobs_with(path, workers_override, max_rounds, None)
+    run_jobs_opts(path, workers_override, max_rounds, None, None)
 }
 
 /// [`run_jobs`] with an optional event journal attached to the session
@@ -367,6 +367,20 @@ pub fn run_jobs_with(
     workers_override: Option<usize>,
     max_rounds: u64,
     journal: Option<std::sync::Arc<crate::obs::Journal>>,
+) -> Result<ServerRecord> {
+    run_jobs_opts(path, workers_override, max_rounds, journal, None)
+}
+
+/// [`run_jobs`] with the full observability surface: an optional event
+/// journal (`serve --trace-out`) AND an optional rolling time-series
+/// store (`serve --series-out`, DESIGN.md §15.1) attached to the
+/// session manager. The caller exports both after this returns.
+pub fn run_jobs_opts(
+    path: &str,
+    workers_override: Option<usize>,
+    max_rounds: u64,
+    journal: Option<std::sync::Arc<crate::obs::Journal>>,
+    series: Option<std::sync::Arc<crate::obs::SeriesStore>>,
 ) -> Result<ServerRecord> {
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
@@ -382,6 +396,9 @@ pub fn run_jobs_with(
     let mut core = ServerCore::new(cfg, rt.as_ref());
     if let Some(j) = &journal {
         core.mgr.set_journal(j.clone());
+    }
+    if let Some(s) = series {
+        core.mgr.set_series(s);
     }
     let mut ji = 0usize;
     loop {

@@ -55,7 +55,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::{FrontendRecord, ServerRecord};
-use crate::obs::{AtomicHist, Journal};
+use crate::obs::{AtomicHist, Journal, SeriesStore};
 use crate::runtime::Runtime;
 use crate::util::rng::SplitMix64;
 use crate::util::ser::Json;
@@ -263,6 +263,9 @@ pub struct Frontend {
     accept: Option<std::thread::JoinHandle<()>>,
     shared: Arc<ConnShared>,
     journal: Option<Arc<Journal>>,
+    /// rolling time-series store (`serve --series-out`, DESIGN.md
+    /// §15.1); sampled by the serving loop, exported in stats replies
+    series: Option<Arc<SeriesStore>>,
     /// Checkpoint/restore paths from the wire are confined under this
     /// root (relative, no `..`); defaults to `results/`. `None` lifts
     /// the restriction (trusted/loopback deployments only).
@@ -382,6 +385,7 @@ pub fn bind_with(addr: &str, fcfg: FrontendCfg) -> Result<Frontend> {
         accept: Some(accept),
         shared: shared_keep,
         journal: None,
+        series: None,
         ckpt_root: Some(std::path::PathBuf::from("results")),
     })
 }
@@ -406,6 +410,17 @@ impl Frontend {
         self.journal = Some(journal);
     }
 
+    /// Attach the rolling time-series store (`serve --series-out`,
+    /// DESIGN.md §15.1). Call before `run`: the serving loop samples it
+    /// every `series.every()` rounds, folds the connection threads'
+    /// wire-latency histogram in through a snapshot probe, and exports
+    /// the window in every stats reply next to the frontend counters.
+    pub fn set_series(&mut self, series: Arc<SeriesStore>) {
+        let counters = self.counters.clone();
+        series.set_wire_probe(Box::new(move || counters.wire.snapshot()));
+        self.series = Some(series);
+    }
+
     /// Serve until a `shutdown` request (or `max_rounds`). Owns the
     /// sessions for the whole run; commands are applied between rounds
     /// in arrival order. Returns the final record with frontend
@@ -420,6 +435,9 @@ impl Frontend {
         core.set_ckpt_root(self.ckpt_root.clone());
         if let Some(j) = &self.journal {
             core.mgr.set_journal(j.clone());
+        }
+        if let Some(s) = &self.series {
+            core.mgr.set_series(s.clone());
         }
         let mut inbox: VecDeque<Msg> = VecDeque::new();
         loop {
@@ -455,6 +473,22 @@ impl Frontend {
                                 "frontend".into(),
                                 self.counters.snapshot().to_json(),
                             );
+                            // … and the rolling series window + the
+                            // journal's loss accounting, when attached
+                            // (DESIGN.md §15.1) — soak reports fold the
+                            // drop counters into their SLO grading
+                            if let Some(s) = &self.series {
+                                m.insert("series".into(), s.to_json());
+                            }
+                            if let Some(j) = &self.journal {
+                                m.insert(
+                                    "journal".into(),
+                                    Json::obj(vec![
+                                        ("recorded", Json::Num(j.recorded() as f64)),
+                                        ("dropped", Json::Num(j.dropped() as f64)),
+                                    ]),
+                                );
+                            }
                             Json::Obj(m)
                         }
                         (_, data) => data,

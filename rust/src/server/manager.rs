@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::coordinator::{Trainer, TrainerCfg};
 use crate::data::Dataset;
 use crate::metrics::{ServerRecord, SessionRecord};
-use crate::obs::{Hist, Journal};
+use crate::obs::{Hist, Journal, SeriesStore};
 use crate::precond::{PrecondCfg, PrecondService};
 use crate::runtime::Runtime;
 use crate::util::ser::Json;
@@ -218,6 +218,9 @@ pub struct SessionManager<'rt> {
     /// optional trace journal (`serve --trace-out`); shared with every
     /// session's preconditioner service and the socket frontend
     journal: Option<Arc<Journal>>,
+    /// optional rolling time-series store (`serve --series-out`,
+    /// DESIGN.md §15.1); sampled every `series.every()` rounds
+    series: Option<Arc<SeriesStore>>,
     /// serving-round duration histogram (serving thread only)
     round_ms: Hist,
 }
@@ -241,6 +244,7 @@ impl<'rt> SessionManager<'rt> {
             round: 0,
             wall0: Instant::now(),
             journal: None,
+            series: None,
             round_ms: Hist::new(),
         }
     }
@@ -264,6 +268,18 @@ impl<'rt> SessionManager<'rt> {
 
     pub fn journal(&self) -> Option<&Arc<Journal>> {
         self.journal.as_ref()
+    }
+
+    /// Attach the rolling time-series store (DESIGN.md §15.1). The
+    /// serving loop samples a point every `series.every()` rounds; the
+    /// sampler only READS counters — attaching a series must never
+    /// perturb a trajectory (pinned by `series_invariance.rs`).
+    pub fn set_series(&mut self, series: Arc<SeriesStore>) {
+        self.series = Some(series);
+    }
+
+    pub fn series(&self) -> Option<&Arc<SeriesStore>> {
+        self.series.as_ref()
     }
 
     /// Monotonic milliseconds since the journal (trace mode) or the
@@ -695,7 +711,63 @@ impl<'rt> SessionManager<'rt> {
                 ],
             );
         }
+        if let Some(series) = self.series.clone() {
+            if series.due(self.round) {
+                self.sample_series(&series, &stats);
+            }
+        }
         Ok(stats)
+    }
+
+    /// One time-series point (DESIGN.md §15.1): fleet-level counters
+    /// plus per-window histogram deltas. Read-only over the manager —
+    /// no RNG, no trajectory state, no blocking emit.
+    fn sample_series(&self, series: &SeriesStore, stats: &RoundStats) {
+        let mut resident = Vec::new();
+        let mut resident_total_mb = 0.0f64;
+        let mut running = 0usize;
+        let mut op_ms = Hist::new();
+        for s in self.sessions.values() {
+            if s.status == SessionStatus::Running {
+                running += 1;
+            }
+            let mb = s.resident_bytes() as f64 / (1024.0 * 1024.0);
+            resident_total_mb += mb;
+            resident.push((s.name.clone(), Json::Num(mb)));
+            let svc = match (&s.work, &s.svc) {
+                (Workload::Model(m), _) => m.tr.service_record(),
+                (_, Some(svc)) => Some(svc.record()),
+                _ => None,
+            };
+            if let Some(svc) = svc {
+                for (_, h) in &svc.op_ms {
+                    op_ms.merge(h);
+                }
+            }
+        }
+        let resident_json =
+            Json::Obj(resident.into_iter().collect::<BTreeMap<String, Json>>());
+        let mut fields = vec![
+            ("stepped", Json::Num(stats.stepped as f64)),
+            ("blocked", Json::Num(stats.blocked as f64)),
+            ("throttled", Json::Num(stats.throttled as f64)),
+            ("sessions", Json::Num(self.sessions.len() as f64)),
+            ("running", Json::Num(running as f64)),
+            ("queue_depth", Json::Num(self.pool.queue_depth() as f64)),
+            ("ready_total", Json::Num(self.sched.ready_total() as f64)),
+            ("workers", Json::Num(self.pool.threads() as f64)),
+            ("evictions", Json::Num(self.governor.evictions as f64)),
+            ("grow_events", Json::Num(self.governor.grow_events as f64)),
+            ("shrink_events", Json::Num(self.governor.shrink_events as f64)),
+            ("resident_total_mb", Json::Num(resident_total_mb)),
+            ("resident_mb", resident_json),
+            ("round_ms", series.delta("round_ms", &self.round_ms).to_json()),
+            ("op_ms", series.delta("op_ms", &op_ms).to_json()),
+        ];
+        if let Some(wire) = series.wire_delta() {
+            fields.push(("wire_ms", wire.to_json()));
+        }
+        series.record(self.round, self.uptime_ms(), fields);
     }
 
     /// Window-boundary quota evaluation: feed each running tenant's

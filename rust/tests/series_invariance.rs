@@ -1,0 +1,157 @@
+//! Time-series sampling invariance (DESIGN.md §15.1): attaching the
+//! rolling series store — even at its most aggressive every-round
+//! cadence, on top of a journal — must not perturb a single bit of any
+//! session trajectory, while the sampled points actually carry the
+//! fleet signals. The §15 counterpart of `obs_trace.rs`. Host
+//! substrate only — no artifacts needed.
+
+use bnkfac::obs::{Journal, SeriesStore};
+use bnkfac::optim::Algo;
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager, Workload};
+use bnkfac::util::ser::Json;
+
+fn scfg(seed: u64, algo: Algo, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 2,
+        dim: 36,
+        rank: 5,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+fn fingerprint(mgr: &SessionManager, id: u64) -> (Vec<f32>, [u64; 4]) {
+    let s = mgr.session(id).expect("session");
+    match &s.work {
+        Workload::Host(h) => (h.state_vector(), h.rng.state().s),
+        _ => panic!("expected host session"),
+    }
+}
+
+/// Acceptance criterion (ISSUE 7): a traced + series-sampled run's
+/// session trajectories bit-match an untraced solo run, and the series
+/// window actually recorded the fleet signals.
+#[test]
+fn series_sampling_does_not_perturb_trajectories() {
+    let cfg = ServerCfg {
+        workers: 2,
+        max_sessions: 4,
+        staleness: 1,
+        ..ServerCfg::default()
+    };
+
+    // reference run: no observability attached at all
+    let mut plain = SessionManager::new(cfg.clone());
+    let pa = plain.create_host("a", 2, scfg(11, Algo::BKfacC, 24), None).unwrap();
+    let pb = plain.create_host("b", 1, scfg(22, Algo::BKfac, 24), None).unwrap();
+    plain.run_to_completion(100_000).unwrap();
+    let wa = fingerprint(&plain, pa);
+    let wb = fingerprint(&plain, pb);
+
+    // observed run: journal AND an every-round series store attached
+    // before any session exists — the heaviest observation the server
+    // supports
+    let mut observed = SessionManager::new(cfg);
+    observed.set_journal(Journal::new(4096));
+    let series = SeriesStore::new(1024, 1);
+    observed.set_series(series.clone());
+    let ta = observed.create_host("a", 2, scfg(11, Algo::BKfacC, 24), None).unwrap();
+    let tb = observed.create_host("b", 1, scfg(22, Algo::BKfac, 24), None).unwrap();
+    observed.run_to_completion(100_000).unwrap();
+    assert_eq!(fingerprint(&observed, ta), wa, "series sampling perturbed session a");
+    assert_eq!(fingerprint(&observed, tb), wb, "series sampling perturbed session b");
+
+    // the window recorded real points with the fleet signals on board
+    assert!(series.recorded() > 0, "no series points recorded");
+    let points = series.snapshot();
+    assert!(!points.is_empty());
+    let mut last_round = 0u64;
+    for p in &points {
+        for key in [
+            "round",
+            "t_ms",
+            "stepped",
+            "sessions",
+            "running",
+            "queue_depth",
+            "workers",
+            "resident_total_mb",
+        ] {
+            assert!(
+                p.get(key).and_then(|v| v.as_f64()).is_some(),
+                "point missing numeric '{key}': {p:?}"
+            );
+        }
+        let round = p.get("round").and_then(|v| v.as_usize()).unwrap() as u64;
+        assert!(round > last_round, "rounds not strictly increasing");
+        last_round = round;
+        assert!(
+            p.get("resident_mb").map(|m| matches!(m, Json::Obj(_))).unwrap_or(false),
+            "per-session resident_mb map missing: {p:?}"
+        );
+        // histogram columns are per-window deltas, present on every point
+        for key in ["round_ms", "op_ms"] {
+            assert!(p.get(key).is_some(), "point missing '{key}' delta: {p:?}");
+        }
+    }
+    // round_ms deltas across the window sum to ~one sample per sampled
+    // round (every-round cadence: one round duration lands per point,
+    // modulo the rounds after the final sample)
+    let delta_total: usize = points
+        .iter()
+        .filter_map(|p| p.at(&["round_ms", "count"]))
+        .filter_map(|v| v.as_usize())
+        .sum();
+    assert!(delta_total > 0, "round_ms deltas never carried a sample");
+
+    // the export contract matches the journal's: JSONL + summary tail
+    let out = series.export_jsonl();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), points.len() + 1);
+    let tail = Json::parse(lines[lines.len() - 1]).unwrap();
+    assert_eq!(tail.get("event").and_then(|v| v.as_str()), Some("series_summary"));
+    assert_eq!(
+        tail.get("recorded").and_then(|v| v.as_usize()).unwrap() as u64,
+        series.recorded()
+    );
+}
+
+/// The ring is bounded: a tiny capacity under an every-round cadence
+/// must slide the window (oldest out) and account for every dropped
+/// point, never grow or block.
+#[test]
+fn series_ring_is_bounded_with_drop_accounting() {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 1,
+        max_sessions: 2,
+        staleness: 0,
+        ..ServerCfg::default()
+    });
+    let series = SeriesStore::new(4, 1);
+    mgr.set_series(series.clone());
+    mgr.create_host("c", 1, scfg(9, Algo::BKfacC, 24), None).unwrap();
+    mgr.run_to_completion(100_000).unwrap();
+
+    assert!(series.recorded() > 4, "run too short to overflow the ring");
+    assert_eq!(series.len(), 4, "ring grew past its capacity");
+    assert_eq!(
+        series.dropped(),
+        series.recorded() - 4,
+        "overflow drops not accounted"
+    );
+    // the surviving window is the most recent points, oldest first
+    let rounds: Vec<usize> = series
+        .snapshot()
+        .iter()
+        .map(|p| p.get("round").and_then(|v| v.as_usize()).unwrap())
+        .collect();
+    let mut sorted = rounds.clone();
+    sorted.sort_unstable();
+    assert_eq!(rounds, sorted, "window not oldest-first");
+}
