@@ -1,0 +1,99 @@
+//! E8 — the kernel-core refactor's perf claim (DESIGN.md §16): the
+//! cache-blocked 8-lane backend must beat the scalar reference on the
+//! dense primitives that dominate serving cost (gemm, gemm_tn via the
+//! EA Gram path, syrk, gemv), at BIT-IDENTICAL output. Writes the
+//! measured blocked-vs-scalar speedups into BENCH_scaling.json under
+//! `kernels`, where ci/check_bench.py gates them against
+//! ci/bench_baselines.json.
+//!
+//! Env: BNKFAC_KERNEL_D (default 768), BNKFAC_SCALE_REPS (default 3).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnkfac::linalg::kernel::{self, Backend};
+use bnkfac::linalg::Mat;
+use bnkfac::util::rng::Rng;
+use bnkfac::util::ser::Json;
+use common::{env_usize, time_fn, update_bench_json, Table};
+
+fn main() {
+    let d = env_usize("BNKFAC_KERNEL_D", 768);
+    let reps = env_usize("BNKFAC_SCALE_REPS", 3);
+    let mut rng = Rng::new(8);
+
+    // Shapes mirror the serving hot paths: square-ish gemm (Brand
+    // subspace products), tall·skinny syrk (EA Gram accumulation),
+    // gemv (per-step apply of a d×k panel to a stat column).
+    let a = Mat::gauss(d, d, 1.0, &mut rng);
+    let b = Mat::gauss(d, d, 1.0, &mut rng);
+    let tall = Mat::gauss(d, 96, 1.0, &mut rng);
+    let x: Vec<f32> = (0..d).map(|_| rng.next_gauss_f32()).collect();
+
+    struct Case<'a> {
+        name: &'static str,
+        f: Box<dyn Fn() -> Vec<f32> + 'a>,
+    }
+    let cases = [
+        Case {
+            name: "gemm",
+            f: Box::new(|| a.matmul(&b).data),
+        },
+        Case {
+            name: "gemm_tn",
+            f: Box::new(|| a.t_matmul(&b).data),
+        },
+        Case {
+            name: "syrk",
+            f: Box::new(|| tall.syrk().data),
+        },
+        Case {
+            name: "gemv",
+            f: Box::new(|| a.matvec(&x)),
+        },
+    ];
+
+    let mut tab = Table::new(&["op", "scalar_ms", "blocked_ms", "speedup"]);
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("d", Json::Num(d as f64)),
+        ("simd", Json::Str(kernel::simd_path().to_string())),
+    ];
+    for case in &cases {
+        kernel::set_backend(Backend::Scalar);
+        let out_s = (case.f)();
+        let (t_s, _) = time_fn(1, reps, &case.f);
+        kernel::set_backend(Backend::Blocked);
+        let out_b = (case.f)();
+        let (t_b, _) = time_fn(1, reps, &case.f);
+        // the speedup only counts if the answer is the same answer
+        assert!(
+            out_s
+                .iter()
+                .zip(&out_b)
+                .all(|(s, b)| s.to_bits() == b.to_bits()),
+            "{}: blocked output diverges from scalar — parity broken",
+            case.name
+        );
+        let speedup = t_s / t_b;
+        tab.row(vec![
+            case.name.to_string(),
+            format!("{:.2}", t_s * 1e3),
+            format!("{:.2}", t_b * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        fields.push((
+            case.name,
+            Json::obj(vec![
+                ("scalar_ms", Json::Num(t_s * 1e3)),
+                ("blocked_ms", Json::Num(t_b * 1e3)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ));
+    }
+    kernel::set_backend(Backend::Auto);
+
+    println!("\n== E8: blocked vs scalar kernel backend (d = {d}) ==");
+    tab.print();
+    println!("\nsimd path: {}", kernel::simd_path());
+    update_bench_json("kernels", Json::obj(fields));
+}

@@ -15,6 +15,13 @@
 //! In service mode, randomness for decomposition ops is still drawn on
 //! this thread at submission (see `OpRequest::prepare`), which is why
 //! the service's sync mode bit-matches the inline path.
+//!
+//! Dense-kernel selection (`train --kernel`, DESIGN.md §16) is a
+//! process-global set before the trainer is built; every `Mat` op on
+//! both the inline and service paths dispatches through it, and because
+//! the backends are bit-identical nothing here needs to carry it. The
+//! resolved backend + per-kernel counters ride the run log via
+//! [`ServiceRecord::kernel`](crate::metrics::ServiceRecord).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -12,6 +12,7 @@
 //! For the EA K-factor update `M̄ ← ρ M̄ + (1−ρ) A Aᵀ` (Alg 4 line 6) call
 //! with `d ← ρ·d` and `A ← √(1−ρ)·A`: see [`LowRank::brand_ea_update`].
 
+use super::kernel;
 use super::lowrank::LowRank;
 use super::mat::Mat;
 
@@ -32,8 +33,11 @@ impl LowRank {
         );
         // P = Uᵀ A (r×n)
         let p = self.u.t_matmul(a);
-        // A⊥ = A − U P (d×n)
-        let a_perp = a.sub(&self.u.matmul(&p));
+        // A⊥ = A − U P (d×n): fused as axpy(-1) through the kernel
+        // dispatcher — bitwise a − b, one temporary fewer than a.sub().
+        let up = self.u.matmul(&p);
+        let mut a_perp = a.clone();
+        kernel::axpy(-1.0, &up.data, &mut a_perp.data);
         // QR of A⊥
         let (q_a, r_a) = a_perp.qr();
         // Assemble M_S ((r+n)×(r+n))

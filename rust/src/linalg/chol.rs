@@ -1,6 +1,7 @@
 //! Cholesky factorization + triangular/SPD solves — substrate for the SENG
 //! baseline's Woodbury solve and for damped dense inverses in tests.
 
+use super::kernel;
 use super::mat::Mat;
 
 impl Mat {
@@ -12,10 +13,14 @@ impl Mat {
         let mut l = vec![0.0f64; n * n];
         for i in 0..n {
             for j in 0..=i {
-                let mut s = self[(i, j)] as f64;
-                for k in 0..j {
-                    s -= l[i * n + k] * l[j * n + k];
-                }
+                // s = a_ij − Σ_{k<j} l_ik·l_jk over contiguous row
+                // prefixes — the fused ddot_sub kernel shape (same
+                // rounding sequence as the original in-place loop).
+                let s = kernel::ddot_sub(
+                    self[(i, j)] as f64,
+                    &l[i * n..i * n + j],
+                    &l[j * n..j * n + j],
+                );
                 if i == j {
                     if s <= 0.0 {
                         return None;

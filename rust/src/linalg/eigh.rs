@@ -8,6 +8,7 @@
 //! Returned eigenpairs are sorted by eigenvalue DESCENDING — the order all
 //! truncation logic in the paper uses (`U[:, :r]` keeps the top-r modes).
 
+use super::kernel;
 use super::mat::Mat;
 
 /// Eigendecomposition result: `m = u · diag(d) · uᵀ`, d descending.
@@ -171,8 +172,12 @@ fn tred2(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
             } else {
                 for k in 0..l {
                     a[i * n + k] /= scale;
-                    h += a[i * n + k] * a[i * n + k];
                 }
+                // ‖row prefix‖² over a contiguous slice — same ascending
+                // accumulation as the original fused loop (the divides are
+                // elementwise-independent, so splitting them out first
+                // leaves every rounding step unchanged).
+                h = kernel::ddot(&a[i * n..i * n + l], &a[i * n..i * n + l]);
                 let mut f = a[i * n + (l - 1)];
                 let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
                 e[i] = scale * g;
@@ -181,10 +186,11 @@ fn tred2(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
                 f = 0.0;
                 for j in 0..l {
                     a[j * n + i] = a[i * n + j] / h;
-                    let mut g = 0.0;
-                    for k in 0..=j {
-                        g += a[j * n + k] * a[i * n + k];
-                    }
+                    // contiguous row-prefix part of the symmetric product
+                    // through the kernel dot; the column-strided tail stays
+                    // a plain loop (slices can't express the stride) and
+                    // continues the same accumulator in the same order.
+                    let mut g = kernel::ddot(&a[j * n..j * n + j + 1], &a[i * n..i * n + j + 1]);
                     for k in (j + 1)..l {
                         g += a[k * n + j] * a[i * n + k];
                     }

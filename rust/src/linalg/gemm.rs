@@ -1,10 +1,14 @@
-//! Blocked, multithreaded matrix multiply + symmetric rank-k update.
+//! `Mat`-level dense kernel entry points: matmul, syrk, matvec.
 //!
-//! This is the Rust-host fallback / small-matrix engine; the d-scale hot
-//! path runs inside XLA artifacts. Kernel design: row-panel parallelism
-//! over A, with a B-transpose-free inner loop that walks B rows (row-major
-//! friendly: C[i,:] += A[i,k] * B[k,:] vectorizes well).
+//! Since the kernel-core refactor (DESIGN.md §16) this file owns only
+//! shape checks, output allocation, FLOP accounting, and row-panel
+//! threading; the arithmetic lives behind [`kernel::Kernels`] and is
+//! selected at runtime (`--kernel {auto,scalar,blocked}`). Threading
+//! splits C by disjoint row ranges, which never changes per-element
+//! accumulation order — so results are bit-identical across thread
+//! counts AND across backends.
 
+use super::kernel::{self, KernelOp};
 use super::mat::Mat;
 use crate::util::threadpool::{default_threads, parallel_ranges};
 
@@ -19,36 +23,25 @@ impl Mat {
             "matmul: {}x{} · {}x{}",
             self.rows, self.cols, other.rows, other.cols
         );
-        let mut c = Mat::zeros(self.rows, other.cols);
-        let flops = self.rows * self.cols * other.cols;
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        kernel::record(KernelOp::Gemm, 2 * (m * n * k) as u64);
+        let ker = kernel::active();
+        let flops = m * k * n;
         let threads = if flops < PAR_FLOPS_MIN {
             1
         } else {
             default_threads()
         };
-        let (m, k, n) = (self.rows, self.cols, other.cols);
         let a = &self.data;
         let b = &other.data;
         // SAFETY-free parallelism: each thread writes a disjoint row range
         // of C. We hand out raw pointer ranges via split-by-row closure.
         let c_ptr = SendPtr(c.data.as_mut_ptr());
         parallel_ranges(m, threads, |r0, r1| {
-            let c_ptr = &c_ptr;
-            for i in r0..r1 {
-                let crow = unsafe {
-                    std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
-                };
-                let arow = &a[i * k..(i + 1) * k];
-                for (kk, &aik) in arow.iter().enumerate() {
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
-                }
-            }
+            let c_rows =
+                unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(r0 * n), (r1 - r0) * n) };
+            ker.gemm(r1 - r0, n, k, &a[r0 * k..r1 * k], b, c_rows);
         });
         c
     }
@@ -58,20 +51,8 @@ impl Mat {
         assert_eq!(self.rows, other.rows, "t_matmul: inner dim mismatch");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut c = Mat::zeros(m, n);
-        // C[i,j] = sum_k A[k,i] B[k,j]: accumulate rank-1 updates row by row.
-        for kk in 0..k {
-            let arow = self.row(kk);
-            let brow = other.row(kk);
-            for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
-                }
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += aki * bv;
-                }
-            }
-        }
+        kernel::record(KernelOp::GemmTn, 2 * (m * n * k) as u64);
+        kernel::active().gemm_tn(m, n, k, &self.data, &other.data, &mut c.data);
         c
     }
 
@@ -80,29 +61,21 @@ impl Mat {
         assert_eq!(self.cols, other.cols, "matmul_t: inner dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut c = Mat::zeros(m, n);
+        kernel::record(KernelOp::GemmNt, 2 * (m * n * k) as u64);
+        let ker = kernel::active();
         let flops = m * k * n;
         let threads = if flops < PAR_FLOPS_MIN {
             1
         } else {
             default_threads()
         };
+        let a = &self.data;
+        let b = &other.data;
         let c_ptr = SendPtr(c.data.as_mut_ptr());
         parallel_ranges(m, threads, |r0, r1| {
-            let c_ptr = &c_ptr;
-            for i in r0..r1 {
-                let arow = self.row(i);
-                let crow = unsafe {
-                    std::slice::from_raw_parts_mut(c_ptr.0.add(i * n), n)
-                };
-                for (j, cv) in crow.iter_mut().enumerate() {
-                    let brow = other.row(j);
-                    let mut acc = 0.0f32;
-                    for (av, bv) in arow.iter().zip(brow) {
-                        acc += av * bv;
-                    }
-                    *cv = acc;
-                }
-            }
+            let c_rows =
+                unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(r0 * n), (r1 - r0) * n) };
+            ker.gemm_nt(r1 - r0, n, k, &a[r0 * k..r1 * k], b, c_rows);
         });
         c
     }
@@ -112,45 +85,38 @@ impl Mat {
     pub fn syrk(&self) -> Mat {
         let (m, k) = (self.rows, self.cols);
         let mut c = Mat::zeros(m, m);
+        kernel::record(KernelOp::Syrk, (m * m * k) as u64);
+        let ker = kernel::active();
         let flops = m * m * k / 2;
         let threads = if flops < PAR_FLOPS_MIN {
             1
         } else {
             default_threads()
         };
+        let a = &self.data;
         let c_ptr = SendPtr(c.data.as_mut_ptr());
         parallel_ranges(m, threads, |r0, r1| {
-            let c_ptr = &c_ptr;
-            for i in r0..r1 {
-                let arow = self.row(i);
-                for j in i..m {
-                    let brow = self.row(j);
-                    let mut acc = 0.0f32;
-                    for (av, bv) in arow.iter().zip(brow) {
-                        acc += av * bv;
-                    }
-                    unsafe {
-                        *c_ptr.0.add(i * m + j) = acc;
-                        *c_ptr.0.add(j * m + i) = acc;
-                    }
-                }
-            }
+            let c_rows =
+                unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(r0 * m), (r1 - r0) * m) };
+            ker.syrk(r0, r1 - r0, m, k, a, c_rows);
         });
+        // mirror the upper triangle (kernels fill j >= i only)
+        for i in 0..m {
+            for j in (i + 1)..m {
+                c.data[j * m + i] = c.data[i * m + j];
+            }
+        }
         c
     }
 
     /// Matrix–vector product.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|i| {
-                self.row(i)
-                    .iter()
-                    .zip(x)
-                    .map(|(a, b)| a * b)
-                    .sum::<f32>()
-            })
-            .collect()
+        let (m, n) = (self.rows, self.cols);
+        kernel::record(KernelOp::Gemv, 2 * (m * n) as u64);
+        let mut y = vec![0.0f32; m];
+        kernel::active().gemv(m, n, &self.data, x, &mut y);
+        y
     }
 }
 
@@ -255,5 +221,24 @@ mod tests {
         let e = Mat::eye(12);
         assert!(a.matmul(&e).sub(&a).max_abs() < 1e-6);
         assert!(e.matmul(&a).sub(&a).max_abs() < 1e-6);
+    }
+
+    /// Regression: the old inner loops skipped `aik == 0.0` terms, so a
+    /// NaN/Inf in B could be silently swallowed (`0.0 · inf = NaN` never
+    /// happened). IEEE propagation must hold: a zero row times an Inf
+    /// column is NaN, not 0.
+    #[test]
+    fn zero_times_inf_propagates_nan() {
+        // matmul: A row [0, 1] · B col [inf, 0] = 0·inf + 1·0 = NaN
+        let a = Mat::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Mat::from_vec(2, 1, vec![f32::INFINITY, 0.0]);
+        assert!(a.matmul(&b)[(0, 0)].is_nan(), "matmul swallowed 0·inf");
+        // t_matmul: same contraction through the rank-1 path
+        let x = Mat::from_vec(2, 1, vec![0.0, 1.0]);
+        let y = Mat::from_vec(2, 1, vec![f32::INFINITY, 0.0]);
+        assert!(x.t_matmul(&y)[(0, 0)].is_nan(), "t_matmul swallowed 0·inf");
+        // and a NaN operand behind a zero multiplier must also surface
+        let bn = Mat::from_vec(2, 1, vec![f32::NAN, 0.0]);
+        assert!(a.matmul(&bn)[(0, 0)].is_nan(), "matmul swallowed 0·NaN");
     }
 }

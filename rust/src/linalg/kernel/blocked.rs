@@ -1,0 +1,294 @@
+//! Cache-blocked + 8-lane virtual-SIMD backend.
+//!
+//! Two ideas, one hard constraint:
+//!
+//! * **Cache tiling** — `gemm`/`gemm_tn` walk k (and the output) in
+//!   KC×NC / KC×MC tiles so the streamed operand panel stays L1/L2
+//!   resident across the reuse loop instead of being refetched per row.
+//! * **Virtual SIMD** — the innermost loops are fixed-width
+//!   [`LANES`]=8 element blocks over *output* elements (8 columns of C,
+//!   8 rows of y), written so LLVM turns them into vector code. Runtime
+//!   CPU-feature detection (`is_x86_feature_detected!("avx2")`) selects
+//!   between identically-associated monomorphizations of the same safe
+//!   Rust body — it changes codegen, never float association.
+//!
+//! The hard constraint (DESIGN.md §16.2): output must be **bit-identical
+//! to the scalar backend**. That holds because lanes always span
+//! independent output elements — never the k reduction — and every
+//! output element keeps a single accumulator fed in strictly ascending
+//! k order across tiles (k-tiles are the outermost loop and ascend;
+//! within a tile k ascends; tiling the *output* dimensions permutes
+//! which element is worked on when, which is association-free). The one
+//! kernel a lane trick could speed up only by reassociating — the
+//! single `dot` reduction — is left scalar on purpose: a reduction's
+//! order IS its value.
+
+use super::Kernels;
+
+/// Virtual-SIMD width: 8 f32 lanes = one AVX2 register, two NEON ones.
+pub const LANES: usize = 8;
+/// k-tile: one streamed KC×NC f32 panel ≈ 64 KiB, comfortably L2.
+const KC: usize = 128;
+/// Output-column tile for `gemm`.
+const NC: usize = 128;
+/// Output-row tile for `gemm_tn`.
+const MC: usize = 64;
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod feat {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    pub fn avx2() -> bool {
+        *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+}
+
+/// Does the runtime dispatch take the AVX2 codegen path? (Metrics tag;
+/// the arithmetic is identical either way.)
+pub fn simd_path() -> &'static str {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if feat::avx2() {
+            return "avx2";
+        }
+    }
+    "generic"
+}
+
+/// y[0..len] += alpha * x[0..len], elementwise in LANES-wide blocks plus
+/// a scalar tail. Element-independent, so lane width never changes bits.
+#[inline(always)]
+fn axpy_run_generic(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let head = x.len() & !(LANES - 1);
+    let (xh, xt) = x.split_at(head);
+    let (yh, yt) = y.split_at_mut(head);
+    for (yc, xc) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yc[l] += alpha * xc[l];
+        }
+    }
+    for (yv, xv) in yt.iter_mut().zip(xt) {
+        *yv += alpha * xv;
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_run_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_run_generic(alpha, x, y)
+}
+
+#[inline]
+fn axpy_run(alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if feat::avx2() {
+            // SAFETY: avx2 presence runtime-checked; the clone is the
+            // same safe body, so only codegen differs, never results.
+            return unsafe { axpy_run_avx2(alpha, x, y) };
+        }
+    }
+    axpy_run_generic(alpha, x, y)
+}
+
+/// Eight independent dot products sharing one streamed vector:
+/// `out[l] = Σ_kk v[kk] · m[(r0+l)·ld + kk]`, each lane its own
+/// accumulator fed in ascending kk — bitwise the scalar per-element dot.
+#[inline(always)]
+fn dot8_run_generic(v: &[f32], m: &[f32], r0: usize, ld: usize) -> [f32; LANES] {
+    let rows: [&[f32]; LANES] =
+        core::array::from_fn(|l| &m[(r0 + l) * ld..(r0 + l) * ld + v.len()]);
+    let mut acc = [0.0f32; LANES];
+    for (kk, &vv) in v.iter().enumerate() {
+        for l in 0..LANES {
+            acc[l] += vv * rows[l][kk];
+        }
+    }
+    acc
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_run_avx2(v: &[f32], m: &[f32], r0: usize, ld: usize) -> [f32; LANES] {
+    dot8_run_generic(v, m, r0, ld)
+}
+
+#[inline]
+fn dot8_run(v: &[f32], m: &[f32], r0: usize, ld: usize) -> [f32; LANES] {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if feat::avx2() {
+            // SAFETY: see axpy_run.
+            return unsafe { dot8_run_avx2(v, m, r0, ld) };
+        }
+    }
+    dot8_run_generic(v, m, r0, ld)
+}
+
+/// [`dot8_run`] with the operand order flipped per product:
+/// `out[l] = Σ_kk m[(r0+l)·ld + kk] · v[kk]` — the `gemv` shape, where
+/// the scalar reference multiplies matrix-element × vector-element.
+/// Kept as a separate monomorphization so even NaN-payload selection
+/// (which is operand-order sensitive on x86) matches the scalar backend.
+#[inline(always)]
+fn dot8_rows_run_generic(m: &[f32], r0: usize, ld: usize, v: &[f32]) -> [f32; LANES] {
+    let rows: [&[f32]; LANES] =
+        core::array::from_fn(|l| &m[(r0 + l) * ld..(r0 + l) * ld + v.len()]);
+    let mut acc = [0.0f32; LANES];
+    for (kk, &vv) in v.iter().enumerate() {
+        for l in 0..LANES {
+            acc[l] += rows[l][kk] * vv;
+        }
+    }
+    acc
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_rows_run_avx2(m: &[f32], r0: usize, ld: usize, v: &[f32]) -> [f32; LANES] {
+    dot8_rows_run_generic(m, r0, ld, v)
+}
+
+#[inline]
+fn dot8_rows_run(m: &[f32], r0: usize, ld: usize, v: &[f32]) -> [f32; LANES] {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if feat::avx2() {
+            // SAFETY: see axpy_run.
+            return unsafe { dot8_rows_run_avx2(m, r0, ld, v) };
+        }
+    }
+    dot8_rows_run_generic(m, r0, ld, v)
+}
+
+/// Single ascending-order dot — the lane-tail / reduction primitive.
+/// Deliberately not widened: any lane split would reassociate the sum.
+#[inline(always)]
+fn dot_run(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (av, bv) in x.iter().zip(y) {
+        acc += av * bv;
+    }
+    acc
+}
+
+pub struct Blocked;
+
+impl Kernels for Blocked {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn gemm(&self, r: usize, n: usize, k: usize, a_rows: &[f32], b: &[f32], c_rows: &mut [f32]) {
+        // k-tiles outermost and ascending: every C element accumulates
+        // its k contributions in the same order the scalar backend does.
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let j1 = (j0 + NC).min(n);
+                for i in 0..r {
+                    let arow = &a_rows[i * k..(i + 1) * k];
+                    let crow = &mut c_rows[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        axpy_run(arow[kk], &b[kk * n + j0..kk * n + j1], crow);
+                    }
+                }
+            }
+        }
+    }
+
+    fn gemm_tn(&self, m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        // Rank-1 chain like the scalar backend, tiled so the B row stays
+        // hot across an MC-row block of C; per element kk still ascends.
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for i0 in (0..m).step_by(MC) {
+                let i1 = (i0 + MC).min(m);
+                for kk in k0..k1 {
+                    let arow = &a[kk * m..(kk + 1) * m];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for i in i0..i1 {
+                        axpy_run(arow[i], brow, &mut c[i * n..(i + 1) * n]);
+                    }
+                }
+            }
+        }
+    }
+
+    fn gemm_nt(&self, r: usize, n: usize, k: usize, a_rows: &[f32], b: &[f32], c_rows: &mut [f32]) {
+        // 8 output columns at a time: 8 contiguous B-row streams against
+        // one A row, each output with its own ascending-k accumulator.
+        for i in 0..r {
+            let arow = &a_rows[i * k..(i + 1) * k];
+            let crow = &mut c_rows[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + LANES <= n {
+                let acc = dot8_run(arow, b, j, k);
+                crow[j..j + LANES].copy_from_slice(&acc);
+                j += LANES;
+            }
+            for jj in j..n {
+                crow[jj] = dot_run(arow, &b[jj * k..(jj + 1) * k]);
+            }
+        }
+    }
+
+    fn syrk(&self, r0: usize, r: usize, m: usize, k: usize, a: &[f32], c_rows: &mut [f32]) {
+        for li in 0..r {
+            let i = r0 + li;
+            let arow = &a[i * k..(i + 1) * k];
+            let mut j = i;
+            while j + LANES <= m {
+                let acc = dot8_run(arow, a, j, k);
+                c_rows[li * m + j..li * m + j + LANES].copy_from_slice(&acc);
+                j += LANES;
+            }
+            for jj in j..m {
+                c_rows[li * m + jj] = dot_run(arow, &a[jj * k..(jj + 1) * k]);
+            }
+        }
+    }
+
+    fn gemv(&self, r: usize, n: usize, a_rows: &[f32], x: &[f32], y: &mut [f32]) {
+        let mut i = 0;
+        while i + LANES <= r {
+            let acc = dot8_rows_run(a_rows, i, n, x);
+            y[i..i + LANES].copy_from_slice(&acc);
+            i += LANES;
+        }
+        for ii in i..r {
+            y[ii] = dot_run(&a_rows[ii * n..(ii + 1) * n], x);
+        }
+    }
+
+    fn dot(&self, x: &[f32], y: &[f32]) -> f32 {
+        // A reduction's order is its value: identical to scalar.
+        dot_run(x, y)
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        axpy_run(alpha, x, y);
+    }
+
+    fn ddot(&self, x: &[f64], y: &[f64]) -> f64 {
+        let mut acc = 0.0f64;
+        for (av, bv) in x.iter().zip(y) {
+            acc += av * bv;
+        }
+        acc
+    }
+
+    fn ddot_sub(&self, init: f64, x: &[f64], y: &[f64]) -> f64 {
+        let mut acc = init;
+        for (av, bv) in x.iter().zip(y) {
+            acc -= av * bv;
+        }
+        acc
+    }
+
+    fn daxpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
+    }
+}

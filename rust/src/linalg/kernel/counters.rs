@@ -1,0 +1,110 @@
+//! Per-kernel call/FLOP counters (DESIGN.md §16.4).
+//!
+//! Process-global relaxed atomics: the kernels are called from the
+//! trainer's work-stealing threads, the preconditioner workers, and the
+//! serving thread simultaneously, so the counters are lock-free and the
+//! snapshot is a consistent-enough view for metrics (exact totals once
+//! the system is quiesced, e.g. at `ServiceRecord` emission after a
+//! drain). `reset` exists for benches that A/B the backends.
+//!
+//! FLOP accounting convention: 2·(multiply-adds) for the matrix kernels
+//! and 2·len for dot/axpy; the f64 twins (`ddot`/`ddot_sub`/`daxpy`)
+//! count under `dot`/`axpy` — the counter dimension is the kernel shape,
+//! not the scalar width.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Kernel-op index into the counter tables. Order matches [`NAMES`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelOp {
+    Gemm = 0,
+    GemmTn = 1,
+    GemmNt = 2,
+    Syrk = 3,
+    Gemv = 4,
+    Dot = 5,
+    Axpy = 6,
+}
+
+pub const N_OPS: usize = 7;
+pub const NAMES: [&str; N_OPS] = ["gemm", "gemm_tn", "gemm_nt", "syrk", "gemv", "dot", "axpy"];
+
+// No inline-const array init on the 1.75 MSRV — spell the tables out.
+static CALLS: [AtomicU64; N_OPS] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+static FLOPS: [AtomicU64; N_OPS] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// One logical kernel invocation (counted once per `Mat`-level call, not
+/// once per row-panel chunk a threaded dispatch splits it into).
+#[inline]
+pub fn record(op: KernelOp, flops: u64) {
+    CALLS[op as usize].fetch_add(1, Ordering::Relaxed);
+    FLOPS[op as usize].fetch_add(flops, Ordering::Relaxed);
+}
+
+/// One kernel's cumulative totals since process start (or [`reset`]).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCount {
+    pub name: &'static str,
+    pub calls: u64,
+    pub flops: u64,
+}
+
+/// Snapshot all counters (kernels with zero calls included — a metrics
+/// consumer can tell "never called" from "field missing").
+pub fn snapshot() -> Vec<KernelCount> {
+    (0..N_OPS)
+        .map(|i| KernelCount {
+            name: NAMES[i],
+            calls: CALLS[i].load(Ordering::Relaxed),
+            flops: FLOPS[i].load(Ordering::Relaxed),
+        })
+        .collect()
+}
+
+/// Zero every counter (bench A/B harness; not used on serving paths —
+/// records report cumulative totals there).
+pub fn reset() {
+    for i in 0..N_OPS {
+        CALLS[i].store(0, Ordering::Relaxed);
+        FLOPS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_and_snapshot_names_align() {
+        // NOTE: counters are process-global and other tests exercise the
+        // kernels concurrently, so assert monotonicity, not exact totals.
+        let before = snapshot();
+        record(KernelOp::Syrk, 123);
+        record(KernelOp::Syrk, 7);
+        let after = snapshot();
+        let i = KernelOp::Syrk as usize;
+        assert_eq!(after[i].name, "syrk");
+        assert!(after[i].calls >= before[i].calls + 2);
+        assert!(after[i].flops >= before[i].flops + 130);
+        assert_eq!(after.len(), N_OPS);
+        for (c, name) in after.iter().zip(NAMES.iter()) {
+            assert_eq!(c.name, *name);
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Runtime-dispatched dense-linalg kernel core (DESIGN.md §16).
+//!
+//! Every dense hot loop in the crate — `Mat::{matmul,t_matmul,matmul_t,
+//! syrk,matvec}`, the Brand/RSVD/EA pipelines built on them, and the
+//! routable f64 inner loops of `eigh`/`qr`/`chol` — bottoms out in the
+//! [`Kernels`] trait. Two backends implement it:
+//!
+//! * [`scalar::Scalar`] — the original reference loops, extracted
+//!   verbatim (minus the NaN-swallowing zero-skip; see `scalar.rs`).
+//! * [`blocked::Blocked`] — cache-tiled panels + 8-lane virtual-SIMD
+//!   accumulators with a fixed reduction order, **bit-identical** to
+//!   scalar by construction (lanes span outputs, never the reduction;
+//!   see `blocked.rs`).
+//!
+//! Backend selection is a process-global atomic set once at startup
+//! from `--kernel {auto,scalar,blocked}` (`Mat` methods take no context
+//! argument, and a per-call parameter would thread through every
+//! numerical API in the repo for zero benefit: because the backends are
+//! bit-identical, the global is semantically inert — flipping it
+//! mid-run changes speed, never results). `auto` resolves to `blocked`.
+//!
+//! Call/FLOP accounting lives in [`counters`]; metrics snapshot it into
+//! `ServiceRecord` / the wire `stats` reply so the resolved backend and
+//! per-kernel traffic are observable in production.
+
+pub mod blocked;
+pub mod counters;
+pub mod scalar;
+
+pub use counters::{record, snapshot, KernelCount, KernelOp};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The kernel vtable both backends implement. Matrix kernels take
+/// row-panel slices (`r` rows of A/C, full B) so the `Mat`-level
+/// dispatch can parallelize over disjoint row ranges without the trait
+/// knowing about threads; `gemm_tn` takes full matrices (its rank-1
+/// chain writes every C row per k step). The f64 twins serve the
+/// `eigh`/`qr`/`chol` internals, which work in double precision.
+pub trait Kernels: Sync {
+    fn name(&self) -> &'static str;
+    /// c_rows (r×n) += a_rows (r×k) · b (k×n).
+    fn gemm(&self, r: usize, n: usize, k: usize, a_rows: &[f32], b: &[f32], c_rows: &mut [f32]);
+    /// c (m×n) += aᵀ·b for a: k×m, b: k×n (full matrices).
+    fn gemm_tn(&self, m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]);
+    /// c_rows (r×n) = a_rows (r×k) · bᵀ for b: n×k.
+    fn gemm_nt(&self, r: usize, n: usize, k: usize, a_rows: &[f32], b: &[f32], c_rows: &mut [f32]);
+    /// Rows [r0, r0+r) of C = A·Aᵀ for a: m×k — upper-triangle entries
+    /// (j ≥ i) only, written into the caller's row panel `c_rows`
+    /// (r×m); the dispatch layer mirrors the lower triangle afterwards.
+    fn syrk(&self, r0: usize, r: usize, m: usize, k: usize, a: &[f32], c_rows: &mut [f32]);
+    /// y (r) = a_rows (r×n) · x (n).
+    fn gemv(&self, r: usize, n: usize, a_rows: &[f32], x: &[f32], y: &mut [f32]);
+    /// Ascending-order f32 dot (single accumulator — the order is the
+    /// contract; both backends produce identical bits).
+    fn dot(&self, x: &[f32], y: &[f32]) -> f32;
+    /// y += alpha·x.
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]);
+    /// Ascending-order f64 dot.
+    fn ddot(&self, x: &[f64], y: &[f64]) -> f64;
+    /// `init − Σ xᵢyᵢ` with the subtraction fused into the ascending
+    /// sweep — the Cholesky/triangular-solve reduction shape.
+    fn ddot_sub(&self, init: f64, x: &[f64], y: &[f64]) -> f64;
+    /// y += alpha·x in f64.
+    fn daxpy(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+}
+
+/// Backend selection, as configured (CLI/server spec) — `Auto` defers
+/// to [`resolved`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum Backend {
+    #[default]
+    Auto,
+    Scalar,
+    Blocked,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "auto" => Ok(Backend::Auto),
+            "scalar" => Ok(Backend::Scalar),
+            "blocked" => Ok(Backend::Blocked),
+            other => Err(format!(
+                "unknown kernel backend '{other}' (expected auto|scalar|blocked)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Scalar => "scalar",
+            Backend::Blocked => "blocked",
+        }
+    }
+}
+
+static BACKEND: AtomicU8 = AtomicU8::new(0); // 0=auto 1=scalar 2=blocked
+
+/// Select the process-wide backend. Safe to call at any time (the
+/// backends are bit-identical, so in-flight work is unaffected in
+/// value); in practice set once at CLI/server startup.
+pub fn set_backend(b: Backend) {
+    let v = match b {
+        Backend::Auto => 0,
+        Backend::Scalar => 1,
+        Backend::Blocked => 2,
+    };
+    BACKEND.store(v, Ordering::Relaxed);
+}
+
+/// The configured selection (may be `Auto`).
+pub fn backend() -> Backend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Blocked,
+        _ => Backend::Auto,
+    }
+}
+
+/// The backend actually in use: `Auto` resolves to `Blocked` — it is
+/// bit-identical to scalar and never slower at the repo's shapes.
+pub fn resolved() -> Backend {
+    match backend() {
+        Backend::Scalar => Backend::Scalar,
+        _ => Backend::Blocked,
+    }
+}
+
+/// Resolved backend name for metrics, e.g. `"blocked"` / `"scalar"`.
+pub fn resolved_name() -> &'static str {
+    resolved().as_str()
+}
+
+/// Which codegen path the blocked backend's runtime CPU dispatch takes
+/// (`"avx2"` or `"generic"`) — a metrics tag only; association is
+/// identical on every path.
+pub fn simd_path() -> &'static str {
+    blocked::simd_path()
+}
+
+static SCALAR: scalar::Scalar = scalar::Scalar;
+static BLOCKED: blocked::Blocked = blocked::Blocked;
+
+/// The active kernel vtable.
+#[inline]
+pub fn active() -> &'static dyn Kernels {
+    match resolved() {
+        Backend::Scalar => &SCALAR,
+        _ => &BLOCKED,
+    }
+}
+
+// ---- counted convenience wrappers for the vector kernels -------------
+// (The Mat-level matrix kernels record themselves once per logical call;
+// these are for the direct inner-loop call sites in brand/eigh/qr/chol/
+// lowrank.)
+
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    record(KernelOp::Dot, 2 * x.len().min(y.len()) as u64);
+    active().dot(x, y)
+}
+
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    record(KernelOp::Axpy, 2 * x.len().min(y.len()) as u64);
+    active().axpy(alpha, x, y)
+}
+
+#[inline]
+pub fn ddot(x: &[f64], y: &[f64]) -> f64 {
+    record(KernelOp::Dot, 2 * x.len().min(y.len()) as u64);
+    active().ddot(x, y)
+}
+
+#[inline]
+pub fn ddot_sub(init: f64, x: &[f64], y: &[f64]) -> f64 {
+    record(KernelOp::Dot, 2 * x.len().min(y.len()) as u64);
+    active().ddot_sub(init, x, y)
+}
+
+#[inline]
+pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    record(KernelOp::Axpy, 2 * x.len().min(y.len()) as u64);
+    active().daxpy(alpha, x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [Backend::Auto, Backend::Scalar, Backend::Blocked] {
+            assert_eq!(Backend::parse(b.as_str()).unwrap(), b);
+        }
+        assert!(Backend::parse("fast").is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_blocked() {
+        // Do not mutate the global here (tests share the process); the
+        // resolution function is pure given a selection.
+        assert_eq!(Backend::default(), Backend::Auto);
+        assert!(matches!(simd_path(), "avx2" | "generic"));
+    }
+
+    /// The two vtables agree bitwise on the vector kernels (the matrix
+    /// kernels get the full randomized parity suite in
+    /// `tests/kernel_parity.rs`).
+    #[test]
+    fn vector_kernel_parity() {
+        let x: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).sin()).collect();
+        let y: Vec<f32> = (0..37).map(|i| (i as f32 * 1.3).cos()).collect();
+        assert_eq!(
+            SCALAR.dot(&x, &y).to_bits(),
+            BLOCKED.dot(&x, &y).to_bits()
+        );
+        let mut ys = y.clone();
+        let mut yb = y.clone();
+        SCALAR.axpy(0.37, &x, &mut ys);
+        BLOCKED.axpy(0.37, &x, &mut yb);
+        for (a, b) in ys.iter().zip(&yb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let xd: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        assert_eq!(
+            SCALAR.ddot(&xd, &yd).to_bits(),
+            BLOCKED.ddot(&xd, &yd).to_bits()
+        );
+        assert_eq!(
+            SCALAR.ddot_sub(2.5, &xd, &yd).to_bits(),
+            BLOCKED.ddot_sub(2.5, &xd, &yd).to_bits()
+        );
+    }
+}

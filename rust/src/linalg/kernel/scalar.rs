@@ -1,0 +1,130 @@
+//! Reference backend: the original `linalg/gemm.rs` inner loops,
+//! extracted verbatim — with one deliberate change: the historical
+//! `if aik == 0.0 { continue; }` fast path in `gemm`/`gemm_tn` is gone.
+//! Skipping a zero multiplier silently swallowed IEEE propagation
+//! (`0.0 · inf = NaN`, `0.0 · NaN = NaN`), so a NaN'd B-operand could
+//! sail through a multiply untouched and poison downstream math much
+//! later with no trace. The reference semantics now multiply
+//! unconditionally; `blocked.rs` matches them bit for bit.
+//!
+//! Every reduction here accumulates each output element in strictly
+//! ascending k order with a single accumulator — that order IS the
+//! backend contract (DESIGN.md §16.2), and the blocked backend's tiles
+//! preserve it exactly.
+
+use super::Kernels;
+
+pub struct Scalar;
+
+impl Kernels for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn gemm(&self, r: usize, n: usize, k: usize, a_rows: &[f32], b: &[f32], c_rows: &mut [f32]) {
+        for i in 0..r {
+            let crow = &mut c_rows[i * n..(i + 1) * n];
+            let arow = &a_rows[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+
+    fn gemm_tn(&self, m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        // C[i,j] = sum_k A[k,i] B[k,j]: accumulate rank-1 updates row by
+        // row — per output element the k contributions land ascending.
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (i, &aki) in arow.iter().enumerate() {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aki * bv;
+                }
+            }
+        }
+    }
+
+    fn gemm_nt(&self, r: usize, n: usize, k: usize, a_rows: &[f32], b: &[f32], c_rows: &mut [f32]) {
+        for i in 0..r {
+            let arow = &a_rows[i * k..(i + 1) * k];
+            let crow = &mut c_rows[i * n..(i + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *cv = acc;
+            }
+        }
+    }
+
+    fn syrk(&self, r0: usize, r: usize, m: usize, k: usize, a: &[f32], c_rows: &mut [f32]) {
+        for li in 0..r {
+            let i = r0 + li;
+            let arow = &a[i * k..(i + 1) * k];
+            for j in i..m {
+                let brow = &a[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                c_rows[li * m + j] = acc;
+            }
+        }
+    }
+
+    fn gemv(&self, r: usize, n: usize, a_rows: &[f32], x: &[f32], y: &mut [f32]) {
+        for i in 0..r {
+            y[i] = a_rows[i * n..(i + 1) * n]
+                .iter()
+                .zip(x)
+                .map(|(a, b)| a * b)
+                .sum::<f32>();
+        }
+    }
+
+    fn dot(&self, x: &[f32], y: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (av, bv) in x.iter().zip(y) {
+            acc += av * bv;
+        }
+        acc
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
+    }
+
+    fn ddot(&self, x: &[f64], y: &[f64]) -> f64 {
+        let mut acc = 0.0f64;
+        for (av, bv) in x.iter().zip(y) {
+            acc += av * bv;
+        }
+        acc
+    }
+
+    fn ddot_sub(&self, init: f64, x: &[f64], y: &[f64]) -> f64 {
+        // Triangular-solve/Cholesky reduction shape: the subtraction is
+        // fused into the sweep (s -= x·y per element), NOT computed as
+        // init − Σxy — splitting it would change the rounding sequence.
+        let mut acc = init;
+        for (av, bv) in x.iter().zip(y) {
+            acc -= av * bv;
+        }
+        acc
+    }
+
+    fn daxpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! spectrum-continuation trick.
 
 use super::eigh::Eigh;
+use super::kernel;
 use super::mat::Mat;
 
 /// `M ≈ u · diag(d) · uᵀ`, `u` is n×r with orthonormal columns, `d`
@@ -86,9 +87,11 @@ impl LowRank {
                 jvs[(i, c)] *= inv_weight(d_eff[c], lam);
             }
         }
-        // (J V S) Vᵀ + J/λ
+        // (J V S) Vᵀ + J/λ — fused axpy through the kernel dispatcher:
+        // out += (1/λ)·J rounds identically to out += 1.0·(J/λ) elementwise
+        // and skips the J.scale() temporary.
         let mut out = jvs.matmul_t(&self.u);
-        out.axpy_inplace(1.0, &j.scale(1.0 / lam));
+        kernel::axpy(1.0 / lam, &j.data, &mut out.data);
         out
     }
 
@@ -108,7 +111,7 @@ impl LowRank {
             }
         }
         let mut out = self.u.matmul(&vtjs);
-        out.axpy_inplace(1.0 / lam, j);
+        kernel::axpy(1.0 / lam, &j.data, &mut out.data);
         out
     }
 

@@ -197,12 +197,12 @@ impl Mat {
         out
     }
 
-    /// self += s * other (axpy) — the EA update primitive.
+    /// self += s * other (axpy) — the EA update primitive. Routed
+    /// through the kernel dispatcher (DESIGN.md §16); elementwise, so
+    /// both backends are trivially bit-identical here.
     pub fn axpy_inplace(&mut self, s: f32, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += s * b;
-        }
+        super::kernel::axpy(s, &other.data, &mut self.data);
     }
 
     pub fn scale_inplace(&mut self, s: f32) {

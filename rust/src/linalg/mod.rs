@@ -5,7 +5,12 @@
 //! exist in the offline environment):
 //!
 //! - [`mat::Mat`] — row-major f32 dense matrix
-//! - `gemm` — blocked/threaded matmul, syrk, matvec
+//! - [`kernel`] — the runtime-dispatched kernel core every dense loop
+//!   routes through: a [`kernel::Kernels`] trait with bit-identical
+//!   `scalar` (reference) and `blocked` (cache-tiled, 8-lane virtual
+//!   SIMD) backends, plus call/FLOP counters (DESIGN.md §16)
+//! - `gemm` — the `Mat`-level matmul/syrk/matvec entry points: shape
+//!   checks + row-panel threading, kernels via [`kernel::active`]
 //! - `qr` — Householder QR (+ MGS mirror of the in-artifact QR)
 //! - `eigh` — symmetric EVD (tridiag+QL; Jacobi cross-check)
 //! - [`lowrank::LowRank`] — truncated eigendecomposition + regularized
@@ -23,12 +28,14 @@ pub mod brand;
 pub mod chol;
 pub mod eigh;
 pub mod gemm;
+pub mod kernel;
 pub mod lowrank;
 pub mod mat;
 pub mod qr;
 pub mod rsvd;
 
 pub use eigh::Eigh;
+pub use kernel::Backend as KernelBackend;
 pub use lowrank::LowRank;
 pub use mat::Mat;
 pub use rsvd::RsvdOpts;

@@ -2,6 +2,7 @@
 //! with re-orthogonalization (mirrors the in-graph artifact QR so tests
 //! can compare host vs artifact numerics).
 
+use super::kernel;
 use super::mat::Mat;
 
 impl Mat {
@@ -109,20 +110,18 @@ impl Mat {
         for j in 0..n {
             let mut v = cols[j].clone();
             // two orthogonalization passes ("twice is enough")
+            // columns are contiguous Vec<f64>s, so the projection dot and
+            // the subtraction route through the kernel dispatcher
+            // (v −= dot·qk ≡ daxpy(−dot): IEEE negation is exact, so the
+            // rewrite is bit-identical to the original subtract loop).
             for _pass in 0..2 {
                 for (k, qk) in qcols.iter().enumerate() {
-                    let dot: f64 = qk.iter().zip(&v).map(|(a, b)| a * b).sum();
-                    if _pass == 0 {
-                        r[(k, j)] += dot as f32;
-                    } else {
-                        r[(k, j)] += dot as f32;
-                    }
-                    for (vi, qi) in v.iter_mut().zip(qk) {
-                        *vi -= dot * qi;
-                    }
+                    let dot = kernel::ddot(qk, &v);
+                    r[(k, j)] += dot as f32;
+                    kernel::daxpy(-dot, qk, &mut v);
                 }
             }
-            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let norm: f64 = kernel::ddot(&v, &v).sqrt();
             r[(j, j)] = norm as f32;
             let inv = if norm > 1e-30 { 1.0 / norm } else { 0.0 };
             for vi in v.iter_mut() {

@@ -4,6 +4,11 @@
 //! For symmetric PSD `M` (our K-factors): Gaussian sketch + `n_pwr` power
 //! iterations with QR re-orthogonalization, then a Rayleigh–Ritz step
 //! `S = QᵀMQ`, small EVD, truncate to target rank `r`.
+//!
+//! Every dense loop here is a `Mat` op (matmul/t_matmul/qr/eigh), so the
+//! whole pipeline rides the kernel dispatcher (DESIGN.md §16) with no
+//! direct kernel calls of its own; `deterministic_given_sketch` below
+//! pins the bit-reproducibility across backends that this relies on.
 
 use super::lowrank::LowRank;
 use super::mat::Mat;

@@ -45,6 +45,18 @@ fn main() -> Result<()> {
     }
 }
 
+/// `--kernel {auto,scalar,blocked}` (on `train` and `serve`) selects the
+/// process-wide dense-kernel backend (DESIGN.md §16). The backends are
+/// bit-identical by construction, so the flag trades speed only, never
+/// results; `auto` (the default) resolves to `blocked`. The resolved
+/// name is surfaced in the server summary and the wire `stats` reply.
+fn kernel_from(args: &Args) -> Result<()> {
+    let sel = args.get_or("kernel", "auto");
+    let b = bnkfac::linalg::KernelBackend::parse(sel).map_err(|e| anyhow!(e))?;
+    bnkfac::linalg::kernel::set_backend(b);
+    Ok(())
+}
+
 /// Read a shared auth token from a file (DESIGN.md §12.6): surrounding
 /// whitespace/newline stripped, empty tokens refused. One helper for
 /// both `serve` and `client` so their token parsing cannot drift.
@@ -146,6 +158,7 @@ fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
 /// Host sessions run entirely on the host substrate — no artifacts or
 /// PJRT needed.
 fn cmd_serve(args: &Args) -> Result<()> {
+    kernel_from(args)?;
     let jobs = args.get("jobs").map(|s| s.to_string());
     let listen = args.get("listen").map(|s| s.to_string());
     let workers = args.get_usize("workers", 0);
@@ -697,6 +710,7 @@ fn precond_from(args: &Args) -> Option<PrecondCfg> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    kernel_from(args)?;
     let rt = open_runtime(args)?;
     let algo = Algo::parse(args.get_or("algo", "bkfac"))
         .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
@@ -716,11 +730,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let mut tr = Trainer::new(&rt, cfg)?;
     println!(
-        "training {} for {epochs} epochs on synthetic CIFAR ({} train / {} test), {} params",
+        "training {} for {epochs} epochs on synthetic CIFAR ({} train / {} test), {} params, kernel={} ({})",
         algo.name(),
         ds.train_y.len(),
         ds.test_y.len(),
-        tr.params.n_params()
+        tr.params.n_params(),
+        bnkfac::linalg::kernel::resolved_name(),
+        bnkfac::linalg::kernel::simd_path()
     );
     let t0 = std::time::Instant::now();
     let log = tr.run(&ds, epochs, log_every)?;

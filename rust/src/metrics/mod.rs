@@ -3,9 +3,63 @@
 //! preconditioner-service counters (queue depth / staleness / worker
 //! utilization) attached to the run log when the async service is on.
 
+use crate::linalg::kernel;
 use crate::linalg::{LowRank, Mat};
 use crate::obs::{Hist, ProbeSample};
 use crate::util::ser::{CsvWriter, Json};
+
+/// Snapshot of the dense-kernel core (DESIGN.md §16): which backend the
+/// process resolved (`scalar`/`blocked`), which codegen path the blocked
+/// backend's CPU dispatch took (`avx2`/`generic` — a tag only, results
+/// are bit-identical either way), and cumulative per-kernel call/FLOP
+/// counters. Counters are process-global, so multi-tenant records show
+/// the same totals in every slice — they identify the process's kernel
+/// traffic, not a per-session share.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KernelRecord {
+    pub backend: String,
+    pub simd: String,
+    /// per-op (name, calls, flops), fixed op order
+    pub ops: Vec<(String, u64, u64)>,
+}
+
+impl KernelRecord {
+    /// Read the live process-global state.
+    pub fn current() -> KernelRecord {
+        KernelRecord {
+            backend: kernel::resolved_name().to_string(),
+            simd: kernel::simd_path().to_string(),
+            ops: kernel::snapshot()
+                .into_iter()
+                .map(|c| (c.name.to_string(), c.calls, c.flops))
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::str(&self.backend)),
+            ("simd", Json::str(&self.simd)),
+            (
+                "ops",
+                Json::Obj(
+                    self.ops
+                        .iter()
+                        .map(|(name, calls, flops)| {
+                            (
+                                name.clone(),
+                                Json::obj(vec![
+                                    ("calls", Json::Num(*calls as f64)),
+                                    ("flops", Json::Num(*flops as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
 
 /// §4.2 error metrics between an approximate K-factor representation and
 /// the exact (benchmark) one, all computed on dense materializations:
@@ -94,6 +148,8 @@ pub struct ServiceRecord {
     pub op_ms: Vec<(String, Hist)>,
     /// inverse-application latency histogram (the per-step apply half)
     pub apply_ms: Hist,
+    /// dense-kernel backend + traffic at record time (DESIGN.md §16)
+    pub kernel: KernelRecord,
 }
 
 impl ServiceRecord {
@@ -122,6 +178,7 @@ impl ServiceRecord {
                 ),
             ),
             ("apply_ms", self.apply_ms.to_json()),
+            ("kernel", self.kernel.to_json()),
         ])
     }
 }
@@ -310,6 +367,9 @@ pub struct ServerRecord {
     pub round: u64,
     /// serving-round duration histogram (DESIGN.md §14.2)
     pub round_ms: Hist,
+    /// dense-kernel backend + traffic at record time (DESIGN.md §16);
+    /// rides the wire `stats` reply
+    pub kernel: KernelRecord,
 }
 
 impl ServerRecord {
@@ -343,6 +403,7 @@ impl ServerRecord {
             ("uptime_ms", Json::Num(self.uptime_ms as f64)),
             ("round", Json::Num(self.round as f64)),
             ("round_ms", self.round_ms.to_json()),
+            ("kernel", self.kernel.to_json()),
         ])
     }
 
@@ -365,6 +426,14 @@ impl ServerRecord {
             out.push_str(&format!(
                 "  governor: {} grow, {} shrink, {} evictions\n",
                 self.grow_events, self.shrink_events, self.evictions
+            ));
+        }
+        if !self.kernel.backend.is_empty() {
+            let calls: u64 = self.kernel.ops.iter().map(|(_, c, _)| c).sum();
+            let flops: u64 = self.kernel.ops.iter().map(|(_, _, f)| f).sum();
+            out.push_str(&format!(
+                "  kernel: {} ({}) {} calls, {:.3e} flops\n",
+                self.kernel.backend, self.kernel.simd, calls, flops as f64
             ));
         }
         for s in &self.sessions {
@@ -544,8 +613,15 @@ mod tests {
                 h
             })],
             apply_ms: Hist::default(),
+            kernel: KernelRecord::current(),
         };
         let j = rec.to_json();
+        let kj = j.get("kernel").unwrap();
+        assert!(matches!(
+            kj.get("backend").and_then(|v| v.as_str()),
+            Some("scalar") | Some("blocked")
+        ));
+        assert!(kj.get("ops").and_then(|o| o.get("gemm")).is_some());
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(j.get("max_queue_depth").and_then(|v| v.as_usize()), Some(7));
         let brand = j.get("op_ms").and_then(|o| o.get("brand")).unwrap();
@@ -607,8 +683,14 @@ mod tests {
             uptime_ms: 2000,
             round: 100,
             round_ms: Hist::default(),
+            kernel: KernelRecord::current(),
         };
         let j = rec.to_json();
+        assert!(j
+            .get("kernel")
+            .and_then(|k| k.get("simd"))
+            .and_then(|v| v.as_str())
+            .is_some());
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(j.get("workers_now").and_then(|v| v.as_usize()), Some(6));
         assert_eq!(j.get("workers_max").and_then(|v| v.as_usize()), Some(8));

@@ -92,7 +92,10 @@ impl FactorState {
         }
         match stat {
             Stat::Gram(g) => {
-                // host axpy — O(d²), memory bound; not worth a round-trip
+                // host axpy — O(d²), memory bound; not worth a round-trip.
+                // Routed through the kernel dispatcher (`Mat::axpy_inplace`
+                // → kernel::axpy), so `--kernel` selection covers the EA
+                // accumulation too.
                 let m = self.gram.as_mut().unwrap();
                 timers.time("ea_update", || {
                     m.scale_inplace(rho_eff);
@@ -111,6 +114,8 @@ impl FactorState {
                         Ok::<Mat, anyhow::Error>(outs.into_iter().next().unwrap().into_mat())
                     })?,
                     _ => timers.time("ea_update", || {
+                        // syrk + scale + axpy all dispatch through the
+                        // selected kernel backend (DESIGN.md §16)
                         let mut out = a.syrk();
                         out.scale_inplace(1.0 - rho_eff);
                         out.axpy_inplace(1.0, &{

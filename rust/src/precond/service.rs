@@ -608,6 +608,7 @@ impl PrecondService {
             installs: c.installs.load(Ordering::Relaxed),
             op_ms: self.op_hists(),
             apply_ms: self.apply_hist(),
+            kernel: crate::metrics::KernelRecord::current(),
         }
     }
 

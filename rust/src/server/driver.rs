@@ -17,7 +17,8 @@
 //! ```json
 //! {
 //!   "server": {"workers": 3, "max_sessions": 4, "staleness": 1,
-//!              "workers_min": 2, "workers_max": 6},
+//!              "workers_min": 2, "workers_max": 6,
+//!              "kernel": "blocked"},
 //!   "artifacts": "artifacts/tiny",
 //!   "jobs": [
 //!     {"at": 0,  "action": "create", "name": "a", "weight": 2,
@@ -298,16 +299,35 @@ struct Job {
     cmd: Command,
 }
 
-fn parse_jobs(root: &Json) -> Result<(ServerCfg, Option<String>, Vec<Job>)> {
+type ParsedJobs = (
+    ServerCfg,
+    Option<String>,
+    Vec<Job>,
+    Option<crate::linalg::KernelBackend>,
+);
+
+fn parse_jobs(root: &Json) -> Result<ParsedJobs> {
     let null = Json::Null;
     let sj = root.get("server").unwrap_or(&null);
     // loud-typo policy (same as the wire spec parsers): a misspelled
     // `workers_mni` silently running defaults would corrupt experiments
     super::proto::reject_unknown(
         sj,
-        &["workers", "max_sessions", "staleness", "workers_min", "workers_max"],
+        &["workers", "max_sessions", "staleness", "workers_min", "workers_max", "kernel"],
         "job-file server spec",
     )?;
+    // optional dense-kernel backend selection (DESIGN.md §16); when
+    // present it overrides the `serve --kernel` CLI default. Parsed
+    // loudly so `"kernel": "fats"` fails instead of running `auto`.
+    let kernel = sj
+        .get("kernel")
+        .map(|v| {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow!("job-file server spec: 'kernel' must be a string"))?;
+            crate::linalg::KernelBackend::parse(s).map_err(|e| anyhow!(e))
+        })
+        .transpose()?;
     let d = ServerCfg::default();
     let cfg = ServerCfg {
         workers: sj
@@ -347,7 +367,7 @@ fn parse_jobs(root: &Json) -> Result<(ServerCfg, Option<String>, Vec<Job>)> {
             })
         })
         .collect::<Result<Vec<Job>>>()?;
-    Ok((cfg, artifacts, jobs))
+    Ok((cfg, artifacts, jobs, kernel))
 }
 
 /// Run a job file to completion; returns the final server record.
@@ -385,9 +405,12 @@ pub fn run_jobs_opts(
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
     let root = Json::parse(&text).map_err(|e| anyhow!("job file json: {e}"))?;
-    let (mut cfg, artifacts, jobs) = parse_jobs(&root)?;
+    let (mut cfg, artifacts, jobs, kernel) = parse_jobs(&root)?;
     if let Some(w) = workers_override {
         cfg.workers = w;
+    }
+    if let Some(b) = kernel {
+        crate::linalg::kernel::set_backend(b);
     }
     let rt = match artifacts {
         Some(dir) => Some(Runtime::open(dir)?),

@@ -980,6 +980,7 @@ impl<'rt> SessionManager<'rt> {
             uptime_ms: self.uptime_ms(),
             round: self.round,
             round_ms: self.round_ms.clone(),
+            kernel: crate::metrics::KernelRecord::current(),
         }
     }
 }

@@ -1,0 +1,354 @@
+//! Bit-parity suite for the dense-kernel backends (DESIGN.md §16).
+//!
+//! The blocked backend's contract is not "close to" the scalar
+//! reference — it is BIT-IDENTICAL on every op and every shape,
+//! because each output element is accumulated in the same ascending-k
+//! order with a single accumulator regardless of tiling or lane
+//! width. These tests enforce that contract where it is most likely
+//! to crack: empty and degenerate dims (0×n, 1×n), sizes straddling
+//! the 8-lane width and the 128-wide cache tiles, IEEE special values
+//! (the NaN-propagation semantics the old zero-skip swallowed), and —
+//! end to end — a full multi-session server run whose checkpoint must
+//! serialize to identical bytes under either backend.
+//!
+//! The backend selector is process-global, so scalar-vs-blocked runs
+//! of the *routed* paths happen sequentially inside a single #[test];
+//! concurrent tests seeing either backend is benign precisely because
+//! the backends are bit-identical.
+
+use bnkfac::linalg::kernel::{self, blocked::Blocked, scalar::Scalar, Backend, Kernels};
+use bnkfac::linalg::Mat;
+use bnkfac::optim::Algo;
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager};
+use bnkfac::util::proptest::check;
+use bnkfac::util::rng::Rng;
+
+fn fill32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gauss_f32()).collect()
+}
+
+fn fill64(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.next_gauss()).collect()
+}
+
+fn bits32(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn bits64(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Dimension generator biased toward the boundaries that break tiled
+/// code: 0, 1, one-below/at/one-above the lane width, and a spread
+/// that crosses the 64/128 tile edges.
+fn dim(rng: &mut Rng) -> usize {
+    match rng.next_below(8) {
+        0 => 0,
+        1 => 1,
+        2 => 7,
+        3 => 8,
+        4 => 9,
+        5 => 63 + rng.next_below(4),  // straddle MC = 64
+        6 => 127 + rng.next_below(4), // straddle KC = NC = 128
+        _ => 2 + rng.next_below(48),
+    }
+}
+
+struct Shape {
+    r: usize,
+    n: usize,
+    k: usize,
+    seed: u64,
+}
+
+impl std::fmt::Debug for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Shape(r={},n={},k={},seed={})",
+            self.r, self.n, self.k, self.seed
+        )
+    }
+}
+
+fn gen_shape(rng: &mut Rng) -> Shape {
+    Shape {
+        r: dim(rng),
+        n: dim(rng),
+        k: dim(rng),
+        seed: rng.next_u64(),
+    }
+}
+
+/// Run one op through both backends from identical inputs and demand
+/// identical output bits.
+fn expect_same(op: &str, s: &Shape, got_scalar: &[u32], got_blocked: &[u32]) -> Result<(), String> {
+    if got_scalar == got_blocked {
+        return Ok(());
+    }
+    let idx = got_scalar
+        .iter()
+        .zip(got_blocked)
+        .position(|(a, b)| a != b)
+        .unwrap();
+    Err(format!(
+        "{op} diverges at flat index {idx} for {s:?}: scalar bits {:#010x} vs blocked {:#010x}",
+        got_scalar[idx], got_blocked[idx]
+    ))
+}
+
+#[test]
+fn matrix_kernels_bit_identical_across_shapes() {
+    check("kernel parity: matrix ops", gen_shape, |s| {
+        let mut rng = Rng::new(s.seed);
+        let (r, n, k) = (s.r, s.n, s.k);
+
+        // gemm: c (r×n) += a (r×k) · b (k×n), accumulating into a
+        // random (not zero) C so the += semantics are exercised.
+        let a = fill32(&mut rng, r * k);
+        let b = fill32(&mut rng, k * n);
+        let c0 = fill32(&mut rng, r * n);
+        let mut cs = c0.clone();
+        let mut cb = c0.clone();
+        Scalar.gemm(r, n, k, &a, &b, &mut cs);
+        Blocked.gemm(r, n, k, &a, &b, &mut cb);
+        expect_same("gemm", s, &bits32(&cs), &bits32(&cb))?;
+
+        // gemm_tn: c (r×n) += aᵀ·b for a: k×r, b: k×n.
+        let at = fill32(&mut rng, k * r);
+        let mut cs = c0.clone();
+        let mut cb = c0.clone();
+        Scalar.gemm_tn(r, n, k, &at, &b, &mut cs);
+        Blocked.gemm_tn(r, n, k, &at, &b, &mut cb);
+        expect_same("gemm_tn", s, &bits32(&cs), &bits32(&cb))?;
+
+        // gemm_nt: c (r×n) = a (r×k) · bᵀ for b: n×k.
+        let bt = fill32(&mut rng, n * k);
+        let mut cs = c0.clone();
+        let mut cb = c0.clone();
+        Scalar.gemm_nt(r, n, k, &a, &bt, &mut cs);
+        Blocked.gemm_nt(r, n, k, &a, &bt, &mut cb);
+        expect_same("gemm_nt", s, &bits32(&cs), &bits32(&cb))?;
+
+        // syrk over a random row panel [r0, r0+pr) of A·Aᵀ, A: r×k.
+        // Untouched (j < i) panel entries keep their init in both runs.
+        let r0 = if r == 0 { 0 } else { rng.next_below(r) };
+        let pr = r - r0;
+        let p0 = fill32(&mut rng, pr * r);
+        let mut ps = p0.clone();
+        let mut pb = p0;
+        Scalar.syrk(r0, pr, r, k, &a, &mut ps);
+        Blocked.syrk(r0, pr, r, k, &a, &mut pb);
+        expect_same("syrk", s, &bits32(&ps), &bits32(&pb))?;
+
+        // gemv: y (r) = a (r×n) · x (n).
+        let av = fill32(&mut rng, r * n);
+        let x = fill32(&mut rng, n);
+        let mut ys = vec![0.5f32; r];
+        let mut yb = vec![0.5f32; r];
+        Scalar.gemv(r, n, &av, &x, &mut ys);
+        Blocked.gemv(r, n, &av, &x, &mut yb);
+        expect_same("gemv", s, &bits32(&ys), &bits32(&yb))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn vector_kernels_bit_identical_across_lengths() {
+    check("kernel parity: vector ops", gen_shape, |s| {
+        let mut rng = Rng::new(s.seed);
+        let len = s.k;
+        let alpha = rng.next_gauss_f32();
+
+        let x = fill32(&mut rng, len);
+        let y = fill32(&mut rng, len);
+        let ds = Scalar.dot(&x, &y);
+        let db = Blocked.dot(&x, &y);
+        if ds.to_bits() != db.to_bits() {
+            return Err(format!("dot diverges for {s:?}: {ds:?} vs {db:?}"));
+        }
+        let mut ys = y.clone();
+        let mut yb = y.clone();
+        Scalar.axpy(alpha, &x, &mut ys);
+        Blocked.axpy(alpha, &x, &mut yb);
+        expect_same("axpy", s, &bits32(&ys), &bits32(&yb))?;
+
+        let xd = fill64(&mut rng, len);
+        let yd = fill64(&mut rng, len);
+        if Scalar.ddot(&xd, &yd).to_bits() != Blocked.ddot(&xd, &yd).to_bits() {
+            return Err(format!("ddot diverges for {s:?}"));
+        }
+        let init = rng.next_gauss();
+        if Scalar.ddot_sub(init, &xd, &yd).to_bits() != Blocked.ddot_sub(init, &xd, &yd).to_bits()
+        {
+            return Err(format!("ddot_sub diverges for {s:?}"));
+        }
+        let mut ds = yd.clone();
+        let mut db = yd.clone();
+        Scalar.daxpy(init, &xd, &mut ds);
+        Blocked.daxpy(init, &xd, &mut db);
+        if bits64(&ds) != bits64(&db) {
+            return Err(format!("daxpy diverges for {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// IEEE special values must propagate identically — including the NaN
+/// *payload bits*, which depend on operand order. This is the case the
+/// historical zero-skip silently got wrong (0·inf skipped instead of
+/// producing NaN).
+#[test]
+fn special_values_propagate_identically() {
+    let specials = [
+        0.0f32,
+        -0.0,
+        1.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        -3.5,
+    ];
+    // 11×11 operands cycle through all pairings of specials, with the
+    // dims chosen to leave a 3-wide tail past the 8-lane width.
+    let (r, n, k) = (11usize, 11usize, 11usize);
+    let cyc = |len: usize, off: usize| -> Vec<f32> {
+        (0..len).map(|i| specials[(i + off) % specials.len()]).collect()
+    };
+    let a = cyc(r * k, 0);
+    let b = cyc(k * n, 3);
+    let c0 = cyc(r * n, 5);
+
+    let mut cs = c0.clone();
+    let mut cb = c0.clone();
+    Scalar.gemm(r, n, k, &a, &b, &mut cs);
+    Blocked.gemm(r, n, k, &a, &b, &mut cb);
+    assert_eq!(bits32(&cs), bits32(&cb), "gemm special-value bits");
+    assert!(cs.iter().any(|v| v.is_nan()), "0·inf must surface as NaN");
+
+    let mut cs = c0.clone();
+    let mut cb = c0.clone();
+    Scalar.gemm_tn(r, n, k, &a, &b, &mut cs);
+    Blocked.gemm_tn(r, n, k, &a, &b, &mut cb);
+    assert_eq!(bits32(&cs), bits32(&cb), "gemm_tn special-value bits");
+
+    let mut cs = c0.clone();
+    let mut cb = c0;
+    Scalar.gemm_nt(r, n, k, &a, &b, &mut cs);
+    Blocked.gemm_nt(r, n, k, &a, &b, &mut cb);
+    assert_eq!(bits32(&cs), bits32(&cb), "gemm_nt special-value bits");
+
+    let x = cyc(n, 1);
+    let mut ys = vec![0.0f32; r];
+    let mut yb = vec![0.0f32; r];
+    Scalar.gemv(r, n, &cyc(r * n, 2), &x, &mut ys);
+    Blocked.gemv(r, n, &cyc(r * n, 2), &x, &mut yb);
+    assert_eq!(bits32(&ys), bits32(&yb), "gemv special-value bits");
+}
+
+/// The Mat-level entry points (threaded dispatch, tile mirroring,
+/// counter recording) must also be backend-invariant — sizes here are
+/// past PAR_FLOPS_MIN so the row-parallel split is exercised too.
+#[test]
+fn mat_ops_bit_identical_across_backends() {
+    let mut rng = Rng::new(0xC0FFEE);
+    // 161·117·123 ≈ 2.3M FLOPs > PAR_FLOPS_MIN (2²¹), so matmul and
+    // matmul_t take the threaded row-split; dims are deliberately not
+    // multiples of the 8-lane width or the 64/128 tiles.
+    let a = Mat::gauss(161, 117, 1.0, &mut rng);
+    let b = Mat::gauss(117, 123, 1.0, &mut rng);
+    let at = Mat::gauss(117, 131, 1.0, &mut rng);
+    let bt = Mat::gauss(123, 117, 1.0, &mut rng);
+    let x: Vec<f32> = (0..117).map(|_| rng.next_gauss_f32()).collect();
+
+    let calls_before: u64 = kernel::snapshot().iter().map(|c| c.calls).sum();
+    let run = |backend: Backend| {
+        kernel::set_backend(backend);
+        let mm = a.matmul(&b);
+        let tm = at.t_matmul(&b);
+        let mt = a.matmul_t(&bt);
+        let sy = a.syrk();
+        let mv = a.matvec(&x[..117]);
+        (
+            bits32(&mm.data),
+            bits32(&tm.data),
+            bits32(&mt.data),
+            bits32(&sy.data),
+            bits32(&mv),
+        )
+    };
+    let s = run(Backend::Scalar);
+    let bl = run(Backend::Blocked);
+    kernel::set_backend(Backend::Auto);
+    assert_eq!(s.0, bl.0, "matmul bits differ across backends");
+    assert_eq!(s.1, bl.1, "t_matmul bits differ across backends");
+    assert_eq!(s.2, bl.2, "matmul_t bits differ across backends");
+    assert_eq!(s.3, bl.3, "syrk bits differ across backends");
+    assert_eq!(s.4, bl.4, "matvec bits differ across backends");
+
+    // Counters are process-global and shared with concurrent tests, so
+    // only monotonicity is checkable here — the ops above must have
+    // registered at least once each (2 backends × 5 ops).
+    let calls_after: u64 = kernel::snapshot().iter().map(|c| c.calls).sum();
+    assert!(
+        calls_after >= calls_before + 10,
+        "kernel counters did not advance: {calls_before} -> {calls_after}"
+    );
+}
+
+fn scfg(seed: u64, algo: Algo, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 2,
+        dim: 36,
+        rank: 5,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+/// End-to-end determinism: a multi-session server run (EA stat
+/// updates, Brand chains, eigendecompositions, preconditioned applies
+/// — every routed path at once) checkpointed under the scalar backend
+/// must serialize to the EXACT bytes of the same run under the
+/// blocked backend.
+#[test]
+fn checkpoints_byte_identical_across_backends() {
+    let run = |backend: Backend| -> String {
+        kernel::set_backend(backend);
+        let mut mgr = SessionManager::new(ServerCfg {
+            workers: 2,
+            max_sessions: 4,
+            staleness: 1,
+            ..ServerCfg::default()
+        });
+        let a = mgr
+            .create_host("a", 1, scfg(11, Algo::BKfac, 24), None)
+            .unwrap();
+        let b = mgr
+            .create_host("b", 1, scfg(22, Algo::BKfacC, 24), None)
+            .unwrap();
+        mgr.run_to_completion(1_000_000).unwrap();
+        let ja = mgr.checkpoint(a).unwrap().to_string_pretty();
+        let jb = mgr.checkpoint(b).unwrap().to_string_pretty();
+        format!("{ja}\n{jb}")
+    };
+    let scalar = run(Backend::Scalar);
+    let blocked = run(Backend::Blocked);
+    kernel::set_backend(Backend::Auto);
+    assert!(
+        scalar.len() > 200,
+        "checkpoint suspiciously small — workload did not run"
+    );
+    assert_eq!(
+        scalar, blocked,
+        "server checkpoints differ between scalar and blocked backends"
+    );
+}
