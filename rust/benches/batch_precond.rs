@@ -1,0 +1,151 @@
+//! E9 — the batched-preconditioning perf claim (DESIGN.md §17): when a
+//! server hosts many small factors across tenants, draining their Brand
+//! updates as grouped batch-kernel calls must not be slower than the
+//! per-op drain, at BIT-IDENTICAL checkpoints (the §17.2 contract makes
+//! grouping semantically inert, so any speedup is free). Workload: 4
+//! tenant sessions × 16 small FC factors each, async drain with
+//! staleness 1 — the regime the batching layer targets, where per-op
+//! dispatch overhead rivals the arithmetic.
+//!
+//! Writes off/batched wall times, the measured speedup, group counts and
+//! the padded-bucket fill ratio into BENCH_scaling.json under
+//! `precond.batch`, where ci/check_bench.py gates the speedup against
+//! ci/bench_baselines.json.
+//!
+//! Env: BNKFAC_BATCH_SESSIONS (default 4), BNKFAC_BATCH_FACTORS
+//! (default 16), BNKFAC_BATCH_STEPS (default 48), BNKFAC_SCALE_REPS
+//! (default 3).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use bnkfac::linalg::kernel;
+use bnkfac::optim::Algo;
+use bnkfac::precond::batch::{self, BatchMode};
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager};
+use bnkfac::util::ser::Json;
+use common::{env_usize, time_fn, update_bench_json, Table};
+
+fn scfg(seed: u64, factors: usize, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors,
+        dim: 32,
+        rank: 6,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo: Algo::BKfac,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+/// One full multi-tenant run; returns the concatenated checkpoints (the
+/// parity witness) so timing and bit-checking share one code path.
+fn run(sessions: usize, factors: usize, steps: u64) -> String {
+    let mut mgr = SessionManager::new(ServerCfg {
+        workers: 2,
+        max_sessions: sessions.max(2),
+        staleness: 1,
+        ..ServerCfg::default()
+    });
+    let mut out = String::new();
+    let ids: Vec<u64> = (0..sessions)
+        .map(|i| {
+            mgr.create_host(
+                &format!("t{i}"),
+                i as u64 + 1,
+                scfg(100 + i as u64, factors, steps),
+                None,
+            )
+            .unwrap()
+        })
+        .collect();
+    mgr.run_to_completion(100_000_000).unwrap();
+    for id in ids {
+        out.push_str(&mgr.checkpoint(id).unwrap().to_string_pretty());
+        out.push('\n');
+    }
+    out
+}
+
+fn main() {
+    let sessions = env_usize("BNKFAC_BATCH_SESSIONS", 4);
+    let factors = env_usize("BNKFAC_BATCH_FACTORS", 16);
+    let steps = env_usize("BNKFAC_BATCH_STEPS", 48) as u64;
+    let reps = env_usize("BNKFAC_SCALE_REPS", 3);
+
+    // per-op drain (the pre-§17 behaviour)
+    batch::set_mode(BatchMode::Off);
+    let ckpt_off = run(sessions, factors, steps);
+    let (t_off, _) = time_fn(1, reps, || run(sessions, factors, steps));
+
+    // grouped drain; count groups/fill over the measured window
+    batch::set_mode(BatchMode::Auto);
+    batch::reset_stats();
+    kernel::counters::reset();
+    let ckpt_on = run(sessions, factors, steps);
+    let (t_on, _) = time_fn(1, reps, || run(sessions, factors, steps));
+    let (groups, grouped_ops, capacity) = batch::stats();
+    let (_, logical, padded) = kernel::counters::batch_snapshot();
+
+    // the speedup only counts if the answer is the same answer
+    assert_eq!(
+        ckpt_off, ckpt_on,
+        "batched drain changed checkpoint bytes — §17.2 contract broken"
+    );
+    assert!(groups > 0, "batched run formed no groups — knob not wired?");
+
+    let speedup = t_off / t_on;
+    let fill = if padded == 0 {
+        1.0
+    } else {
+        logical as f64 / padded as f64
+    };
+    let occupancy = if capacity == 0 {
+        0.0
+    } else {
+        grouped_ops as f64 / capacity as f64
+    };
+
+    let mut tab = Table::new(&["mode", "ms", "groups", "fill"]);
+    tab.row(vec![
+        "off".into(),
+        format!("{:.2}", t_off * 1e3),
+        "-".into(),
+        "-".into(),
+    ]);
+    tab.row(vec![
+        "auto".into(),
+        format!("{:.2}", t_on * 1e3),
+        groups.to_string(),
+        format!("{fill:.2}"),
+    ]);
+
+    println!(
+        "\n== E9: batched vs per-op factor drain ({sessions} sessions x {factors} factors) =="
+    );
+    tab.print();
+    println!("\nspeedup: {speedup:.2}x  group occupancy: {occupancy:.2}");
+
+    // nested so the gate's dotted lookup resolves precond.batch.speedup
+    update_bench_json(
+        "precond",
+        Json::obj(vec![(
+            "batch",
+            Json::obj(vec![
+                ("sessions", Json::Num(sessions as f64)),
+                ("factors", Json::Num(factors as f64)),
+                ("off_ms", Json::Num(t_off * 1e3)),
+                ("batch_ms", Json::Num(t_on * 1e3)),
+                ("speedup", Json::Num(speedup)),
+                ("groups", Json::Num(groups as f64)),
+                ("grouped_ops", Json::Num(grouped_ops as f64)),
+                ("occupancy", Json::Num(occupancy)),
+                ("fill_ratio", Json::Num(fill)),
+            ]),
+        )]),
+    );
+}

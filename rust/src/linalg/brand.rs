@@ -11,76 +11,256 @@
 //!
 //! For the EA K-factor update `M̄ ← ρ M̄ + (1−ρ) A Aᵀ` (Alg 4 line 6) call
 //! with `d ← ρ·d` and `A ← √(1−ρ)·A`: see [`LowRank::brand_ea_update`].
+//!
+//! **Batching (DESIGN.md §17):** the solo entry points delegate to
+//! [`LowRank::brand_update_batch`], which runs every dense stage of N
+//! independent Brand updates through the batched kernel entry points
+//! (`kernel::batch_gemm`). Each batch item executes the exact per-item
+//! reduction the solo kernels use, so *any* partition of an op stream
+//! into batches — including all-singletons — is bit-identical. There is
+//! one Brand implementation in the crate; batching only changes how
+//! many factors share a kernel dispatch.
 
-use super::kernel;
+use super::kernel::{self, GemmItem, GemmKind};
 use super::lowrank::LowRank;
 use super::mat::Mat;
+
+/// A zeroed size-class buffer for a batch temporary: capacity rounded up
+/// to the bucket length, payload indexed only over `logical` ("pad the
+/// layout, never the reduction").
+fn bucket_vec(logical: usize) -> Vec<f32> {
+    vec![0.0f32; kernel::bucket_len(logical)]
+}
 
 impl LowRank {
     /// Exact symmetric Brand update: EVD of `U diag(d) Uᵀ + A Aᵀ`.
     /// Output rank is r+n (not truncated — the caller truncates before the
     /// NEXT update, per Alg 4, so the inverse application benefits from the
     /// extra modes, §3.1 "Controlling the size").
+    ///
+    /// Implemented as a batch of one — see [`LowRank::brand_update_batch`].
     pub fn brand_update(&self, a: &Mat) -> LowRank {
-        assert_eq!(a.rows, self.dim(), "brand_update: dim mismatch");
-        let (r, n) = (self.rank(), a.cols);
-        assert!(
-            r + n <= self.dim(),
-            "brand_update needs r+n <= d ({}+{} > {})",
-            r,
-            n,
-            self.dim()
-        );
-        // P = Uᵀ A (r×n)
-        let p = self.u.t_matmul(a);
-        // A⊥ = A − U P (d×n): fused as axpy(-1) through the kernel
-        // dispatcher — bitwise a − b, one temporary fewer than a.sub().
-        let up = self.u.matmul(&p);
-        let mut a_perp = a.clone();
-        kernel::axpy(-1.0, &up.data, &mut a_perp.data);
-        // QR of A⊥
-        let (q_a, r_a) = a_perp.qr();
-        // Assemble M_S ((r+n)×(r+n))
-        let mut m_s = Mat::zeros(r + n, r + n);
-        // top-left: D + P Pᵀ
-        let ppt = p.matmul_t(&p);
-        for i in 0..r {
-            for j in 0..r {
-                m_s[(i, j)] = ppt[(i, j)] + if i == j { self.d[i] } else { 0.0 };
-            }
+        LowRank::brand_update_batch(&[(self, a)]).pop().unwrap()
+    }
+
+    /// N independent Brand updates through batched kernel calls: every
+    /// dense stage (P = UᵀA, UP, the PPᵀ/PR_Aᵀ/R_AR_Aᵀ subspace products,
+    /// U_new = [U Q_A]·U_M) issues ONE `batch_gemm` spanning all items;
+    /// the per-item QR and small EVD stay sequential (f64 internals,
+    /// negligible at small factor dims). Temporaries live in size-class
+    /// padded buffers whose tails the kernels never read.
+    pub fn brand_update_batch(items: &[(&LowRank, &Mat)]) -> Vec<LowRank> {
+        let shapes: Vec<(usize, usize, usize)> = items
+            .iter()
+            .map(|(lr, a)| {
+                assert_eq!(a.rows, lr.dim(), "brand_update: dim mismatch");
+                let (r, n) = (lr.rank(), a.cols);
+                assert!(
+                    r + n <= lr.dim(),
+                    "brand_update needs r+n <= d ({}+{} > {})",
+                    r,
+                    n,
+                    lr.dim()
+                );
+                (lr.dim(), r, n)
+            })
+            .collect();
+
+        // P = Uᵀ A (r×n), all items in one TN pass.
+        let mut ps: Vec<Vec<f32>> = shapes.iter().map(|&(_, r, n)| bucket_vec(r * n)).collect();
+        {
+            let mut gi: Vec<GemmItem<'_>> = items
+                .iter()
+                .zip(&shapes)
+                .zip(ps.iter_mut())
+                .map(|(((lr, a), &(d, r, n)), c)| GemmItem {
+                    kind: GemmKind::TN,
+                    m: r,
+                    n,
+                    k: d,
+                    a: &lr.u.data,
+                    b: &a.data,
+                    c,
+                })
+                .collect();
+            kernel::batch_gemm(&mut gi);
         }
-        // top-right: P R_Aᵀ ; bottom-left its transpose
-        let prt = p.matmul_t(&r_a);
-        for i in 0..r {
-            for j in 0..n {
-                m_s[(i, r + j)] = prt[(i, j)];
-                m_s[(r + j, i)] = prt[(i, j)];
-            }
+
+        // UP = U·P (d×n), one NN pass.
+        let mut ups: Vec<Vec<f32>> = shapes.iter().map(|&(d, _, n)| bucket_vec(d * n)).collect();
+        {
+            let mut gi: Vec<GemmItem<'_>> = items
+                .iter()
+                .zip(&shapes)
+                .zip(ps.iter().zip(ups.iter_mut()))
+                .map(|(((lr, _), &(d, r, n)), (p, c))| GemmItem {
+                    kind: GemmKind::NN,
+                    m: d,
+                    n,
+                    k: r,
+                    a: &lr.u.data,
+                    b: p,
+                    c,
+                })
+                .collect();
+            kernel::batch_gemm(&mut gi);
         }
-        // bottom-right: R_A R_Aᵀ
-        let rrt = r_a.matmul_t(&r_a);
-        for i in 0..n {
-            for j in 0..n {
-                m_s[(r + i, r + j)] = rrt[(i, j)];
+
+        // A⊥ = A − U P (d×n) then QR, per item: fused as axpy(-1) through
+        // the kernel dispatcher — bitwise a − b, one temporary fewer than
+        // a.sub(); QR stays sequential (f64 internals).
+        let qrs: Vec<(Mat, Mat)> = items
+            .iter()
+            .zip(&shapes)
+            .zip(&ups)
+            .map(|(((_, a), &(d, _, n)), up)| {
+                let mut a_perp = (*a).clone();
+                kernel::axpy(-1.0, &up[..d * n], &mut a_perp.data);
+                a_perp.qr()
+            })
+            .collect();
+
+        // Subspace products PPᵀ (r×r), PR_Aᵀ (r×n), R_AR_Aᵀ (n×n): one NT
+        // pass with 3 items per factor.
+        let mut ppts: Vec<Vec<f32>> = shapes.iter().map(|&(_, r, _)| bucket_vec(r * r)).collect();
+        let mut prts: Vec<Vec<f32>> = shapes.iter().map(|&(_, r, n)| bucket_vec(r * n)).collect();
+        let mut rrts: Vec<Vec<f32>> = shapes.iter().map(|&(_, _, n)| bucket_vec(n * n)).collect();
+        {
+            let mut gi: Vec<GemmItem<'_>> = Vec::with_capacity(3 * items.len());
+            for ((((&(_, r, n), p), (_, r_a)), ppt), (prt, rrt)) in shapes
+                .iter()
+                .zip(&ps)
+                .zip(&qrs)
+                .zip(ppts.iter_mut())
+                .zip(prts.iter_mut().zip(rrts.iter_mut()))
+            {
+                gi.push(GemmItem {
+                    kind: GemmKind::NT,
+                    m: r,
+                    n: r,
+                    k: n,
+                    a: p,
+                    b: p,
+                    c: ppt,
+                });
+                gi.push(GemmItem {
+                    kind: GemmKind::NT,
+                    m: r,
+                    n,
+                    k: n,
+                    a: p,
+                    b: &r_a.data,
+                    c: prt,
+                });
+                gi.push(GemmItem {
+                    kind: GemmKind::NT,
+                    m: n,
+                    n,
+                    k: n,
+                    a: &r_a.data,
+                    b: &r_a.data,
+                    c: rrt,
+                });
             }
+            kernel::batch_gemm(&mut gi);
         }
-        // small EVD
-        let ev = m_s.eigh();
-        // U_new = [U Q_A] U_M  (d×(r+n))
-        let uq = self.u.hcat(&q_a);
-        let u_new = uq.matmul(&ev.u);
+
+        // Assemble M_S ((r+n)×(r+n)) and take its small EVD, per item.
+        let evs: Vec<_> = items
+            .iter()
+            .zip(&shapes)
+            .enumerate()
+            .map(|(idx, ((lr, _), &(_, r, n)))| {
+                let mut m_s = Mat::zeros(r + n, r + n);
+                // top-left: D + P Pᵀ
+                for i in 0..r {
+                    for j in 0..r {
+                        m_s[(i, j)] = ppts[idx][i * r + j] + if i == j { lr.d[i] } else { 0.0 };
+                    }
+                }
+                // top-right: P R_Aᵀ ; bottom-left its transpose
+                for i in 0..r {
+                    for j in 0..n {
+                        m_s[(i, r + j)] = prts[idx][i * n + j];
+                        m_s[(r + j, i)] = prts[idx][i * n + j];
+                    }
+                }
+                // bottom-right: R_A R_Aᵀ
+                for i in 0..n {
+                    for j in 0..n {
+                        m_s[(r + i, r + j)] = rrts[idx][i * n + j];
+                    }
+                }
+                m_s.eigh()
+            })
+            .collect();
+
+        // U_new = [U Q_A] U_M (d×(r+n)), one NN pass.
+        let uqs: Vec<Mat> = items
+            .iter()
+            .zip(&qrs)
+            .map(|((lr, _), (q_a, _))| lr.u.hcat(q_a))
+            .collect();
+        let mut u_news: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&(d, r, n)| bucket_vec(d * (r + n)))
+            .collect();
+        {
+            let mut gi: Vec<GemmItem<'_>> = uqs
+                .iter()
+                .zip(&evs)
+                .zip(&shapes)
+                .zip(u_news.iter_mut())
+                .map(|(((uq, ev), &(d, r, n)), c)| GemmItem {
+                    kind: GemmKind::NN,
+                    m: d,
+                    n: r + n,
+                    k: r + n,
+                    a: &uq.data,
+                    b: &ev.u.data,
+                    c,
+                })
+                .collect();
+            kernel::batch_gemm(&mut gi);
+        }
+
         // clamp tiny negative eigenvalues (fp noise; X̂ is PSD)
-        let d_new: Vec<f32> = ev.d.iter().map(|&x| x.max(0.0)).collect();
-        LowRank::new(u_new, d_new)
+        evs.into_iter()
+            .zip(u_news)
+            .zip(&shapes)
+            .map(|((ev, mut u_new), &(d, r, n))| {
+                u_new.truncate(d * (r + n));
+                let d_new: Vec<f32> = ev.d.iter().map(|&x| x.max(0.0)).collect();
+                LowRank::new(Mat::from_vec(d, r + n, u_new), d_new)
+            })
+            .collect()
     }
 
     /// The full B-KFAC per-arrival step (Alg 4): truncate to `r`, then
-    /// Brand-update with the EA scaling (`ρ`, `√(1−ρ)A`).
+    /// Brand-update with the EA scaling (`ρ`, `√(1−ρ)A`). A batch of one —
+    /// see [`LowRank::brand_ea_update_batch`].
     pub fn brand_ea_update(&self, a: &Mat, rho: f32, r: usize) -> LowRank {
-        let t = self.truncate(r);
-        let scaled = LowRank::new(t.u, t.d.iter().map(|&x| rho * x).collect());
-        let a_scaled = a.scale((1.0 - rho).sqrt());
-        scaled.brand_update(&a_scaled)
+        LowRank::brand_ea_update_batch(&[(self, a, rho, r)])
+            .pop()
+            .unwrap()
+    }
+
+    /// N independent EA Brand steps sharing batched kernel passes. The
+    /// per-item truncation/scaling prologue is elementwise (order-free);
+    /// the dense work goes through [`LowRank::brand_update_batch`].
+    pub fn brand_ea_update_batch(items: &[(&LowRank, &Mat, f32, usize)]) -> Vec<LowRank> {
+        let scaled: Vec<(LowRank, Mat)> = items
+            .iter()
+            .map(|&(lr, a, rho, r)| {
+                let t = lr.truncate(r);
+                (
+                    LowRank::new(t.u, t.d.iter().map(|&x| rho * x).collect()),
+                    a.scale((1.0 - rho).sqrt()),
+                )
+            })
+            .collect();
+        let refs: Vec<(&LowRank, &Mat)> = scaled.iter().map(|(l, a)| (l, a)).collect();
+        LowRank::brand_update_batch(&refs)
     }
 
     /// Alg 6 "light correction": snap the representation's projection onto

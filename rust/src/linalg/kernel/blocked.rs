@@ -23,7 +23,7 @@
 //! single `dot` reduction — is left scalar on purpose: a reduction's
 //! order IS its value.
 
-use super::Kernels;
+use super::{GemmItem, GemmKind, Kernels, MvpItem, SyrkItem};
 
 /// Virtual-SIMD width: 8 f32 lanes = one AVX2 register, two NEON ones.
 pub const LANES: usize = 8;
@@ -289,6 +289,38 @@ impl Kernels for Blocked {
     fn daxpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
         for (yv, xv) in y.iter_mut().zip(x) {
             *yv += alpha * xv;
+        }
+    }
+
+    // Batched entry points: one virtual dispatch for the whole group,
+    // each item running the blocked solo body over its logical extent.
+    // Per-item independence is the bit-identity contract (§17.2): the
+    // batch may mix kinds and shapes freely.
+
+    fn batch_gemm(&self, items: &mut [GemmItem<'_>]) {
+        for it in items {
+            match it.kind {
+                GemmKind::NN => self.gemm(it.m, it.n, it.k, it.a, it.b, it.c),
+                GemmKind::TN => self.gemm_tn(it.m, it.n, it.k, it.a, it.b, it.c),
+                GemmKind::NT => self.gemm_nt(it.m, it.n, it.k, it.a, it.b, it.c),
+            }
+        }
+    }
+
+    fn batch_syrk(&self, items: &mut [SyrkItem<'_>]) {
+        for it in items {
+            self.syrk(0, it.m, it.m, it.k, it.a, it.c);
+            for i in 0..it.m {
+                for j in (i + 1)..it.m {
+                    it.c[j * it.m + i] = it.c[i * it.m + j];
+                }
+            }
+        }
+    }
+
+    fn batch_mvp(&self, items: &mut [MvpItem<'_>]) {
+        for it in items {
+            self.gemv(it.r, it.n, it.a, it.x, it.y);
         }
     }
 }

@@ -24,13 +24,30 @@ pub enum KernelOp {
     Gemv = 4,
     Dot = 5,
     Axpy = 6,
+    BatchGemm = 7,
+    BatchSyrk = 8,
+    BatchMvp = 9,
 }
 
-pub const N_OPS: usize = 7;
-pub const NAMES: [&str; N_OPS] = ["gemm", "gemm_tn", "gemm_nt", "syrk", "gemv", "dot", "axpy"];
+pub const N_OPS: usize = 10;
+pub const NAMES: [&str; N_OPS] = [
+    "gemm",
+    "gemm_tn",
+    "gemm_nt",
+    "syrk",
+    "gemv",
+    "dot",
+    "axpy",
+    "batch_gemm",
+    "batch_syrk",
+    "batch_mvp",
+];
 
 // No inline-const array init on the 1.75 MSRV — spell the tables out.
 static CALLS: [AtomicU64; N_OPS] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
@@ -47,7 +64,42 @@ static FLOPS: [AtomicU64; N_OPS] = [
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
 ];
+
+// Batch-shape accounting (DESIGN.md §17.4): how many logical per-factor
+// ops were folded into batched kernel calls, and how full the padded
+// size-class buffers ran. Same relaxed-atomic contract as the op tables.
+static BATCH_ITEMS: AtomicU64 = AtomicU64::new(0);
+static BUCKET_LOGICAL: AtomicU64 = AtomicU64::new(0);
+static BUCKET_PADDED: AtomicU64 = AtomicU64::new(0);
+
+/// One batched kernel call folding `items` per-factor operands.
+#[inline]
+pub fn record_batch_items(items: u64) {
+    BATCH_ITEMS.fetch_add(items, Ordering::Relaxed);
+}
+
+/// One size-class (bucket) allocation: `logical` f32s of payload inside
+/// a `padded` f32 buffer. The ratio of the two totals is the fill ratio
+/// surfaced in metrics; padding never enters a reduction, so this is
+/// pure capacity accounting.
+#[inline]
+pub fn record_bucket(logical: u64, padded: u64) {
+    BUCKET_LOGICAL.fetch_add(logical, Ordering::Relaxed);
+    BUCKET_PADDED.fetch_add(padded, Ordering::Relaxed);
+}
+
+/// Snapshot of the batch-shape counters: (items, logical f32s, padded f32s).
+pub fn batch_snapshot() -> (u64, u64, u64) {
+    (
+        BATCH_ITEMS.load(Ordering::Relaxed),
+        BUCKET_LOGICAL.load(Ordering::Relaxed),
+        BUCKET_PADDED.load(Ordering::Relaxed),
+    )
+}
 
 /// One logical kernel invocation (counted once per `Mat`-level call, not
 /// once per row-panel chunk a threaded dispatch splits it into).
@@ -84,6 +136,9 @@ pub fn reset() {
         CALLS[i].store(0, Ordering::Relaxed);
         FLOPS[i].store(0, Ordering::Relaxed);
     }
+    BATCH_ITEMS.store(0, Ordering::Relaxed);
+    BUCKET_LOGICAL.store(0, Ordering::Relaxed);
+    BUCKET_PADDED.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]

@@ -31,6 +31,52 @@ pub use counters::{record, snapshot, KernelCount, KernelOp};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Which operand of a batched GEMM item is transposed. Matches the
+/// three dense products the Brand pipeline uses: `NN` (`U·P`), `TN`
+/// (`Uᵀ·A`, the EA Gram path), `NT` (`P·Rᵀ` subspace products).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GemmKind {
+    /// c (m×n) += a (m×k) · b (k×n)
+    NN,
+    /// c (m×n) += aᵀ·b for a: k×m, b: k×n
+    TN,
+    /// c (m×n) = a (m×k) · bᵀ for b: n×k
+    NT,
+}
+
+/// One independent GEMM in a batched call. Slices may be longer than
+/// the logical extent (size-class padded buffers); the kernels index
+/// only the logical `m/n/k` prefix, so padding never enters a
+/// reduction — see DESIGN.md §17.2.
+pub struct GemmItem<'a> {
+    pub kind: GemmKind,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a: &'a [f32],
+    pub b: &'a [f32],
+    pub c: &'a mut [f32],
+}
+
+/// One independent full SYRK (`c = a·aᵀ`, both triangles, a: m×k) in a
+/// batched call — the EA Gram accumulation shape.
+pub struct SyrkItem<'a> {
+    pub m: usize,
+    pub k: usize,
+    pub a: &'a [f32],
+    pub c: &'a mut [f32],
+}
+
+/// One independent matrix·vector product (`y = a·x`, a: r×n) in a
+/// batched call — the per-column inverse-application shape.
+pub struct MvpItem<'a> {
+    pub r: usize,
+    pub n: usize,
+    pub a: &'a [f32],
+    pub x: &'a [f32],
+    pub y: &'a mut [f32],
+}
+
 /// The kernel vtable both backends implement. Matrix kernels take
 /// row-panel slices (`r` rows of A/C, full B) so the `Mat`-level
 /// dispatch can parallelize over disjoint row ranges without the trait
@@ -63,6 +109,17 @@ pub trait Kernels: Sync {
     fn ddot_sub(&self, init: f64, x: &[f64], y: &[f64]) -> f64;
     /// y += alpha·x in f64.
     fn daxpy(&self, alpha: f64, x: &[f64], y: &mut [f64]);
+    /// Batched GEMM: every item is computed independently with the exact
+    /// per-item reduction order of the corresponding solo kernel
+    /// (`gemm`/`gemm_tn`/`gemm_nt`), so batch composition can never
+    /// change bits — only dispatch cost (DESIGN.md §17.2). Items may be
+    /// heterogeneous in kind and shape.
+    fn batch_gemm(&self, items: &mut [GemmItem<'_>]);
+    /// Batched full SYRK (upper triangle computed, lower mirrored by
+    /// copy — the same construction as `Mat::syrk`).
+    fn batch_syrk(&self, items: &mut [SyrkItem<'_>]);
+    /// Batched matrix·vector products (per-item `gemv` order).
+    fn batch_mvp(&self, items: &mut [MvpItem<'_>]);
 }
 
 /// Backend selection, as configured (CLI/server spec) — `Auto` defers
@@ -76,6 +133,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a `--kernel` / job-file `kernel` value (`auto|scalar|blocked`).
     pub fn parse(s: &str) -> Result<Backend, String> {
         match s {
             "auto" => Ok(Backend::Auto),
@@ -87,6 +145,7 @@ impl Backend {
         }
     }
 
+    /// The canonical spelling, inverse of [`Backend::parse`].
     pub fn as_str(self) -> &'static str {
         match self {
             Backend::Auto => "auto",
@@ -185,6 +244,63 @@ pub fn ddot_sub(init: f64, x: &[f64], y: &[f64]) -> f64 {
 pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     record(KernelOp::Axpy, 2 * x.len().min(y.len()) as u64);
     active().daxpy(alpha, x, y)
+}
+
+// ---- counted batched entry points (DESIGN.md §17) --------------------
+// One record per batched call (not per item), plus an item-count record
+// so metrics can report the ops-folded-per-call fill.
+
+/// Counted batched GEMM on the active backend; each item runs its exact
+/// solo reduction (DESIGN.md §17.2), so this bit-matches a loop of solo
+/// calls.
+pub fn batch_gemm(items: &mut [GemmItem<'_>]) {
+    if items.is_empty() {
+        return;
+    }
+    let flops: u64 = items
+        .iter()
+        .map(|it| 2 * (it.m * it.n * it.k) as u64)
+        .sum();
+    record(KernelOp::BatchGemm, flops);
+    counters::record_batch_items(items.len() as u64);
+    active().batch_gemm(items)
+}
+
+/// Counted batched SYRK (`c = a·aᵀ`), bit-identical to solo per item.
+pub fn batch_syrk(items: &mut [SyrkItem<'_>]) {
+    if items.is_empty() {
+        return;
+    }
+    let flops: u64 = items
+        .iter()
+        .map(|it| (it.m * (it.m + 1) * it.k) as u64)
+        .sum();
+    record(KernelOp::BatchSyrk, flops);
+    counters::record_batch_items(items.len() as u64);
+    active().batch_syrk(items)
+}
+
+/// Counted batched matrix–vector products, bit-identical to solo per item.
+pub fn batch_mvp(items: &mut [MvpItem<'_>]) {
+    if items.is_empty() {
+        return;
+    }
+    let flops: u64 = items.iter().map(|it| 2 * (it.r * it.n) as u64).sum();
+    record(KernelOp::BatchMvp, flops);
+    counters::record_batch_items(items.len() as u64);
+    active().batch_mvp(items)
+}
+
+/// Size-class (bucket) length for a batch temporary: next power of two,
+/// so heterogeneous small factors share a handful of allocation classes.
+/// Callers index only the logical prefix ("pad the layout, never the
+/// reduction" — DESIGN.md §17.2); the logical/padded totals feed the
+/// fill-ratio counter via [`counters::record_bucket`].
+#[inline]
+pub fn bucket_len(logical: usize) -> usize {
+    let padded = logical.next_power_of_two();
+    counters::record_bucket(logical as u64, padded as u64);
+    padded
 }
 
 #[cfg(test)]

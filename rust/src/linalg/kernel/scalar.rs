@@ -12,7 +12,7 @@
 //! backend contract (DESIGN.md §16.2), and the blocked backend's tiles
 //! preserve it exactly.
 
-use super::Kernels;
+use super::{GemmItem, GemmKind, Kernels, MvpItem, SyrkItem};
 
 pub struct Scalar;
 
@@ -125,6 +125,38 @@ impl Kernels for Scalar {
     fn daxpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
         for (yv, xv) in y.iter_mut().zip(x) {
             *yv += alpha * xv;
+        }
+    }
+
+    // Batched entry points: each item runs the backend's own solo loop
+    // over its logical extent — per-item bits cannot depend on what else
+    // is in the batch.
+
+    fn batch_gemm(&self, items: &mut [GemmItem<'_>]) {
+        for it in items {
+            match it.kind {
+                GemmKind::NN => self.gemm(it.m, it.n, it.k, it.a, it.b, it.c),
+                GemmKind::TN => self.gemm_tn(it.m, it.n, it.k, it.a, it.b, it.c),
+                GemmKind::NT => self.gemm_nt(it.m, it.n, it.k, it.a, it.b, it.c),
+            }
+        }
+    }
+
+    fn batch_syrk(&self, items: &mut [SyrkItem<'_>]) {
+        for it in items {
+            self.syrk(0, it.m, it.m, it.k, it.a, it.c);
+            // Mirror the lower triangle by copy, exactly as `Mat::syrk`.
+            for i in 0..it.m {
+                for j in (i + 1)..it.m {
+                    it.c[j * it.m + i] = it.c[i * it.m + j];
+                }
+            }
+        }
+    }
+
+    fn batch_mvp(&self, items: &mut [MvpItem<'_>]) {
+        for it in items {
+            self.gemv(it.r, it.n, it.a, it.x, it.y);
         }
     }
 }

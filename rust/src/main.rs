@@ -57,6 +57,20 @@ fn kernel_from(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--batch-factors {auto,off,N}` (on `train` and `serve`) selects the
+/// process-wide factor-batching group cap (DESIGN.md §17). Like the
+/// kernel backend, batched and solo drains are bit-identical by
+/// construction, so the knob trades dispatch overhead only, never
+/// results; `auto` (the default) resolves to a group cap of
+/// [`bnkfac::precond::batch::AUTO_GROUP`]. Counters and the resolved
+/// cap ride the server summary and the wire `stats` reply.
+fn batch_from(args: &Args) -> Result<()> {
+    let sel = args.get_or("batch-factors", "auto");
+    let m = bnkfac::precond::BatchMode::parse(sel).map_err(|e| anyhow!(e))?;
+    bnkfac::precond::batch::set_mode(m);
+    Ok(())
+}
+
 /// Read a shared auth token from a file (DESIGN.md §12.6): surrounding
 /// whitespace/newline stripped, empty tokens refused. One helper for
 /// both `serve` and `client` so their token parsing cannot drift.
@@ -159,6 +173,7 @@ fn write_record(rec: &ServerRecord, out: Option<String>) -> Result<()> {
 /// PJRT needed.
 fn cmd_serve(args: &Args) -> Result<()> {
     kernel_from(args)?;
+    batch_from(args)?;
     let jobs = args.get("jobs").map(|s| s.to_string());
     let listen = args.get("listen").map(|s| s.to_string());
     let workers = args.get_usize("workers", 0);
@@ -711,6 +726,7 @@ fn precond_from(args: &Args) -> Option<PrecondCfg> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     kernel_from(args)?;
+    batch_from(args)?;
     let rt = open_runtime(args)?;
     let algo = Algo::parse(args.get_or("algo", "bkfac"))
         .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;

@@ -61,6 +61,65 @@ impl KernelRecord {
     }
 }
 
+/// Snapshot of the factor-batching layer (DESIGN.md §17.5): the knob as
+/// configured and resolved, drain-level grouping counters, and the
+/// kernel-level batched-item / padded-bucket fill counters. Like
+/// [`KernelRecord`], all counters are process-global.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchRecord {
+    /// configured mode (`auto` / `off` / N)
+    pub mode: String,
+    /// group-size cap actually in effect
+    pub group_max: usize,
+    /// drain rounds that fused ≥ 2 live ops
+    pub batches: u64,
+    /// ops that drained inside such a group
+    pub batched_ops: u64,
+    /// Σ picked-group capacity across all batch-capable drain rounds
+    pub group_capacity: u64,
+    /// items passed through the batched kernel entry points
+    pub kernel_batch_items: u64,
+    /// logical / padded f32 totals of bucket-padded temporaries —
+    /// 1.0 means no padding waste (§17.2 "pad the layout")
+    pub fill_ratio: f64,
+}
+
+impl BatchRecord {
+    /// Read the live process-global state.
+    pub fn current() -> BatchRecord {
+        let (batches, batched_ops, group_capacity) = crate::precond::batch::stats();
+        let (items, logical, padded) = kernel::counters::batch_snapshot();
+        BatchRecord {
+            mode: crate::precond::batch::mode().as_string(),
+            group_max: crate::precond::batch::resolved_max(),
+            batches,
+            batched_ops,
+            group_capacity,
+            kernel_batch_items: items,
+            fill_ratio: if padded == 0 {
+                1.0
+            } else {
+                logical as f64 / padded as f64
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(&self.mode)),
+            ("group_max", Json::Num(self.group_max as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batched_ops", Json::Num(self.batched_ops as f64)),
+            ("group_capacity", Json::Num(self.group_capacity as f64)),
+            (
+                "kernel_batch_items",
+                Json::Num(self.kernel_batch_items as f64),
+            ),
+            ("fill_ratio", Json::Num(self.fill_ratio)),
+        ])
+    }
+}
+
 /// §4.2 error metrics between an approximate K-factor representation and
 /// the exact (benchmark) one, all computed on dense materializations:
 ///
@@ -143,6 +202,9 @@ pub struct ServiceRecord {
     pub worker_busy_s: f64,
     /// published-decomposition installs into the trainer's factor states
     pub installs: u64,
+    /// ops of this tenant that drained inside a batched group of ≥ 2
+    /// (DESIGN.md §17.5)
+    pub batched_ops: u64,
     /// inverse-update latency histograms per decomposition kind
     /// (`brand` / `rsvd` / `eigh`), DESIGN.md §14.2
     pub op_ms: Vec<(String, Hist)>,
@@ -168,6 +230,7 @@ impl ServiceRecord {
             ("blocked_wait_s", Json::Num(self.blocked_wait_s)),
             ("worker_busy_s", Json::Num(self.worker_busy_s)),
             ("installs", Json::Num(self.installs as f64)),
+            ("batched_ops", Json::Num(self.batched_ops as f64)),
             (
                 "op_ms",
                 Json::Obj(
@@ -370,6 +433,9 @@ pub struct ServerRecord {
     /// dense-kernel backend + traffic at record time (DESIGN.md §16);
     /// rides the wire `stats` reply
     pub kernel: KernelRecord,
+    /// factor-batching knob + counters at record time (DESIGN.md §17.5);
+    /// rides the wire `stats` reply
+    pub batch: BatchRecord,
 }
 
 impl ServerRecord {
@@ -404,6 +470,7 @@ impl ServerRecord {
             ("round", Json::Num(self.round as f64)),
             ("round_ms", self.round_ms.to_json()),
             ("kernel", self.kernel.to_json()),
+            ("batch", self.batch.to_json()),
         ])
     }
 
@@ -434,6 +501,16 @@ impl ServerRecord {
             out.push_str(&format!(
                 "  kernel: {} ({}) {} calls, {:.3e} flops\n",
                 self.kernel.backend, self.kernel.simd, calls, flops as f64
+            ));
+        }
+        if self.batch.batches > 0 {
+            out.push_str(&format!(
+                "  batch: mode={} (max {}) {} groups, {} ops, fill={:.2}\n",
+                self.batch.mode,
+                self.batch.group_max,
+                self.batch.batches,
+                self.batch.batched_ops,
+                self.batch.fill_ratio
             ));
         }
         for s in &self.sessions {
@@ -607,6 +684,7 @@ mod tests {
             blocked_wait_s: 0.25,
             worker_busy_s: 1.5,
             installs: 48,
+            batched_ops: 12,
             op_ms: vec![("brand".into(), {
                 let mut h = Hist::new();
                 h.record_secs(2e-3);
@@ -624,6 +702,7 @@ mod tests {
         assert!(kj.get("ops").and_then(|o| o.get("gemm")).is_some());
         assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(4));
         assert_eq!(j.get("max_queue_depth").and_then(|v| v.as_usize()), Some(7));
+        assert_eq!(j.get("batched_ops").and_then(|v| v.as_usize()), Some(12));
         let brand = j.get("op_ms").and_then(|o| o.get("brand")).unwrap();
         assert_eq!(brand.get("count").and_then(|v| v.as_usize()), Some(1));
         assert!(brand.get("p99_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
@@ -684,6 +763,7 @@ mod tests {
             round: 100,
             round_ms: Hist::default(),
             kernel: KernelRecord::current(),
+            batch: BatchRecord::current(),
         };
         let j = rec.to_json();
         assert!(j
@@ -706,6 +786,11 @@ mod tests {
             sessions[0].get("throttled_rounds").and_then(|v| v.as_usize()),
             Some(5)
         );
+        let b = j.get("batch").unwrap();
+        assert!(b.get("mode").and_then(|v| v.as_str()).is_some());
+        assert!(b.get("group_max").and_then(|v| v.as_usize()).unwrap() >= 1);
+        let fill = b.get("fill_ratio").and_then(|v| v.as_f64()).unwrap();
+        assert!((0.0..=1.0).contains(&fill), "fill={fill}");
         // satellite: monotonic correlation stamps on every record
         assert_eq!(j.get("uptime_ms").and_then(|v| v.as_usize()), Some(2000));
         assert_eq!(j.get("round").and_then(|v| v.as_usize()), Some(100));

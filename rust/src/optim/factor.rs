@@ -588,6 +588,133 @@ impl OpRequest {
         }
         Ok(fs.rep)
     }
+
+    /// Execute a group of op requests as one unit, fusing the dense
+    /// stages of the Brand-family items into batched kernel calls
+    /// (DESIGN.md §17.3). Per-item results are positionally aligned with
+    /// `reqs` and independent: the batched driver runs each item's exact
+    /// solo reduction, so grouping can never change any item's bits —
+    /// only the dispatch cost. Non-Brand ops (and any pallas-runtime
+    /// config) fall back to per-item [`OpRequest::execute`].
+    ///
+    /// Panic containment: a panic anywhere inside the batched pass
+    /// triggers a per-item re-run so only the culprit op reports
+    /// `Err("op panicked: …")` — matching the unbatched drain's
+    /// failure-isolation semantics.
+    pub fn execute_batch(
+        reqs: Vec<(OpRequest, Option<LowRank>)>,
+        rt: Option<&Runtime>,
+        timers: &mut PhaseTimers,
+    ) -> Vec<Result<Option<LowRank>>> {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+            if let Some(s) = p.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = p.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "unknown panic".to_string()
+            }
+        }
+
+        let n = reqs.len();
+        let mut slots: Vec<Option<Result<Option<LowRank>>>> = (0..n).map(|_| None).collect();
+        let mut brand: Vec<(usize, OpRequest, LowRank)> = Vec::new();
+        let mut solo: Vec<(usize, OpRequest, Option<LowRank>)> = Vec::new();
+        for (i, (req, prev)) in reqs.into_iter().enumerate() {
+            // Batchable: a Brand-family op with everything the batched
+            // driver needs; anything that would hit one of `execute`'s
+            // validation errors (or a pallas-runtime plan) routes solo so
+            // the error text stays identical to the unbatched path.
+            let batchable = rt.is_none()
+                && matches!(req.op, UpdateOp::Brand | UpdateOp::BrandCorrect)
+                && prev.is_some()
+                && req.raw_stat.is_some()
+                && !(req.op == UpdateOp::BrandCorrect
+                    && (req.gram.is_none() || req.corr_idx.is_none()))
+                && req.plan.ops.get("brand_p1").is_none();
+            if batchable {
+                brand.push((i, req, prev.unwrap()));
+            } else {
+                solo.push((i, req, prev));
+            }
+        }
+
+        for (i, req, prev) in solo {
+            let r = catch_unwind(AssertUnwindSafe(|| req.execute(prev, rt, timers)))
+                .unwrap_or_else(|p| Err(anyhow::anyhow!("op panicked: {}", panic_text(&*p))));
+            slots[i] = Some(r);
+        }
+
+        if !brand.is_empty() {
+            let batched = catch_unwind(AssertUnwindSafe(|| {
+                // Mirror of `FactorState::brand`'s non-runtime arm:
+                // truncate_or_pad to the plan rank, then the EA Brand
+                // step — here across the whole group at once.
+                let truncs: Vec<LowRank> = brand
+                    .iter()
+                    .map(|(_, req, prev)| truncate_or_pad(prev, req.plan.rank))
+                    .collect();
+                let items: Vec<(&LowRank, &Mat, f32, usize)> = truncs
+                    .iter()
+                    .zip(&brand)
+                    .map(|(t, (_, req, _))| {
+                        (t, req.raw_stat.as_ref().unwrap(), req.rho, req.plan.rank)
+                    })
+                    .collect();
+                timers.time("brand", || LowRank::brand_ea_update_batch(&items))
+            }));
+            match batched {
+                Ok(new_reps) => {
+                    for ((i, req, _), new_rep) in brand.into_iter().zip(new_reps) {
+                        debug_assert_eq!(new_rep.rank(), req.plan.rank + req.plan.n);
+                        let res = if req.op == UpdateOp::BrandCorrect {
+                            // Correction half stays per-item (small EVD on
+                            // sampled modes), exactly as `execute` runs it.
+                            let keep = req.gram.is_some();
+                            let idx = req.corr_idx.clone().unwrap();
+                            let mut fs = FactorState {
+                                plan: req.plan,
+                                gram: req.gram,
+                                rep: Some(new_rep),
+                                seen_stats: true,
+                                keep_gram: keep,
+                            };
+                            catch_unwind(AssertUnwindSafe(|| {
+                                fs.correction_with_idx(idx, None, timers)?;
+                                Ok(fs.rep)
+                            }))
+                            .unwrap_or_else(|p| {
+                                Err(anyhow::anyhow!("op panicked: {}", panic_text(&*p)))
+                            })
+                        } else {
+                            Ok(Some(new_rep))
+                        };
+                        slots[i] = Some(res);
+                    }
+                }
+                Err(_) => {
+                    // Group poisoned: isolate the culprit by re-running
+                    // every item through the solo path (bit-identical for
+                    // the healthy ones, per the §17.2 construction).
+                    for (i, req, prev) in brand {
+                        let r =
+                            catch_unwind(AssertUnwindSafe(|| req.execute(Some(prev), rt, timers)))
+                                .unwrap_or_else(|p| {
+                                    Err(anyhow::anyhow!("op panicked: {}", panic_text(&*p)))
+                                });
+                        slots[i] = Some(r);
+                    }
+                }
+            }
+        }
+
+        slots
+            .into_iter()
+            .map(|s| s.expect("every op slot filled"))
+            .collect()
+    }
 }
 
 /// Truncate to rank r, or zero-pad up to r if the representation is

@@ -1,0 +1,157 @@
+//! Process-global factor-batching knob + drain-level batch counters
+//! (DESIGN.md §17.5).
+//!
+//! `--batch-factors {auto,off,N}` (and the job-file `"batch"` server
+//! key) select how many factor cells a drain job may fuse into one
+//! batched kernel pass. The knob follows the `linalg::kernel` backend
+//! idiom — a process-global atomic set once at startup — and for the
+//! same reason it is safe as a global: the batched and unbatched paths
+//! are bit-identical by construction (§17.2), so the setting changes
+//! throughput, never results. That also means it does not belong in
+//! `PrecondCfg`/checkpoints: it is a deployment tuning knob, not
+//! session state.
+//!
+//! The counters here are the drain-level half of the batching metrics
+//! (groups formed, ops that drained inside a group); the kernel-level
+//! half (items per batched call, padded-bucket fill) lives in
+//! `linalg::kernel::counters`. `metrics::BatchRecord` snapshots both.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Group size selection, as configured. `Auto` resolves to
+/// [`AUTO_GROUP`]; `Off` disables grouping (every op drains solo, the
+/// pre-batching behavior); `Max(n)` caps groups at `n` head ops.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum BatchMode {
+    #[default]
+    Auto,
+    Off,
+    Max(usize),
+}
+
+/// What `Auto` resolves to: wide enough to cover a typical small-FC
+/// session's factor count per drain round, small enough that one batch
+/// never monopolizes a worker.
+pub const AUTO_GROUP: usize = 8;
+
+const AUTO_SENTINEL: usize = usize::MAX;
+
+static MODE: AtomicUsize = AtomicUsize::new(AUTO_SENTINEL);
+
+impl BatchMode {
+    /// Parse a `--batch-factors` / job-file `batch` value (`auto|off|N`).
+    pub fn parse(s: &str) -> Result<BatchMode, String> {
+        match s {
+            "auto" => Ok(BatchMode::Auto),
+            "off" => Ok(BatchMode::Off),
+            other => match other.parse::<usize>() {
+                Ok(0) => Ok(BatchMode::Off),
+                Ok(n) => Ok(BatchMode::Max(n)),
+                Err(_) => Err(format!(
+                    "unknown batch-factors setting '{other}' (expected auto|off|N)"
+                )),
+            },
+        }
+    }
+
+    /// The canonical spelling, inverse of [`BatchMode::parse`].
+    pub fn as_string(self) -> String {
+        match self {
+            BatchMode::Auto => "auto".to_string(),
+            BatchMode::Off => "off".to_string(),
+            BatchMode::Max(n) => n.to_string(),
+        }
+    }
+}
+
+/// Select the process-wide batching mode. Safe at any time (bit-identity
+/// makes it semantically inert); in practice set once at CLI/server
+/// startup or from the job-file server spec.
+pub fn set_mode(m: BatchMode) {
+    let v = match m {
+        BatchMode::Auto => AUTO_SENTINEL,
+        BatchMode::Off => 1,
+        BatchMode::Max(n) => n.max(1),
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The configured selection (may be `Auto`).
+pub fn mode() -> BatchMode {
+    match MODE.load(Ordering::Relaxed) {
+        AUTO_SENTINEL => BatchMode::Auto,
+        1 => BatchMode::Off,
+        n => BatchMode::Max(n),
+    }
+}
+
+/// The group-size cap actually in effect: `Auto` → [`AUTO_GROUP`],
+/// `Off` → 1 (solo drains), `Max(n)` → n.
+pub fn resolved_max() -> usize {
+    match mode() {
+        BatchMode::Auto => AUTO_GROUP,
+        BatchMode::Off => 1,
+        BatchMode::Max(n) => n,
+    }
+}
+
+// ---- drain-level batch counters (process-global relaxed atomics) -----
+
+static BATCHES: AtomicU64 = AtomicU64::new(0);
+static BATCHED_OPS: AtomicU64 = AtomicU64::new(0);
+static GROUP_CAPACITY: AtomicU64 = AtomicU64::new(0);
+
+/// Record one drain-batch round: `live` ops executed out of a group of
+/// `capacity` picked cells. Rounds of fewer than two live ops are not
+/// batches (they are exactly the unbatched path) and only count toward
+/// capacity utilization.
+pub fn note_batch(live: usize, capacity: usize) {
+    GROUP_CAPACITY.fetch_add(capacity as u64, Ordering::Relaxed);
+    if live >= 2 {
+        BATCHES.fetch_add(1, Ordering::Relaxed);
+        BATCHED_OPS.fetch_add(live as u64, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot: (batches formed, ops drained batched, Σ group capacity).
+pub fn stats() -> (u64, u64, u64) {
+    (
+        BATCHES.load(Ordering::Relaxed),
+        BATCHED_OPS.load(Ordering::Relaxed),
+        GROUP_CAPACITY.load(Ordering::Relaxed),
+    )
+}
+
+/// Zero the drain-level counters (bench A/B harness).
+pub fn reset_stats() {
+    BATCHES.store(0, Ordering::Relaxed);
+    BATCHED_OPS.store(0, Ordering::Relaxed);
+    GROUP_CAPACITY.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_resolution() {
+        assert_eq!(BatchMode::parse("auto").unwrap(), BatchMode::Auto);
+        assert_eq!(BatchMode::parse("off").unwrap(), BatchMode::Off);
+        assert_eq!(BatchMode::parse("0").unwrap(), BatchMode::Off);
+        assert_eq!(BatchMode::parse("4").unwrap(), BatchMode::Max(4));
+        assert!(BatchMode::parse("fast").is_err());
+        assert_eq!(BatchMode::Auto.as_string(), "auto");
+        assert_eq!(BatchMode::Max(16).as_string(), "16");
+    }
+
+    #[test]
+    fn note_batch_counts_only_real_groups() {
+        let (b0, o0, c0) = stats();
+        note_batch(1, 4); // solo round: capacity only
+        note_batch(3, 4);
+        let (b1, o1, c1) = stats();
+        assert!(b1 >= b0 + 1);
+        assert!(o1 >= o0 + 3);
+        assert!(c1 >= c0 + 8);
+    }
+}

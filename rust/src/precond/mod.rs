@@ -30,9 +30,19 @@
 //! jobs, ops are dispatched by the session server's weighted fair-share
 //! scheduler (`server::sched`) — per-cell FIFO (and hence the
 //! schedule-independence guarantee) is preserved.
+//!
+//! Batched multi-factor drains ([`batch`], DESIGN.md §17): when the
+//! `--batch-factors` knob is on, a drain round fuses the head ops of up
+//! to N ready cells — across shards *and* tenant sessions — into one
+//! batched kernel pass ([`service::FactorCell`]'s `drain_batch`).
+//! Grouping is opportunistic (never waits for a fuller batch, so the
+//! staleness bound is unaffected) and bit-identical to solo drains by
+//! construction, so the knob trades nothing but dispatch overhead.
 
+pub mod batch;
 pub mod service;
 pub mod state;
 
+pub use batch::BatchMode;
 pub use service::{FactorCell, PrecondCfg, PrecondService, ServiceCounters};
 pub use state::{RepSnapshot, VersionedRep};

@@ -107,6 +107,7 @@ impl FactorCell {
         self.published.load()
     }
 
+    /// Monotone version counter of the published decomposition.
     pub fn published_version(&self) -> u64 {
         self.published.version()
     }
@@ -252,6 +253,166 @@ impl FactorCell {
         more
     }
 
+    /// Batched drain (DESIGN.md §17.3): pop the HEAD op of each given
+    /// cell and execute the group as one unit through
+    /// [`OpRequest::execute_batch`], fusing the dense stages of the
+    /// Brand-family ops into batched kernel calls. Returns per-cell
+    /// "more ops remain" flags aligned with `cells`.
+    ///
+    /// Grouping rules (the staleness contract): one op per cell at most —
+    /// per-cell FIFO and the Brand-chain order are untouched — and the
+    /// group is whatever is ready RIGHT NOW; this never waits to fill a
+    /// batch, so an op is drained no later than it would have been
+    /// unbatched. Each cell's pop/publish phases run under that cell's
+    /// own lock with the same transitions as [`FactorCell::drain_one`];
+    /// the execute phase holds no locks. Callers provide per-cell
+    /// serialization via `busy`/`scheduled` exactly as for `drain_one`;
+    /// cells may belong to DIFFERENT tenants (each entry carries its own
+    /// `ServiceCounters`), which is what makes cross-session batching
+    /// work on the shared pool.
+    pub(crate) fn drain_batch(cells: &[(Arc<FactorCell>, Arc<ServiceCounters>)]) -> Vec<bool> {
+        enum Slot {
+            /// queue was empty — nothing to do (scheduled already cleared)
+            Empty,
+            /// chain already failed — discard without executing
+            Discard {
+                prev: Option<LowRank>,
+            },
+            /// head op moved into the batch; publish-phase metadata
+            Live {
+                step: u64,
+                op: UpdateOp,
+                fallback: Option<LowRank>,
+            },
+        }
+
+        // Phase 1: pop the head of every cell (each under its own lock),
+        // moving live ops straight into the batch input.
+        let mut batch_input: Vec<(OpRequest, Option<LowRank>)> = Vec::new();
+        let slots: Vec<Slot> = cells
+            .iter()
+            .map(|(cell, _)| {
+                let mut w = cell.work.lock().unwrap();
+                match w.queue.pop_front() {
+                    Some(t) => {
+                        let prev = w.rep.take();
+                        if w.failed.is_some() {
+                            // see drain_one: successors of a failed op are
+                            // discarded, never executed
+                            Slot::Discard { prev }
+                        } else {
+                            let fallback = prev.clone();
+                            let (step, op) = (t.step, t.req.op);
+                            batch_input.push((t.req, prev));
+                            Slot::Live { step, op, fallback }
+                        }
+                    }
+                    None => {
+                        w.scheduled = false;
+                        Slot::Empty
+                    }
+                }
+            })
+            .collect();
+
+        // Phase 2: execute the live ops as one batch, outside all locks.
+        // execute_batch contains panics internally (a poisoned group is
+        // re-run per item), so every result is a plain `Result`.
+        let n_live = batch_input.len();
+        crate::precond::batch::note_batch(n_live, cells.len());
+        let mut batch_secs = 0.0f64;
+        let mut results: Vec<Option<Result<Option<LowRank>>>> = Vec::new();
+        if n_live > 0 {
+            let mut timers = PhaseTimers::new();
+            let t0 = Instant::now();
+            let out = OpRequest::execute_batch(batch_input, None, &mut timers);
+            batch_secs = t0.elapsed().as_secs_f64();
+            results = out.into_iter().map(Some).collect();
+        }
+
+        // Phase 3: publish every result under its cell's lock — the same
+        // state transitions as drain_one, plus batch accounting. The
+        // per-op latency recorded is the op's share of the batch wall
+        // time (the histogram dimension is cost, and a batch's cost is
+        // shared).
+        let op_share = if n_live > 0 {
+            batch_secs / n_live as f64
+        } else {
+            0.0
+        };
+        let mut more_flags = vec![false; cells.len()];
+        let mut live_cursor = 0usize;
+        for (i, slot) in slots.into_iter().enumerate() {
+            let (cell, counters) = &cells[i];
+            match slot {
+                Slot::Empty => {}
+                Slot::Discard { prev } => {
+                    let mut w = cell.work.lock().unwrap();
+                    w.rep = prev;
+                    w.pending_steps.pop_front();
+                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                    cell.cv.notify_all();
+                    let more = !w.queue.is_empty();
+                    if !more {
+                        w.scheduled = false;
+                    }
+                    more_flags[i] = more;
+                }
+                Slot::Live { step, op, fallback } => {
+                    let result = results[live_cursor].take().expect("one result per live op");
+                    live_cursor += 1;
+                    if let Some(h) = counters.op_hist(op) {
+                        h.record_secs(op_share);
+                    }
+                    counters.emit(
+                        "op_drain",
+                        vec![
+                            ("factor", Json::str(&cell.id)),
+                            ("step", Json::Num(step as f64)),
+                            ("ms", Json::Num(op_share * 1e3)),
+                            ("ok", Json::Bool(matches!(&result, Ok(_)))),
+                            ("batch", Json::Num(n_live as f64)),
+                        ],
+                    );
+                    let mut w = cell.work.lock().unwrap();
+                    match result {
+                        Ok(Some(rep)) => {
+                            w.rep = Some(rep.clone());
+                            cell.published.publish(rep, step);
+                            counters.emit(
+                                "op_publish",
+                                vec![
+                                    ("factor", Json::str(&cell.id)),
+                                    ("step", Json::Num(step as f64)),
+                                    ("version", Json::Num(cell.published.version() as f64)),
+                                ],
+                            );
+                        }
+                        Ok(None) => w.rep = fallback,
+                        Err(e) => {
+                            w.rep = fallback;
+                            if w.failed.is_none() {
+                                w.failed = Some(format!("factor '{}': {e:#}", cell.id));
+                            }
+                        }
+                    }
+                    w.pending_steps.pop_front();
+                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                    if n_live >= 2 {
+                        counters.batched_ops.fetch_add(1, Ordering::Relaxed);
+                    }
+                    cell.cv.notify_all();
+                    let more = !w.queue.is_empty();
+                    if !more {
+                        w.scheduled = false;
+                    }
+                    more_flags[i] = more;
+                }
+            }
+        }
+        more_flags
+    }
+
     /// Worker body (own-pool mode): drain this cell's queue until empty.
     /// The `busy` flag guarantees a single drainer per cell, serializing
     /// the op chain.
@@ -266,6 +427,67 @@ impl FactorCell {
                     cell.cv.notify_all();
                     return;
                 }
+            }
+        }
+    }
+
+    /// Worker body (own-pool mode, batching on): drain the initiating
+    /// cell plus up to `group_max − 1` sibling cells it can claim, one
+    /// head op per cell per round through [`FactorCell::drain_batch`].
+    /// Claiming uses the same `busy` flag as `drain_worker` (one drainer
+    /// per cell, ever), and release re-checks the queue under the lock
+    /// for the submit-observed-busy race, exactly as `drain_worker` does.
+    fn drain_worker_batch(
+        cells: Vec<Arc<FactorCell>>,
+        first: usize,
+        counters: Arc<ServiceCounters>,
+        group_max: usize,
+    ) {
+        let mut claimed: Vec<usize> = vec![first];
+        loop {
+            // Top up the claim set with ready siblings (opportunistic:
+            // whatever has work right now — never wait for a fuller batch).
+            if claimed.len() < group_max {
+                for i in 0..cells.len() {
+                    if claimed.len() >= group_max {
+                        break;
+                    }
+                    if claimed.contains(&i) {
+                        continue;
+                    }
+                    let mut w = cells[i].work.lock().unwrap();
+                    if !w.busy && !w.queue.is_empty() {
+                        w.busy = true;
+                        claimed.push(i);
+                    }
+                }
+            }
+            let more = if claimed.len() == 1 {
+                vec![FactorCell::drain_one(&cells[claimed[0]], &counters)]
+            } else {
+                let group: Vec<(Arc<FactorCell>, Arc<ServiceCounters>)> = claimed
+                    .iter()
+                    .map(|&i| (cells[i].clone(), counters.clone()))
+                    .collect();
+                FactorCell::drain_batch(&group)
+            };
+            let mut still = Vec::with_capacity(claimed.len());
+            for (&i, &m) in claimed.iter().zip(&more) {
+                if m {
+                    still.push(i);
+                    continue;
+                }
+                let mut w = cells[i].work.lock().unwrap();
+                if w.queue.is_empty() {
+                    w.busy = false;
+                    cells[i].cv.notify_all();
+                } else {
+                    still.push(i);
+                }
+            }
+            claimed = still;
+            if claimed.is_empty() {
+                return;
             }
         }
     }
@@ -323,6 +545,9 @@ pub struct ServiceCounters {
     pub blocked_drains: AtomicU64,
     pub blocked_wait_ns: AtomicU64,
     pub installs: AtomicU64,
+    /// ops of this tenant that drained inside a batched group of ≥ 2
+    /// (DESIGN.md §17.5)
+    pub batched_ops: AtomicU64,
     /// inverse-update latency per decomposition kind (DESIGN.md §14.2)
     pub op_brand: AtomicHist,
     pub op_rsvd: AtomicHist,
@@ -412,22 +637,27 @@ impl PrecondService {
         }
     }
 
+    /// The configuration this service was built with.
     pub fn cfg(&self) -> &PrecondCfg {
         &self.cfg
     }
 
+    /// Number of per-factor cells (one per K-factor shard).
     pub fn n_cells(&self) -> usize {
         self.cells.len()
     }
 
+    /// The cell for factor `idx`.
     pub fn cell(&self, idx: usize) -> &Arc<FactorCell> {
         &self.cells[idx]
     }
 
+    /// Shared per-service counters (submits, drains, batched ops, …).
     pub fn counters(&self) -> &Arc<ServiceCounters> {
         &self.counters
     }
 
+    /// True when `max_staleness == 0`: ops run inline at submit.
     pub fn is_sync(&self) -> bool {
         self.cfg.max_staleness == 0
     }
@@ -437,6 +667,7 @@ impl PrecondService {
         self.pool.busy_seconds()
     }
 
+    /// Current decomposition worker-thread count.
     pub fn workers(&self) -> usize {
         self.pool.threads()
     }
@@ -503,10 +734,20 @@ impl PrecondService {
             None => {
                 if !w.busy {
                     w.busy = true;
-                    let cell = cell.clone();
                     let ctr = counters.clone();
-                    self.pool
-                        .submit(move || FactorCell::drain_worker(cell, ctr));
+                    let group_max = crate::precond::batch::resolved_max();
+                    if group_max > 1 && self.cells.len() > 1 {
+                        // batching on: the drain job may claim sibling
+                        // cells and fuse their head ops (DESIGN.md §17.3)
+                        let cells = self.cells.clone();
+                        self.pool.submit(move || {
+                            FactorCell::drain_worker_batch(cells, idx, ctr, group_max)
+                        });
+                    } else {
+                        let cell = cell.clone();
+                        self.pool
+                            .submit(move || FactorCell::drain_worker(cell, ctr));
+                    }
                 }
             }
             Some(ctx) => {
@@ -606,6 +847,7 @@ impl PrecondService {
             blocked_wait_s: c.blocked_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9,
             worker_busy_s: self.worker_busy_seconds(),
             installs: c.installs.load(Ordering::Relaxed),
+            batched_ops: c.batched_ops.load(Ordering::Relaxed),
             op_ms: self.op_hists(),
             apply_ms: self.apply_hist(),
             kernel: crate::metrics::KernelRecord::current(),

@@ -18,7 +18,7 @@
 //! {
 //!   "server": {"workers": 3, "max_sessions": 4, "staleness": 1,
 //!              "workers_min": 2, "workers_max": 6,
-//!              "kernel": "blocked"},
+//!              "kernel": "blocked", "batch": "auto"},
 //!   "artifacts": "artifacts/tiny",
 //!   "jobs": [
 //!     {"at": 0,  "action": "create", "name": "a", "weight": 2,
@@ -304,6 +304,7 @@ type ParsedJobs = (
     Option<String>,
     Vec<Job>,
     Option<crate::linalg::KernelBackend>,
+    Option<crate::precond::BatchMode>,
 );
 
 fn parse_jobs(root: &Json) -> Result<ParsedJobs> {
@@ -313,7 +314,7 @@ fn parse_jobs(root: &Json) -> Result<ParsedJobs> {
     // `workers_mni` silently running defaults would corrupt experiments
     super::proto::reject_unknown(
         sj,
-        &["workers", "max_sessions", "staleness", "workers_min", "workers_max", "kernel"],
+        &["workers", "max_sessions", "staleness", "workers_min", "workers_max", "kernel", "batch"],
         "job-file server spec",
     )?;
     // optional dense-kernel backend selection (DESIGN.md §16); when
@@ -326,6 +327,23 @@ fn parse_jobs(root: &Json) -> Result<ParsedJobs> {
                 .as_str()
                 .ok_or_else(|| anyhow!("job-file server spec: 'kernel' must be a string"))?;
             crate::linalg::KernelBackend::parse(s).map_err(|e| anyhow!(e))
+        })
+        .transpose()?;
+    // optional factor-batching group cap (DESIGN.md §17.5); accepts a
+    // string (`"auto"`/`"off"`/`"4"`) or a bare number, parsed loudly.
+    let batch = sj
+        .get("batch")
+        .map(|v| {
+            let s = match (v.as_str(), v.as_usize()) {
+                (Some(s), _) => s.to_string(),
+                (None, Some(n)) => n.to_string(),
+                _ => {
+                    return Err(anyhow!(
+                        "job-file server spec: 'batch' must be a string or number"
+                    ))
+                }
+            };
+            crate::precond::BatchMode::parse(&s).map_err(|e| anyhow!(e))
         })
         .transpose()?;
     let d = ServerCfg::default();
@@ -367,7 +385,7 @@ fn parse_jobs(root: &Json) -> Result<ParsedJobs> {
             })
         })
         .collect::<Result<Vec<Job>>>()?;
-    Ok((cfg, artifacts, jobs, kernel))
+    Ok((cfg, artifacts, jobs, kernel, batch))
 }
 
 /// Run a job file to completion; returns the final server record.
@@ -405,12 +423,15 @@ pub fn run_jobs_opts(
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading job file {path}"))?;
     let root = Json::parse(&text).map_err(|e| anyhow!("job file json: {e}"))?;
-    let (mut cfg, artifacts, jobs, kernel) = parse_jobs(&root)?;
+    let (mut cfg, artifacts, jobs, kernel, batch) = parse_jobs(&root)?;
     if let Some(w) = workers_override {
         cfg.workers = w;
     }
     if let Some(b) = kernel {
         crate::linalg::kernel::set_backend(b);
+    }
+    if let Some(m) = batch {
+        crate::precond::batch::set_mode(m);
     }
     let rt = match artifacts {
         Some(dir) => Some(Runtime::open(dir)?),

@@ -981,6 +981,7 @@ impl<'rt> SessionManager<'rt> {
             round: self.round,
             round_ms: self.round_ms.clone(),
             kernel: crate::metrics::KernelRecord::current(),
+            batch: crate::metrics::BatchRecord::current(),
         }
     }
 }

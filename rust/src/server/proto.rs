@@ -261,6 +261,7 @@ pub struct QuotaSpec {
 }
 
 impl QuotaSpec {
+    /// True when neither ceiling is set; such a spec decodes to `None`.
     pub fn is_unlimited(&self) -> bool {
         self.max_op_rate <= 0.0 && self.max_mem_mb <= 0.0
     }
@@ -291,6 +292,7 @@ pub fn quota_from(j: &Json) -> Result<Option<QuotaSpec>> {
     Ok(if q.is_unlimited() { None } else { Some(q) })
 }
 
+/// Encode a quota spec for checkpoints and `stats` replies.
 pub fn quota_json(q: &QuotaSpec) -> Json {
     Json::obj(vec![
         ("max_op_rate", Json::Num(q.max_op_rate)),
@@ -541,6 +543,8 @@ pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
     Ok(cfg)
 }
 
+/// Lenient dataset spec: every field optional with documented defaults,
+/// unknown keys rejected, `n_train` capped (hostile sizes refused).
 pub fn dataspec_from(j: &Json) -> Result<DataSpec> {
     ensure!(matches!(j, Json::Obj(_)), "dataset spec must be an object");
     reject_unknown(
@@ -676,6 +680,7 @@ pub fn command_from_json(j: &Json) -> Result<Command> {
 
 // ------------------------------------------------------ request encoding
 
+/// Encode a dataset spec, inverse of [`dataspec_from`].
 pub fn dataspec_json(d: &DataSpec) -> Json {
     Json::obj(vec![
         ("n_train", Json::Num(d.n_train as f64)),
@@ -770,10 +775,13 @@ pub struct Reply {
     pub error: String,
 }
 
+/// One success reply line: `{"ok":true,"data":…}` (no trailing newline).
 pub fn ok_line(data: Json) -> String {
     Json::obj(vec![("ok", Json::Bool(true)), ("data", data)]).to_string_compact()
 }
 
+/// One error reply line; `code` must come from the closed
+/// [`ERROR_CODES`] set.
 pub fn err_line(code: &str, msg: &str) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
@@ -783,6 +791,7 @@ pub fn err_line(code: &str, msg: &str) -> String {
     .to_string_compact()
 }
 
+/// Decode one reply line into a [`Reply`] (client side of the framing).
 pub fn parse_reply(line: &str) -> Result<Reply> {
     let j = Json::parse(line).map_err(|e| anyhow!("bad reply json: {e}"))?;
     let ok = j

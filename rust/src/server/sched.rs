@@ -154,15 +154,51 @@ impl FairScheduler {
         Some((key, rc))
     }
 
-    /// Worker-pool job body: keep draining one op from the fairest ready
-    /// tenant until nothing is ready. One such job is submitted per op,
+    /// Worker-pool job body: keep draining ops from the fairest ready
+    /// tenants until nothing is ready. One such job is submitted per op,
     /// and a job that re-enqueues work keeps looping, so no op is ever
     /// stranded even when a sibling job exits early.
+    ///
+    /// With factor batching on (`precond::batch`, DESIGN.md §17.3) a
+    /// round picks up to `resolved_max` cells — in exact virtual-time
+    /// order, so per-tenant `served` accounting and the fairness bounds
+    /// are identical to per-op dispatch — and fuses their head ops into
+    /// one [`FactorCell::drain_batch`] call. Because consecutive picks
+    /// rotate across the fairest tenants, these groups naturally span
+    /// sessions: this is where cross-tenant batching happens. A round
+    /// that picks a single cell takes the plain `drain_one` path (the
+    /// size threshold), so `off`/1 reproduces the historical dispatch
+    /// exactly.
     pub(crate) fn dispatch(&self) {
-        while let Some((key, rc)) = self.pick() {
-            let more = FactorCell::drain_one(&rc.cell, &rc.counters);
-            if more {
-                self.enqueue(key, rc);
+        let group_max = crate::precond::batch::resolved_max().max(1);
+        loop {
+            let mut picked: Vec<(u64, ReadyCell)> = Vec::with_capacity(group_max);
+            while picked.len() < group_max {
+                match self.pick() {
+                    Some(kv) => picked.push(kv),
+                    None => break,
+                }
+            }
+            match picked.len() {
+                0 => return,
+                1 => {
+                    let (key, rc) = picked.pop().unwrap();
+                    if FactorCell::drain_one(&rc.cell, &rc.counters) {
+                        self.enqueue(key, rc);
+                    }
+                }
+                _ => {
+                    let group: Vec<(Arc<FactorCell>, Arc<ServiceCounters>)> = picked
+                        .iter()
+                        .map(|(_, rc)| (rc.cell.clone(), rc.counters.clone()))
+                        .collect();
+                    let more = FactorCell::drain_batch(&group);
+                    for ((key, rc), m) in picked.into_iter().zip(more) {
+                        if m {
+                            self.enqueue(key, rc);
+                        }
+                    }
+                }
             }
         }
     }

@@ -1,0 +1,524 @@
+//! Bit-parity suite for batched multi-factor preconditioning
+//! (DESIGN.md §17).
+//!
+//! The batching layer's contract mirrors the kernel-backend contract
+//! one level up: grouping ops into batches is allowed to change ONLY
+//! dispatch cost, never bits. That holds by construction — the batched
+//! kernel entry points run each item's exact solo reduction over its
+//! logical extent, and size-class padding lives outside every reduction
+//! ("pad the layout, never the reduction") — and these tests enforce it
+//! where it would crack:
+//!
+//! * the `batch_gemm`/`batch_syrk`/`batch_mvp` entry points vs their
+//!   solo counterparts, on both backends, across lane/tile-straddling
+//!   shapes and padded output buffers;
+//! * ANY random partition of a Brand op stream into batches vs the
+//!   fully-solo chain (`brand_ea_update_batch` composition
+//!   independence), including bucket-boundary shapes;
+//! * `OpRequest::execute_batch` vs per-op `execute`, with non-batchable
+//!   ops mixed in (the solo-fallback partition);
+//! * end to end: a multi-tenant server run with `--batch-factors off`
+//!   must checkpoint to the EXACT bytes of the same run with batching
+//!   on.
+
+use std::collections::BTreeMap;
+
+use bnkfac::linalg::kernel::{
+    self, blocked::Blocked, scalar::Scalar, GemmItem, GemmKind, Kernels, MvpItem, SyrkItem,
+};
+use bnkfac::linalg::{LowRank, Mat};
+use bnkfac::optim::{Algo, OpRequest, UpdateOp};
+use bnkfac::precond::batch::{self, BatchMode};
+use bnkfac::runtime::FactorPlan;
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager};
+use bnkfac::util::proptest::check;
+use bnkfac::util::rng::Rng;
+use bnkfac::util::timer::PhaseTimers;
+
+fn fill32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gauss_f32()).collect()
+}
+
+fn bits32(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Dims biased toward the boundaries that break padded/tiled code:
+/// 0, 1, around the 8-lane width, and around small powers of two
+/// (bucket edges).
+fn dim(rng: &mut Rng) -> usize {
+    match rng.next_below(7) {
+        0 => 0,
+        1 => 1,
+        2 => 7 + rng.next_below(3),
+        3 => 15 + rng.next_below(3),
+        4 => 31 + rng.next_below(3),
+        _ => 2 + rng.next_below(24),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel entry points: batch == per-item solo, both backends, bitwise.
+// ---------------------------------------------------------------------
+
+struct GemmCase {
+    kind: GemmKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    /// extra (never-read) padding on the output buffer, as bucket-padded
+    /// temporaries carry in production
+    pad: usize,
+    seed: u64,
+}
+
+fn gen_gemm_cases(rng: &mut Rng) -> Vec<GemmCase> {
+    let n_items = 1 + rng.next_below(6);
+    (0..n_items)
+        .map(|_| GemmCase {
+            kind: match rng.next_below(3) {
+                0 => GemmKind::NN,
+                1 => GemmKind::TN,
+                _ => GemmKind::NT,
+            },
+            m: dim(rng),
+            n: dim(rng),
+            k: dim(rng),
+            pad: rng.next_below(9),
+            seed: rng.next_u64(),
+        })
+        .collect()
+}
+
+impl std::fmt::Debug for GemmCase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "GemmCase({:?},m={},n={},k={},pad={},seed={})",
+            self.kind, self.m, self.n, self.k, self.pad, self.seed
+        )
+    }
+}
+
+#[test]
+fn batch_gemm_bit_matches_solo_on_both_backends() {
+    check("batch_gemm == solo gemm", gen_gemm_cases, |cases| {
+        for backend in [&Scalar as &dyn Kernels, &Blocked as &dyn Kernels] {
+            // operands (identical for solo and batched runs)
+            let inputs: Vec<(Vec<f32>, Vec<f32>)> = cases
+                .iter()
+                .map(|c| {
+                    let mut rng = Rng::new(c.seed);
+                    let (alen, blen) = match c.kind {
+                        GemmKind::NN => (c.m * c.k, c.k * c.n),
+                        GemmKind::TN => (c.k * c.m, c.k * c.n),
+                        GemmKind::NT => (c.m * c.k, c.n * c.k),
+                    };
+                    (fill32(&mut rng, alen), fill32(&mut rng, blen))
+                })
+                .collect();
+
+            // solo: one exact-size zeroed output per item
+            let solo: Vec<Vec<f32>> = cases
+                .iter()
+                .zip(&inputs)
+                .map(|(c, (a, b))| {
+                    let mut out = vec![0.0f32; c.m * c.n];
+                    match c.kind {
+                        GemmKind::NN => backend.gemm(c.m, c.n, c.k, a, b, &mut out),
+                        GemmKind::TN => backend.gemm_tn(c.m, c.n, c.k, a, b, &mut out),
+                        GemmKind::NT => backend.gemm_nt(c.m, c.n, c.k, a, b, &mut out),
+                    }
+                    out
+                })
+                .collect();
+
+            // batched: padded zeroed outputs, one call for the group
+            let mut padded: Vec<Vec<f32>> = cases
+                .iter()
+                .map(|c| vec![0.0f32; c.m * c.n + c.pad])
+                .collect();
+            {
+                let mut items: Vec<GemmItem<'_>> = cases
+                    .iter()
+                    .zip(&inputs)
+                    .zip(padded.iter_mut())
+                    .map(|((c, (a, b)), out)| GemmItem {
+                        kind: c.kind,
+                        m: c.m,
+                        n: c.n,
+                        k: c.k,
+                        a,
+                        b,
+                        c: out,
+                    })
+                    .collect();
+                backend.batch_gemm(&mut items);
+            }
+
+            for (i, (c, (s, p))) in cases.iter().zip(solo.iter().zip(&padded)).enumerate() {
+                if bits32(s) != bits32(&p[..c.m * c.n]) {
+                    return Err(format!(
+                        "{} item {i} {c:?}: batched bits differ from solo",
+                        backend.name()
+                    ));
+                }
+                if p[c.m * c.n..].iter().any(|&v| v != 0.0) {
+                    return Err(format!(
+                        "{} item {i} {c:?}: batched call wrote into padding",
+                        backend.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_syrk_and_mvp_bit_match_solo() {
+    check(
+        "batch_syrk/mvp == solo",
+        |rng: &mut Rng| {
+            let n_items = 1 + rng.next_below(5);
+            (0..n_items)
+                .map(|_| (dim(rng), dim(rng), rng.next_u64()))
+                .collect::<Vec<(usize, usize, u64)>>()
+        },
+        |shapes| {
+            for backend in [&Scalar as &dyn Kernels, &Blocked as &dyn Kernels] {
+                // syrk: full c = a·aᵀ (both triangles) — the reference is
+                // the Mat-level construction (upper panel + mirror copy)
+                let mats: Vec<Mat> = shapes
+                    .iter()
+                    .map(|&(m, k, seed)| {
+                        let mut rng = Rng::new(seed);
+                        Mat::from_vec(m, k, fill32(&mut rng, m * k))
+                    })
+                    .collect();
+                let solo: Vec<Mat> = mats.iter().map(|a| a.syrk()).collect();
+                let mut outs: Vec<Vec<f32>> =
+                    shapes.iter().map(|&(m, _, _)| vec![0.0f32; m * m]).collect();
+                {
+                    let mut items: Vec<SyrkItem<'_>> = mats
+                        .iter()
+                        .zip(outs.iter_mut())
+                        .map(|(a, c)| SyrkItem {
+                            m: a.rows,
+                            k: a.cols,
+                            a: &a.data,
+                            c,
+                        })
+                        .collect();
+                    backend.batch_syrk(&mut items);
+                }
+                for (i, (s, p)) in solo.iter().zip(&outs).enumerate() {
+                    if bits32(&s.data) != bits32(p) {
+                        return Err(format!(
+                            "{} syrk item {i}: batched bits differ from Mat::syrk",
+                            backend.name()
+                        ));
+                    }
+                }
+
+                // mvp: y = a·x vs solo gemv
+                let xs: Vec<Vec<f32>> = shapes
+                    .iter()
+                    .map(|&(_, k, seed)| fill32(&mut Rng::new(seed ^ 1), k))
+                    .collect();
+                let solo_y: Vec<Vec<f32>> = mats
+                    .iter()
+                    .zip(&xs)
+                    .map(|(a, x)| {
+                        let mut y = vec![0.0f32; a.rows];
+                        backend.gemv(a.rows, a.cols, &a.data, x, &mut y);
+                        y
+                    })
+                    .collect();
+                let mut ys: Vec<Vec<f32>> =
+                    mats.iter().map(|a| vec![0.0f32; a.rows]).collect();
+                {
+                    let mut items: Vec<MvpItem<'_>> = mats
+                        .iter()
+                        .zip(&xs)
+                        .zip(ys.iter_mut())
+                        .map(|((a, x), y)| MvpItem {
+                            r: a.rows,
+                            n: a.cols,
+                            a: &a.data,
+                            x,
+                            y,
+                        })
+                        .collect();
+                    backend.batch_mvp(&mut items);
+                }
+                for (i, (s, p)) in solo_y.iter().zip(&ys).enumerate() {
+                    if bits32(s) != bits32(p) {
+                        return Err(format!(
+                            "{} mvp item {i}: batched bits differ from gemv",
+                            backend.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Brand pipeline: any partition of an op stream → identical bits.
+// ---------------------------------------------------------------------
+
+/// One factor's chain setup: dimension, kept rank, arrival width.
+fn gen_factors(rng: &mut Rng) -> (Vec<(usize, usize, usize)>, u64, usize) {
+    let n_factors = 2 + rng.next_below(5);
+    let factors = (0..n_factors)
+        .map(|_| {
+            // r*n / r*r / n*n straddle bucket (power-of-two) boundaries
+            // across this spread — the padded-layout regression surface
+            let r = 2 + rng.next_below(7);
+            let n = 1 + rng.next_below(4);
+            let d = r + n + 2 + rng.next_below(20);
+            (d, r, n)
+        })
+        .collect();
+    (factors, rng.next_u64(), 1 + rng.next_below(4))
+}
+
+#[test]
+fn brand_chain_bit_identical_under_any_partition() {
+    check(
+        "brand batch partition independence",
+        gen_factors,
+        |(factors, seed, rounds)| {
+            let rho = 0.95f32;
+            let mut data_rng = Rng::new(*seed);
+            // initial reps + per-round arrivals, shared by both runs
+            let init: Vec<LowRank> = factors
+                .iter()
+                .map(|&(d, r, _)| {
+                    let g = Mat::gauss(d, r, 1.0, &mut data_rng);
+                    LowRank::from_eigh(&g.syrk().eigh(), r)
+                })
+                .collect();
+            let arrivals: Vec<Vec<Mat>> = (0..*rounds)
+                .map(|_| {
+                    factors
+                        .iter()
+                        .map(|&(d, _, n)| Mat::gauss(d, n, 1.0, &mut data_rng))
+                        .collect()
+                })
+                .collect();
+
+            // solo chain: one factor at a time (batch of one)
+            let mut solo = init.clone();
+            for round in arrivals.iter() {
+                for (i, a) in round.iter().enumerate() {
+                    let r = factors[i].1;
+                    solo[i] = solo[i].brand_ea_update(a, rho, r);
+                }
+            }
+
+            // batched chain: per round, a seed-derived random partition
+            // of the factor set into groups, each group one batch call
+            let mut part_rng = Rng::new(seed ^ 0xB47C4);
+            let mut batched = init.clone();
+            for round in arrivals.iter() {
+                let mut order: Vec<usize> = (0..factors.len()).collect();
+                // random order, then random group boundaries
+                for i in (1..order.len()).rev() {
+                    order.swap(i, part_rng.next_below(i + 1));
+                }
+                let mut idx = 0;
+                while idx < order.len() {
+                    let take = 1 + part_rng.next_below(order.len() - idx);
+                    let group = &order[idx..idx + take];
+                    let items: Vec<(&LowRank, &Mat, f32, usize)> = group
+                        .iter()
+                        .map(|&i| (&batched[i], &round[i], rho, factors[i].1))
+                        .collect();
+                    let outs = LowRank::brand_ea_update_batch(&items);
+                    for (&i, out) in group.iter().zip(outs) {
+                        batched[i] = out;
+                    }
+                    idx += take;
+                }
+            }
+
+            for (i, (s, b)) in solo.iter().zip(&batched).enumerate() {
+                if bits32(&s.u.data) != bits32(&b.u.data) || bits32(&s.d) != bits32(&b.d) {
+                    return Err(format!(
+                        "factor {i} {:?}: batched chain diverged from solo chain",
+                        factors[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// OpRequest::execute_batch == per-op execute (incl. solo fallback).
+// ---------------------------------------------------------------------
+
+fn plan(layer: &str, dim: usize, rank: usize, n: usize) -> FactorPlan {
+    FactorPlan {
+        id: format!("{layer}/A"),
+        layer: layer.into(),
+        kind: "fc".into(),
+        side: "A".into(),
+        dim,
+        rank,
+        sketch: rank + 4,
+        brand: true,
+        n,
+        n_crc: (rank / 2).max(1),
+        ops: BTreeMap::new(),
+    }
+}
+
+#[test]
+fn execute_batch_matches_solo_execute() {
+    let mut rng = Rng::new(0xEB);
+    let mut t = PhaseTimers::new();
+    // A mixed group: Brand, BrandCorrect (batchable) and ExactEvd (solo
+    // fallback inside execute_batch), heterogeneous shapes.
+    let specs = [
+        (UpdateOp::Brand, 24usize, 6usize, 3usize),
+        (UpdateOp::BrandCorrect, 17, 5, 2),
+        (UpdateOp::ExactEvd, 12, 4, 2),
+        (UpdateOp::Brand, 9, 3, 1),
+    ];
+    let mut reqs: Vec<(OpRequest, Option<LowRank>)> = Vec::new();
+    for (i, &(op, d, r, n)) in specs.iter().enumerate() {
+        let p = plan(&format!("f{i}"), d, r, n);
+        let gram = Mat::psd_with_decay(d, 0.7, &mut rng);
+        let stat = Mat::gauss(d, n, 1.0, &mut rng);
+        let prev = LowRank::from_eigh(&gram.eigh(), r);
+        let req = OpRequest::prepare(op, &p, Some(&gram), Some(&stat), 0.95, &mut rng)
+            .expect("non-None op");
+        reqs.push((req, Some(prev)));
+    }
+
+    let solo: Vec<Option<LowRank>> = reqs
+        .iter()
+        .map(|(req, prev)| req.clone().execute(prev.clone(), None, &mut t).unwrap())
+        .collect();
+    let batched = OpRequest::execute_batch(reqs, None, &mut t);
+
+    for (i, (s, b)) in solo.iter().zip(batched).enumerate() {
+        let b = b.unwrap();
+        match (s, b) {
+            (Some(s), Some(b)) => {
+                assert_eq!(
+                    bits32(&s.u.data),
+                    bits32(&b.u.data),
+                    "op {i} ({:?}): U bits differ",
+                    specs[i].0
+                );
+                assert_eq!(bits32(&s.d), bits32(&b.d), "op {i}: d bits differ");
+            }
+            (None, None) => {}
+            (s, b) => panic!(
+                "op {i}: presence mismatch solo={} batched={}",
+                s.is_some(),
+                b.is_some()
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bucket padding: counters move, boundary shapes stay correct.
+// ---------------------------------------------------------------------
+
+#[test]
+fn bucket_padding_counts_fill_and_preserves_boundary_shapes() {
+    // bucket_len is next_power_of_two and feeds the fill counters
+    let (_, l0, p0) = kernel::counters::batch_snapshot();
+    assert_eq!(kernel::bucket_len(5), 8);
+    assert_eq!(kernel::bucket_len(8), 8);
+    assert_eq!(kernel::bucket_len(9), 16);
+    let (_, l1, p1) = kernel::counters::batch_snapshot();
+    assert!(l1 >= l0 + 5 + 8 + 9, "logical counter did not advance");
+    assert!(p1 >= p0 + 8 + 8 + 16, "padded counter did not advance");
+
+    // Regression for the padded-layout construction: shapes whose
+    // temporaries straddle power-of-two boundaries (r*n = 15, 16, 17 …)
+    // must produce the exact dense-EVD reconstruction — a one-off-error
+    // into padding would corrupt the trailing logical elements.
+    let mut rng = Rng::new(0xBADu64);
+    for &(r, n) in &[(5usize, 3usize), (4, 4), (8, 2), (3, 5), (7, 3)] {
+        let d = r + n + 12;
+        let g = Mat::gauss(d, r, 1.0, &mut rng);
+        let lr = LowRank::from_eigh(&g.syrk().eigh(), r);
+        let a = Mat::gauss(d, n, 1.0, &mut rng);
+        let upd = lr.brand_update(&a);
+        let want = lr.to_dense().add(&a.syrk());
+        let err = upd.to_dense().rel_err(&want);
+        assert!(
+            err < 1e-4,
+            "brand_update wrong at bucket-boundary shape r={r} n={n}: rel_err={err}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// End to end: batched and unbatched server runs checkpoint identically.
+// ---------------------------------------------------------------------
+
+fn scfg(seed: u64, algo: Algo, steps: u64) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 4,
+        dim: 28,
+        rank: 5,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+    }
+}
+
+/// The tentpole acceptance check: a multi-tenant async run (many small
+/// factors per session, staleness ≥ 1 so the shared-pool batched drain
+/// path is exercised) with `--batch-factors off` must serialize to the
+/// EXACT checkpoint bytes of the same run with grouping on.
+#[test]
+fn checkpoints_byte_identical_batched_vs_off() {
+    let run = |mode: BatchMode| -> String {
+        batch::set_mode(mode);
+        let mut mgr = SessionManager::new(ServerCfg {
+            workers: 2,
+            max_sessions: 4,
+            staleness: 1,
+            ..ServerCfg::default()
+        });
+        let a = mgr
+            .create_host("a", 1, scfg(31, Algo::BKfac, 24), None)
+            .unwrap();
+        let b = mgr
+            .create_host("b", 2, scfg(32, Algo::BKfacC, 24), None)
+            .unwrap();
+        mgr.run_to_completion(1_000_000).unwrap();
+        let ja = mgr.checkpoint(a).unwrap().to_string_pretty();
+        let jb = mgr.checkpoint(b).unwrap().to_string_pretty();
+        format!("{ja}\n{jb}")
+    };
+    let off = run(BatchMode::Off);
+    let on = run(BatchMode::Max(4));
+    batch::set_mode(BatchMode::Auto);
+    assert!(
+        off.len() > 200,
+        "checkpoint suspiciously small — workload did not run"
+    );
+    assert_eq!(
+        off, on,
+        "server checkpoints differ between batched and unbatched drains"
+    );
+}
