@@ -16,7 +16,14 @@ surface (wire_ms/round_ms/op_ms, §15). The record must carry the §14 additions
 (round-duration histogram, uptime/round correlation stamps, per-layer
 inversion-error probe samples, per-kind op latency histograms).
 
-Usage: python3 ci/check_trace.py <trace.jsonl> <record.json>
+With --require-auto the gate instead validates the `algo = auto` smoke
+(examples/jobs_auto_smoke.json, DESIGN.md §18.6): the governor
+escalation events are not expected (no quota in that scenario), but the
+trace must carry at least one `policy_decision` and one `rank_change`
+event from the auto-policy engine, and the record's session must
+surface a `policy` block whose factors actually changed rank.
+
+Usage: python3 ci/check_trace.py [--require-auto] <trace.jsonl> <record.json>
 Exits 1 listing every violated invariant — never just the first.
 """
 
@@ -37,8 +44,16 @@ REQUIRED_EVENTS = [
     "request_apply",
 ]
 
+# the auto smoke runs no quota-breaching tenant, so the governor
+# escalation ladder is absent; the policy engine's events take its place
+AUTO_REQUIRED_EVENTS = [
+    e
+    for e in REQUIRED_EVENTS
+    if e not in ("governor_strike", "governor_throttle", "governor_evict")
+] + ["policy_decision", "rank_change"]
 
-def check_trace(path, errs):
+
+def check_trace(path, errs, auto=False):
     if not os.path.exists(path):
         errs.append(f"{path}: trace artifact missing")
         return
@@ -56,9 +71,24 @@ def check_trace(path, errs):
     if errs:
         return
     kinds = {e.get("event") for e in events}
-    for want in REQUIRED_EVENTS:
+    for want in AUTO_REQUIRED_EVENTS if auto else REQUIRED_EVENTS:
         if want not in kinds:
             errs.append(f"{path}: no '{want}' event (saw {sorted(k for k in kinds if k)})")
+    if auto:
+        # every engine event names its factor and carries the decided
+        # rank; rank_change additionally states where it moved from
+        for e in events:
+            if e.get("event") not in ("policy_decision", "rank_change"):
+                continue
+            if not e.get("factor"):
+                errs.append(f"{path}: policy event without a factor: {e}")
+                break
+            if not isinstance(e.get("rank"), (int, float)):
+                errs.append(f"{path}: policy event without a rank: {e}")
+                break
+            if e["event"] == "rank_change" and e.get("rank") == e.get("prev_rank"):
+                errs.append(f"{path}: rank_change with no actual change: {e}")
+                break
     for e in events:
         if not isinstance(e.get("t_ms"), (int, float)):
             errs.append(f"{path}: event missing numeric t_ms: {e}")
@@ -83,16 +113,20 @@ def check_trace(path, errs):
                     errs.append(f"{path}: journal_summary.{key} missing or negative: {v!r}")
 
 
-def check_record(path, errs):
+def check_record(path, errs, auto=False):
     if not os.path.exists(path):
         errs.append(f"{path}: record artifact missing")
         return
     with open(path) as f:
         rec = json.load(f)
-    if rec.get("evictions") != 1:
-        errs.append(f"{path}: expected exactly 1 eviction, got {rec.get('evictions')}")
-    if not rec.get("rounds", 0) >= 24:
-        errs.append(f"{path}: rounds {rec.get('rounds')} < 24 — governor never reached strike 3")
+    if auto:
+        if rec.get("evictions") != 0:
+            errs.append(f"{path}: auto smoke has no quota, got {rec.get('evictions')} evictions")
+    else:
+        if rec.get("evictions") != 1:
+            errs.append(f"{path}: expected exactly 1 eviction, got {rec.get('evictions')}")
+        if not rec.get("rounds", 0) >= 24:
+            errs.append(f"{path}: rounds {rec.get('rounds')} < 24 — governor never reached strike 3")
     for stamp in ("uptime_ms", "round"):
         if not isinstance(rec.get(stamp), (int, float)):
             errs.append(f"{path}: missing correlation stamp '{stamp}'")
@@ -100,7 +134,20 @@ def check_record(path, errs):
     if not hist.get("count", 0) > 0:
         errs.append(f"{path}: round_ms histogram empty: {hist}")
     sessions = rec.get("sessions", [])
-    if not any(s.get("evict_reason") == "op_rate" for s in sessions):
+    if auto:
+        pols = [s.get("policy") for s in sessions if s.get("policy")]
+        if not pols:
+            errs.append(f"{path}: no session carries an auto-policy record")
+        for pol in pols:
+            for f in pol.get("factors", []):
+                if f.get("op") not in ("eigh", "rsvd", "brand"):
+                    errs.append(f"{path}: policy factor with bad op label: {f}")
+        changes = sum(
+            f.get("rank_changes", 0) for pol in pols for f in pol.get("factors", [])
+        )
+        if not changes >= 1:
+            errs.append(f"{path}: auto smoke produced no rank changes")
+    elif not any(s.get("evict_reason") == "op_rate" for s in sessions):
         errs.append(f"{path}: no session evicted for op_rate")
     if not any(s.get("probes") for s in sessions):
         errs.append(f"{path}: no session recorded inversion-error probe samples")
@@ -118,12 +165,17 @@ def check_record(path, errs):
 
 
 def main(argv):
+    # literal-match flag parsing only: anything that is not exactly
+    # --require-auto stays a positional, so wrong arity is still usage
+    auto = bool(argv) and argv[0] == "--require-auto"
+    if auto:
+        argv = argv[1:]
     if len(argv) != 2:
         print(__doc__, file=sys.stderr)
         return 2
     errs = []
-    check_trace(argv[0], errs)
-    check_record(argv[1], errs)
+    check_trace(argv[0], errs, auto=auto)
+    check_record(argv[1], errs, auto=auto)
     if errs:
         print("trace-smoke gate FAILED:", file=sys.stderr)
         for e in errs:

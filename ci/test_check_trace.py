@@ -28,14 +28,23 @@ PCT_KEYS = [
 ]
 
 
-def good_events():
+def good_events(kinds=None):
     """A minimal trace satisfying every invariant the gate asserts."""
-    events = [{"event": k, "t_ms": i} for i, k in enumerate(check_trace.REQUIRED_EVENTS)]
+    events = []
+    for i, k in enumerate(kinds or check_trace.REQUIRED_EVENTS):
+        e = {"event": k, "t_ms": i}
+        if k in ("policy_decision", "rank_change"):
+            e.update(factor="f0/A", op="rsvd", rank=6, prev_rank=8)
+        events.append(e)
     tail = {"event": "journal_summary", "t_ms": 99, "recorded": len(events), "dropped": 0}
     for key in PCT_KEYS:
         tail[key] = 1.5
     events.append(tail)
     return events
+
+
+def good_auto_events():
+    return good_events(check_trace.AUTO_REQUIRED_EVENTS)
 
 
 def good_record():
@@ -54,6 +63,21 @@ def good_record():
             }
         ],
     }
+
+
+def good_auto_record():
+    rec = good_record()
+    rec["evictions"] = 0
+    rec["sessions"][0].update(
+        evict_reason="",
+        policy={
+            "factors": [
+                {"id": "f0/A", "op": "rsvd", "rank": 4, "rank_changes": 2},
+                {"id": "f1/A", "op": "brand", "rank": 6, "rank_changes": 1},
+            ]
+        },
+    )
+    return rec
 
 
 class CheckTraceTest(unittest.TestCase):
@@ -150,11 +174,76 @@ class CheckTraceTest(unittest.TestCase):
             self.run_main(self.write_trace(good_events()), self.write_record(rec)), 1
         )
 
+    # -------------------------------------------------- auto-smoke mode
+
+    def run_auto(self, trace, record):
+        return check_trace.main(["--require-auto", trace, record])
+
+    def test_auto_green_path_passes(self):
+        self.assertEqual(
+            self.run_auto(
+                self.write_trace(good_auto_events()), self.write_record(good_auto_record())
+            ),
+            0,
+        )
+
+    def test_auto_mode_requires_policy_events(self):
+        for missing in ("policy_decision", "rank_change"):
+            events = [e for e in good_auto_events() if e.get("event") != missing]
+            self.assertEqual(
+                self.run_auto(
+                    self.write_trace(events), self.write_record(good_auto_record())
+                ),
+                1,
+                f"trace without {missing} must fail the auto gate",
+            )
+
+    def test_auto_mode_does_not_require_governor_events(self):
+        # the auto smoke has no quota tenant: the governor ladder events
+        # the base gate insists on must not be demanded here
+        self.assertNotIn("governor_evict", check_trace.AUTO_REQUIRED_EVENTS)
+        self.assertEqual(
+            self.run_auto(
+                self.write_trace(good_auto_events()), self.write_record(good_auto_record())
+            ),
+            0,
+        )
+
+    def test_auto_record_without_rank_change_fails(self):
+        rec = good_auto_record()
+        for f in rec["sessions"][0]["policy"]["factors"]:
+            f["rank_changes"] = 0
+        self.assertEqual(
+            self.run_auto(self.write_trace(good_auto_events()), self.write_record(rec)), 1
+        )
+
+    def test_auto_record_without_policy_block_fails(self):
+        rec = good_auto_record()
+        del rec["sessions"][0]["policy"]
+        self.assertEqual(
+            self.run_auto(self.write_trace(good_auto_events()), self.write_record(rec)), 1
+        )
+
+    def test_rank_change_event_with_no_change_fails(self):
+        events = good_auto_events()
+        for e in events:
+            if e.get("event") == "rank_change":
+                e["prev_rank"] = e["rank"]
+        self.assertEqual(
+            self.run_auto(
+                self.write_trace(events), self.write_record(good_auto_record())
+            ),
+            1,
+        )
+
     # ------------------------------------------------------------ usage
 
     def test_wrong_arity_is_a_usage_error(self):
         self.assertEqual(check_trace.main([]), 2)
         self.assertEqual(check_trace.main(["a", "b", "c"]), 2)
+        # the flag is literal-match only: with it, arity is still 2
+        self.assertEqual(check_trace.main(["--require-auto"]), 2)
+        self.assertEqual(check_trace.main(["--require-auto", "a", "b", "c"]), 2)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ fn scfg(seed: u64, factors: usize, steps: u64) -> HostSessionCfg {
         steps,
         rho: 0.95,
         lambda: 0.1,
+        policy: None,
     }
 }
 

@@ -27,6 +27,10 @@ use bnkfac::util::ser::Json;
 use common::{env_usize, update_bench_json_file, Table};
 
 fn session_cfg(seed: u64, dim: usize, steps: u64) -> HostSessionCfg {
+    session_cfg_algo(seed, dim, steps, Algo::BKfac)
+}
+
+fn session_cfg_algo(seed: u64, dim: usize, steps: u64, algo: Algo) -> HostSessionCfg {
     HostSessionCfg {
         factors: 1,
         dim,
@@ -37,11 +41,12 @@ fn session_cfg(seed: u64, dim: usize, steps: u64) -> HostSessionCfg {
         n_stat: 16,
         grad_cols: 8,
         t_updt: 2,
-        algo: Algo::BKfac,
+        algo,
         seed,
         steps,
         rho: 0.95,
         lambda: 0.1,
+        policy: None,
     }
 }
 
@@ -147,6 +152,33 @@ fn main() {
          trace-on vs trace-off ratio {trace_ratio:.3} (target ≈ 1.0)"
     );
 
+    // auto-policy overhead: the same 4-session mix under `algo = auto`
+    // (cost-model decisions + boundary probes on the serving path); the
+    // gate bounds auto/fixed throughput — the policy engine must not
+    // tax the regime where it picks the same Brand/Rsvd ops the fixed
+    // config runs (DESIGN.md §18.6)
+    let auto_wall = {
+        let mut mgr = SessionManager::new(ServerCfg {
+            workers,
+            max_sessions: 4,
+            staleness: 1,
+            ..ServerCfg::default()
+        });
+        for i in 0..4usize {
+            let cfg = session_cfg_algo(100 + i as u64, dim, steps, Algo::Auto);
+            mgr.create_host(&format!("s{i}"), 1, cfg, None).unwrap();
+        }
+        let t0 = Instant::now();
+        mgr.run_to_completion(10_000_000).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let auto_sps = (4 * steps) as f64 / auto_wall;
+    let policy_auto_ratio = auto_sps / concurrent4;
+    println!(
+        "4 auto: wall {auto_wall:.3}s, {auto_sps:.1} steps/s; \
+         auto vs fixed ratio {policy_auto_ratio:.3} (target ≈ 1.0)"
+    );
+
     let mut obj = vec![
         ("dim", Json::Num(dim as f64)),
         ("steps_per_session", Json::Num(steps as f64)),
@@ -155,6 +187,8 @@ fn main() {
         ("speedup_4", Json::Num(speedup)),
         ("traced_4", Json::Num(traced_sps)),
         ("trace_ratio", Json::Num(trace_ratio)),
+        ("auto_4", Json::Num(auto_sps)),
+        ("policy_auto_ratio", Json::Num(policy_auto_ratio)),
     ];
     let owned: Vec<(String, Json)> = sections;
     for (k, v) in &owned {

@@ -175,6 +175,18 @@ impl<'rt> Trainer<'rt> {
         service: Option<PrecondService>,
     ) -> Result<Trainer<'rt>> {
         let manifest = &rt.manifest;
+        // loud cadence validation before Policy::new (which only
+        // debug-asserts): a zero period reaching op_at divides by zero
+        cfg.hyper
+            .validate()
+            .map_err(|e| anyhow::anyhow!("invalid hyper cadences: {e}"))?;
+        // the auto policy engine lives in the host-session substrate
+        // (server::session); the artifact-backed trainer runs fixed
+        // algorithms only
+        anyhow::ensure!(
+            cfg.algo != crate::optim::Algo::Auto,
+            "algo = auto needs a host session (serve); the trainer runs fixed algorithms"
+        );
         let mut rng = Rng::new(cfg.seed);
         let params = ParamStore::init(manifest, &mut rng);
         let bn = BnState::new(manifest, 0.9);

@@ -649,9 +649,9 @@ fn dataset_for(rt: &Runtime, args: &Args) -> Dataset {
     })
 }
 
-fn hyper_from(args: &Args) -> Hyper {
+fn hyper_from(args: &Args) -> Result<Hyper> {
     let d = Hyper::default();
-    Hyper {
+    let h = Hyper {
         rho: args.get_f64("rho", d.rho as f64) as f32,
         t_updt: args.get_usize("t-updt", d.t_updt),
         t_inv: args.get_usize("t-inv", d.t_inv),
@@ -667,7 +667,14 @@ fn hyper_from(args: &Args) -> Hyper {
         },
         linear_apply: args.flag("linear-apply"),
         lr_scale: args.get_f64("lr-scale", 1.0) as f32,
-    }
+    };
+    // loud cadence validation (DESIGN.md §18.5): a zero period would
+    // divide by zero inside Policy::op_at, and a non-multiple of
+    // --t-updt would silently fire on the lcm instead of the period
+    // the flag named
+    h.validate()
+        .map_err(|e| anyhow::anyhow!("invalid cadence flags: {e}"))?;
+    Ok(h)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -736,7 +743,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let log_every = args.get_usize("log-every", 10);
     let cfg = TrainerCfg {
         algo,
-        hyper: hyper_from(args),
+        hyper: hyper_from(args)?,
         seed,
         precond: precond_from(args),
         ..TrainerCfg::default()
@@ -785,7 +792,7 @@ fn cmd_error_study(args: &Args) -> Result<()> {
     let out = args.get("out").map(|s| s.to_string());
     let cfg = TrainerCfg {
         algo,
-        hyper: hyper_from(args),
+        hyper: hyper_from(args)?,
         seed: args.get_u64("seed", 42),
         probe_layer: Some(layer.clone()),
         eval_every: 0,

@@ -246,6 +246,57 @@ impl ServiceRecord {
     }
 }
 
+/// One factor's slice of an `algo = auto` session's policy engine
+/// (DESIGN.md §18): the op family chosen for the current cadence
+/// window, the adaptive rank it will realize at the next overwrite,
+/// and the decision counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PolicyFactorRecord {
+    /// factor id from the plan (`"f0/A"`, ...)
+    pub id: String,
+    /// chosen op family for the current window — closed set `"eigh"` /
+    /// `"rsvd"` / `"brand"`
+    pub op: String,
+    /// current adaptive rank (realized by the next overwrite)
+    pub rank: usize,
+    /// probe-residual EWMA the grow/shrink decisions are driven by
+    pub err: f64,
+    /// op-family switches so far
+    pub switches: u64,
+    /// rank grow/shrink decisions so far
+    pub rank_changes: u64,
+}
+
+impl PolicyFactorRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("op", Json::str(&self.op)),
+            ("rank", Json::Num(self.rank as f64)),
+            ("err", Json::Num(self.err)),
+            ("switches", Json::Num(self.switches as f64)),
+            ("rank_changes", Json::Num(self.rank_changes as f64)),
+        ])
+    }
+}
+
+/// The auto-policy slice of a [`SessionRecord`]: present exactly when
+/// the session runs `algo = auto`, absent (JSON `null`) for every
+/// fixed algorithm.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PolicyRecord {
+    pub factors: Vec<PolicyFactorRecord>,
+}
+
+impl PolicyRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "factors",
+            Json::Arr(self.factors.iter().map(|f| f.to_json()).collect()),
+        )])
+    }
+}
+
 /// Per-session slice of a multi-tenant server run (DESIGN.md §11.6).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SessionRecord {
@@ -279,6 +330,9 @@ pub struct SessionRecord {
     /// this session's preconditioner-service slice (op/apply latency
     /// histograms ride in here), when the session owns a service
     pub service: Option<ServiceRecord>,
+    /// the auto-policy engine's per-factor decisions, for `algo = auto`
+    /// sessions only (DESIGN.md §18)
+    pub policy: Option<PolicyRecord>,
 }
 
 impl SessionRecord {
@@ -307,6 +361,13 @@ impl SessionRecord {
                 self.service
                     .as_ref()
                     .map(|s| s.to_json())
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "policy",
+                self.policy
+                    .as_ref()
+                    .map(|p| p.to_json())
                     .unwrap_or(Json::Null),
             ),
         ])
@@ -757,6 +818,16 @@ mod tests {
                     rel_err: 0.031,
                 }],
                 service: None,
+                policy: Some(PolicyRecord {
+                    factors: vec![PolicyFactorRecord {
+                        id: "f0/A".into(),
+                        op: "rsvd".into(),
+                        rank: 6,
+                        err: 0.02,
+                        switches: 1,
+                        rank_changes: 2,
+                    }],
+                }),
             }],
             frontend: None,
             uptime_ms: 2000,
@@ -798,6 +869,16 @@ mod tests {
         assert_eq!(probes[0].get("layer").and_then(|v| v.as_str()), Some("f0/A"));
         assert_eq!(probes[0].get("rank").and_then(|v| v.as_usize()), Some(6));
         assert!(probes[0].get("rel_err").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        // the auto-policy slice: present as an object for algo=auto
+        // sessions, with per-factor op/rank/counters
+        let pf = sessions[0]
+            .get("policy")
+            .and_then(|p| p.get("factors"))
+            .and_then(|v| v.as_arr())
+            .unwrap();
+        assert_eq!(pf[0].get("op").and_then(|v| v.as_str()), Some("rsvd"));
+        assert_eq!(pf[0].get("rank").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(pf[0].get("rank_changes").and_then(|v| v.as_usize()), Some(2));
         let s = rec.summary();
         assert!(s.contains("fairness=0.980"), "{s}");
         assert!(s.contains("1 evictions"), "{s}");

@@ -1,0 +1,839 @@
+//! `Algo::Auto` — the cost-model-driven per-factor inversion policy
+//! with online rank adaptation (DESIGN.md §18, ISSUE 10 tentpole).
+//!
+//! The paper's caveat is that the linear Brand update "is only
+//! applicable in some circumstances (typically for all FC layers)";
+//! RS-KFAC's randomized overwrite is always applicable; the exact
+//! eigendecomposition anchors the accurate-but-cubic end. The fixed
+//! algorithms hard-code one point on that dial per run. `AutoPolicy`
+//! instead picks `Brand` vs `Rsvd` vs `ExactEvd` per factor per cadence
+//! window, and grows/shrinks the low-rank rank `r` online, from three
+//! deterministic inputs:
+//!
+//!  1. a FLOP cost model over the factor geometry (d, r, n, cadences):
+//!     `cost_eigh = d³`, `cost_rsvd = 2·d²·(r+4)`, and the per-window
+//!     Brand cost `(T_inv/T_brand)·d·(r+n)²`;
+//!  2. the online inversion-error probe (`obs::probe::inversion_error`)
+//!     evaluated at every decision boundary with the probe's own
+//!     label⊕step-seeded RNG stream, folded into a per-factor EWMA;
+//!  3. the wire-settable `AutoSpec` thresholds (tenants trade accuracy
+//!     for latency live via `set-policy`).
+//!
+//! DETERMINISM: wall-clock timings are deliberately NOT decision
+//! inputs — measured `op_ms` histograms inform the *tenant* tuning the
+//! spec, never the engine directly. Every decision is a pure function
+//! of (spec, factor geometry, probe residuals), and the full mutable
+//! state (spec, per-factor rank/mode/EWMA, bounded decision log) is
+//! persisted in checkpoint v1.3, so resume replays bit-identically —
+//! including across a rank change.
+//!
+//! RANK CHANGES (GOCPT-style `new_R`): shrinking truncates the
+//! representation; growing zero-pads modes which the next `Rsvd`
+//! overwrite re-orthogonalizes. Both flow through the existing
+//! `factor::truncate_or_pad` path — decision boundaries always emit an
+//! overwrite op, so a changed rank is realized on the very step that
+//! decided it.
+
+use crate::linalg::{LowRank, Mat};
+use crate::obs::probe;
+use crate::runtime::manifest::FactorPlan;
+use crate::util::ser::Json;
+
+use super::policy::UpdateOp;
+use super::Hyper;
+
+/// Bounded decision-log length (checkpointed; oldest evicted first).
+pub const LOG_CAP: usize = 64;
+
+/// Wire-settable knobs for the auto engine (the jobfile `policy` block
+/// and the `set-policy` command both carry exactly these fields).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoSpec {
+    /// EWMA inversion error above this grows the rank
+    pub err_hi: f64,
+    /// EWMA inversion error below this shrinks the rank
+    pub err_lo: f64,
+    /// rank floor
+    pub rank_min: usize,
+    /// rank ceiling; 0 = dim/2 per factor
+    pub rank_max: usize,
+    /// grow/shrink increment per decision
+    pub rank_step: usize,
+    /// Brand wins a window only if its modeled cost is below this
+    /// fraction of the Rsvd cost (hysteresis against mode flapping)
+    pub brand_frac: f64,
+    /// factors at or below this dim may use ExactEvd when the cost
+    /// model favors it
+    pub exact_dim_max: usize,
+}
+
+impl Default for AutoSpec {
+    fn default() -> Self {
+        AutoSpec {
+            err_hi: 0.30,
+            err_lo: 0.05,
+            rank_min: 2,
+            rank_max: 0,
+            rank_step: 2,
+            brand_frac: 0.5,
+            exact_dim_max: 96,
+        }
+    }
+}
+
+impl AutoSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.err_hi.is_finite() || !self.err_lo.is_finite() {
+            return Err("policy err_lo/err_hi must be finite".into());
+        }
+        if self.err_lo < 0.0 || self.err_lo >= self.err_hi {
+            return Err(format!(
+                "policy thresholds need 0 <= err_lo < err_hi \
+                 (got err_lo = {}, err_hi = {})",
+                self.err_lo, self.err_hi
+            ));
+        }
+        if self.rank_min < 2 {
+            return Err(format!(
+                "policy rank_min = {} but low-rank reps need rank >= 2",
+                self.rank_min
+            ));
+        }
+        if self.rank_max != 0 && self.rank_max < self.rank_min {
+            return Err(format!(
+                "policy rank_max = {} is below rank_min = {}",
+                self.rank_max, self.rank_min
+            ));
+        }
+        if self.rank_step == 0 {
+            return Err("policy rank_step = 0 would never adapt the rank".into());
+        }
+        if !self.brand_frac.is_finite() || self.brand_frac <= 0.0 {
+            return Err(format!(
+                "policy brand_frac = {} must be a positive finite fraction",
+                self.brand_frac
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("err_hi", Json::Num(self.err_hi)),
+            ("err_lo", Json::Num(self.err_lo)),
+            ("rank_min", Json::Num(self.rank_min as f64)),
+            ("rank_max", Json::Num(self.rank_max as f64)),
+            ("rank_step", Json::Num(self.rank_step as f64)),
+            ("brand_frac", Json::Num(self.brand_frac)),
+            ("exact_dim_max", Json::Num(self.exact_dim_max as f64)),
+        ])
+    }
+
+    /// Lenient decode: absent keys keep their defaults, unknown keys
+    /// are rejected (same contract as the jobfile session spec), and
+    /// the result is validated.
+    pub fn from_json(j: &Json) -> Result<AutoSpec, String> {
+        let mut s = AutoSpec::default();
+        let Json::Obj(pairs) = j else {
+            return Err("policy spec must be an object".into());
+        };
+        for (k, v) in pairs {
+            match k.as_str() {
+                "err_hi" => s.err_hi = v.as_f64().ok_or("policy err_hi must be a number")?,
+                "err_lo" => s.err_lo = v.as_f64().ok_or("policy err_lo must be a number")?,
+                "rank_min" => {
+                    s.rank_min = v.as_usize().ok_or("policy rank_min must be a whole number")?
+                }
+                "rank_max" => {
+                    s.rank_max = v.as_usize().ok_or("policy rank_max must be a whole number")?
+                }
+                "rank_step" => {
+                    s.rank_step = v
+                        .as_usize()
+                        .ok_or("policy rank_step must be a whole number")?
+                }
+                "brand_frac" => {
+                    s.brand_frac = v.as_f64().ok_or("policy brand_frac must be a number")?
+                }
+                "exact_dim_max" => {
+                    s.exact_dim_max = v
+                        .as_usize()
+                        .ok_or("policy exact_dim_max must be a whole number")?
+                }
+                other => return Err(format!("unknown policy key '{other}'")),
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+/// Which op family currently maintains a factor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Exact,
+    Rsvd,
+    Brand,
+}
+
+impl Mode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Mode::Exact => "eigh",
+            Mode::Rsvd => "rsvd",
+            Mode::Brand => "brand",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "eigh" => Some(Mode::Exact),
+            "rsvd" => Some(Mode::Rsvd),
+            "brand" => Some(Mode::Brand),
+            _ => None,
+        }
+    }
+}
+
+/// Per-factor adaptive state (all of it checkpointed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FactorAuto {
+    /// current adaptive rank (realized by the next overwrite)
+    pub rank: usize,
+    /// op family chosen for the current cadence window
+    pub mode: Mode,
+    /// probe-residual EWMA (0.5 old + 0.5 new); NaN-free by construction
+    pub err: f64,
+    /// probes folded into the EWMA so far
+    pub probes: u64,
+    /// mode switches so far
+    pub switches: u64,
+    /// rank changes so far
+    pub rank_changes: u64,
+}
+
+/// One checkpointed decision-log entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    pub step: u64,
+    pub factor: String,
+    pub op: String,
+    pub rank: usize,
+}
+
+/// Journal-bound engine event ("policy_decision" / "rank_change").
+/// Pending events are observability, not state: they are drained each
+/// round and deliberately NOT checkpointed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoEvent {
+    pub kind: &'static str,
+    pub step: u64,
+    pub factor: String,
+    pub op: String,
+    pub rank: usize,
+    pub prev_rank: usize,
+}
+
+/// The auto-policy engine owned by an `algo=auto` host session.
+#[derive(Clone, Debug)]
+pub struct AutoPolicy {
+    spec: AutoSpec,
+    factors: Vec<FactorAuto>,
+    log: Vec<Decision>,
+    pending: Vec<AutoEvent>,
+}
+
+/// d³ — full eigendecomposition.
+fn cost_eigh(d: usize) -> f64 {
+    let d = d as f64;
+    d * d * d
+}
+
+/// 2·d²·(r+4) — two tall matmuls of the randomized overwrite.
+fn cost_rsvd(d: usize, r: usize) -> f64 {
+    2.0 * (d as f64) * (d as f64) * (r as f64 + 4.0)
+}
+
+/// (T_inv/T_brand)·d·(r+n)² — all Brand updates in one window.
+fn cost_brand_window(d: usize, r: usize, n: usize, hyper: &Hyper) -> f64 {
+    let per_window = (hyper.t_inv / hyper.t_brand).max(1) as f64;
+    let w = (r + n) as f64;
+    per_window * (d as f64) * w * w
+}
+
+impl AutoPolicy {
+    /// Engine for `plans` starting from the wire spec. Initial mode is
+    /// `Rsvd` (always applicable); initial rank is the plan's rank
+    /// clamped into the spec's bounds.
+    pub fn new(spec: AutoSpec, plans: &[FactorPlan]) -> Result<AutoPolicy, String> {
+        spec.validate()?;
+        let factors = plans
+            .iter()
+            .map(|p| FactorAuto {
+                rank: p.rank.clamp(spec.rank_min, rank_max_for(&spec, p)),
+                mode: Mode::Rsvd,
+                err: 0.0,
+                probes: 0,
+                switches: 0,
+                rank_changes: 0,
+            })
+            .collect();
+        Ok(AutoPolicy {
+            spec,
+            factors,
+            log: Vec::new(),
+            pending: Vec::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &AutoSpec {
+        &self.spec
+    }
+
+    pub fn factor_states(&self) -> &[FactorAuto] {
+        &self.factors
+    }
+
+    pub fn decision_log(&self) -> &[Decision] {
+        &self.log
+    }
+
+    /// Current adaptive rank for factor `i`.
+    pub fn rank(&self, i: usize) -> usize {
+        self.factors[i].rank
+    }
+
+    /// Live spec retune (`set-policy`). Ranks re-clamp on the next
+    /// decision boundary, not retroactively — determinism requires the
+    /// change to enter the trajectory at a well-defined step.
+    pub fn set_spec(&mut self, spec: AutoSpec) -> Result<(), String> {
+        spec.validate()?;
+        self.spec = spec;
+        Ok(())
+    }
+
+    /// The plan the precond service should execute for factor `i` right
+    /// now: the base geometry with the adaptive rank substituted in
+    /// (sketch and correction width follow the session's derivation).
+    pub fn effective_plan(&self, plan: &FactorPlan, i: usize) -> FactorPlan {
+        let r = self.factors[i].rank;
+        let mut p = plan.clone();
+        p.rank = r;
+        p.sketch = r + 4;
+        p.n_crc = (r / 2).max(1);
+        p
+    }
+
+    /// The op the engine decided for step `k` — pure function of the
+    /// post-`op_at` state, used to label probe samples at install time.
+    pub fn planned_op(&self, k: usize, i: usize, plan: &FactorPlan, hyper: &Hyper) -> UpdateOp {
+        if k % hyper.t_updt != 0 {
+            return UpdateOp::None;
+        }
+        if k % hyper.t_inv == 0 {
+            return match self.factors[i].mode {
+                Mode::Exact => UpdateOp::ExactEvd,
+                _ => UpdateOp::Rsvd,
+            };
+        }
+        if self.factors[i].mode == Mode::Brand && brand_eligible(plan) && k % hyper.t_brand == 0 {
+            return UpdateOp::Brand;
+        }
+        UpdateOp::None
+    }
+
+    /// The decision function. Call once per factor per step, in factor
+    /// order — boundaries (k % T_inv == 0 on stat steps) probe the
+    /// installed rep against the Gram, fold the residual into the EWMA,
+    /// adapt the rank, re-pick the mode from the cost model, and emit
+    /// an overwrite; steps in between emit Brand on the Brand cadence
+    /// when that is the chosen mode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn op_at(
+        &mut self,
+        k: usize,
+        i: usize,
+        plan: &FactorPlan,
+        hyper: &Hyper,
+        gram: Option<&Mat>,
+        rep: Option<&LowRank>,
+        lambda: f32,
+    ) -> UpdateOp {
+        if k % hyper.t_updt != 0 {
+            return UpdateOp::None;
+        }
+        if k % hyper.t_inv != 0 {
+            let f = &self.factors[i];
+            if f.mode == Mode::Brand && brand_eligible(plan) && k % hyper.t_brand == 0 {
+                return UpdateOp::Brand;
+            }
+            return UpdateOp::None;
+        }
+
+        // ---- decision boundary ----
+        if k > 0 {
+            if let (Some(g), Some(r)) = (gram, rep) {
+                if g.rows == r.dim() {
+                    let e = probe::inversion_error(
+                        g,
+                        r,
+                        lambda,
+                        probe::label_seed(&plan.id) ^ k as u64,
+                    );
+                    let f = &mut self.factors[i];
+                    f.err = if f.probes == 0 { e } else { 0.5 * f.err + 0.5 * e };
+                    f.probes += 1;
+                }
+            }
+            self.adapt_rank(k, i, plan);
+        }
+        self.pick_mode(i, plan, hyper);
+
+        let op = match self.factors[i].mode {
+            Mode::Exact => UpdateOp::ExactEvd,
+            // the overwrite is what realizes a rank change (shrink
+            // truncates; grown zero-padded modes re-orthogonalize here)
+            _ => UpdateOp::Rsvd,
+        };
+        let rank = self.factors[i].rank;
+        self.push_decision(k as u64, plan, op, rank);
+        op
+    }
+
+    fn adapt_rank(&mut self, k: usize, i: usize, plan: &FactorPlan) {
+        let hi = rank_max_for(&self.spec, plan);
+        let f = &mut self.factors[i];
+        let prev = f.rank;
+        let next = if f.probes > 0 && f.err > self.spec.err_hi {
+            (f.rank + self.spec.rank_step).min(hi)
+        } else if f.probes > 0 && f.err < self.spec.err_lo {
+            f.rank.saturating_sub(self.spec.rank_step).max(self.spec.rank_min)
+        } else {
+            f.rank.clamp(self.spec.rank_min, hi)
+        };
+        if next != prev {
+            f.rank = next;
+            f.rank_changes += 1;
+            self.pending.push(AutoEvent {
+                kind: "rank_change",
+                step: k as u64,
+                factor: plan.id.clone(),
+                op: if next > prev { "grow" } else { "shrink" }.into(),
+                rank: next,
+                prev_rank: prev,
+            });
+        }
+    }
+
+    fn pick_mode(&mut self, i: usize, plan: &FactorPlan, hyper: &Hyper) {
+        let d = plan.dim;
+        let r = self.factors[i].rank;
+        let next = if d <= self.spec.exact_dim_max && cost_eigh(d) <= cost_rsvd(d, r) {
+            Mode::Exact
+        } else if brand_eligible(plan)
+            && d > r + plan.n
+            && cost_brand_window(d, r, plan.n, hyper) <= self.spec.brand_frac * cost_rsvd(d, r)
+        {
+            Mode::Brand
+        } else {
+            Mode::Rsvd
+        };
+        let f = &mut self.factors[i];
+        if next != f.mode {
+            f.mode = next;
+            f.switches += 1;
+        }
+    }
+
+    fn push_decision(&mut self, step: u64, plan: &FactorPlan, op: UpdateOp, rank: usize) {
+        if self.log.len() >= LOG_CAP {
+            self.log.remove(0);
+        }
+        self.log.push(Decision {
+            step,
+            factor: plan.id.clone(),
+            op: op.kind_label().to_string(),
+            rank,
+        });
+        self.pending.push(AutoEvent {
+            kind: "policy_decision",
+            step,
+            factor: plan.id.clone(),
+            op: op.kind_label().to_string(),
+            rank,
+            prev_rank: rank,
+        });
+    }
+
+    /// Drain journal-bound events (policy decisions + rank changes).
+    pub fn take_events(&mut self) -> Vec<AutoEvent> {
+        std::mem::take(&mut self.pending)
+    }
+
+    // ------------------------------------------------------- ckpt v1.3
+
+    /// Full engine state for `state.policy` (spec included — it is
+    /// live-tunable, so the *current* spec is state).
+    pub fn state_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", self.spec.to_json()),
+            (
+                "factors",
+                Json::arr(self.factors.iter().map(|f| {
+                    Json::obj(vec![
+                        ("rank", Json::Num(f.rank as f64)),
+                        ("mode", Json::str(f.mode.as_str())),
+                        ("err", Json::Num(f.err)),
+                        ("probes", Json::Num(f.probes as f64)),
+                        ("switches", Json::Num(f.switches as f64)),
+                        ("rank_changes", Json::Num(f.rank_changes as f64)),
+                    ])
+                })),
+            ),
+            (
+                "log",
+                Json::arr(self.log.iter().map(|d| {
+                    Json::obj(vec![
+                        ("step", Json::Num(d.step as f64)),
+                        ("factor", Json::str(&d.factor)),
+                        ("op", Json::str(&d.op)),
+                        ("rank", Json::Num(d.rank as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Rebuild the engine from `state.policy` (pending events start
+    /// empty — they are observability, not trajectory state).
+    pub fn from_state_json(j: &Json) -> Result<AutoPolicy, String> {
+        let spec = AutoSpec::from_json(j.get("spec").ok_or("policy state missing 'spec'")?)?;
+        let gf = |f: &Json, k: &str| -> Result<f64, String> {
+            f.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("policy factor state missing '{k}'"))
+        };
+        let factors = j
+            .get("factors")
+            .and_then(|v| v.as_arr())
+            .ok_or("policy state missing 'factors'")?
+            .iter()
+            .map(|f| {
+                let mode_s = f
+                    .get("mode")
+                    .and_then(|v| v.as_str())
+                    .ok_or("policy factor state missing 'mode'")?;
+                Ok(FactorAuto {
+                    rank: gf(f, "rank")? as usize,
+                    mode: Mode::parse(mode_s)
+                        .ok_or_else(|| format!("unknown policy mode '{mode_s}'"))?,
+                    err: gf(f, "err")?,
+                    probes: gf(f, "probes")? as u64,
+                    switches: gf(f, "switches")? as u64,
+                    rank_changes: gf(f, "rank_changes")? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let log = j
+            .get("log")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|d| {
+                Ok(Decision {
+                    step: gf(d, "step")? as u64,
+                    factor: d
+                        .get("factor")
+                        .and_then(|v| v.as_str())
+                        .ok_or("policy log entry missing 'factor'")?
+                        .to_string(),
+                    op: d
+                        .get("op")
+                        .and_then(|v| v.as_str())
+                        .ok_or("policy log entry missing 'op'")?
+                        .to_string(),
+                    rank: gf(d, "rank")? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(AutoPolicy {
+            spec,
+            factors,
+            log,
+            pending: Vec::new(),
+        })
+    }
+}
+
+/// Brand needs tall factors: the window update is only cheaper (and
+/// only well-posed in the Alg 6 sense) when d > r + n.
+fn brand_eligible(plan: &FactorPlan) -> bool {
+    plan.brand && plan.dim > plan.rank + plan.n
+}
+
+fn rank_max_for(spec: &AutoSpec, plan: &FactorPlan) -> usize {
+    let hard = plan.dim.saturating_sub(1).max(spec.rank_min);
+    if spec.rank_max > 0 {
+        spec.rank_max.min(hard)
+    } else {
+        (plan.dim / 2).max(spec.rank_min).min(hard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::factor::truncate_or_pad;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn plan(id: &str, dim: usize, rank: usize, brand: bool) -> FactorPlan {
+        FactorPlan {
+            id: id.into(),
+            layer: id.split('/').next().unwrap_or(id).into(),
+            kind: "fc".into(),
+            side: "A".into(),
+            dim,
+            rank,
+            sketch: rank + 4,
+            brand,
+            n: 8,
+            n_crc: (rank / 2).max(1),
+            ops: BTreeMap::new(),
+        }
+    }
+
+    fn hyper() -> Hyper {
+        Hyper {
+            t_updt: 2,
+            t_inv: 8,
+            t_brand: 2,
+            t_rsvd: 8,
+            t_corct: 8,
+            ..Hyper::default()
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_nonsense() {
+        assert!(AutoSpec::default().validate().is_ok());
+        for (label, bad) in [
+            ("inverted thresholds", AutoSpec { err_lo: 0.5, err_hi: 0.1, ..AutoSpec::default() }),
+            ("rank_min too small", AutoSpec { rank_min: 1, ..AutoSpec::default() }),
+            ("rank_max below min", AutoSpec { rank_max: 1, ..AutoSpec::default() }),
+            ("zero rank_step", AutoSpec { rank_step: 0, ..AutoSpec::default() }),
+            ("zero brand_frac", AutoSpec { brand_frac: 0.0, ..AutoSpec::default() }),
+            ("nan err_hi", AutoSpec { err_hi: f64::NAN, ..AutoSpec::default() }),
+        ] {
+            assert!(bad.validate().is_err(), "{label} accepted");
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrips_and_rejects_unknown_keys() {
+        let s = AutoSpec {
+            err_hi: 0.4,
+            err_lo: 0.02,
+            rank_min: 4,
+            rank_max: 32,
+            rank_step: 3,
+            brand_frac: 0.6,
+            exact_dim_max: 64,
+        };
+        let back = AutoSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // lenient: absent keys default
+        let partial = Json::parse(r#"{"err_hi": 0.5}"#).unwrap();
+        let p = AutoSpec::from_json(&partial).unwrap();
+        assert_eq!(p.err_hi, 0.5);
+        assert_eq!(p.rank_min, AutoSpec::default().rank_min);
+        // closed: unknown keys error
+        let bad = Json::parse(r#"{"errr_hi": 0.5}"#).unwrap();
+        let e = AutoSpec::from_json(&bad).unwrap_err();
+        assert!(e.contains("errr_hi"), "{e}");
+    }
+
+    #[test]
+    fn boundary_ops_are_overwrites_and_brand_fires_between() {
+        // huge dim + tiny rank → Brand wins the window cost model
+        let p = plan("fc0/A", 512, 8, true);
+        let h = hyper();
+        let mut eng = AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&p)).unwrap();
+        assert_eq!(eng.op_at(0, 0, &p, &h, None, None, 0.1), UpdateOp::Rsvd);
+        assert_eq!(eng.factor_states()[0].mode, Mode::Brand);
+        // between boundaries: Brand on the brand cadence, quiet off it
+        assert_eq!(eng.op_at(1, 0, &p, &h, None, None, 0.1), UpdateOp::None);
+        assert_eq!(eng.op_at(2, 0, &p, &h, None, None, 0.1), UpdateOp::Brand);
+        assert_eq!(eng.planned_op(2, 0, &p, &h), UpdateOp::Brand);
+        // ineligible factor (not brand-capable) never Brands
+        let q = plan("fc1/A", 512, 8, false);
+        let mut eng2 = AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&q)).unwrap();
+        eng2.op_at(0, 0, &q, &h, None, None, 0.1);
+        for k in 1..32usize {
+            assert_ne!(eng2.op_at(k, 0, &q, &h, None, None, 0.1), UpdateOp::Brand);
+        }
+    }
+
+    #[test]
+    fn small_factors_choose_exact() {
+        // d=16, r=12: d³ = 4096·? vs 2·d²·16 — eigh is cheaper and the
+        // dim is under exact_dim_max.
+        let p = plan("fc0/A", 16, 12, false);
+        let h = hyper();
+        let mut eng = AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&p)).unwrap();
+        assert_eq!(eng.op_at(0, 0, &p, &h, None, None, 0.1), UpdateOp::ExactEvd);
+        assert_eq!(eng.factor_states()[0].mode, Mode::Exact);
+    }
+
+    #[test]
+    fn high_error_grows_rank_and_low_error_shrinks_it() {
+        let p = plan("fc0/A", 64, 8, false);
+        let h = hyper();
+        let spec = AutoSpec {
+            exact_dim_max: 0, // force rsvd path
+            ..AutoSpec::default()
+        };
+        let mut eng = AutoPolicy::new(spec, std::slice::from_ref(&p)).unwrap();
+        let mut rng = Rng::new(3);
+        let gram = Mat::psd_with_decay(64, 0.9, &mut rng);
+        // a rank-2 rep of a slowly-decaying spectrum probes terribly
+        let starved = LowRank::from_eigh(&gram.eigh(), 2);
+        eng.op_at(0, 0, &p, &h, None, None, 0.1);
+        eng.op_at(8, 0, &p, &h, Some(&gram), Some(&starved), 0.1);
+        assert!(eng.factor_states()[0].err > 0.30, "err {}", eng.factor_states()[0].err);
+        assert_eq!(eng.rank(0), 10, "grew by rank_step");
+        assert_eq!(eng.factor_states()[0].rank_changes, 1);
+        // an exact rep probes ~0 → shrink back down
+        let exact = LowRank::from_eigh(&gram.eigh(), 64);
+        eng.op_at(16, 0, &p, &h, Some(&gram), Some(&exact), 0.1);
+        eng.op_at(24, 0, &p, &h, Some(&gram), Some(&exact), 0.1);
+        assert!(eng.rank(0) < 10);
+        let ev = eng.take_events();
+        assert!(ev.iter().any(|e| e.kind == "rank_change" && e.op == "grow"));
+        assert!(ev.iter().any(|e| e.kind == "rank_change" && e.op == "shrink"));
+        assert!(ev.iter().any(|e| e.kind == "policy_decision"));
+    }
+
+    #[test]
+    fn effective_plan_substitutes_the_adaptive_rank() {
+        let p = plan("fc0/A", 64, 8, false);
+        let mut eng = AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&p)).unwrap();
+        eng.factors[0].rank = 12;
+        let ep = eng.effective_plan(&p, 0);
+        assert_eq!((ep.rank, ep.sketch, ep.n_crc), (12, 16, 6));
+        assert_eq!(ep.dim, p.dim);
+        assert_eq!(p.rank, 8, "base plan untouched");
+    }
+
+    #[test]
+    fn state_json_roundtrips_bit_identically() {
+        let p = plan("fc0/A", 64, 8, true);
+        let h = hyper();
+        let mut eng = AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&p)).unwrap();
+        let mut rng = Rng::new(5);
+        let gram = Mat::psd_with_decay(64, 0.6, &mut rng);
+        let rep = LowRank::from_eigh(&gram.eigh(), 8);
+        for k in 0..40usize {
+            eng.op_at(k, 0, &p, &h, Some(&gram), Some(&rep), 0.1);
+        }
+        eng.take_events();
+        let snap = eng.state_json();
+        let back = AutoPolicy::from_state_json(&snap).unwrap();
+        assert_eq!(back.factor_states(), eng.factor_states());
+        assert_eq!(back.decision_log(), eng.decision_log());
+        assert_eq!(back.spec(), eng.spec());
+        assert_eq!(back.state_json().to_string_compact(), snap.to_string_compact());
+        // and the restored engine continues identically
+        let mut a = eng.clone();
+        let mut b = back;
+        for k in 40..80usize {
+            assert_eq!(
+                a.op_at(k, 0, &p, &h, Some(&gram), Some(&rep), 0.1),
+                b.op_at(k, 0, &p, &h, Some(&gram), Some(&rep), 0.1),
+                "diverged at k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn decision_log_is_bounded() {
+        let p = plan("fc0/A", 64, 8, false);
+        let h = hyper();
+        let mut eng = AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&p)).unwrap();
+        for k in (0..2048usize).step_by(8) {
+            eng.op_at(k, 0, &p, &h, None, None, 0.1);
+        }
+        assert_eq!(eng.decision_log().len(), LOG_CAP);
+        eng.take_events();
+    }
+
+    /// ISSUE 10 satellite: auto-policy determinism — the same measured
+    /// inputs produce the same decision sequence, bit for bit.
+    #[test]
+    fn prop_same_inputs_same_decisions() {
+        crate::util::proptest::check(
+            "auto engine determinism: same inputs => same decision sequence",
+            |rng| rng.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let dim = 16 + rng.next_below(48);
+                let rank = 4 + rng.next_below(6);
+                let p = plan("fc0/A", dim, rank, rng.next_below(2) == 0);
+                let h = hyper();
+                let gram = Mat::psd_with_decay(dim, 0.5, &mut rng);
+                let rep = LowRank::from_eigh(&gram.eigh(), rank);
+                let run = || {
+                    let mut eng =
+                        AutoPolicy::new(AutoSpec::default(), std::slice::from_ref(&p)).unwrap();
+                    let mut ops = Vec::new();
+                    for k in 0..64usize {
+                        ops.push(eng.op_at(k, 0, &p, &h, Some(&gram), Some(&rep), 0.1));
+                    }
+                    (ops, eng.state_json().to_string_compact())
+                };
+                let (ops_a, state_a) = run();
+                let (ops_b, state_b) = run();
+                if ops_a != ops_b {
+                    return Err(format!("op sequences diverged: {ops_a:?} vs {ops_b:?}"));
+                }
+                if state_a != state_b {
+                    return Err("engine states diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// ISSUE 10 satellite: rank-change parity — growing (zero-pad) and
+    /// shrinking (truncate) back to r bit-matches the never-changed rep,
+    /// and the next overwrite is independent of the rank history.
+    #[test]
+    fn prop_grow_then_shrink_parity() {
+        crate::util::proptest::check(
+            "grow-then-shrink back to r bit-matches never-changed",
+            |rng| rng.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let dim = 12 + rng.next_below(24);
+                let r = 3 + rng.next_below(4);
+                let grow = r + 1 + rng.next_below(4);
+                let gram = Mat::psd_with_decay(dim, 0.6, &mut rng);
+                let base = LowRank::from_eigh(&gram.eigh(), r);
+                // pad up then truncate back: must be bit-identical
+                let cycled = truncate_or_pad(&truncate_or_pad(&base, grow), r);
+                if cycled.u.data != base.u.data || cycled.d != base.d {
+                    return Err(format!("pad({grow})∘truncate({r}) not the identity"));
+                }
+                // the next overwrite sees only the Gram: a rep rebuilt
+                // at r after a rank excursion bit-matches one that
+                // never changed rank
+                let fresh_a = LowRank::from_eigh(&gram.eigh(), r);
+                let fresh_b = LowRank::from_eigh(&gram.eigh(), r);
+                if fresh_a.u.data != fresh_b.u.data || fresh_a.d != fresh_b.d {
+                    return Err("overwrite not a pure function of the Gram".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

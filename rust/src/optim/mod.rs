@@ -6,11 +6,13 @@
 //! the paper's framing (every algorithm is Alg 1 with lines 12–13
 //! replaced).
 
+pub mod autopolicy;
 pub mod factor;
 pub mod layer;
 pub mod policy;
 pub mod seng;
 
+pub use autopolicy::{AutoPolicy, AutoSpec};
 pub use factor::{FactorSnapshot, FactorState, OpRequest};
 pub use layer::LayerState;
 pub use policy::{Algo, Policy, UpdateOp};
@@ -65,6 +67,46 @@ impl Default for Hyper {
 }
 
 impl Hyper {
+    /// Cadence invariants (ISSUE 10 bugfix). `Policy::op_at` computes
+    /// `k % T` for every period, so a zero period is a modulo-by-zero
+    /// panic; and because ops only ever fire on stat steps
+    /// (`k % t_updt == 0`), a period that is not a multiple of `t_updt`
+    /// would silently fire on `lcm(T, t_updt)` instead of the requested
+    /// cadence. Reject both loudly, at construction time, before any
+    /// step runs.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.t_updt == 0 {
+            return Err(
+                "t_updt = 0: the stat-update period must be >= 1 \
+                 (zero would divide by zero in Policy::op_at)"
+                    .into(),
+            );
+        }
+        for (name, v) in [
+            ("t_inv", self.t_inv),
+            ("t_brand", self.t_brand),
+            ("t_rsvd", self.t_rsvd),
+            ("t_corct", self.t_corct),
+        ] {
+            if v == 0 {
+                return Err(format!(
+                    "{name} = 0: inverse-update periods must be >= 1 \
+                     (zero would divide by zero in Policy::op_at)"
+                ));
+            }
+            if v % self.t_updt != 0 {
+                return Err(format!(
+                    "{name} = {v} is not a multiple of t_updt = {t}: \
+                     inverse updates only fire on stat steps, so this \
+                     cadence would silently fire every lcm({v}, {t}) \
+                     steps instead of every {v}",
+                    t = self.t_updt
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Paper §6 learning-rate schedule:
     /// α = 0.3 − 0.1·1[e≥2] − 0.1·1[e≥3] − 0.07·1[e≥13] − 0.02·1[e≥18]
     ///       − 0.007·1[e≥27] − 0.002·1[e≥40]
@@ -115,5 +157,39 @@ mod tests {
         assert!((h.phi_lambda(0) - 0.1).abs() < 1e-6);
         assert!((h.phi_lambda(25) - 0.05).abs() < 1e-6);
         assert!((h.phi_lambda(35) - 0.01).abs() < 1e-6);
+    }
+
+    // ----------------------- cadence validation (ISSUE 10 regression)
+
+    #[test]
+    fn default_hyper_validates() {
+        assert!(Hyper::default().validate().is_ok());
+    }
+
+    #[test]
+    fn zero_periods_are_rejected_not_panics() {
+        for field in ["t_updt", "t_inv", "t_brand", "t_rsvd", "t_corct"] {
+            let mut h = Hyper::default();
+            match field {
+                "t_updt" => h.t_updt = 0,
+                "t_inv" => h.t_inv = 0,
+                "t_brand" => h.t_brand = 0,
+                "t_rsvd" => h.t_rsvd = 0,
+                _ => h.t_corct = 0,
+            }
+            let err = h.validate().expect_err(field);
+            assert!(err.contains(field), "{field}: {err}");
+            assert!(err.contains("zero"), "{field}: {err}");
+        }
+    }
+
+    #[test]
+    fn non_multiple_cadences_are_rejected_with_the_lcm_explanation() {
+        let mut h = Hyper::default(); // t_updt = 25
+        h.t_inv = 30; // not a multiple: would silently fire every 150
+        let err = h.validate().expect_err("non-multiple t_inv");
+        assert!(err.contains("t_inv = 30"), "{err}");
+        assert!(err.contains("not a multiple of t_updt = 25"), "{err}");
+        assert!(err.contains("lcm"), "{err}");
     }
 }

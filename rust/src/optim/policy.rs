@@ -1,9 +1,15 @@
-//! Inverse-update policies — the one place the six algorithms differ.
+//! Inverse-update policies — the one place the seven algorithms differ.
 //!
 //! Cadences follow the paper exactly: all periods are measured in
 //! optimizer iterations, updates fire when `k % T == 0` (k = 0 included,
 //! which performs the initializing decomposition — B-algorithms "start
 //! our Ũ₀, D̃₀ from an RSVD in practice", §3.1).
+//!
+//! [`Algo::Auto`] is the cost-model-driven policy (DESIGN.md §18): the
+//! per-factor op and rank are chosen online by
+//! [`AutoPolicy`](crate::optim::autopolicy::AutoPolicy). The static
+//! `op_at` below only carries its conservative fallback (periodic RSVD
+//! overwrites) for contexts without an engine attached.
 
 use super::Hyper;
 use crate::runtime::FactorPlan;
@@ -17,6 +23,8 @@ pub enum Algo {
     BKfac,
     BRKfac,
     BKfacC,
+    /// cost-model-driven per-factor op + online rank (DESIGN.md §18)
+    Auto,
 }
 
 impl Algo {
@@ -29,6 +37,7 @@ impl Algo {
             "bkfac" | "b-kfac" => Algo::BKfac,
             "brkfac" | "b-r-kfac" => Algo::BRKfac,
             "bkfacc" | "b-kfac-c" => Algo::BKfacC,
+            "auto" => Algo::Auto,
             _ => return None,
         })
     }
@@ -42,6 +51,9 @@ impl Algo {
             Algo::BKfac => "B-KFAC",
             Algo::BRKfac => "B-R-KFAC",
             Algo::BKfacC => "B-KFAC-C",
+            // lowercases to "auto", which `parse` accepts — checkpoints
+            // store `name().to_ascii_lowercase()` and must round-trip
+            Algo::Auto => "AUTO",
         }
     }
 
@@ -103,12 +115,19 @@ pub struct Policy {
 
 impl Policy {
     pub fn new(algo: Algo, hyper: Hyper) -> Policy {
+        debug_assert!(
+            hyper.validate().is_ok(),
+            "invalid cadences reached Policy::new: {}",
+            hyper.validate().unwrap_err()
+        );
         Policy { algo, hyper }
     }
 
     /// Does this factor receive B-updates under this policy?
     /// Paper §3.5/§6: only *eligible* factors (d > r + n, FC layers), and
     /// in the experiments only the first FC layer's factors.
+    /// `Auto` is deliberately excluded: its Brand decisions come from the
+    /// engine per window, so the static policy never claims a factor.
     pub fn brand_managed(&self, f: &FactorPlan) -> bool {
         if !matches!(self.algo, Algo::BKfac | Algo::BRKfac | Algo::BKfacC) {
             return false;
@@ -209,6 +228,17 @@ impl Policy {
                         UpdateOp::None
                     }
                 } else if k % h.t_inv == 0 {
+                    UpdateOp::Rsvd
+                } else {
+                    UpdateOp::None
+                }
+            }
+            // engine-less fallback: R-KFAC-style periodic overwrites.
+            // The real Auto schedule comes from `AutoPolicy::op_at`
+            // (consulted by the host session); this arm only runs when
+            // no engine is attached, and never emits Brand ops.
+            Algo::Auto => {
+                if k % h.t_inv == 0 {
                     UpdateOp::Rsvd
                 } else {
                     UpdateOp::None
@@ -337,9 +367,133 @@ mod tests {
             ("b-kfac", Algo::BKfac),
             ("brkfac", Algo::BRKfac),
             ("b-kfac-c", Algo::BKfacC),
+            ("auto", Algo::Auto),
         ] {
             assert_eq!(Algo::parse(s), Some(a));
         }
         assert_eq!(Algo::parse("adam"), None);
+    }
+
+    #[test]
+    fn every_algo_name_roundtrips_through_parse() {
+        // checkpoints persist `name().to_ascii_lowercase()`
+        for a in [
+            Algo::Sgd,
+            Algo::Seng,
+            Algo::KfacExact,
+            Algo::RKfac,
+            Algo::BKfac,
+            Algo::BRKfac,
+            Algo::BKfacC,
+            Algo::Auto,
+        ] {
+            assert_eq!(Algo::parse(&a.name().to_ascii_lowercase()), Some(a));
+        }
+    }
+
+    #[test]
+    fn auto_fallback_never_brands_and_keeps_the_gram() {
+        let p = Policy::new(Algo::Auto, hyper_small());
+        let f = fc_factor(true, "fc0");
+        assert!(!p.brand_managed(&f), "auto defers Brand choices to the engine");
+        assert!(p.needs_gram(&f), "auto overwrites and probes need the Gram");
+        assert_eq!(p.op_at(0, &f), UpdateOp::Rsvd);
+        assert_eq!(p.op_at(10, &f), UpdateOp::None);
+        assert_eq!(p.op_at(50, &f), UpdateOp::Rsvd);
+    }
+
+    // --------------------------- policy-layer proptests (ISSUE 10)
+
+    const ALL_ALGOS: [Algo; 8] = [
+        Algo::Sgd,
+        Algo::Seng,
+        Algo::KfacExact,
+        Algo::RKfac,
+        Algo::BKfac,
+        Algo::BRKfac,
+        Algo::BKfacC,
+        Algo::Auto,
+    ];
+
+    /// A random hyper that passes `Hyper::validate`: every period is a
+    /// nonzero multiple of a small random `t_updt`.
+    fn rand_valid_hyper(rng: &mut crate::util::rng::Rng) -> Hyper {
+        let t_updt = 1 + rng.next_below(5);
+        let mut h = Hyper {
+            t_updt,
+            t_inv: t_updt * (1 + rng.next_below(6)),
+            t_brand: t_updt * (1 + rng.next_below(6)),
+            t_rsvd: t_updt * (1 + rng.next_below(6)),
+            t_corct: t_updt * (1 + rng.next_below(6)),
+            ..Hyper::default()
+        };
+        h.brand_layer = match rng.next_below(3) {
+            0 => None,
+            1 => Some("fc0".into()),
+            _ => Some("fc1".into()),
+        };
+        h.validate().expect("generator must emit valid hypers");
+        h
+    }
+
+    #[test]
+    fn prop_op_at_fires_only_on_stat_steps() {
+        crate::util::proptest::check(
+            "op_at fires only on stat steps, for any valid hyper",
+            |rng| {
+                let h = rand_valid_hyper(rng);
+                let algo = ALL_ALGOS[rng.next_below(ALL_ALGOS.len())];
+                let brand = rng.next_below(2) == 0;
+                (algo, h, brand)
+            },
+            |(algo, h, brand)| {
+                let p = Policy::new(*algo, h.clone());
+                let f = fc_factor(*brand, "fc0");
+                for k in 0..200usize {
+                    let op = p.op_at(k, &f);
+                    if k % h.t_updt != 0 && op != UpdateOp::None {
+                        return Err(format!(
+                            "{algo:?}: op {op:?} fired at off-stat step {k} \
+                             (t_updt = {})",
+                            h.t_updt
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_brand_ops_only_for_brand_managed_factors() {
+        crate::util::proptest::check(
+            "Brand/BrandCorrect only ever fire on brand_managed factors",
+            |rng| {
+                let h = rand_valid_hyper(rng);
+                let algo = ALL_ALGOS[rng.next_below(ALL_ALGOS.len())];
+                let brand = rng.next_below(2) == 0;
+                let layer = if rng.next_below(2) == 0 { "fc0" } else { "fc1" };
+                (algo, h, brand, layer)
+            },
+            |(algo, h, brand, layer)| {
+                let p = Policy::new(*algo, h.clone());
+                let f = fc_factor(*brand, layer);
+                if p.brand_managed(&f) {
+                    return Ok(()); // the property constrains the others
+                }
+                for k in 0..200usize {
+                    let op = p.op_at(k, &f);
+                    if matches!(op, UpdateOp::Brand | UpdateOp::BrandCorrect) {
+                        return Err(format!(
+                            "{algo:?}: {op:?} at k={k} on a factor the \
+                             policy does not brand-manage (brand={brand}, \
+                             layer={layer}, brand_layer={:?})",
+                            h.brand_layer
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

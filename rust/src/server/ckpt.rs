@@ -25,20 +25,22 @@ use crate::coordinator::{TrainerCfg, TrainerState};
 use crate::linalg::{LowRank, Mat};
 use crate::optim::factor::FactorSnapshot;
 use crate::optim::seng::NamedBufs;
-use crate::optim::{Algo, Hyper};
+use crate::optim::{Algo, AutoPolicy, Hyper};
 use crate::precond::{PrecondCfg, PrecondService};
 use crate::util::rng::{Rng, RngState};
 use crate::util::ser::Json;
 
-use super::proto::{opt_quota_from, quota_json, QuotaSpec};
+use super::proto::{opt_policy_from, opt_quota_from, policy_json, quota_json, QuotaSpec};
 use super::session::{HostSession, HostSessionCfg, ModelSession};
 
 pub const FORMAT: &str = "bnkfac-ckpt";
 /// 1.1 added the `state.seng` buffers (SENG checkpointing); 1.2 added
 /// the optional top-level `quota` (resource-governor ceilings survive a
-/// restore). Both sections are optional to the decoder, so 1.0/1.1
-/// checkpoints still restore.
-pub const VERSION: f64 = 1.2;
+/// restore); 1.3 added the optional `cfg.policy` spec and `state.policy`
+/// auto-engine state (`algo=auto` decisions, ranks, decision log). All
+/// three sections are optional to the decoder, so v1.0–v1.2 checkpoints
+/// still restore bit-identically.
+pub const VERSION: f64 = 1.3;
 
 // ---------------------------------------------------------- primitives
 
@@ -207,6 +209,8 @@ pub(crate) fn host_cfg_json(c: &HostSessionCfg) -> Json {
         ("steps", Json::Num(c.steps as f64)),
         ("rho", Json::Num(c.rho as f64)),
         ("lambda", Json::Num(c.lambda as f64)),
+        // v1.3: the auto-engine spec the session was created with
+        ("policy", opt_json(c.policy.as_ref().map(policy_json))),
     ])
 }
 
@@ -223,6 +227,8 @@ pub fn host_cfg_from(j: &Json) -> Result<HostSessionCfg> {
         steps: req_f64(j, "steps")? as u64,
         rho: req_f64(j, "rho")? as f32,
         lambda: req_f64(j, "lambda")? as f32,
+        // absent / null on pre-1.3 checkpoints
+        policy: opt_policy_from(j.get("policy"))?,
     })
 }
 
@@ -278,6 +284,11 @@ pub fn encode_host(
                 ),
                 ("params", Json::Arr(hs.params.iter().map(mat_json).collect())),
                 ("factors", Json::Arr(factors)),
+                // v1.3: auto-engine decision state (Null for fixed algos)
+                (
+                    "policy",
+                    opt_json(hs.auto.as_ref().map(|a| a.state_json())),
+                ),
             ]),
         ),
     ]))
@@ -340,6 +351,17 @@ pub fn decode_host(j: &Json) -> Result<HostRestore> {
         let chain = opt_lowrank_from(fj.get("chain"))?;
         let chain_step = req_f64(fj, "chain_step")? as u64;
         chains.push((chain, chain_step));
+    }
+    // v1.3 auto-engine state; absent/null (pre-1.3 or fixed algo) keeps
+    // whatever HostSession::new built from cfg (a fresh engine for
+    // algo=auto, None otherwise)
+    match st.get("policy") {
+        None | Some(Json::Null) => {}
+        Some(pj) => {
+            hs.auto = Some(
+                AutoPolicy::from_state_json(pj).map_err(|e| anyhow!("policy state: {e}"))?,
+            );
+        }
     }
     Ok(HostRestore {
         name: req_str(j, "name")?.to_string(),
@@ -730,5 +752,32 @@ mod tests {
         assert_eq!(back.seed, u64::MAX - 7);
         assert_eq!(back.dim, cfg.dim);
         assert_eq!(back.steps, cfg.steps);
+        assert!(back.policy.is_none());
+    }
+
+    #[test]
+    fn host_cfg_roundtrip_with_policy_spec() {
+        use crate::optim::AutoSpec;
+        let cfg = HostSessionCfg {
+            algo: Algo::Auto,
+            policy: Some(AutoSpec {
+                err_hi: 0.4,
+                rank_step: 3,
+                ..AutoSpec::default()
+            }),
+            ..HostSessionCfg::default()
+        };
+        let j = host_cfg_json(&cfg);
+        let back = host_cfg_from(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.algo, Algo::Auto);
+        let p = back.policy.expect("policy survives the checkpoint");
+        assert_eq!(p.err_hi, 0.4);
+        assert_eq!(p.rank_step, 3);
+        // a pre-1.3 cfg (no policy key at all) still decodes
+        let mut legacy = j.clone();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("policy");
+        }
+        assert!(host_cfg_from(&legacy).unwrap().policy.is_none());
     }
 }

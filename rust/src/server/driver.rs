@@ -258,6 +258,11 @@ impl<'rt> ServerCore<'rt> {
                     ("step", Json::Num(step as f64)),
                 ]))
             }
+            Command::SetPolicy { name, policy } => {
+                let id = self.lookup(name)?;
+                self.mgr.set_policy(id, policy.clone())?;
+                Ok(Json::obj(vec![("name", Json::str(name))]))
+            }
             Command::Drop { name } => {
                 let id = self.lookup(name)?;
                 self.mgr.drop_session(id)?;

@@ -21,7 +21,8 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::coordinator::{Trainer, TrainerCfg};
 use crate::data::Dataset;
-use crate::metrics::{ServerRecord, SessionRecord};
+use crate::metrics::{PolicyFactorRecord, PolicyRecord, ServerRecord, SessionRecord};
+use crate::optim::AutoSpec;
 use crate::obs::{Hist, Journal, SeriesStore};
 use crate::precond::{PrecondCfg, PrecondService};
 use crate::runtime::Runtime;
@@ -476,6 +477,26 @@ impl<'rt> SessionManager<'rt> {
         Ok(())
     }
 
+    /// Swap a running `algo = auto` session's policy spec (wire
+    /// `set-policy`). Validation happens inside the engine; sessions on
+    /// a fixed algorithm (or model sessions, which have no auto engine)
+    /// reject with a "needs algo=auto" error that the wire layer maps
+    /// to `bad_request`. Ranks re-clamp into the new bounds at the next
+    /// cadence boundary — mid-window state is never mutated, so the
+    /// decision log stays a pure function of checkpointed state.
+    pub fn set_policy(&mut self, id: u64, spec: AutoSpec) -> Result<()> {
+        let s = self.get_mut(id)?;
+        let name = s.name.clone();
+        match &mut s.work {
+            Workload::Host(h) => h
+                .set_policy(spec)
+                .map_err(|e| anyhow!("session '{name}': {e}")),
+            Workload::Model(_) => {
+                bail!("session '{name}': needs algo=auto for set-policy (model session)")
+            }
+        }
+    }
+
     /// Drop a session mid-queue: its queued decomposition ops are
     /// cancelled and the tenant leaves the scheduler (see
     /// `PrecondService::drop`); the shared pool and all other sessions
@@ -663,6 +684,31 @@ impl<'rt> SessionManager<'rt> {
                 continue;
             }
             stats.stepped += 1;
+            // drain the auto-policy engine's pending events every round
+            // (even without a journal — the buffer must not grow
+            // unboundedly); with a journal attached they land in the
+            // trace as `policy_decision` / `rank_change` events
+            if let Workload::Host(h) = &mut s.work {
+                if let Some(eng) = h.auto.as_mut() {
+                    let events = eng.take_events();
+                    if let Some(j) = &self.journal {
+                        for ev in events {
+                            j.emit_kv(
+                                self.round,
+                                ev.kind,
+                                vec![
+                                    ("sid", Json::Num(id as f64)),
+                                    ("step", Json::Num(ev.step as f64)),
+                                    ("factor", Json::str(&ev.factor)),
+                                    ("op", Json::str(&ev.op)),
+                                    ("rank", Json::Num(ev.rank as f64)),
+                                    ("prev_rank", Json::Num(ev.prev_rank as f64)),
+                                ],
+                            );
+                        }
+                    }
+                }
+            }
             if s.done() {
                 s.status = SessionStatus::Done;
             }
@@ -917,6 +963,24 @@ impl<'rt> SessionManager<'rt> {
                 (_, Some(svc)) => Some(svc.record()),
                 _ => None,
             };
+            let policy = match &s.work {
+                Workload::Host(h) => h.auto.as_ref().map(|eng| PolicyRecord {
+                    factors: eng
+                        .factor_states()
+                        .iter()
+                        .zip(h.factors.iter())
+                        .map(|(fa, f)| PolicyFactorRecord {
+                            id: f.plan.id.clone(),
+                            op: fa.mode.as_str().to_string(),
+                            rank: fa.rank,
+                            err: fa.err,
+                            switches: fa.switches,
+                            rank_changes: fa.rank_changes,
+                        })
+                        .collect(),
+                }),
+                Workload::Model(_) => None,
+            };
             sessions.push(SessionRecord {
                 id: s.id,
                 name: s.name.clone(),
@@ -938,6 +1002,7 @@ impl<'rt> SessionManager<'rt> {
                 error: s.error.clone().unwrap_or_default(),
                 probes,
                 service,
+                policy,
             });
         }
         // Jain fairness over weight-normalized service rates. Tenants

@@ -17,6 +17,7 @@
 //! {"op": "create-model","name": "m", "weight": 1, "model": {…}, "dataset": {…}, "quota": {…}?}
 //! {"op": "pause",      "name": "a"}
 //! {"op": "resume",     "name": "a"}
+//! {"op": "set-policy", "name": "a", "policy": {…}}
 //! {"op": "checkpoint", "name": "a", "path": "results/a.json"}
 //! {"op": "restore",    "name": "b", "path": "results/a.json", "dataset": {…}?}
 //! {"op": "drop",       "name": "a"}
@@ -48,7 +49,7 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::optim::Algo;
+use crate::optim::{Algo, AutoSpec};
 use crate::util::rng::SplitMix64;
 use crate::util::ser::Json;
 
@@ -309,6 +310,27 @@ pub fn opt_quota_from(j: Option<&Json>) -> Result<Option<QuotaSpec>> {
     }
 }
 
+/// Wire decode of an auto-engine policy spec (`policy` key of `create`
+/// session specs and body of `set-policy`). Lenient fields, unknown
+/// keys rejected, thresholds validated — all in `AutoSpec::from_json`.
+pub fn policy_from(j: &Json) -> Result<AutoSpec> {
+    AutoSpec::from_json(j).map_err(|e| anyhow!("{e}"))
+}
+
+/// Encode a policy spec for checkpoints, `stats` replies and requests.
+pub fn policy_json(p: &AutoSpec) -> Json {
+    p.to_json()
+}
+
+/// Decode an optional policy attachment. Absent or null = none (the
+/// auto engine then runs with `AutoSpec::default`).
+pub fn opt_policy_from(j: Option<&Json>) -> Result<Option<AutoSpec>> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(p) => Ok(Some(policy_from(p)?)),
+    }
+}
+
 /// One lifecycle command against the session server. Shared by the
 /// scripted job driver (a timeline of commands) and the socket frontend
 /// (a stream of them) — both are applied between serving rounds by
@@ -337,6 +359,13 @@ pub enum Command {
     },
     Resume {
         name: String,
+    },
+    /// Retune a running `algo=auto` session's policy spec live (the
+    /// accuracy-vs-latency dial; takes effect at the session's next
+    /// decision boundary).
+    SetPolicy {
+        name: String,
+        policy: AutoSpec,
     },
     /// Serialize the named session to a server-side file path.
     Checkpoint {
@@ -375,6 +404,7 @@ impl Command {
             Command::CreateModel { .. } => "create-model",
             Command::Pause { .. } => "pause",
             Command::Resume { .. } => "resume",
+            Command::SetPolicy { .. } => "set-policy",
             Command::Checkpoint { .. } => "checkpoint",
             Command::Restore { .. } => "restore",
             Command::Drop { .. } => "drop",
@@ -506,6 +536,11 @@ pub fn validate_host_cfg(c: &HostSessionCfg) -> Result<()> {
         "session 'lambda' must be finite and non-negative, got {}",
         c.lambda
     );
+    ensure!(
+        c.policy.is_none() || c.algo == Algo::Auto,
+        "session 'policy' spec needs algo = auto (got algo = {})",
+        c.algo.name()
+    );
     Ok(())
 }
 
@@ -518,7 +553,7 @@ pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
     ensure!(matches!(j, Json::Obj(_)), "session spec must be an object");
     reject_unknown(
         j,
-        &[SESSION_NUM_KEYS, &["algo", "seed"][..]].concat(),
+        &[SESSION_NUM_KEYS, &["algo", "seed", "policy"][..]].concat(),
         "session spec",
     )?;
     let d = HostSessionCfg::default();
@@ -538,6 +573,7 @@ pub fn host_cfg_lenient(j: &Json) -> Result<HostSessionCfg> {
         steps: j.get("steps").and_then(|v| v.as_f64()).unwrap_or(d.steps as f64) as u64,
         rho: opt_f32(j, "rho", d.rho),
         lambda: opt_f32(j, "lambda", d.lambda),
+        policy: opt_policy_from(j.get("policy"))?,
     };
     validate_host_cfg(&cfg)?;
     Ok(cfg)
@@ -648,6 +684,13 @@ pub fn command_from_json(j: &Json) -> Result<Command> {
         },
         "pause" => Command::Pause { name: name()? },
         "resume" => Command::Resume { name: name()? },
+        "set-policy" | "set_policy" => Command::SetPolicy {
+            name: name()?,
+            policy: policy_from(
+                j.get("policy")
+                    .ok_or_else(|| anyhow!("'set-policy' needs a 'policy' spec"))?,
+            )?,
+        },
         "checkpoint" => Command::Checkpoint {
             name: name()?,
             path: path()?,
@@ -733,6 +776,10 @@ pub fn command_to_json(c: &Command) -> Json {
         }
         Command::Pause { name } | Command::Resume { name } | Command::Drop { name } => {
             pairs.push(("name", Json::str(name)));
+        }
+        Command::SetPolicy { name, policy } => {
+            pairs.push(("name", Json::str(name)));
+            pairs.push(("policy", policy_json(policy)));
         }
         Command::Checkpoint { name, path } => {
             pairs.push(("name", Json::str(name)));
@@ -909,6 +956,54 @@ mod tests {
     }
 
     #[test]
+    fn set_policy_requests_parse_and_validate() {
+        let cmd = parse_request(
+            r#"{"op": "set-policy", "name": "a", "policy": {"err_hi": 0.4, "rank_step": 4}}"#,
+        )
+        .unwrap();
+        match cmd {
+            Command::SetPolicy { name, policy } => {
+                assert_eq!(name, "a");
+                assert_eq!(policy.err_hi, 0.4);
+                assert_eq!(policy.rank_step, 4);
+                assert_eq!(policy.rank_min, AutoSpec::default().rank_min);
+            }
+            other => panic!("{other:?}"),
+        }
+        // inverted thresholds are a bad request, not a silent accept
+        let (code, msg) = parse_request(
+            r#"{"op": "set-policy", "name": "a", "policy": {"err_lo": 0.9, "err_hi": 0.1}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(code, E_BAD_REQUEST);
+        assert!(msg.contains("err_lo"), "{msg}");
+        // the spec is mandatory
+        let (code, _) =
+            parse_request(r#"{"op": "set-policy", "name": "a"}"#).unwrap_err();
+        assert_eq!(code, E_BAD_REQUEST);
+        // a create-time policy block needs algo=auto…
+        let (code, msg) = parse_request(
+            r#"{"op": "create", "name": "x", "session": {"policy": {}}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(code, E_BAD_REQUEST);
+        assert!(msg.contains("algo = auto"), "{msg}");
+        // …and parses cleanly with it
+        let cmd = parse_request(
+            r#"{"op": "create", "name": "x",
+                "session": {"algo": "auto", "policy": {"err_hi": 0.5}}}"#,
+        )
+        .unwrap();
+        match cmd {
+            Command::Create { session, .. } => {
+                assert_eq!(session.algo, Algo::Auto);
+                assert_eq!(session.policy.unwrap().err_hi, 0.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn request_requires_op_and_name() {
         assert!(parse_request("{}").is_err());
         let (code, _) = parse_request(r#"{"op": "pause"}"#).unwrap_err();
@@ -1016,7 +1111,20 @@ mod tests {
         Algo::BKfac,
         Algo::BRKfac,
         Algo::BKfacC,
+        Algo::Auto,
     ];
+
+    fn rand_policy(rng: &mut crate::util::rng::Rng) -> AutoSpec {
+        AutoSpec {
+            err_hi: 0.2 + rng.next_below(1000) as f64 / 1000.0,
+            err_lo: rng.next_below(100) as f64 / 1000.0,
+            rank_min: 2 + rng.next_below(4),
+            rank_max: 0,
+            rank_step: 1 + rng.next_below(4),
+            brand_frac: 0.1 + rng.next_below(900) as f64 / 1000.0,
+            exact_dim_max: rng.next_below(256),
+        }
+    }
 
     fn rand_name(rng: &mut crate::util::rng::Rng) -> String {
         let n = 1 + rng.next_below(12);
@@ -1027,6 +1135,10 @@ mod tests {
 
     fn rand_session(rng: &mut crate::util::rng::Rng) -> HostSessionCfg {
         let dim = 1 + rng.next_below(96);
+        let algo = ALGOS[rng.next_below(ALGOS.len())];
+        // a policy block is only valid on algo=auto sessions
+        let policy = (algo == Algo::Auto && rng.next_below(2) == 0)
+            .then(|| rand_policy(rng));
         HostSessionCfg {
             factors: 1 + rng.next_below(4),
             dim,
@@ -1034,11 +1146,12 @@ mod tests {
             n_stat: 1 + rng.next_below(16),
             grad_cols: 1 + rng.next_below(16),
             t_updt: 1 + rng.next_below(8),
-            algo: ALGOS[rng.next_below(ALGOS.len())],
+            algo,
             seed: rng.next_u64(),
             steps: 1 + rng.next_below(100_000) as u64,
             rho: (1 + rng.next_below(1000)) as f32 / 1000.0,
             lambda: rng.next_f32(),
+            policy,
         }
     }
 
@@ -1059,7 +1172,7 @@ mod tests {
     }
 
     fn rand_command(rng: &mut crate::util::rng::Rng) -> Command {
-        match rng.next_below(11) {
+        match rng.next_below(12) {
             0 => Command::Create {
                 name: rand_name(rng),
                 weight: (1 + rng.next_below(1000)) as u32,
@@ -1114,6 +1227,10 @@ mod tests {
                         (MAX_STREAM_INTERVAL_MS - MIN_STREAM_INTERVAL_MS + 1) as usize,
                     ) as u64,
                 frames: rng.next_below(1_000_000) as u64,
+            },
+            10 => Command::SetPolicy {
+                name: rand_name(rng),
+                policy: rand_policy(rng),
             },
             _ => Command::Shutdown,
         }

@@ -29,7 +29,7 @@ use crate::data::{Batch, Dataset};
 use crate::linalg::Mat;
 use crate::obs::ProbeRecorder;
 use crate::optim::factor::{OpRequest, Stat};
-use crate::optim::{Algo, FactorState, Hyper, Policy};
+use crate::optim::{Algo, AutoPolicy, AutoSpec, FactorState, Hyper, Policy};
 use crate::precond::PrecondService;
 use crate::runtime::FactorPlan;
 use crate::util::rng::{Rng, RngState};
@@ -58,6 +58,8 @@ pub struct HostSessionCfg {
     pub rho: f32,
     /// damping for the inverse application
     pub lambda: f32,
+    /// auto-engine spec (`algo = auto` only); None = engine defaults
+    pub policy: Option<AutoSpec>,
 }
 
 impl Default for HostSessionCfg {
@@ -74,6 +76,7 @@ impl Default for HostSessionCfg {
             steps: 24,
             rho: 0.95,
             lambda: 0.1,
+            policy: None,
         }
     }
 }
@@ -130,14 +133,23 @@ pub struct HostSession {
     /// sampled inversion-error probes (DESIGN.md §14.3). Own RNG stream,
     /// results only recorded — NOT part of the trajectory or checkpoint.
     pub probe: ProbeRecorder,
+    /// the `algo = auto` decision engine (DESIGN.md §18); None for
+    /// every fixed algorithm. Its state IS trajectory state and is
+    /// checkpointed (ckpt v1.3 `state.policy`).
+    pub auto: Option<AutoPolicy>,
 }
 
 impl HostSession {
     pub fn new(cfg: HostSessionCfg) -> HostSession {
         let policy = policy_for(&cfg);
-        let factors: Vec<FactorState> = (0..cfg.factors)
-            .map(|i| {
-                let p = plan_for(&cfg, i);
+        let plans: Vec<FactorPlan> = (0..cfg.factors).map(|i| plan_for(&cfg, i)).collect();
+        let auto = (cfg.algo == Algo::Auto).then(|| {
+            AutoPolicy::new(cfg.policy.clone().unwrap_or_default(), &plans)
+                .expect("policy spec is validated at the wire / checkpoint boundary")
+        });
+        let factors: Vec<FactorState> = plans
+            .into_iter()
+            .map(|p| {
                 let keep = policy.needs_gram(&p);
                 FactorState::new(p, keep)
             })
@@ -157,6 +169,15 @@ impl HostSession {
             last_installed: vec![-1; n],
             loss_proxy: 0.0,
             probe: ProbeRecorder::default(),
+            auto,
+        }
+    }
+
+    /// Live `set-policy` retune; only meaningful with the auto engine.
+    pub fn set_policy(&mut self, spec: AutoSpec) -> Result<(), String> {
+        match self.auto.as_mut() {
+            Some(eng) => eng.set_spec(spec),
+            None => Err("needs algo=auto for set-policy".into()),
         }
     }
 
@@ -209,7 +230,12 @@ impl HostSession {
                     let f = &self.factors[i];
                     // the op scheduled at the snapshot's step is the op
                     // that produced it (ops are submitted at stat steps)
-                    let kind = self.policy.op_at(snap.step as usize, &f.plan).kind_label();
+                    let kind = match &self.auto {
+                        Some(eng) => eng
+                            .planned_op(snap.step as usize, i, &f.plan, &self.policy.hyper)
+                            .kind_label(),
+                        None => self.policy.op_at(snap.step as usize, &f.plan).kind_label(),
+                    };
                     self.probe.on_install(
                         i,
                         &f.plan.id,
@@ -242,11 +268,32 @@ impl HostSession {
                 f.stat_update(&Stat::Raw(stat), rho, None, timers)?;
             }
             for (i, stat) in stats.iter().enumerate() {
+                // the auto engine substitutes its adaptive rank into the
+                // submitted plan (sketch / correction width re-derived);
+                // the base plan stays untouched so geometry is stable
+                let (op, plan) = match self.auto.as_mut() {
+                    Some(eng) => {
+                        let f = &self.factors[i];
+                        let op = eng.op_at(
+                            k as usize,
+                            i,
+                            &f.plan,
+                            &self.policy.hyper,
+                            f.gram.as_ref(),
+                            f.rep.as_ref(),
+                            self.cfg.lambda,
+                        );
+                        (op, eng.effective_plan(&f.plan, i))
+                    }
+                    None => {
+                        let f = &self.factors[i];
+                        (self.policy.op_at(k as usize, &f.plan), f.plan.clone())
+                    }
+                };
                 let f = &self.factors[i];
-                let op = self.policy.op_at(k as usize, &f.plan);
                 if let Some(req) = OpRequest::prepare(
                     op,
-                    &f.plan,
+                    &plan,
                     f.gram.as_ref(),
                     Some(stat),
                     rho,

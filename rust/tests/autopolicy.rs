@@ -1,0 +1,190 @@
+//! End-to-end acceptance for the `algo = auto` policy engine
+//! (DESIGN.md §18): on the smoke scenario the cost-model-driven policy
+//! must (a) match or beat the WORST fixed policy on probe-measured
+//! inversion error while spending less measured preconditioning time
+//! than exact K-FAC, and (b) checkpoint/restore bit-identically across
+//! an online rank change — the engine's decisions are a pure function
+//! of checkpointed state, so the resumed trajectory (including every
+//! later grow/shrink decision) must be indistinguishable from the
+//! uninterrupted one.
+
+use bnkfac::optim::{Algo, AutoSpec};
+use bnkfac::server::{HostSessionCfg, ServerCfg, SessionManager, Workload};
+
+fn scfg(
+    seed: u64,
+    algo: Algo,
+    steps: u64,
+    dim: usize,
+    policy: Option<AutoSpec>,
+) -> HostSessionCfg {
+    HostSessionCfg {
+        factors: 2,
+        dim,
+        rank: 8,
+        n_stat: 3,
+        grad_cols: 4,
+        t_updt: 2,
+        algo,
+        seed,
+        steps,
+        rho: 0.95,
+        lambda: 0.1,
+        policy,
+    }
+}
+
+fn server_cfg() -> ServerCfg {
+    ServerCfg {
+        workers: 2,
+        max_sessions: 2,
+        staleness: 1,
+        ..ServerCfg::default()
+    }
+}
+
+fn host_fingerprint(mgr: &SessionManager, id: u64) -> (Vec<f32>, [u64; 4]) {
+    let s = mgr.session(id).expect("session");
+    match &s.work {
+        Workload::Host(h) => (h.state_vector(), h.rng.state().s),
+        _ => panic!("expected host session"),
+    }
+}
+
+/// Run one session to completion and return (mean probe rel_err,
+/// decomposition-worker busy seconds, the session's policy record).
+fn run_one(
+    algo: Algo,
+    policy: Option<AutoSpec>,
+) -> (f64, f64, Option<bnkfac::metrics::PolicyRecord>) {
+    let mut mgr = SessionManager::new(server_cfg());
+    let name = algo.name().to_ascii_lowercase();
+    mgr.create_host(&name, 1, scfg(7, algo, 48, 128, policy), None)
+        .unwrap();
+    mgr.run_to_completion(1_000_000).unwrap();
+    let rec = mgr.record();
+    let s = &rec.sessions[0];
+    assert_eq!(s.status, "Done", "{name} failed: {}", s.error);
+    assert!(!s.probes.is_empty(), "{name} recorded no inversion probes");
+    let mean = s.probes.iter().map(|p| p.rel_err).sum::<f64>() / s.probes.len() as f64;
+    let busy = s.service.as_ref().expect("host service record").worker_busy_s;
+    (mean, busy, s.policy.clone())
+}
+
+/// The tentpole's quality/cost contract: on identical geometry and
+/// seeds, auto's probe-measured inversion error must not exceed the
+/// worst fixed policy's, and its measured decomposition time must stay
+/// below exact K-FAC's (at d = 128 the d³ EVD dwarfs the sketched and
+/// low-rank updates the cost model picks instead).
+#[test]
+fn auto_matches_fixed_policies_on_error_and_beats_exact_on_cost() {
+    let (exact_err, exact_busy, exact_policy) = run_one(Algo::KfacExact, None);
+    let (rsvd_err, _, _) = run_one(Algo::RKfac, None);
+    let (brand_err, _, _) = run_one(Algo::BKfac, None);
+    // err_lo = 0 pins the rank at its floor of the configured rank: the
+    // quality comparison measures op selection, not rank shrinkage
+    let spec = AutoSpec {
+        err_lo: 0.0,
+        ..AutoSpec::default()
+    };
+    let (auto_err, auto_busy, auto_policy) = run_one(Algo::Auto, Some(spec));
+
+    assert!(exact_policy.is_none(), "fixed algo must not carry a policy record");
+    let pol = auto_policy.expect("auto session must surface its policy record");
+    assert_eq!(pol.factors.len(), 2);
+    for f in &pol.factors {
+        assert!(
+            matches!(f.op.as_str(), "eigh" | "rsvd" | "brand"),
+            "unexpected op label {}",
+            f.op
+        );
+        // d = 128 is far past exact_dim_max = 96: the cost model must
+        // not have picked the dense EVD
+        assert_ne!(f.op, "eigh", "cost model chose eigh at d=128");
+        assert!(f.rank >= 2);
+    }
+
+    let worst_fixed = exact_err.max(rsvd_err).max(brand_err);
+    assert!(
+        auto_err <= worst_fixed * 1.05 + 1e-9,
+        "auto err {auto_err:.3e} worse than worst fixed policy {worst_fixed:.3e} \
+         (exact {exact_err:.3e} rsvd {rsvd_err:.3e} brand {brand_err:.3e})"
+    );
+    assert!(
+        auto_busy < exact_busy,
+        "auto spent {auto_busy:.4}s in decompositions, exact K-FAC {exact_busy:.4}s"
+    );
+}
+
+/// Checkpoint/restore bit-identity ACROSS a rank change (ckpt v1.3):
+/// an extreme spec (err_lo = 0.9) forces a deterministic shrink at
+/// every cadence boundary, so the checkpoint taken mid-run captures an
+/// engine that has already changed ranks and will change them again.
+/// The restored session must replay the remaining decisions exactly.
+#[test]
+fn auto_checkpoint_restores_bit_identically_across_a_rank_change() {
+    // every boundary probe reads err << 0.9 => shrink by rank_step
+    // until rank_min; dim 48 keeps the run fast
+    let spec = AutoSpec {
+        err_lo: 0.9,
+        err_hi: 0.95,
+        ..AutoSpec::default()
+    };
+    let cfg = |seed| scfg(seed, Algo::Auto, 40, 48, Some(spec.clone()));
+
+    // uninterrupted reference
+    let mut reference = SessionManager::new(server_cfg());
+    let rid = reference.create_host("ref", 1, cfg(9), None).unwrap();
+    reference.run_to_completion(1_000_000).unwrap();
+    let want = host_fingerprint(&reference, rid);
+    let want_ckpt = reference.checkpoint(rid).unwrap().to_string_pretty();
+    let ref_rec = reference.record();
+    let pol = ref_rec.sessions[0]
+        .policy
+        .as_ref()
+        .expect("auto session policy record");
+    let changes: u64 = pol.factors.iter().map(|f| f.rank_changes).sum();
+    assert!(changes >= 1, "forced-shrink spec produced no rank changes");
+    assert!(
+        pol.factors.iter().all(|f| f.rank < 8),
+        "ranks never shrank below the configured rank"
+    );
+
+    // interrupted run: checkpoint mid-flight (past the first rank
+    // change at the t_inv = 8 boundary), restore, continue
+    let mut mgr = SessionManager::new(server_cfg());
+    let id = mgr.create_host("x", 1, cfg(9), None).unwrap();
+    while mgr.session(id).unwrap().steps_done() < 21 {
+        let st = mgr.run_round().unwrap();
+        if st.stepped == 0 {
+            std::thread::yield_now();
+        }
+        assert!(mgr.round < 1_000_000, "stalled before checkpoint point");
+    }
+    let ckpt = mgr.checkpoint(id).unwrap();
+    let text = ckpt.to_string_pretty();
+    assert!(
+        text.contains("\"policy\""),
+        "v1.3 checkpoint lacks the policy engine state"
+    );
+    mgr.run_to_completion(1_000_000).unwrap();
+    assert_eq!(
+        host_fingerprint(&mgr, id),
+        want,
+        "checkpointing perturbed the continuing auto run"
+    );
+
+    let mut fresh = SessionManager::new(server_cfg());
+    let nid = fresh.restore(&ckpt, "restored").unwrap();
+    fresh.run_to_completion(1_000_000).unwrap();
+    assert_eq!(
+        host_fingerprint(&fresh, nid),
+        want,
+        "restored auto trajectory diverged from the uninterrupted one"
+    );
+    assert_eq!(
+        fresh.checkpoint(nid).unwrap().to_string_pretty(),
+        want_ckpt,
+        "final checkpoints differ — policy state did not survive the round trip"
+    );
+}

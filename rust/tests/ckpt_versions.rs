@@ -1,9 +1,11 @@
 //! Checkpoint version-ladder coverage (ISSUE 5 satellite).
 //!
 //! The checkpoint format has walked v1.0 → v1.1 (`state.seng`, SENG
-//! buffers) → v1.2 (top-level `quota`, governor ceilings); both added
-//! sections are OPTIONAL to the decoder, so older checkpoints must keep
-//! decoding under the v1.2 reader forever. Two angles pin that down:
+//! buffers) → v1.2 (top-level `quota`, governor ceilings) → v1.3
+//! (`cfg.policy` + `state.policy`, the `algo = auto` decision engine);
+//! every added section is OPTIONAL to the decoder, so older checkpoints
+//! must keep decoding under the v1.3 reader forever. Two angles pin
+//! that down:
 //!
 //! * **committed fixtures** (`tests/fixtures/ckpt_v1_{0,1}_host.json`):
 //!   hand-written pre-quota checkpoints that must decode, restore, and
@@ -35,14 +37,23 @@ fn server_cfg() -> ServerCfg {
 }
 
 /// Clone a checkpoint with a rewritten version stamp and (optionally)
-/// the v1.2 `quota` section removed — i.e. the bytes a pre-1.2 writer
-/// would have produced for the same state.
+/// the v1.2 `quota` section removed — i.e. the bytes a pre-v1.3 writer
+/// would have produced for the same state. Pre-1.3 writers also never
+/// emitted the `cfg.policy` / `state.policy` keys, so those are always
+/// stripped (a no-op beyond key presence for fixed-algo sessions, which
+/// carry them as explicit nulls under the current writer).
 fn downgrade(j: &Json, version: f64, strip_quota: bool) -> Json {
     match j.clone() {
         Json::Obj(mut m) => {
             m.insert("version".into(), Json::Num(version));
             if strip_quota {
                 m.remove("quota");
+            }
+            if let Some(Json::Obj(cfg)) = m.get_mut("cfg") {
+                cfg.remove("policy");
+            }
+            if let Some(Json::Obj(st)) = m.get_mut("state") {
+                st.remove("policy");
             }
             Json::Obj(m)
         }
@@ -135,31 +146,50 @@ fn downgraded_host_checkpoint_resumes_bit_identically() {
         "v1.2 checkpoint must persist the quota"
     );
 
+    // current writer stamps v1.3 with explicit-null policy sections for
+    // fixed-algo sessions
+    assert_eq!(ck12.get("version").and_then(|v| v.as_f64()), Some(ckpt::VERSION));
+    assert_eq!(
+        ck12.get("state").and_then(|s| s.get("policy")),
+        Some(&Json::Null),
+        "fixed-algo v1.3 checkpoint must carry an explicit null policy"
+    );
+
     let ck10 = downgrade(&ck12, 1.0, true);
     let ck11 = downgrade(&ck12, 1.1, true);
+    // a v1.2 writer kept the quota but had no policy keys at all
+    let ck12d = downgrade(&ck12, 1.2, false);
     assert!(ckpt::decode_host(&ck10).unwrap().quota.is_none());
     assert!(ckpt::decode_host(&ck11).unwrap().quota.is_none());
+    assert!(ckpt::decode_host(&ck12d).unwrap().quota.is_some());
     let q = ckpt::decode_host(&ck12).unwrap().quota.unwrap();
     assert_eq!(q.max_op_rate, 1000.0);
 
     let f12 = finish_host(&ck12);
     let f10 = finish_host(&ck10);
     let f11 = finish_host(&ck11);
+    let f12d = finish_host(&ck12d);
     assert_eq!(f10.get("cfg"), f12.get("cfg"), "v1.0 resume changed the cfg");
     assert_eq!(
         f10.get("state"),
         f12.get("state"),
-        "v1.0 resume diverged bit-wise from the v1.2 resume"
+        "v1.0 resume diverged bit-wise from the v1.3 resume"
     );
     assert_eq!(
         f11.get("state"),
         f12.get("state"),
-        "v1.1 resume diverged bit-wise from the v1.2 resume"
+        "v1.1 resume diverged bit-wise from the v1.3 resume"
     );
-    // quota re-registration on restore: only the v1.2 lineage keeps it
+    assert_eq!(
+        f12d.get("state"),
+        f12.get("state"),
+        "v1.2 resume diverged bit-wise from the v1.3 resume"
+    );
+    // quota re-registration on restore: only the v1.2+ lineages keep it
     assert_eq!(f10.get("quota"), Some(&Json::Null));
     assert_eq!(f11.get("quota"), Some(&Json::Null));
     assert_ne!(f12.get("quota"), Some(&Json::Null));
+    assert_ne!(f12d.get("quota"), Some(&Json::Null));
 }
 
 // ------------------------------------- model ladder (artifact-gated)

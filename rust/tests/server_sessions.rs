@@ -32,6 +32,7 @@ fn scfg(seed: u64, algo: Algo, steps: u64) -> HostSessionCfg {
         steps,
         rho: 0.95,
         lambda: 0.1,
+        policy: None,
     }
 }
 
